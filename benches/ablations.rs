@@ -1,0 +1,75 @@
+//! Ablation bench for the partitioner's design choices (DESIGN.md
+//! §Partitioner-design): multilevel coarsening vs. flat FM, number of
+//! initial-partition starts, FM pass budget, and the ε balance knob —
+//! each swept independently on a fixed workload so the contribution of
+//! every component is visible.
+
+use spgemm_hp::cost;
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::{build_model, ModelKind};
+use spgemm_hp::partition::{partition, random_partition, PartitionerConfig};
+use spgemm_hp::util::timer::{bench, BenchStats};
+use spgemm_hp::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(9);
+    let a = gen::rmat(&gen::RmatParams::social(9, 8.0), &mut rng).unwrap();
+    let model = build_model(&a, &a, ModelKind::MonoC, false).unwrap();
+    let p = 16;
+    println!(
+        "workload: monochrome-C model of rmat-s9 squaring — |V|={} pins={}, p={p}",
+        model.h.num_vertices(),
+        model.h.num_pins()
+    );
+    let base = PartitionerConfig { epsilon: 0.05, seed: 7, ..PartitionerConfig::new(p) };
+
+    let eval = |cfg: &PartitionerConfig| {
+        let t = std::time::Instant::now();
+        let part = partition(&model.h, cfg).unwrap();
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let m = cost::evaluate(&model.h, &part, p).unwrap();
+        (m.connectivity_volume, m.comm_max, m.comp_imbalance(), ms)
+    };
+
+    println!("\n-- baseline vs random --");
+    let (vol, cm, imb, ms) = eval(&base);
+    println!("multilevel:     volume={vol:<8} comm_max={cm:<8} imbal={imb:.3} ({ms:.0} ms)");
+    let rp = random_partition(&model.h, p, 1);
+    let mr = cost::evaluate(&model.h, &rp, p).unwrap();
+    println!(
+        "random:         volume={:<8} comm_max={:<8} imbal={:.3}",
+        mr.connectivity_volume,
+        mr.comm_max,
+        mr.comp_imbalance()
+    );
+
+    println!("\n-- ablation: skip multilevel coarsening (flat FM from random) --");
+    let flat = PartitionerConfig { coarse_to: usize::MAX, ..base.clone() };
+    let (vol, cm, imb, ms) = eval(&flat);
+    println!("flat FM:        volume={vol:<8} comm_max={cm:<8} imbal={imb:.3} ({ms:.0} ms)");
+
+    println!("\n-- ablation: initial-partition starts --");
+    for n_starts in [1usize, 4, 8, 16] {
+        let cfg = PartitionerConfig { n_starts, ..base.clone() };
+        let (vol, cm, _, ms) = eval(&cfg);
+        println!("n_starts={n_starts:<3} volume={vol:<8} comm_max={cm:<8} ({ms:.0} ms)");
+    }
+
+    println!("\n-- ablation: FM pass budget --");
+    for fm_passes in [0usize, 1, 2, 4, 8] {
+        let cfg = PartitionerConfig { fm_passes, ..base.clone() };
+        let (vol, cm, _, ms) = eval(&cfg);
+        println!("fm_passes={fm_passes:<2} volume={vol:<8} comm_max={cm:<8} ({ms:.0} ms)");
+    }
+
+    println!("\n-- ablation: balance tolerance ε --");
+    for eps in [0.01f64, 0.03, 0.10, 0.30] {
+        let cfg = PartitionerConfig { epsilon: eps, ..base.clone() };
+        let (vol, cm, imb, _) = eval(&cfg);
+        println!("epsilon={eps:<5} volume={vol:<8} comm_max={cm:<8} imbal={imb:.3}");
+    }
+
+    println!("\n-- timing stability (median of 3) --");
+    let s = bench(0, 3, || partition(&model.h, &base).unwrap());
+    println!("partition time: {}", BenchStats::fmt_time(s.median));
+}

@@ -1,0 +1,54 @@
+//! Partitioner performance bench (criterion is unavailable offline; this
+//! is a self-timed harness — run with `cargo bench --offline`).
+//!
+//! Times the multilevel partitioner across model kinds and hypergraph
+//! sizes, the §Perf hot path of the system (the paper reports PaToH
+//! times from seconds to 5 hours; relative model-to-model ratios are the
+//! comparable signal).
+
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::{build_model, ModelKind};
+use spgemm_hp::partition::{partition, PartitionerConfig};
+use spgemm_hp::util::timer::{bench, BenchStats};
+use spgemm_hp::util::Rng;
+
+fn main() {
+    println!("== partitioner bench ==");
+    let mut rng = Rng::new(5);
+
+    // AMG A·P at two grid sizes; MCL squaring at two scales
+    let workloads: Vec<(String, spgemm_hp::sparse::Csr, spgemm_hp::sparse::Csr)> = {
+        let mut v = Vec::new();
+        for n in [9usize, 12] {
+            let a = gen::stencil27(n);
+            let p = gen::smoothed_aggregation_prolongator(&a, n).unwrap();
+            v.push((format!("amg-AP-n{n}"), a, p));
+        }
+        for scale in [9u32, 10] {
+            let a = gen::rmat(&gen::RmatParams::social(scale, 8.0), &mut rng).unwrap();
+            v.push((format!("mcl-rmat-s{scale}"), a.clone(), a));
+        }
+        v
+    };
+
+    println!(
+        "{:<16} {:<14} {:>10} {:>10} {:>14}",
+        "workload", "model", "vertices", "pins", "partition time"
+    );
+    for (name, a, b) in &workloads {
+        for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::FineGrained] {
+            let model = build_model(a, b, kind, false).unwrap();
+            let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(16) };
+            let iters = if model.h.num_vertices() > 100_000 { 1 } else { 3 };
+            let stats = bench(0, iters, || partition(&model.h, &cfg).unwrap());
+            println!(
+                "{:<16} {:<14} {:>10} {:>10} {:>14}",
+                name,
+                kind.name(),
+                model.h.num_vertices(),
+                model.h.num_pins(),
+                BenchStats::fmt_time(stats.median)
+            );
+        }
+    }
+}

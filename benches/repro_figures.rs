@@ -1,0 +1,53 @@
+//! Regenerates every table and figure of the paper's evaluation — the
+//! `cargo bench` entry point for the reproduction (see DESIGN.md
+//! §Experiment-index and EXPERIMENTS.md for the recorded outputs).
+//!
+//! Scale via SPGEMM_HP_SCALE (1 = quick, 2 = default figures, 3 = big).
+
+use spgemm_hp::repro::{self, figures};
+use spgemm_hp::util::Timer;
+
+fn main() {
+    let scale: u32 = std::env::var("SPGEMM_HP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let seed = 20160711u64;
+    println!("== paper-figure regeneration (scale {scale}) ==");
+
+    let t = Timer::start();
+    let rows = figures::table2(scale, seed).expect("table2");
+    figures::print_table2(&rows);
+    println!("[table2 in {:.1} s]", t.elapsed().as_secs_f64());
+
+    let t = Timer::start();
+    let rows = figures::fig7(scale, seed, &figures::FIG7_MODELS).expect("fig7");
+    repro::print_rows("Fig. 7 — AMG weak scaling (A·P and Pᵀ(AP))", &rows);
+    println!("[fig7 in {:.1} s]", t.elapsed().as_secs_f64());
+
+    let t = Timer::start();
+    let rows = figures::fig8(scale, seed, &figures::FIG8_MODELS).expect("fig8");
+    repro::print_rows("Fig. 8 — LP normal equations, strong scaling", &rows);
+    println!("[fig8 in {:.1} s]", t.elapsed().as_secs_f64());
+
+    let t = Timer::start();
+    let rows = figures::fig9(scale, seed, &figures::FIG9_MODELS).expect("fig9");
+    repro::print_rows("Fig. 9 — MCL squaring, strong scaling", &rows);
+    println!("[fig9 in {:.1} s]", t.elapsed().as_secs_f64());
+
+    println!("\n== eq. (1) bound comparison ==");
+    for r in figures::bounds_comparison(seed).expect("bounds") {
+        println!(
+            "{:<16} p={:<3} hypergraph={:<8} eq1_dep={:<10.0} eq1_ind={:<10.0} trivial={:.0}",
+            r.instance, r.p, r.hypergraph_comm, r.eq1_memory_dependent, r.eq1_memory_independent, r.trivial
+        );
+    }
+
+    println!("\n== sequential two-level memory (Thm. 4.10) ==");
+    for r in figures::sequential_experiment(seed).expect("seq") {
+        println!(
+            "M={:<6} row-major={:<8} blocked={:<8} HK={:<8.0} trivial={:.0}",
+            r.memory, r.row_major, r.hypergraph_blocked, r.hong_kung_bound, r.trivial_bound
+        );
+    }
+}

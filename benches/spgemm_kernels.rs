@@ -1,0 +1,93 @@
+//! SpGEMM substrate + kernel-path benches: Gustavson numeric multiply,
+//! hypergraph construction, the sequential memory simulator, and the
+//! PJRT tile-product engine vs. the pure-rust reference backend.
+
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::{build_model, fine_grained, ModelKind};
+use spgemm_hp::runtime::Engine;
+use spgemm_hp::sparse;
+use spgemm_hp::util::timer::{bench, BenchStats};
+use spgemm_hp::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+
+    println!("== Gustavson SpGEMM ==");
+    for (name, a, b) in [
+        ("stencil27-n16 A*A", gen::stencil27(16), gen::stencil27(16)),
+        (
+            "rmat-s12 A*A",
+            gen::rmat(&gen::RmatParams::social(12, 8.0), &mut rng).unwrap(),
+            gen::rmat(&gen::RmatParams::social(12, 8.0), &mut Rng::new(3)).unwrap(),
+        ),
+    ] {
+        let flops = sparse::spgemm_flops(&a, &b).unwrap();
+        let s = bench(1, 5, || sparse::spgemm(&a, &b).unwrap());
+        println!(
+            "{name:<22} {:>12} mults  {:>12}  ({:.1} Mmult/s)",
+            flops,
+            BenchStats::fmt_time(s.median),
+            flops as f64 / s.median / 1e6
+        );
+    }
+
+    println!("\n== hypergraph model construction ==");
+    let a = gen::stencil27(12);
+    let p = gen::smoothed_aggregation_prolongator(&a, 12).unwrap();
+    for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::MonoC] {
+        let s = bench(1, 5, || build_model(&a, &p, kind, false).unwrap());
+        let m = build_model(&a, &p, kind, false).unwrap();
+        println!(
+            "{:<16} |V|={:<9} pins={:<9} {:>12}",
+            kind.name(),
+            m.h.num_vertices(),
+            m.h.num_pins(),
+            BenchStats::fmt_time(s.median)
+        );
+    }
+    let s = bench(1, 3, || fine_grained(&a, &p, true).unwrap());
+    println!("{:<16} (with V^nz)                    {:>12}", "fine-grained", BenchStats::fmt_time(s.median));
+
+    println!("\n== tile-product engine: PJRT vs reference ==");
+    let tile = 8usize;
+    let n = 256usize;
+    let t2 = tile * tile;
+    let mut rngf = Rng::new(8);
+    let abuf: Vec<f32> = (0..n * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+    let bbuf: Vec<f32> = (0..n * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+    let mut reference = Engine::reference();
+    let s = bench(1, 10, || reference.tile_products(tile, n, &abuf, &bbuf).unwrap());
+    let flops = 2.0 * (n * tile * tile * tile) as f64;
+    println!(
+        "reference  {n} tiles of {tile}x{tile}: {:>12}  ({:.2} GFLOP/s)",
+        BenchStats::fmt_time(s.median),
+        flops / s.median / 1e9
+    );
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let mut engine = Engine::load("artifacts").expect("artifacts loadable");
+        let s = bench(2, 10, || engine.tile_products(tile, n, &abuf, &bbuf).unwrap());
+        println!(
+            "pjrt       {n} tiles of {tile}x{tile}: {:>12}  ({:.2} GFLOP/s)",
+            BenchStats::fmt_time(s.median),
+            flops / s.median / 1e9
+        );
+        // larger tiles favor the compiled path
+        for t in [16usize, 32] {
+            let t2 = t * t;
+            let ab: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+            let bb: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+            let sp = bench(2, 10, || engine.tile_products(t, 64, &ab, &bb).unwrap());
+            let sr = bench(1, 10, || reference.tile_products(t, 64, &ab, &bb).unwrap());
+            let fl = 2.0 * (64 * t * t * t) as f64;
+            println!(
+                "tile {t:>2}: pjrt {:>12} ({:.2} GFLOP/s) vs reference {:>12} ({:.2} GFLOP/s)",
+                BenchStats::fmt_time(sp.median),
+                fl / sp.median / 1e9,
+                BenchStats::fmt_time(sr.median),
+                fl / sr.median / 1e9
+            );
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT side)");
+    }
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX/Pallas model → HLO *text* artifacts for the rust
+runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits one artifact per (tile, batch) variant of the ``tile_products``
+model plus one fused (products + segment-sum) variant, and a
+``manifest.txt`` the rust runtime parses to pick variants::
+
+    # kind name tile batch num_out file
+    products  tile_matmul_T8_B64   8  64  0  tile_matmul_T8_B64.hlo.txt
+    fused     fused_T16_B64_S32   16  64 32  fused_T16_B64_S32.hlo.txt
+
+Run via ``make artifacts`` (a no-op when artifacts are newer than the
+python sources).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (tile, batch) variants compiled for the runtime. Tiles are MXU-shaped
+# (multiples of 8); batches amortize PJRT dispatch from the coordinator.
+PRODUCT_VARIANTS = [(8, 64), (16, 64), (32, 64), (32, 256)]
+# (tile, batch, num_out) fused variants.
+FUSED_VARIANTS = [(8, 64, 32), (16, 64, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_products(tile: int, batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, tile, tile), jnp.float32)
+    lowered = jax.jit(lambda a, b: model.tile_products(a, b, interpret=True)).lower(spec, spec)
+    return to_hlo_text(lowered)
+
+
+def lower_fused(tile: int, batch: int, num_out: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, tile, tile), jnp.float32)
+    seg = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(
+        lambda a, b, s: model.fused_products(a, b, s, num_out=num_out, interpret=True)
+    ).lower(spec, spec, seg)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = ["# kind name tile batch num_out file"]
+    for tile, batch in PRODUCT_VARIANTS:
+        name = f"tile_matmul_T{tile}_B{batch}"
+        text = lower_products(tile, batch)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"products {name} {tile} {batch} 0 {fname}")
+        print(f"wrote {fname} ({len(text)} chars)")
+    for tile, batch, num_out in FUSED_VARIANTS:
+        name = f"fused_T{tile}_B{batch}_S{num_out}"
+        text = lower_fused(tile, batch, num_out)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"fused {name} {tile} {batch} {num_out} {fname}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines) - 1} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth: pytest asserts the Pallas kernel
+and the AOT-exported model match these to float tolerance across shape
+and dtype sweeps (see python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_tile_matmul(a_tiles: jax.Array, b_tiles: jax.Array) -> jax.Array:
+    """``out[b] = a_tiles[b] @ b_tiles[b]`` in plain jnp (f32 accumulate)."""
+    return jnp.einsum(
+        "bij,bjk->bik",
+        a_tiles.astype(jnp.float32),
+        b_tiles.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_fused_products(
+    a_tiles: jax.Array, b_tiles: jax.Array, seg_ids: jax.Array, num_out: int
+) -> jax.Array:
+    """Products followed by a segment-sum fold into output tiles.
+
+    ``out[s] = Σ_{b : seg_ids[b] = s} a_tiles[b] @ b_tiles[b]`` — the
+    numeric analogue of the paper's fold phase over one processor's local
+    partial products.
+    """
+    prods = ref_tile_matmul(a_tiles, b_tiles)
+    return jax.ops.segment_sum(prods, seg_ids, num_segments=num_out)

@@ -1,0 +1,81 @@
+"""L1 — Pallas kernel: batched dense-tile matmul.
+
+The numeric hot-spot of the distributed SpGEMM runtime: once the L3
+coordinator has gathered the remote tiles of a partition (the expand
+phase), the local multiply decomposes into a batch of independent dense
+tile products ``C[b] = A[b] @ B[b]``. This kernel is the MXU-shaped
+realization of that step:
+
+* the grid iterates over the batch dimension (the analogue of the GPU
+  threadblock-per-tile scheme the literature uses for block-sparse
+  kernels);
+* each grid step holds exactly one ``T×T`` A-tile, B-tile, and output
+  tile in VMEM (``3·T²·4`` bytes — at T=32 that is 12 KiB, far below the
+  ~16 MiB VMEM budget), expressed through ``BlockSpec``;
+* the inner product targets the MXU via ``jnp.dot`` with
+  ``preferred_element_type=jnp.float32`` so bf16 inputs accumulate in
+  f32.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (vs. ``ref.py``) is the build-time gate.
+Real-TPU performance is *estimated* in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: multiply the VMEM-resident A and B tiles.
+
+    Each ref is a ``(1, T, T)`` block; index off the leading (batch)
+    block dimension so the contraction is a plain 2-D MXU matmul.
+    """
+    o_ref[0] = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_matmul(a_tiles: jax.Array, b_tiles: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Batched tile matmul ``out[b] = a_tiles[b] @ b_tiles[b]``.
+
+    Args:
+      a_tiles: ``[batch, T, T]`` array.
+      b_tiles: ``[batch, T, T]`` array (same dtype/shape).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``[batch, T, T]`` float32 products.
+    """
+    if a_tiles.ndim != 3 or a_tiles.shape != b_tiles.shape:
+        raise ValueError(f"expected matching [batch,T,T] operands, got {a_tiles.shape} vs {b_tiles.shape}")
+    batch, t, t2 = a_tiles.shape
+    if t != t2:
+        raise ValueError(f"tiles must be square, got {t}x{t2}")
+    grid = (batch,)
+    spec = pl.BlockSpec((1, t, t), lambda b: (b, 0, 0))
+    out = pl.pallas_call(
+        _tile_matmul_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((batch, t, t), jnp.float32),
+        interpret=interpret,
+    )(a_tiles, b_tiles)
+    return out
+
+
+def vmem_bytes(tile: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (A + B + O tiles)."""
+    return 3 * tile * tile * dtype_bytes
+
+
+def arithmetic_intensity(tile: int, dtype_bytes: int = 4) -> float:
+    """FLOPs per HBM byte moved for one tile product (2T³ / 3T²·s)."""
+    flops = 2.0 * tile**3
+    bytes_moved = 3.0 * tile * tile * dtype_bytes
+    return flops / bytes_moved

@@ -1,0 +1,52 @@
+"""L2 — the JAX compute graph the rust runtime executes.
+
+Two entry points, both built on the L1 Pallas kernel and lowered once by
+``aot.py`` to HLO text:
+
+* :func:`tile_products` — the expand-phase local multiply: a batch of
+  dense tile products. The L3 coordinator performs the fold (scatter-add
+  into C) itself when the fold pattern is data-dependent.
+* :func:`fused_products` — products plus an on-device segment-sum fold
+  for batches whose segment ids the coordinator precomputes (saves one
+  host round trip per batch).
+
+Python never runs at serving time: these functions exist to be lowered.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.tile_matmul import tile_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_products(a_tiles: jax.Array, b_tiles: jax.Array, *, interpret: bool = True):
+    """Expand-phase local multiply: ``out[b] = A[b] @ B[b]``.
+
+    Returns a 1-tuple (the AOT interchange convention: lowered with
+    ``return_tuple=True`` and unwrapped with ``to_tuple1`` in rust).
+    """
+    return (tile_matmul(a_tiles, b_tiles, interpret=interpret),)
+
+
+@functools.partial(jax.jit, static_argnames=("num_out", "interpret"))
+def fused_products(
+    a_tiles: jax.Array,
+    b_tiles: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    num_out: int,
+    interpret: bool = True,
+):
+    """Products + fold: ``out[s] = Σ_{seg_ids[b]=s} A[b] @ B[b]``.
+
+    ``seg_ids`` is an ``[batch]`` int32 vector; ``num_out`` is static (an
+    AOT variant is compiled per (tile, batch, num_out) triple).
+    """
+    prods = tile_matmul(a_tiles, b_tiles, interpret=interpret)
+    out = jax.ops.segment_sum(prods, seg_ids, num_segments=num_out)
+    return (out.astype(jnp.float32),)

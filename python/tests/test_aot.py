@@ -1,0 +1,56 @@
+"""AOT path: lowering to HLO text must produce loadable modules with the
+expected entry layouts, and the manifest must describe them."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+
+
+class TestLowering:
+    def test_products_hlo_text_shape(self):
+        text = aot.lower_products(tile=8, batch=4)
+        assert text.startswith("HloModule")
+        # entry layout mentions the operand and result shapes
+        assert "f32[4,8,8]" in text
+        # interpret-mode pallas lowers to plain HLO: no Mosaic custom-call
+        assert "custom-call" not in text or "mosaic" not in text.lower()
+
+    def test_fused_hlo_text_shape(self):
+        text = aot.lower_fused(tile=8, batch=4, num_out=3)
+        assert text.startswith("HloModule")
+        assert "f32[4,8,8]" in text
+        assert "f32[3,8,8]" in text
+        assert "s32[4]" in text
+
+    def test_variant_tables_sane(self):
+        for tile, batch in aot.PRODUCT_VARIANTS:
+            assert tile % 8 == 0 and batch > 0
+        for tile, batch, num_out in aot.FUSED_VARIANTS:
+            assert tile % 8 == 0 and batch > 0 and num_out > 0
+
+
+class TestManifest:
+    def test_main_writes_all_artifacts(self, tmp_path, monkeypatch):
+        # shrink the variant set to keep the test fast
+        monkeypatch.setattr(aot, "PRODUCT_VARIANTS", [(8, 4)])
+        monkeypatch.setattr(aot, "FUSED_VARIANTS", [(8, 4, 2)])
+        monkeypatch.setattr("sys.argv", ["aot", "--out-dir", str(tmp_path)])
+        aot.main()
+        files = sorted(os.listdir(tmp_path))
+        assert "manifest.txt" in files
+        assert "tile_matmul_T8_B4.hlo.txt" in files
+        assert "fused_T8_B4_S2.hlo.txt" in files
+        lines = [
+            l
+            for l in (tmp_path / "manifest.txt").read_text().splitlines()
+            if l and not l.startswith("#")
+        ]
+        assert len(lines) == 2
+        for line in lines:
+            kind, name, tile, batch, num_out, fname = line.split()
+            assert kind in ("products", "fused")
+            assert (tmp_path / fname).exists()
+            assert int(tile) == 8 and int(batch) == 4

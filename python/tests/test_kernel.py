@@ -1,0 +1,111 @@
+"""L1 correctness: the Pallas tile-matmul kernel vs. the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; this is the core build-time
+correctness signal for the kernel that the rust runtime will execute.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_tile_matmul
+from compile.kernels.tile_matmul import (
+    arithmetic_intensity,
+    tile_matmul,
+    vmem_bytes,
+)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+class TestTileMatmulBasics:
+    def test_identity_tiles(self):
+        eye = jnp.broadcast_to(jnp.eye(8, dtype=jnp.float32), (4, 8, 8))
+        a = _rand((4, 8, 8), jnp.float32, 0)
+        out = tile_matmul(a, eye)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a), rtol=1e-6)
+
+    def test_zero_tiles(self):
+        a = _rand((2, 16, 16), jnp.float32, 1)
+        z = jnp.zeros((2, 16, 16), jnp.float32)
+        out = tile_matmul(a, z)
+        assert np.all(np.asarray(out) == 0.0)
+
+    def test_single_batch(self):
+        a = _rand((1, 32, 32), jnp.float32, 2)
+        b = _rand((1, 32, 32), jnp.float32, 3)
+        np.testing.assert_allclose(
+            np.asarray(tile_matmul(a, b))[0],
+            np.asarray(a[0]) @ np.asarray(b[0]),
+            rtol=1e-5,
+        )
+
+    def test_rejects_bad_shapes(self):
+        a = _rand((2, 8, 8), jnp.float32, 4)
+        b = _rand((2, 8, 4), jnp.float32, 5)
+        with pytest.raises(ValueError):
+            tile_matmul(a, b)
+        with pytest.raises(ValueError):
+            tile_matmul(a[0], a[0])
+
+    def test_rejects_rectangular_tiles(self):
+        a = _rand((2, 8, 4), jnp.float32, 6)
+        with pytest.raises(ValueError):
+            tile_matmul(a, a)
+
+
+class TestKernelVsRef:
+    @hypothesis.given(
+        batch=st.integers(min_value=1, max_value=8),
+        tile=st.sampled_from([1, 2, 4, 8, 16, 32]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=30)
+    def test_f32_matches_ref(self, batch, tile, seed):
+        a = _rand((batch, tile, tile), jnp.float32, seed)
+        b = _rand((batch, tile, tile), jnp.float32, seed + 1)
+        got = np.asarray(tile_matmul(a, b))
+        want = np.asarray(ref_tile_matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        batch=st.integers(min_value=1, max_value=4),
+        tile=st.sampled_from([8, 16]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=10)
+    def test_bf16_inputs_accumulate_f32(self, batch, tile, seed):
+        a = _rand((batch, tile, tile), jnp.bfloat16, seed)
+        b = _rand((batch, tile, tile), jnp.bfloat16, seed + 1)
+        got = np.asarray(tile_matmul(a, b))
+        assert got.dtype == np.float32
+        want = np.asarray(ref_tile_matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_extreme_values(self):
+        a = jnp.full((1, 8, 8), 1e30, jnp.float32)
+        b = jnp.full((1, 8, 8), 1e30, jnp.float32)
+        got = np.asarray(tile_matmul(a, b))
+        assert np.all(np.isinf(got))  # overflow behaves like the oracle
+        want = np.asarray(ref_tile_matmul(a, b))
+        np.testing.assert_array_equal(np.isinf(got), np.isinf(want))
+
+
+class TestRooflineHelpers:
+    def test_vmem_budget(self):
+        # all shipped variants fit far under a 16 MiB VMEM budget
+        for t in (8, 16, 32):
+            assert vmem_bytes(t) <= 16 * 2**20
+        assert vmem_bytes(32) == 3 * 32 * 32 * 4
+
+    def test_arithmetic_intensity_grows_with_tile(self):
+        ais = [arithmetic_intensity(t) for t in (8, 16, 32)]
+        assert ais == sorted(ais)
+        assert abs(arithmetic_intensity(32) - (2 * 32**3) / (3 * 32 * 32 * 4)) < 1e-9

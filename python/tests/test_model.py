@@ -1,0 +1,71 @@
+"""L2 correctness: the model graphs vs. numpy references, including the
+fused segment-sum fold."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import ref_fused_products, ref_tile_matmul
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+class TestTileProducts:
+    def test_returns_tuple(self):
+        a = _rand((4, 8, 8), 0)
+        out = model.tile_products(a, a)
+        assert isinstance(out, tuple) and len(out) == 1
+        np.testing.assert_allclose(
+            np.asarray(out[0]), np.asarray(ref_tile_matmul(a, a)), rtol=1e-5
+        )
+
+    @hypothesis.given(
+        batch=st.integers(min_value=1, max_value=6),
+        tile=st.sampled_from([4, 8, 16]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=15)
+    def test_matches_numpy(self, batch, tile, seed):
+        a = _rand((batch, tile, tile), seed)
+        b = _rand((batch, tile, tile), seed + 1)
+        got = np.asarray(model.tile_products(a, b)[0])
+        want = np.einsum("bij,bjk->bik", np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestFusedProducts:
+    @hypothesis.given(
+        batch=st.integers(min_value=1, max_value=8),
+        tile=st.sampled_from([4, 8]),
+        num_out=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    @hypothesis.settings(deadline=None, max_examples=15)
+    def test_matches_ref(self, batch, tile, num_out, seed):
+        rng = np.random.default_rng(seed + 7)
+        a = _rand((batch, tile, tile), seed)
+        b = _rand((batch, tile, tile), seed + 1)
+        seg = jnp.asarray(rng.integers(0, num_out, size=batch).astype(np.int32))
+        got = np.asarray(model.fused_products(a, b, seg, num_out=num_out)[0])
+        want = np.asarray(ref_fused_products(a, b, seg, num_out))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_fold_accumulates(self):
+        # two products folding into one output tile = their sum
+        a = _rand((2, 4, 4), 1)
+        b = _rand((2, 4, 4), 2)
+        seg = jnp.asarray(np.zeros(2, np.int32))
+        got = np.asarray(model.fused_products(a, b, seg, num_out=1)[0])
+        prods = np.einsum("bij,bjk->bik", np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(got[0], prods.sum(axis=0), rtol=1e-5)
+
+    def test_empty_segments_are_zero(self):
+        a = _rand((2, 4, 4), 3)
+        seg = jnp.asarray(np.zeros(2, np.int32))
+        got = np.asarray(model.fused_products(a, a, seg, num_out=3)[0])
+        assert np.all(got[1] == 0.0) and np.all(got[2] == 0.0)

@@ -1,0 +1,111 @@
+//! Minimal dependency-free CLI argument handling (the build is offline;
+//! no `clap`).
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand path plus `--key value` options and
+/// bare `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (usually `std::env::args().skip(1)`).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got {s}"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got {s}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} expects a number, got {s}"))),
+        }
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        Ok(self.get_u64(key, default as u64)? as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("repro fig7 --scale 2 --seed=42 --verbose");
+        assert_eq!(a.positional, vec!["repro", "fig7"]);
+        assert_eq!(a.get("scale"), Some("2"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 12 --eps 0.5");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        let bad = parse("x --n twelve");
+        assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--fast run");
+        // "--fast run": run is consumed as the value of --fast
+        assert_eq!(a.get("fast"), Some("run"));
+    }
+}

@@ -1,0 +1,534 @@
+//! The distributed-SpGEMM coordinator: a leader/worker runtime that
+//! *executes* a partitioned algorithm end to end.
+//!
+//! This is the deployment-shaped counterpart of [`crate::sim::parallel`]:
+//! where the simulator only accounts words, the coordinator actually runs
+//! the algorithm on `p` worker threads connected by channels —
+//!
+//! 1. **Expand** — every worker sends its owned A/B nonzeros to the
+//!    consumers the plan's routing tables name (the cut nets of the
+//!    hypergraph become real messages);
+//! 2. **Compute** — each worker groups its local multiplications into
+//!    dense tiles of the iteration space; *closed* tiles (whose implied
+//!    multiplications are all local — always the case for 1D/2D-model
+//!    partitions) are batched to the PJRT kernel service, open tiles take
+//!    the scalar path;
+//! 3. **Fold** — partial sums are routed to each output nonzero's owner
+//!    and reduced; owners stream final values to the leader.
+//!
+//! The kernel service is a dedicated thread owning the [`Engine`]
+//! (PJRT handles are not `Send`); it coalesces tile batches from all
+//! workers within a dispatch window — the same structure a serving router
+//! uses for dynamic batching.
+
+pub mod plan;
+
+use crate::runtime::Engine;
+use crate::sim::Algorithm;
+use crate::sparse::{spgemm_structure, Csr};
+use crate::{Error, Result};
+use plan::{ExecutionPlan, WorkerPlan};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Iteration-space tile edge for the kernel path (must be one of the
+    /// compiled variants' tiles; 8 by default).
+    pub tile: usize,
+    /// Artifact directory; `None` (or missing artifacts) uses the
+    /// pure-rust reference backend.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Minimum number of tile products worth shipping to the kernel
+    /// service (tiny groups take the scalar path).
+    pub min_tile_batch: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        // tile = 16 won the §Perf sweep (EXPERIMENTS.md): vs 8 it quarters
+        // kernel dispatches for ~20% wall-clock; 32 wastes 3.5× on
+        // mostly-empty tiles of sparse iteration-space cubes.
+        CoordinatorConfig { tile: 16, artifacts_dir: None, min_tile_batch: 1 }
+    }
+}
+
+/// Execution metrics.
+#[derive(Debug, Clone)]
+pub struct CoordReport {
+    pub p: usize,
+    /// Words each worker sent (expand + fold).
+    pub sent_words: Vec<u64>,
+    /// Words each worker received.
+    pub recv_words: Vec<u64>,
+    pub expand_volume: u64,
+    pub fold_volume: u64,
+    /// Multiplications executed through the tile (kernel) path.
+    pub tile_mults: u64,
+    /// Multiplications executed through the scalar path.
+    pub scalar_mults: u64,
+    /// Kernel-service dispatches (batches executed).
+    pub kernel_dispatches: u64,
+    /// Whether the PJRT backend was used.
+    pub used_pjrt: bool,
+}
+
+impl CoordReport {
+    pub fn total_volume(&self) -> u64 {
+        self.expand_volume + self.fold_volume
+    }
+    pub fn max_send_recv(&self) -> u64 {
+        (0..self.p).map(|w| self.sent_words[w] + self.recv_words[w]).max().unwrap_or(0)
+    }
+}
+
+/// Inter-worker message.
+enum Msg {
+    A(u32, f64),
+    B(u32, f64),
+    Partial(u32, f64),
+}
+
+/// A batch of tile products for the kernel service.
+struct TileJob {
+    tile: usize,
+    n: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    reply: Sender<Result<Vec<f32>>>,
+}
+
+/// Run the algorithm on `p` worker threads. Returns the metrics and the
+/// numerically computed C.
+pub fn run(a: &Csr, b: &Csr, alg: &Algorithm, cfg: &CoordinatorConfig) -> Result<(CoordReport, Csr)> {
+    let p = alg.p;
+    let c_struct = spgemm_structure(a, b)?;
+    let plan = ExecutionPlan::build(a, b, alg, &c_struct, cfg.tile)?;
+
+    // kernel service -------------------------------------------------------
+    let (job_tx, job_rx): (Sender<TileJob>, Receiver<TileJob>) = channel();
+    let artifacts = cfg.artifacts_dir.clone();
+    let service = thread::spawn(move || -> (u64, bool) {
+        // Engine lives entirely inside this thread (PJRT is not Send).
+        let mut engine = match &artifacts {
+            Some(dir) => Engine::load_or_reference(dir),
+            None => Engine::reference(),
+        };
+        let used_pjrt = engine.is_pjrt();
+        // dynamic batching: drain whatever is queued, coalesce same-tile
+        // jobs into one dispatch, split the replies
+        let mut pending: Vec<TileJob> = Vec::new();
+        loop {
+            match if pending.is_empty() { job_rx.recv().ok() } else { job_rx.try_recv().ok() } {
+                Some(job) => {
+                    pending.push(job);
+                    continue; // keep draining the window
+                }
+                None if pending.is_empty() => break, // all senders dropped
+                None => {}
+            }
+            // coalesce by tile size
+            pending.sort_by_key(|j| j.tile);
+            let idx = 0;
+            while idx < pending.len() {
+                let tile = pending[idx].tile;
+                let mut end = idx;
+                while end < pending.len() && pending[end].tile == tile {
+                    end += 1;
+                }
+                let group: Vec<TileJob> = pending.drain(idx..end).collect();
+                let total_n: usize = group.iter().map(|j| j.n).sum();
+                let t2 = tile * tile;
+                let mut abuf = Vec::with_capacity(total_n * t2);
+                let mut bbuf = Vec::with_capacity(total_n * t2);
+                for j in &group {
+                    abuf.extend_from_slice(&j.a);
+                    bbuf.extend_from_slice(&j.b);
+                }
+                match engine.tile_products(tile, total_n, &abuf, &bbuf) {
+                    Ok(out) => {
+                        let mut off = 0;
+                        for j in group {
+                            let take = j.n * t2;
+                            let _ = j.reply.send(Ok(out[off..off + take].to_vec()));
+                            off += take;
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for j in group {
+                            let _ = j.reply.send(Err(Error::Runtime(msg.clone())));
+                        }
+                    }
+                }
+            }
+            pending.clear();
+        }
+        (engine.dispatches, used_pjrt)
+    });
+
+    // worker mesh -----------------------------------------------------------
+    let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(p);
+    let mut rxs: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    let (result_tx, result_rx) = channel::<(usize, Vec<(u32, f64)>, WorkerStats)>();
+
+    let mut handles = Vec::with_capacity(p);
+    for w in 0..p {
+        let wplan = plan.workers[w].clone();
+        let my_rx = rxs[w].take().unwrap();
+        let peer_tx: Vec<Sender<Msg>> = txs.clone();
+        let my_result = result_tx.clone();
+        let my_jobs = job_tx.clone();
+        let tile = cfg.tile;
+        let min_batch = cfg.min_tile_batch;
+        handles.push(thread::spawn(move || {
+            worker_main(w, wplan, my_rx, peer_tx, my_jobs, my_result, tile, min_batch)
+        }));
+    }
+    drop(txs);
+    drop(result_tx);
+    drop(job_tx);
+
+    // gather ----------------------------------------------------------------
+    let mut c_values = vec![0f64; c_struct.nnz()];
+    let mut sent = vec![0u64; p];
+    let mut recv = vec![0u64; p];
+    let mut tile_mults = 0u64;
+    let mut scalar_mults = 0u64;
+    for _ in 0..p {
+        let (w, owned_c, stats) = result_rx
+            .recv()
+            .map_err(|_| Error::Runtime("worker channel closed unexpectedly".into()))?;
+        for (pc, v) in owned_c {
+            c_values[pc as usize] = v;
+        }
+        sent[w] = stats.sent;
+        recv[w] = stats.recv;
+        tile_mults += stats.tile_mults;
+        scalar_mults += stats.scalar_mults;
+    }
+    for h in handles {
+        h.join().map_err(|_| Error::Runtime("worker panicked".into()))??;
+    }
+    let (kernel_dispatches, used_pjrt) =
+        service.join().map_err(|_| Error::Runtime("kernel service panicked".into()))?;
+
+    let c = Csr {
+        nrows: c_struct.nrows,
+        ncols: c_struct.ncols,
+        rowptr: c_struct.rowptr.clone(),
+        colind: c_struct.colind.clone(),
+        values: c_values,
+    };
+    let report = CoordReport {
+        p,
+        expand_volume: plan.expand_volume,
+        fold_volume: plan.fold_volume,
+        sent_words: sent,
+        recv_words: recv,
+        tile_mults,
+        scalar_mults,
+        kernel_dispatches,
+        used_pjrt,
+    };
+    Ok((report, c))
+}
+
+struct WorkerStats {
+    sent: u64,
+    recv: u64,
+    tile_mults: u64,
+    scalar_mults: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    _w: usize,
+    plan: WorkerPlan,
+    rx: Receiver<Msg>,
+    peers: Vec<Sender<Msg>>,
+    jobs: Sender<TileJob>,
+    results: Sender<(usize, Vec<(u32, f64)>, WorkerStats)>,
+    tile: usize,
+    min_batch: usize,
+) -> Result<()> {
+    let mut sent = 0u64;
+    let mut recv_count = 0u64;
+    // local value tables (sparse: only owned + received slots filled)
+    let mut a_vals: std::collections::HashMap<u32, f64> = plan.owned_a.iter().copied().collect();
+    let mut b_vals: std::collections::HashMap<u32, f64> = plan.owned_b.iter().copied().collect();
+
+    // --- expand: send owned entries to their consumers -------------------
+    for (pos, val, consumers) in &plan.send_a {
+        for &c in consumers {
+            peers[c as usize]
+                .send(Msg::A(*pos, *val))
+                .map_err(|_| Error::Runtime("peer channel closed".into()))?;
+            sent += 1;
+        }
+    }
+    for (pos, val, consumers) in &plan.send_b {
+        for &c in consumers {
+            peers[c as usize]
+                .send(Msg::B(*pos, *val))
+                .map_err(|_| Error::Runtime("peer channel closed".into()))?;
+            sent += 1;
+        }
+    }
+    // --- receive the inputs we expect -------------------------------------
+    let mut expected = plan.expect_a + plan.expect_b;
+    // partial sums may arrive interleaved from fast peers; buffer them
+    let mut partials: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    let mut partials_seen = 0u64;
+    while expected > 0 {
+        match rx.recv().map_err(|_| Error::Runtime("expand recv failed".into()))? {
+            Msg::A(pos, v) => {
+                a_vals.insert(pos, v);
+                expected -= 1;
+                recv_count += 1;
+            }
+            Msg::B(pos, v) => {
+                b_vals.insert(pos, v);
+                expected -= 1;
+                recv_count += 1;
+            }
+            Msg::Partial(pc, v) => {
+                *partials.entry(pc).or_insert(0.0) += v;
+                partials_seen += 1;
+                recv_count += 1;
+            }
+        }
+    }
+
+    // --- compute -----------------------------------------------------------
+    let mut my_partials: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    let mut tile_mults = 0u64;
+    let mut scalar_mults = 0u64;
+    let t2 = tile * tile;
+    // assemble tile jobs for closed groups, scalar for the rest
+    let mut job_a: Vec<f32> = Vec::new();
+    let mut job_b: Vec<f32> = Vec::new();
+    let mut job_outputs: Vec<Vec<(u32, u32)>> = Vec::new(); // per tile: (pc, offset in tile)
+    for group in &plan.groups {
+        let closed = group.closed && group.mults.len() >= min_batch;
+        if closed {
+            let mut at = vec![0f32; t2];
+            let mut bt = vec![0f32; t2];
+            let mut outs: Vec<(u32, u32)> = Vec::new();
+            for m in &group.mults {
+                let av = a_vals[&m.pa];
+                let bv = b_vals[&m.pb];
+                at[(m.i as usize % tile) * tile + (m.k as usize % tile)] = av as f32;
+                bt[(m.k as usize % tile) * tile + (m.j as usize % tile)] = bv as f32;
+                let off = (m.i as usize % tile) * tile + (m.j as usize % tile);
+                if !outs.iter().any(|&(pc, _)| pc == m.pc) {
+                    outs.push((m.pc, off as u32));
+                }
+            }
+            job_a.extend_from_slice(&at);
+            job_b.extend_from_slice(&bt);
+            job_outputs.push(outs);
+            tile_mults += group.mults.len() as u64;
+        } else {
+            for m in &group.mults {
+                let v = a_vals[&m.pa] * b_vals[&m.pb];
+                *my_partials.entry(m.pc).or_insert(0.0) += v;
+                scalar_mults += 1;
+            }
+        }
+    }
+    if !job_outputs.is_empty() {
+        let n = job_outputs.len();
+        let (reply_tx, reply_rx) = channel();
+        jobs.send(TileJob { tile, n, a: job_a, b: job_b, reply: reply_tx })
+            .map_err(|_| Error::Runtime("kernel service gone".into()))?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("kernel reply channel closed".into()))??;
+        for (ti, outs) in job_outputs.iter().enumerate() {
+            for &(pc, off) in outs {
+                *my_partials.entry(pc).or_insert(0.0) += out[ti * t2 + off as usize] as f64;
+            }
+        }
+    }
+    drop(jobs);
+
+    // --- fold: route partials to owners ------------------------------------
+    for (&pc, &v) in &my_partials {
+        let owner = plan.owner_c_of[&pc];
+        if owner as usize == plan.id {
+            *partials.entry(pc).or_insert(0.0) += v;
+        } else {
+            peers[owner as usize]
+                .send(Msg::Partial(pc, v))
+                .map_err(|_| Error::Runtime("fold send failed".into()))?;
+            sent += 1;
+        }
+    }
+    drop(peers);
+    // receive the partial sums we own
+    while partials_seen < plan.expect_partials {
+        match rx.recv().map_err(|_| Error::Runtime("fold recv failed".into()))? {
+            Msg::Partial(pc, v) => {
+                *partials.entry(pc).or_insert(0.0) += v;
+                partials_seen += 1;
+                recv_count += 1;
+            }
+            _ => return Err(Error::Runtime("unexpected expand message in fold".into())),
+        }
+    }
+    // finalize owned C values (owners with no incoming partials still emit)
+    let owned_c: Vec<(u32, f64)> = plan
+        .owned_c
+        .iter()
+        .map(|&pc| (pc, partials.get(&pc).copied().unwrap_or(0.0)))
+        .collect();
+    let _ = results.send((
+        plan.id,
+        owned_c,
+        WorkerStats { sent, recv: recv_count, tile_mults, scalar_mults },
+    ));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::models::{build_model, ModelKind};
+    use crate::partition::{partition, PartitionerConfig};
+    use crate::sim;
+    use crate::sparse::{spgemm, Coo};
+    use crate::util::Rng;
+
+    fn random_instance(rng: &mut Rng, m: usize, k: usize, n: usize, d: f64) -> (Csr, Csr) {
+        let mut ca = Coo::new(m, k);
+        for i in 0..m {
+            ca.push(i, rng.below(k), rng.range(0.5, 1.5));
+            for j in 0..k {
+                if rng.chance(d) {
+                    ca.push(i, j, rng.range(-1.0, 1.0));
+                }
+            }
+        }
+        for j in 0..k {
+            ca.push(rng.below(m), j, rng.range(0.5, 1.5));
+        }
+        let mut cb = Coo::new(k, n);
+        for i in 0..k {
+            cb.push(i, rng.below(n), rng.range(0.5, 1.5));
+            for j in 0..n {
+                if rng.chance(d) {
+                    cb.push(i, j, rng.range(-1.0, 1.0));
+                }
+            }
+        }
+        for j in 0..n {
+            cb.push(rng.below(k), j, rng.range(0.5, 1.5));
+        }
+        (Csr::from_coo(&ca), Csr::from_coo(&cb))
+    }
+
+    fn run_kind(kind: ModelKind, p: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let (a, b) = random_instance(&mut rng, 18, 15, 17, 0.2);
+        let c_ref = spgemm(&a, &b).unwrap();
+        let model = build_model(&a, &b, kind, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, p).unwrap();
+        let (rep, c) = run(&a, &b, &alg, &CoordinatorConfig::default()).unwrap();
+        assert!(c.approx_eq(&c_ref, 1e-4), "{kind:?}: numeric mismatch");
+        // the coordinator's realized volume equals the simulator's modeled
+        // volume (direct sends = one word per (net, remote consumer))
+        let (sim_rep, _) = sim::simulate(&a, &b, &alg).unwrap();
+        assert_eq!(rep.expand_volume, sim_rep.expand_volume, "{kind:?} expand");
+        assert_eq!(rep.fold_volume, sim_rep.fold_volume, "{kind:?} fold");
+        assert_eq!(
+            rep.tile_mults + rep.scalar_mults,
+            crate::sparse::spgemm_flops(&a, &b).unwrap(),
+            "{kind:?} all mults executed"
+        );
+    }
+
+    #[test]
+    fn rowwise_partition_executes_correctly() {
+        run_kind(ModelKind::RowWise, 4, 1);
+    }
+
+    #[test]
+    fn outer_product_partition_executes_correctly() {
+        run_kind(ModelKind::OuterProduct, 3, 2);
+    }
+
+    #[test]
+    fn mono_a_partition_executes_correctly() {
+        run_kind(ModelKind::MonoA, 4, 3);
+    }
+
+    #[test]
+    fn fine_grained_partition_executes_correctly() {
+        // exercises the open-group scalar path
+        run_kind(ModelKind::FineGrained, 4, 4);
+    }
+
+    #[test]
+    fn mono_c_partition_executes_correctly() {
+        run_kind(ModelKind::MonoC, 5, 5);
+    }
+
+    #[test]
+    fn single_worker_no_messages() {
+        let mut rng = Rng::new(9);
+        let (a, b) = random_instance(&mut rng, 10, 8, 9, 0.25);
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let part = vec![0u32; model.h.num_vertices()];
+        let alg = sim::lower(&model, &part, &a, &b, 1).unwrap();
+        let (rep, c) = run(&a, &b, &alg, &CoordinatorConfig::default()).unwrap();
+        assert_eq!(rep.total_volume(), 0);
+        assert_eq!(rep.sent_words, vec![0]);
+        let c_ref = spgemm(&a, &b).unwrap();
+        assert!(c.approx_eq(&c_ref, 1e-4));
+    }
+
+    #[test]
+    fn tile_path_is_used_for_rowwise() {
+        // row-wise parallelizations always produce closed groups
+        let mut rng = Rng::new(12);
+        let (a, b) = random_instance(&mut rng, 16, 16, 16, 0.3);
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(2) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, 2).unwrap();
+        let (rep, _) = run(&a, &b, &alg, &CoordinatorConfig::default()).unwrap();
+        assert!(rep.tile_mults > 0, "expected kernel-path multiplications");
+        assert_eq!(rep.scalar_mults, 0, "row-wise groups are always closed");
+        assert!(rep.kernel_dispatches > 0);
+    }
+
+    #[test]
+    fn pjrt_artifacts_used_when_available() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("artifacts missing; skipping PJRT integration test");
+            return;
+        }
+        let mut rng = Rng::new(21);
+        let (a, b) = random_instance(&mut rng, 20, 20, 20, 0.25);
+        let c_ref = spgemm(&a, &b).unwrap();
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(3) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, 3).unwrap();
+        let ccfg = CoordinatorConfig { artifacts_dir: Some(dir), ..Default::default() };
+        let (rep, c) = run(&a, &b, &alg, &ccfg).unwrap();
+        assert!(rep.used_pjrt, "PJRT backend should load");
+        assert!(c.approx_eq(&c_ref, 1e-4));
+        assert!(rep.tile_mults > 0);
+    }
+}

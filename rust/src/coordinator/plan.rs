@@ -1,0 +1,291 @@
+//! Execution planning: lower an [`Algorithm`] to per-worker routing
+//! tables, expected message counts, and tile groups.
+//!
+//! The leader runs this once before spawning workers. Tile groups carry a
+//! *closure* flag: a group (a `T×T×T` sub-cube of the iteration space) is
+//! closed when every multiplication implied by its gathered A/B tile
+//! entries is itself assigned to the group — the precondition for
+//! computing the group as one dense tile product without double counting.
+//! Partitions from the 1D/2D models are always closed (their classes are
+//! slice/fiber monochrome); fine-grained and monochrome-C partitions may
+//! produce open groups, which take the scalar path.
+
+use crate::hypergraph::models::MultEnum;
+use crate::sim::Algorithm;
+use crate::sparse::Csr;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// One multiplication localized to a worker.
+#[derive(Debug, Clone, Copy)]
+pub struct LocalMult {
+    pub i: u32,
+    pub k: u32,
+    pub j: u32,
+    pub pa: u32,
+    pub pb: u32,
+    pub pc: u32,
+}
+
+/// A tile group: the worker's multiplications falling in one `T³`
+/// sub-cube of the iteration space.
+#[derive(Debug, Clone)]
+pub struct TileGroup {
+    pub mults: Vec<LocalMult>,
+    pub closed: bool,
+}
+
+/// Everything one worker needs to execute its share.
+#[derive(Debug, Clone)]
+pub struct WorkerPlan {
+    pub id: usize,
+    pub owned_a: Vec<(u32, f64)>,
+    pub owned_b: Vec<(u32, f64)>,
+    /// C positions this worker owns (it reports their final values).
+    pub owned_c: Vec<u32>,
+    /// Owned A entries with remote consumers: `(pos, value, consumers)`.
+    pub send_a: Vec<(u32, f64, Vec<u32>)>,
+    pub send_b: Vec<(u32, f64, Vec<u32>)>,
+    /// Remote input entries this worker will receive.
+    pub expect_a: u64,
+    pub expect_b: u64,
+    /// Partial-sum messages this worker (as a C owner) will receive.
+    pub expect_partials: u64,
+    /// Tile groups of the local multiplications.
+    pub groups: Vec<TileGroup>,
+    /// Owner of every C position this worker produces partials for.
+    pub owner_c_of: HashMap<u32, u32>,
+}
+
+/// The full plan plus modeled volumes (for cross-checking the simulator).
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub workers: Vec<WorkerPlan>,
+    pub expand_volume: u64,
+    pub fold_volume: u64,
+}
+
+impl ExecutionPlan {
+    pub fn build(a: &Csr, b: &Csr, alg: &Algorithm, c_struct: &Csr, tile: usize) -> Result<Self> {
+        let p = alg.p;
+        if tile == 0 {
+            return Err(Error::Config("tile must be positive".into()));
+        }
+        // consumers per input position, producers per output position
+        let mut need_a: Vec<Vec<u32>> = vec![Vec::new(); a.nnz()];
+        let mut need_b: Vec<Vec<u32>> = vec![Vec::new(); b.nnz()];
+        let mut producers_c: Vec<Vec<u32>> = vec![Vec::new(); c_struct.nnz()];
+        // local mults grouped per worker per tile key
+        let mut groups: Vec<HashMap<(u32, u32, u32), Vec<LocalMult>>> =
+            vec![HashMap::new(); p];
+        MultEnum::new(a, b).for_each(|m| {
+            let q = alg.mult_part[m.idx as usize];
+            push_unique(&mut need_a[m.pa as usize], q);
+            push_unique(&mut need_b[m.pb as usize], q);
+            let pc = (c_struct.rowptr[m.i as usize]
+                + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("S_C"))
+                as u32;
+            push_unique(&mut producers_c[pc as usize], q);
+            let key =
+                (m.i / tile as u32, m.k / tile as u32, m.j / tile as u32);
+            groups[q as usize]
+                .entry(key)
+                .or_default()
+                .push(LocalMult { i: m.i, k: m.k, j: m.j, pa: m.pa, pb: m.pb, pc });
+        });
+
+        let mut workers: Vec<WorkerPlan> = (0..p)
+            .map(|id| WorkerPlan {
+                id,
+                owned_a: Vec::new(),
+                owned_b: Vec::new(),
+                owned_c: Vec::new(),
+                send_a: Vec::new(),
+                send_b: Vec::new(),
+                expect_a: 0,
+                expect_b: 0,
+                expect_partials: 0,
+                groups: Vec::new(),
+                owner_c_of: HashMap::new(),
+            })
+            .collect();
+
+        let mut expand_volume = 0u64;
+        // inputs: owners, send lists, expectations
+        for pos in 0..a.nnz() {
+            let owner = alg.owner_a[pos] as usize;
+            let val = a.values[pos];
+            workers[owner].owned_a.push((pos as u32, val));
+            let remote: Vec<u32> =
+                need_a[pos].iter().copied().filter(|&q| q as usize != owner).collect();
+            if !remote.is_empty() {
+                expand_volume += remote.len() as u64;
+                for &q in &remote {
+                    workers[q as usize].expect_a += 1;
+                }
+                workers[owner].send_a.push((pos as u32, val, remote));
+            }
+        }
+        for pos in 0..b.nnz() {
+            let owner = alg.owner_b[pos] as usize;
+            let val = b.values[pos];
+            workers[owner].owned_b.push((pos as u32, val));
+            let remote: Vec<u32> =
+                need_b[pos].iter().copied().filter(|&q| q as usize != owner).collect();
+            if !remote.is_empty() {
+                expand_volume += remote.len() as u64;
+                for &q in &remote {
+                    workers[q as usize].expect_b += 1;
+                }
+                workers[owner].send_b.push((pos as u32, val, remote));
+            }
+        }
+        // outputs: owners and partial expectations
+        let mut fold_volume = 0u64;
+        for pc in 0..c_struct.nnz() {
+            let owner = alg.owner_c[pc] as usize;
+            workers[owner].owned_c.push(pc as u32);
+            for &q in &producers_c[pc] {
+                workers[q as usize].owner_c_of.insert(pc as u32, owner as u32);
+                if q as usize != owner {
+                    workers[owner].expect_partials += 1;
+                    fold_volume += 1;
+                }
+            }
+        }
+        // tile groups with closure detection
+        for (q, map) in groups.into_iter().enumerate() {
+            for (_, mults) in map {
+                let closed = is_closed(&mults);
+                workers[q].groups.push(TileGroup { mults, closed });
+            }
+        }
+        Ok(ExecutionPlan { workers, expand_volume, fold_volume })
+    }
+}
+
+#[inline]
+fn push_unique(v: &mut Vec<u32>, q: u32) {
+    if !v.contains(&q) {
+        v.push(q);
+    }
+}
+
+/// A group is closed iff `#mults = Σ_k |{(i,k)}| · |{(k,j)}|`, i.e. the
+/// group's multiplication set is exactly the Cartesian closure of its
+/// gathered tile entries.
+fn is_closed(mults: &[LocalMult]) -> bool {
+    let mut a_by_k: HashMap<u32, Vec<u32>> = HashMap::new();
+    let mut b_by_k: HashMap<u32, Vec<u32>> = HashMap::new();
+    for m in mults {
+        let e = a_by_k.entry(m.k).or_default();
+        if !e.contains(&m.i) {
+            e.push(m.i);
+        }
+        let e = b_by_k.entry(m.k).or_default();
+        if !e.contains(&m.j) {
+            e.push(m.j);
+        }
+    }
+    let closure: usize = a_by_k.iter().map(|(k, is)| is.len() * b_by_k[k].len()).sum();
+    closure == mults.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::models::{build_model, ModelKind};
+    use crate::sim;
+    use crate::sparse::Coo;
+
+    fn fig1() -> (Csr, Csr) {
+        let a = Csr::from_coo(
+            &Coo::from_triplets(3, 4, [(0, 0, 1.), (0, 2, 1.), (1, 0, 1.), (1, 3, 1.), (2, 1, 1.)])
+                .unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(4, 2, [(0, 1, 1.), (1, 0, 1.), (2, 0, 1.), (2, 1, 1.), (3, 1, 1.)])
+                .unwrap(),
+        );
+        (a, b)
+    }
+
+    #[test]
+    fn closure_detection() {
+        // closed: {(0,0,0), (0,0,1)} — one A entry, two B entries, 1*2 = 2
+        let closed = vec![
+            LocalMult { i: 0, k: 0, j: 0, pa: 0, pb: 0, pc: 0 },
+            LocalMult { i: 0, k: 0, j: 1, pa: 0, pb: 1, pc: 1 },
+        ];
+        assert!(is_closed(&closed));
+        // open: {(0,0,0), (1,0,1)} implies (0,0,1) and (1,0,0) too
+        let open = vec![
+            LocalMult { i: 0, k: 0, j: 0, pa: 0, pb: 0, pc: 0 },
+            LocalMult { i: 1, k: 0, j: 1, pa: 1, pb: 1, pc: 3 },
+        ];
+        assert!(!is_closed(&open));
+    }
+
+    #[test]
+    fn plan_volumes_match_sim() {
+        let (a, b) = fig1();
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        // rows to parts: 0→0, 1→1, 2→0
+        let part = vec![0u32, 1, 0];
+        let alg = sim::lower(&model, &part, &a, &b, 2).unwrap();
+        let c = crate::sparse::spgemm_structure(&a, &b).unwrap();
+        let plan = ExecutionPlan::build(&a, &b, &alg, &c, 8).unwrap();
+        let (rep, _) = sim::simulate(&a, &b, &alg).unwrap();
+        assert_eq!(plan.expand_volume, rep.expand_volume);
+        assert_eq!(plan.fold_volume, rep.fold_volume);
+        // every mult lands in exactly one group
+        let total: usize =
+            plan.workers.iter().flat_map(|w| &w.groups).map(|g| g.mults.len()).sum();
+        assert_eq!(total as u64, crate::sparse::spgemm_flops(&a, &b).unwrap());
+    }
+
+    #[test]
+    fn rowwise_groups_always_closed() {
+        let (a, b) = fig1();
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let part = vec![0u32, 1, 2];
+        let alg = sim::lower(&model, &part, &a, &b, 3).unwrap();
+        let c = crate::sparse::spgemm_structure(&a, &b).unwrap();
+        let plan = ExecutionPlan::build(&a, &b, &alg, &c, 4).unwrap();
+        for w in &plan.workers {
+            for g in &w.groups {
+                assert!(g.closed, "row-wise tile groups must be closed");
+            }
+        }
+    }
+
+    #[test]
+    fn expectations_are_consistent() {
+        let (a, b) = fig1();
+        let model = build_model(&a, &b, ModelKind::OuterProduct, false).unwrap();
+        let part = vec![0u32, 1, 0, 1];
+        let alg = sim::lower(&model, &part, &a, &b, 2).unwrap();
+        let c = crate::sparse::spgemm_structure(&a, &b).unwrap();
+        let plan = ExecutionPlan::build(&a, &b, &alg, &c, 8).unwrap();
+        // Σ send list sizes == Σ expectations == expand volume
+        let sent: u64 = plan
+            .workers
+            .iter()
+            .flat_map(|w| w.send_a.iter().chain(&w.send_b))
+            .map(|(_, _, cs)| cs.len() as u64)
+            .sum();
+        let expected: u64 = plan.workers.iter().map(|w| w.expect_a + w.expect_b).sum();
+        assert_eq!(sent, expected);
+        assert_eq!(sent, plan.expand_volume);
+    }
+
+    #[test]
+    fn rejects_zero_tile() {
+        let (a, b) = fig1();
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let part = vec![0u32, 0, 0];
+        let alg = sim::lower(&model, &part, &a, &b, 1).unwrap();
+        let c = crate::sparse::spgemm_structure(&a, &b).unwrap();
+        assert!(ExecutionPlan::build(&a, &b, &alg, &c, 0).is_err());
+    }
+}

@@ -1,0 +1,96 @@
+//! Prior communication lower bounds for comparison with the hypergraph
+//! bounds (Secs. 4.1–4.2).
+//!
+//! * eq. (1): the memory-dependent bound `|V^m| / (p·√M) − M` and the
+//!   memory-independent bound `(|V^m|/p)^{2/3} − |V^nz|/p` of Ballard et
+//!   al. (2011, 2012), with the customary constants (α = β = 1; the paper
+//!   suppresses them asymptotically).
+//! * Thm. 4.10's trivial companions for the sequential model:
+//!   `|V^m| / √M` (Hong & Kung) and `|V^nz|` (every word must be touched).
+
+/// Inputs for the bound formulas.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundParams {
+    /// Number of nontrivial multiplications `|V^m|`.
+    pub flops: u64,
+    /// Total nonzeros `|V^nz| = nnz(A)+nnz(B)+nnz(C)`.
+    pub nnz_total: u64,
+    /// Number of processors.
+    pub p: usize,
+    /// Local-memory words per processor (for memory-dependent bounds).
+    pub memory: u64,
+}
+
+/// Memory-dependent parallel bound of eq. (1): `|V^m|/(p·√M) − M`.
+pub fn memory_dependent(b: &BoundParams) -> f64 {
+    let m = b.memory.max(1) as f64;
+    (b.flops as f64 / (b.p as f64 * m.sqrt()) - m).max(0.0)
+}
+
+/// Memory-independent parallel bound of eq. (1):
+/// `(|V^m|/p)^{2/3} − |V^nz|/p`.
+pub fn memory_independent(b: &BoundParams) -> f64 {
+    let per = b.flops as f64 / b.p as f64;
+    (per.powf(2.0 / 3.0) - b.nnz_total as f64 / b.p as f64).max(0.0)
+}
+
+/// The combined eq. (1) bound (maximum of the two regimes).
+pub fn eq1_combined(b: &BoundParams) -> f64 {
+    memory_dependent(b).max(memory_independent(b))
+}
+
+/// Hong & Kung's sequential memory-dependent bound `Ω(|V^m|/√M)`.
+pub fn sequential_memory_dependent(flops: u64, memory: u64) -> f64 {
+    flops as f64 / (memory.max(1) as f64).sqrt()
+}
+
+/// The trivial sequential bound: every input/output word moves at least
+/// once when fast memory starts and ends empty.
+pub fn sequential_trivial(nnz_total: u64) -> f64 {
+    nnz_total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_case_orders_of_magnitude() {
+        // dense n³ multiply: flops = n³, nnz = 3n²
+        let n = 512u64;
+        let b = BoundParams { flops: n * n * n, nnz_total: 3 * n * n, p: 64, memory: 4096 };
+        // memory-dependent: n³/(p·√M) − M = 2²⁷/(64·64) − 4096 = 32768 − 4096
+        let md = memory_dependent(&b);
+        assert!((md - 28672.0).abs() < 1.0, "md={md}");
+        let mi = memory_independent(&b);
+        // (n³/p)^{2/3} = 2^14 = 16384; |V^nz|/p = 3·2¹⁸/64 = 12288
+        assert!((mi - (16384.0 - 12288.0)).abs() < 1.0, "mi={mi}");
+        assert_eq!(eq1_combined(&b), md.max(mi));
+    }
+
+    #[test]
+    fn diagonal_case_bounds_vanish() {
+        // A = B = diagonal: flops = n, nnz = 3n → eq. (1) goes to ~0 while
+        // the true cost is 3n (the paper's Sec. 4.2 looseness example).
+        let n = 4096u64;
+        let b = BoundParams { flops: n, nnz_total: 3 * n, p: 16, memory: 1024 };
+        assert_eq!(memory_dependent(&b), 0.0);
+        assert_eq!(memory_independent(&b), 0.0);
+        assert!(sequential_trivial(b.nnz_total) > 0.0);
+    }
+
+    #[test]
+    fn sequential_bounds() {
+        assert!((sequential_memory_dependent(1_000_000, 10_000) - 10_000.0).abs() < 1e-9);
+        assert_eq!(sequential_trivial(42), 42.0);
+        // degenerate memory guarded
+        assert!(sequential_memory_dependent(100, 0).is_finite());
+    }
+
+    #[test]
+    fn bounds_clamped_nonnegative() {
+        let b = BoundParams { flops: 10, nnz_total: 1000, p: 2, memory: 1 << 20 };
+        assert_eq!(memory_dependent(&b), 0.0);
+        assert_eq!(memory_independent(&b), 0.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Communication-cost metrics (Sec. 4.1 / Sec. 6) and lower bounds.
+//!
+//! * [`CutMetrics`] — everything the paper reports for a partition: the
+//!   per-part boundary cost `|Q_i|` of Def. 4.1, the critical-path
+//!   bandwidth cost `max_i |Q_i|` of Lem. 4.2 (the quantity plotted in
+//!   Figs. 7–9), the connectivity-(λ−1) volume that PaToH minimizes, and
+//!   the computation/memory load imbalances of Def. 4.4.
+//! * [`bounds`] — the prior asymptotic lower bounds of eq. (1) and the
+//!   sequential bound of Thm. 4.10, for the comparison experiments.
+
+pub mod bounds;
+
+use crate::hypergraph::Hypergraph;
+use crate::{Error, Result};
+
+/// Evaluation of a `p`-way partition of a hypergraph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CutMetrics {
+    pub parts: usize,
+    /// `|Q_i|` — total cost of nets incident to part `i` that are cut
+    /// (Def. 4.1). Lem. 4.2: every processor must send or receive at
+    /// least this many words.
+    pub boundary_cost: Vec<u64>,
+    /// `max_i |Q_i|` — the critical-path bandwidth cost (the paper's
+    /// plotted metric).
+    pub comm_max: u64,
+    /// `Σ_n c(n)·(λ_n − 1)` — the connectivity metric PaToH minimizes
+    /// (total communication volume).
+    pub connectivity_volume: u64,
+    /// Number of cut nets (λ_n ≥ 2).
+    pub cut_nets: usize,
+    /// Per-part computation weight.
+    pub comp_weight: Vec<u64>,
+    /// Per-part memory weight.
+    pub mem_weight: Vec<u64>,
+    /// Maximum number of *distinct neighbor parts* over parts — a latency
+    /// (message-count) proxy (Sec. 7's future-work metric).
+    pub max_neighbors: usize,
+}
+
+impl CutMetrics {
+    /// Computation imbalance `max_i w(V_i) / (W/p)`; 1.0 is perfect. The
+    /// ε of Def. 4.4 is `imbalance − 1`.
+    pub fn comp_imbalance(&self) -> f64 {
+        imbalance_of(&self.comp_weight)
+    }
+
+    /// Memory imbalance (δ of Def. 4.4, plus one).
+    pub fn mem_imbalance(&self) -> f64 {
+        imbalance_of(&self.mem_weight)
+    }
+
+    /// Average per-part boundary cost (total volume / p, the "average
+    /// communication" companion metric).
+    pub fn comm_avg(&self) -> f64 {
+        self.boundary_cost.iter().sum::<u64>() as f64 / self.parts as f64
+    }
+}
+
+fn imbalance_of(w: &[u64]) -> f64 {
+    let total: u64 = w.iter().sum();
+    if total == 0 || w.is_empty() {
+        return 1.0;
+    }
+    let avg = total as f64 / w.len() as f64;
+    *w.iter().max().unwrap() as f64 / avg
+}
+
+/// Evaluate a partition (`part[v] ∈ 0..p`).
+pub fn evaluate(h: &Hypergraph, part: &[u32], p: usize) -> Result<CutMetrics> {
+    if part.len() != h.num_vertices() {
+        return Err(Error::Partition(format!(
+            "partition length {} != vertex count {}",
+            part.len(),
+            h.num_vertices()
+        )));
+    }
+    if let Some(&m) = part.iter().max() {
+        if m as usize >= p {
+            return Err(Error::Partition(format!("part id {m} out of range (p={p})")));
+        }
+    }
+    let mut boundary = vec![0u64; p];
+    let mut conn_volume = 0u64;
+    let mut cut_nets = 0usize;
+    // neighbor-part sets per part, dedup via stamping
+    let mut neighbor_stamp = vec![vec![u32::MAX; p]; 1]; // p x p can be large; use per-part HashSet-lite
+    let mut neighbors: Vec<std::collections::HashSet<u32>> = vec![Default::default(); p];
+    let _ = &mut neighbor_stamp;
+
+    let mut seen: Vec<u32> = Vec::with_capacity(16); // parts touched by this net
+    let mut stamp = vec![u32::MAX; p];
+    for n in 0..h.num_nets() {
+        let pins = h.pins_of(n);
+        if pins.is_empty() {
+            continue;
+        }
+        seen.clear();
+        for &v in pins {
+            let q = part[v as usize];
+            if stamp[q as usize] != n as u32 {
+                stamp[q as usize] = n as u32;
+                seen.push(q);
+            }
+        }
+        let lambda = seen.len();
+        if lambda >= 2 {
+            cut_nets += 1;
+            let c = h.net_cost[n];
+            conn_volume += c * (lambda as u64 - 1);
+            for &q in &seen {
+                boundary[q as usize] += c;
+                for &r in &seen {
+                    if r != q {
+                        neighbors[q as usize].insert(r);
+                    }
+                }
+            }
+        }
+    }
+    let mut comp = vec![0u64; p];
+    let mut mem = vec![0u64; p];
+    for v in 0..h.num_vertices() {
+        comp[part[v] as usize] += h.w_comp[v];
+        mem[part[v] as usize] += h.w_mem[v];
+    }
+    Ok(CutMetrics {
+        parts: p,
+        comm_max: boundary.iter().copied().max().unwrap_or(0),
+        boundary_cost: boundary,
+        connectivity_volume: conn_volume,
+        cut_nets,
+        comp_weight: comp,
+        mem_weight: mem,
+        max_neighbors: neighbors.iter().map(|s| s.len()).max().unwrap_or(0),
+    })
+}
+
+/// Just the connectivity-(λ−1) volume (fast path for the partitioner's
+/// objective tracking).
+pub fn connectivity_volume(h: &Hypergraph, part: &[u32]) -> u64 {
+    let mut volume = 0u64;
+    let mut seen: Vec<u32> = Vec::with_capacity(8);
+    for n in 0..h.num_nets() {
+        let pins = h.pins_of(n);
+        seen.clear();
+        for &v in pins {
+            let q = part[v as usize];
+            if !seen.contains(&q) {
+                seen.push(q);
+            }
+        }
+        if seen.len() >= 2 {
+            volume += h.net_cost[n] * (seen.len() as u64 - 1);
+        }
+    }
+    volume
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn sample() -> Hypergraph {
+        // 6 vertices, nets: {0,1,2} c1, {2,3} c2, {4,5} c1, {0,5} c3
+        let mut b = HypergraphBuilder::new(6);
+        b.set_weights(vec![1, 1, 2, 1, 1, 2], vec![1; 6]);
+        b.add_net(1, vec![0, 1, 2]);
+        b.add_net(2, vec![2, 3]);
+        b.add_net(1, vec![4, 5]);
+        b.add_net(3, vec![0, 5]);
+        b.finalize(false, false)
+    }
+
+    #[test]
+    fn all_internal_partition_has_zero_cut() {
+        let h = sample();
+        let m = evaluate(&h, &[0; 6], 1).unwrap();
+        assert_eq!(m.comm_max, 0);
+        assert_eq!(m.connectivity_volume, 0);
+        assert_eq!(m.cut_nets, 0);
+        assert_eq!(m.comp_weight, vec![8]);
+    }
+
+    #[test]
+    fn two_way_cut_metrics() {
+        let h = sample();
+        // parts: {0,1,2} vs {3,4,5}
+        let part = vec![0, 0, 0, 1, 1, 1];
+        let m = evaluate(&h, &part, 2).unwrap();
+        // cut nets: {2,3} (c2) and {0,5} (c3); {0,1,2} and {4,5} internal
+        assert_eq!(m.cut_nets, 2);
+        assert_eq!(m.connectivity_volume, 5);
+        assert_eq!(m.boundary_cost, vec![5, 5]);
+        assert_eq!(m.comm_max, 5);
+        assert_eq!(m.comp_weight, vec![4, 4]);
+        assert!((m.comp_imbalance() - 1.0).abs() < 1e-12);
+        assert_eq!(m.max_neighbors, 1);
+    }
+
+    #[test]
+    fn three_way_lambda_counts() {
+        let h = sample();
+        // {0,1} {2,3} {4,5}: net {0,1,2} spans 2 parts; {2,3} internal;
+        // {4,5} internal; {0,5} spans 2.
+        let part = vec![0, 0, 1, 1, 2, 2];
+        let m = evaluate(&h, &part, 3).unwrap();
+        assert_eq!(m.connectivity_volume, 1 + 3);
+        assert_eq!(m.boundary_cost, vec![1 + 3, 1, 3]);
+        assert_eq!(m.comm_max, 4);
+        // neighbors: part0 ↔ {1,2}, so max 2
+        assert_eq!(m.max_neighbors, 2);
+    }
+
+    #[test]
+    fn volume_helper_agrees() {
+        let h = sample();
+        for part in [vec![0u32, 0, 0, 1, 1, 1], vec![0, 1, 2, 0, 1, 2], vec![1, 1, 1, 1, 1, 1]] {
+            let p = 1 + *part.iter().max().unwrap() as usize;
+            assert_eq!(connectivity_volume(&h, &part), evaluate(&h, &part, p).unwrap().connectivity_volume);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_partition() {
+        let h = sample();
+        assert!(evaluate(&h, &[0; 5], 2).is_err());
+        assert!(evaluate(&h, &[0, 0, 0, 0, 0, 7], 2).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+/// Unified error type for all spgemm-hp subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape mismatch between operands (e.g. `A.ncols != B.nrows`).
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+
+    /// Malformed input data (Matrix Market parse errors, bad triplets, ...).
+    #[error("invalid input: {0}")]
+    Invalid(String),
+
+    /// A partition violated a structural requirement (wrong length, part
+    /// id out of range, balance infeasible, ...).
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    /// The PJRT runtime could not load, compile, or execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest missing or no variant matches the request.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Configuration / CLI error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn dim(msg: impl Into<String>) -> Self {
+        Error::Dimension(msg.into())
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::Invalid(msg.into())
+    }
+}

@@ -1,0 +1,73 @@
+//! Erdős–Rényi random sparse matrices — the matrix class for which the
+//! paper compares its hypergraph bounds against the eq. (1) asymptotic
+//! bounds (Ballard et al. 2013 analyzed ER inputs in expectation).
+
+use crate::sparse::{Coo, Csr};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// `nrows × ncols` matrix where each entry is nonzero independently with
+/// probability `d / ncols` (so each row has ≈ `d` nonzeros). Nonzero
+/// values are uniform in `[0.5, 1.5)`.
+pub fn erdos_renyi(nrows: usize, ncols: usize, d: f64, rng: &mut Rng) -> Result<Csr> {
+    if d < 0.0 || d > ncols as f64 {
+        return Err(Error::invalid(format!("erdos_renyi: d={d} out of range")));
+    }
+    let p = d / ncols as f64;
+    let mut coo = Coo::with_capacity(nrows, ncols, (nrows as f64 * d * 1.2) as usize);
+    // geometric skipping for efficiency at low density
+    if p > 0.0 {
+        let ln1p = (1.0 - p).ln();
+        let total = (nrows as u64) * (ncols as u64);
+        let mut pos: u64 = 0;
+        loop {
+            // skip ~ Geometric(p)
+            let u = rng.uniform().max(1e-300);
+            let skip = if p >= 1.0 { 0 } else { (u.ln() / ln1p).floor() as u64 };
+            pos = pos.saturating_add(skip);
+            if pos >= total {
+                break;
+            }
+            let i = (pos / ncols as u64) as usize;
+            let j = (pos % ncols as u64) as usize;
+            coo.push(i, j, rng.range(0.5, 1.5));
+            pos += 1;
+        }
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_close_to_target() {
+        let mut rng = Rng::new(33);
+        let a = erdos_renyi(2000, 2000, 8.0, &mut rng).unwrap();
+        a.validate().unwrap();
+        let per_row = a.nnz() as f64 / 2000.0;
+        assert!((per_row - 8.0).abs() < 1.0, "per_row={per_row}");
+    }
+
+    #[test]
+    fn zero_density_is_empty() {
+        let mut rng = Rng::new(1);
+        let a = erdos_renyi(10, 10, 0.0, &mut rng).unwrap();
+        assert_eq!(a.nnz(), 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut rng = Rng::new(1);
+        assert!(erdos_renyi(10, 10, -1.0, &mut rng).is_err());
+        assert!(erdos_renyi(10, 10, 11.0, &mut rng).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = erdos_renyi(100, 80, 5.0, &mut Rng::new(4)).unwrap();
+        let b = erdos_renyi(100, 80, 5.0, &mut Rng::new(4)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,189 @@
+//! Linear-programming constraint-matrix generator (Sec. 6.2 analogues).
+//!
+//! The paper's LP experiments compute `C = A·D²·Aᵀ` for interior-point
+//! normal equations, with `A` a wide constraint matrix (I rows ≪ K
+//! columns). The UF matrices they use (fome21, pds-80, pds-100, cont11_l,
+//! sgpf5y6) are multicommodity-flow / staircase LPs: each column (variable)
+//! touches 2–3 structurally nearby rows (constraints) plus occasional
+//! global linking rows. We reproduce the Table II statistics — row/column
+//! densities and the `|V^m|/|S_C| ≈ 1.5` fold ratio — with a staircase
+//! block-angular generator.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Parameters for [`lp_constraints`].
+#[derive(Debug, Clone, Copy)]
+pub struct LpParams {
+    /// Rows (constraints) — `I` in Table II.
+    pub nrows: usize,
+    /// Columns (variables) — `K` in Table II.
+    pub ncols: usize,
+    /// Average nonzeros per column (Table II's `|S_B|/K` ≈ 2.1–2.7).
+    pub nnz_per_col: f64,
+    /// Number of staircase blocks; each column's local rows fall in a
+    /// window around its block.
+    pub blocks: usize,
+    /// Fraction of rows that are global "linking" constraints.
+    pub linking_fraction: f64,
+    /// Probability that a column also hits a linking row.
+    pub linking_prob: f64,
+}
+
+impl LpParams {
+    /// Defaults shaped after the pds-family rows of Table II
+    /// (nnz/col ≈ 2.1, row density ≈ 7, C density ≈ 9.5/row).
+    pub fn pds_like(nrows: usize, ncols: usize) -> Self {
+        LpParams {
+            nrows,
+            ncols,
+            nnz_per_col: 2.1,
+            blocks: (nrows / 64).max(1),
+            linking_fraction: 0.02,
+            linking_prob: 0.06,
+        }
+    }
+
+    /// Shaped after cont11_l (taller: K/I ≈ 1.3, nnz/col ≈ 2.7).
+    pub fn cont_like(nrows: usize, ncols: usize) -> Self {
+        LpParams {
+            nrows,
+            ncols,
+            nnz_per_col: 2.7,
+            blocks: (nrows / 48).max(1),
+            linking_fraction: 0.005,
+            linking_prob: 0.02,
+        }
+    }
+
+    /// Shaped after sgpf5y6 (stochastic program: sparse columns, strong
+    /// locality, very low fold ratio 1.2).
+    pub fn sgpf_like(nrows: usize, ncols: usize) -> Self {
+        LpParams {
+            nrows,
+            ncols,
+            nnz_per_col: 2.7,
+            blocks: (nrows / 24).max(1),
+            linking_fraction: 0.001,
+            linking_prob: 0.01,
+        }
+    }
+}
+
+/// Generate a staircase/block-angular LP constraint matrix.
+///
+/// Guarantees no zero rows or columns (the paper's standing assumption in
+/// Sec. 3.1): every column receives at least one entry, and empty rows are
+/// patched with one entry each.
+pub fn lp_constraints(params: &LpParams, rng: &mut Rng) -> Result<Csr> {
+    let LpParams { nrows, ncols, nnz_per_col, blocks, linking_fraction, linking_prob } = *params;
+    if nrows == 0 || ncols == 0 {
+        return Err(Error::invalid("lp_constraints: empty shape"));
+    }
+    if nnz_per_col < 1.0 {
+        return Err(Error::invalid("lp_constraints: nnz_per_col must be >= 1"));
+    }
+    let n_link = ((nrows as f64) * linking_fraction).round() as usize;
+    let n_local = nrows - n_link;
+    let blocks = blocks.clamp(1, n_local.max(1));
+    let rows_per_block = n_local.div_ceil(blocks);
+
+    let mut coo = Coo::with_capacity(nrows, ncols, (ncols as f64 * (nnz_per_col + 0.5)) as usize);
+    let mut row_used = vec![false; nrows];
+    for j in 0..ncols {
+        // staircase: column j's block advances with j
+        let b = j * blocks / ncols;
+        let lo = (n_link + b * rows_per_block).min(nrows - 1);
+        let hi = (lo + 2 * rows_per_block).clamp(lo + 1, nrows); // overlap into next block
+        let window = hi - lo;
+        // draw the column's nonzero count around the mean
+        let extra = nnz_per_col - nnz_per_col.floor();
+        let mut cnt = nnz_per_col.floor() as usize + usize::from(rng.chance(extra));
+        cnt = cnt.clamp(1, window);
+        let picks = rng.sample(window, cnt);
+        for r in picks {
+            let row = lo + r;
+            coo.push(row, j, rng.range(-1.0, 1.0) + 1.5);
+            row_used[row] = true;
+        }
+        if n_link > 0 && rng.chance(linking_prob) {
+            let row = rng.below(n_link);
+            coo.push(row, j, 1.0);
+            row_used[row] = true;
+        }
+    }
+    // patch empty rows so S_A has no zero rows
+    for (row, used) in row_used.iter().enumerate() {
+        if !used {
+            let j = rng.below(ncols);
+            coo.push(row, j, 1.0);
+        }
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+/// Interior-point iterate: positive diagonal `D²` values.
+pub fn ipm_scaling(ncols: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..ncols).map(|_| rng.range(0.01, 2.0).powi(2)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{ops, spgemm, SpgemmStats};
+
+    #[test]
+    fn shape_and_no_empty_rows_or_cols() {
+        let mut rng = Rng::new(21);
+        let p = LpParams::pds_like(512, 1700);
+        let a = lp_constraints(&p, &mut rng).unwrap();
+        a.validate().unwrap();
+        assert_eq!((a.nrows, a.ncols), (512, 1700));
+        assert!(a.row_counts().iter().all(|&c| c > 0), "empty row");
+        assert!(a.col_counts().iter().all(|&c| c > 0), "empty col");
+    }
+
+    #[test]
+    fn densities_match_table2_band() {
+        let mut rng = Rng::new(22);
+        let p = LpParams::pds_like(1024, 3400);
+        let a = lp_constraints(&p, &mut rng).unwrap();
+        let col_density = a.nnz() as f64 / a.ncols as f64;
+        assert!((1.8..2.8).contains(&col_density), "col density {col_density}");
+        let row_density = a.nnz() as f64 / a.nrows as f64;
+        assert!((4.0..11.0).contains(&row_density), "row density {row_density}");
+    }
+
+    #[test]
+    fn normal_equations_stats_shape() {
+        // C = A·D²·Aᵀ should have fold ratio |V^m|/|S_C| ≈ 1.2–2.2 like Tab II
+        let mut rng = Rng::new(23);
+        let p = LpParams::pds_like(600, 2000);
+        let a = lp_constraints(&p, &mut rng).unwrap();
+        let d2 = ipm_scaling(a.ncols, &mut rng);
+        let b = ops::scale_rows(&a.transpose(), &d2).unwrap();
+        let st = SpgemmStats::compute(&a, &b).unwrap();
+        assert_eq!(st.i, st.j);
+        let fold = st.mults_per_output();
+        assert!((1.0..3.0).contains(&fold), "fold ratio {fold}");
+        // C is symmetric
+        let c = spgemm(&a, &b).unwrap();
+        assert!(c.is_symmetric(1e-9));
+    }
+
+    #[test]
+    fn rejects_degenerate_params() {
+        let mut rng = Rng::new(1);
+        assert!(lp_constraints(&LpParams { nnz_per_col: 0.5, ..LpParams::pds_like(10, 10) }, &mut rng).is_err());
+        assert!(lp_constraints(&LpParams::pds_like(0, 10), &mut rng).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = LpParams::sgpf_like(100, 300);
+        let a = lp_constraints(&p, &mut Rng::new(8)).unwrap();
+        let b = lp_constraints(&p, &mut Rng::new(8)).unwrap();
+        assert_eq!(a, b);
+    }
+}

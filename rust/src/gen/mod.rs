@@ -1,0 +1,29 @@
+//! Workload generators for the paper's three applications (Sec. 6) plus
+//! random matrices for the lower-bound experiments.
+//!
+//! * [`amg`] — the 27-point-stencil model problem and smoothed-aggregation
+//!   prolongators (Sec. 6.1), including an SA-ρAMGe-like variant with
+//!   aggressive (~35×) coarsening, and the geometric grid partitions used
+//!   as baselines in Fig. 7.
+//! * [`lp`] — staircase/block-angular linear-programming constraint
+//!   matrices matching the Table II statistics of fome21/pds/cont11/sgpf5y6
+//!   (the real UF matrices are not redistributable inside this container;
+//!   see DESIGN.md §Substitutions).
+//! * [`rmat`] — R-MAT scale-free graphs standing in for the social-network
+//!   and protein-interaction matrices of Sec. 6.3.
+//! * [`roadnet`] — a near-planar road-network-like grid graph
+//!   (the roadnetca analogue).
+//! * [`er`] — Erdős–Rényi random matrices for the eq. (1) bound
+//!   comparisons.
+
+pub mod amg;
+pub mod er;
+pub mod lp;
+pub mod rmat;
+pub mod roadnet;
+
+pub use amg::{sa_rho_amge_prolongator, smoothed_aggregation_prolongator, stencil27, Grid3};
+pub use er::erdos_renyi;
+pub use lp::{lp_constraints, LpParams};
+pub use rmat::{rmat, RmatParams};
+pub use roadnet::road_network;

@@ -1,0 +1,177 @@
+//! R-MAT scale-free graph generator (Chakrabarti, Zhan, Faloutsos 2004).
+//!
+//! Stands in for the social-network and protein-interaction adjacency
+//! matrices of Sec. 6.3 (dblp, enron, facebook, dip, wiphi, biogrid11):
+//! the MCL experiments' qualitative behaviour is driven by the skewed
+//! degree distribution, which R-MAT reproduces. Edges are deduplicated,
+//! the matrix is symmetrized (the paper squares symmetric matrices), and
+//! the diagonal is included (MCL adds self-loops before iterating).
+
+use crate::sparse::{Coo, Csr};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Parameters of the R-MAT recursion.
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    /// log2 of the number of vertices.
+    pub scale: u32,
+    /// Average edges per vertex (before dedup/symmetrization).
+    pub edge_factor: f64,
+    /// Quadrant probabilities; must sum to 1.
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Multiplicative noise applied per level to break symmetry artifacts.
+    pub noise: f64,
+    /// Add self loops (MCL convention).
+    pub self_loops: bool,
+}
+
+impl RmatParams {
+    /// The Graph500 defaults (skewed; facebook/enron-like).
+    pub fn social(scale: u32, edge_factor: f64) -> Self {
+        RmatParams { scale, edge_factor, a: 0.57, b: 0.19, c: 0.19, noise: 0.1, self_loops: true }
+    }
+
+    /// A milder skew for protein-interaction-like graphs.
+    pub fn protein(scale: u32, edge_factor: f64) -> Self {
+        RmatParams { scale, edge_factor, a: 0.45, b: 0.22, c: 0.22, noise: 0.1, self_loops: true }
+    }
+
+    fn d(&self) -> f64 {
+        1.0 - self.a - self.b - self.c
+    }
+}
+
+/// Generate a symmetric R-MAT adjacency matrix with unit weights.
+pub fn rmat(params: &RmatParams, rng: &mut Rng) -> Result<Csr> {
+    let RmatParams { scale, edge_factor, .. } = *params;
+    if params.a <= 0.0 || params.b < 0.0 || params.c < 0.0 || params.d() <= 0.0 {
+        return Err(Error::invalid("rmat: quadrant probabilities must be positive and sum < 1"));
+    }
+    let n = 1usize << scale;
+    let m = (n as f64 * edge_factor).round() as usize;
+    let mut coo = Coo::with_capacity(n, n, 2 * m + n);
+    for _ in 0..m {
+        let (mut lo_r, mut hi_r) = (0usize, n);
+        let (mut lo_c, mut hi_c) = (0usize, n);
+        for _ in 0..scale {
+            // per-level noisy quadrant probabilities
+            let na = params.a * (1.0 + params.noise * (rng.uniform() - 0.5));
+            let nb = params.b * (1.0 + params.noise * (rng.uniform() - 0.5));
+            let nc = params.c * (1.0 + params.noise * (rng.uniform() - 0.5));
+            let nd = params.d() * (1.0 + params.noise * (rng.uniform() - 0.5));
+            let total = na + nb + nc + nd;
+            let r = rng.uniform() * total;
+            let (down, right) = if r < na {
+                (false, false)
+            } else if r < na + nb {
+                (false, true)
+            } else if r < na + nb + nc {
+                (true, false)
+            } else {
+                (true, true)
+            };
+            let mid_r = (lo_r + hi_r) / 2;
+            let mid_c = (lo_c + hi_c) / 2;
+            if down {
+                lo_r = mid_r;
+            } else {
+                hi_r = mid_r;
+            }
+            if right {
+                lo_c = mid_c;
+            } else {
+                hi_c = mid_c;
+            }
+        }
+        coo.push(lo_r, lo_c, 1.0);
+        coo.push(lo_c, lo_r, 1.0); // symmetrize as we go
+    }
+    if params.self_loops {
+        for i in 0..n {
+            coo.push(i, i, 1.0);
+        }
+    }
+    // dedup by clamping all summed duplicates back to 1.0
+    let mut csr = Csr::from_coo(&coo);
+    for v in &mut csr.values {
+        *v = 1.0;
+    }
+    Ok(csr)
+}
+
+/// Degree-distribution skew diagnostic: ratio of the max degree to the
+/// mean degree. Scale-free graphs have a large skew; regular meshes ~1.
+pub fn degree_skew(a: &Csr) -> f64 {
+    let counts = a.row_counts();
+    let max = counts.iter().copied().max().unwrap_or(0) as f64;
+    let mean = a.nnz() as f64 / a.nrows.max(1) as f64;
+    if mean == 0.0 {
+        0.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::roadnet::road_network;
+
+    #[test]
+    fn rmat_is_symmetric_with_loops() {
+        let mut rng = Rng::new(42);
+        let a = rmat(&RmatParams::social(8, 8.0), &mut rng).unwrap();
+        a.validate().unwrap();
+        assert_eq!(a.nrows, 256);
+        assert!(a.is_symmetric(0.0));
+        // all self loops present
+        for i in 0..a.nrows {
+            assert!(a.row_cols(i).contains(&(i as u32)), "missing loop at {i}");
+        }
+        // all values are 1.0 after dedup
+        assert!(a.values.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn rmat_density_near_target() {
+        let mut rng = Rng::new(7);
+        let a = rmat(&RmatParams::social(10, 10.0), &mut rng).unwrap();
+        let per_row = a.nnz() as f64 / a.nrows as f64;
+        // dedup + symmetrization: between ~6 and 21 per row for ef=10
+        assert!(per_row > 4.0 && per_row < 22.0, "per_row={per_row}");
+    }
+
+    #[test]
+    fn rmat_skew_exceeds_mesh_skew() {
+        let mut rng = Rng::new(3);
+        let social = rmat(&RmatParams::social(10, 8.0), &mut rng).unwrap();
+        let road = road_network(32, 32, 0.3, &mut rng).unwrap();
+        assert!(
+            degree_skew(&social) > 3.0 * degree_skew(&road),
+            "social skew {} vs road skew {}",
+            degree_skew(&social),
+            degree_skew(&road)
+        );
+    }
+
+    #[test]
+    fn rmat_deterministic_per_seed() {
+        let a = rmat(&RmatParams::social(7, 6.0), &mut Rng::new(5)).unwrap();
+        let b = rmat(&RmatParams::social(7, 6.0), &mut Rng::new(5)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_bad_probabilities() {
+        let mut p = RmatParams::social(4, 2.0);
+        p.a = 0.0;
+        assert!(rmat(&p, &mut Rng::new(1)).is_err());
+        let mut q = RmatParams::social(4, 2.0);
+        q.a = 0.9;
+        q.b = 0.3;
+        assert!(rmat(&q, &mut Rng::new(1)).is_err());
+    }
+}

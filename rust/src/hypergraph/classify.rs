@@ -1,0 +1,336 @@
+//! The parallelization classification lattice of Sec. 5.2 (Fig. 6 and
+//! Tab. I).
+//!
+//! A *parallelization* is a partition of the multiplication vertices. It
+//! belongs to class R (row-wise) iff every B-slice (fixed `i`) is
+//! monochrome, L (column-wise) iff every A-slice (fixed `j`) is
+//! monochrome, U (outer-product) iff every C-slice (fixed `k`) is
+//! monochrome, and to A/B/C (monochrome-A/-B/-C) iff every A-/B-/C-fiber
+//! is monochrome. The paper proves `R ⊆ A∩C`, `L ⊆ B∩C`, and `U = A∩B`,
+//! which induces a 13-way partition of the set of all parallelizations.
+
+use super::models::{Mult, MultEnum};
+use crate::sparse::Csr;
+
+/// Membership signature of a parallelization in the six named classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ClassSignature {
+    pub r: bool,
+    pub l: bool,
+    pub u: bool,
+    pub a: bool,
+    pub b: bool,
+    pub c: bool,
+}
+
+impl ClassSignature {
+    /// Check the lattice constraints of Fig. 6.
+    pub fn consistent(&self) -> bool {
+        (!self.r || (self.a && self.c))     // R ⊆ A ∩ C
+            && (!self.l || (self.b && self.c)) // L ⊆ B ∩ C
+            && (self.u == (self.a && self.b)) // U = A ∩ B
+    }
+
+    /// The 13 consistent signatures, in Tab. I order.
+    pub fn all_parts() -> Vec<ClassSignature> {
+        let mut parts = Vec::new();
+        for bits in 0..64u32 {
+            let s = ClassSignature {
+                r: bits & 1 != 0,
+                l: bits & 2 != 0,
+                u: bits & 4 != 0,
+                a: bits & 8 != 0,
+                b: bits & 16 != 0,
+                c: bits & 32 != 0,
+            };
+            if s.consistent() {
+                parts.push(s);
+            }
+        }
+        parts
+    }
+}
+
+/// Is the partition constant on each group induced by `key`?
+fn monochrome(mults: &[(Mult, u32)], key: impl Fn(&Mult) -> u64) -> bool {
+    let mut seen: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    for (m, part) in mults {
+        match seen.entry(key(m)) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                if *e.get() != *part {
+                    return false;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(*part);
+            }
+        }
+    }
+    true
+}
+
+/// Classify a parallelization. `part[idx]` is the processor of the
+/// multiplication with fine-grained index `idx` (canonical [`MultEnum`]
+/// order).
+pub fn classify(a: &Csr, b: &Csr, part: &[u32]) -> ClassSignature {
+    let me = MultEnum::new(a, b);
+    let mut mults: Vec<(Mult, u32)> = Vec::with_capacity(part.len());
+    me.for_each(|m| mults.push((m, part[m.idx as usize])));
+    ClassSignature {
+        r: monochrome(&mults, |m| m.i as u64),
+        l: monochrome(&mults, |m| m.j as u64),
+        u: monochrome(&mults, |m| m.k as u64),
+        a: monochrome(&mults, |m| ((m.i as u64) << 32) | m.k as u64),
+        b: monochrome(&mults, |m| ((m.k as u64) << 32) | m.j as u64),
+        c: monochrome(&mults, |m| ((m.i as u64) << 32) | m.j as u64),
+    }
+}
+
+/// The canonical parallelization constructors used in Tab. I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelization {
+    Finest,
+    Coarsest,
+    ByRowSlice,    // by i
+    ByColSlice,    // by j
+    ByOuterSlice,  // by k
+    ByAFiber,      // by (i,k)
+    ByBFiber,      // by (k,j)
+    ByCFiber,      // by (i,j)
+}
+
+impl Parallelization {
+    pub const ALL: [Parallelization; 8] = [
+        Parallelization::Finest,
+        Parallelization::Coarsest,
+        Parallelization::ByRowSlice,
+        Parallelization::ByColSlice,
+        Parallelization::ByOuterSlice,
+        Parallelization::ByAFiber,
+        Parallelization::ByBFiber,
+        Parallelization::ByCFiber,
+    ];
+
+    /// Build the per-mult part assignment.
+    pub fn assign(&self, a: &Csr, b: &Csr) -> Vec<u32> {
+        let me = MultEnum::new(a, b);
+        let n = me.count() as usize;
+        let mut part = vec![0u32; n];
+        let mut ids: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+        me.for_each(|m| {
+            let key = match self {
+                Parallelization::Finest => m.idx,
+                Parallelization::Coarsest => 0,
+                Parallelization::ByRowSlice => m.i as u64,
+                Parallelization::ByColSlice => m.j as u64,
+                Parallelization::ByOuterSlice => m.k as u64,
+                Parallelization::ByAFiber => ((m.i as u64) << 32) | m.k as u64,
+                Parallelization::ByBFiber => ((m.k as u64) << 32) | m.j as u64,
+                Parallelization::ByCFiber => ((m.i as u64) << 32) | m.j as u64,
+            };
+            let next = ids.len() as u32;
+            let id = *ids.entry(key).or_insert(next);
+            part[m.idx as usize] = id;
+        });
+        part
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::proptest;
+    use std::collections::HashSet;
+
+    fn dense(m: usize, k: usize, n: usize) -> (Csr, Csr) {
+        let mut ca = Coo::new(m, k);
+        for i in 0..m {
+            for j in 0..k {
+                ca.push(i, j, 1.0);
+            }
+        }
+        let mut cb = Coo::new(k, n);
+        for i in 0..k {
+            for j in 0..n {
+                cb.push(i, j, 1.0);
+            }
+        }
+        (Csr::from_coo(&ca), Csr::from_coo(&cb))
+    }
+
+    fn diag_times_dense() -> (Csr, Csr) {
+        // eq. (3)-style: A diagonal, B dense
+        let a = Csr::identity(2);
+        let (_, b) = dense(2, 2, 2);
+        (a, b)
+    }
+
+    fn dense_times_diag() -> (Csr, Csr) {
+        // eq. (4)-style
+        let (a, _) = dense(2, 2, 2);
+        (a, Csr::identity(2))
+    }
+
+    fn dense_times_colvec() -> (Csr, Csr) {
+        // eq. (5)-style: B is a 2x1 column
+        let (a, _) = dense(2, 2, 1);
+        let b = Csr::from_coo(&Coo::from_triplets(2, 1, [(0, 0, 1.0), (1, 0, 1.0)]).unwrap());
+        (a, b)
+    }
+
+    fn outer_product_instance() -> (Csr, Csr) {
+        // K = 1: A is a column, B is a row
+        let a = Csr::from_coo(&Coo::from_triplets(2, 1, [(0, 0, 1.0), (1, 0, 1.0)]).unwrap());
+        let b = Csr::from_coo(&Coo::from_triplets(1, 2, [(0, 0, 1.0), (0, 1, 1.0)]).unwrap());
+        (a, b)
+    }
+
+    fn eq5_instance() -> (Csr, Csr) {
+        // An instance whose finest parallelization lies in
+        // (A∩B∩C)\(R∪L) (the last row of Tab. I): every multiplication
+        // has a distinct k, but rows and columns of C each host two.
+        let a = Csr::from_coo(
+            &Coo::from_triplets(2, 3, [(0, 0, 1.0), (0, 1, 1.0), (1, 2, 1.0)]).unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(3, 2, [(0, 0, 1.0), (1, 1, 1.0), (2, 1, 1.0)]).unwrap(),
+        );
+        (a, b)
+    }
+
+    #[test]
+    fn thirteen_consistent_signatures_exist() {
+        assert_eq!(ClassSignature::all_parts().len(), 13);
+    }
+
+    #[test]
+    fn dense_finest_is_in_no_class() {
+        let (a, b) = dense(2, 2, 2);
+        let part = Parallelization::Finest.assign(&a, &b);
+        let s = classify(&a, &b, &part);
+        assert_eq!(s, ClassSignature { r: false, l: false, u: false, a: false, b: false, c: false });
+        assert!(s.consistent());
+    }
+
+    #[test]
+    fn dense_coarsest_is_in_all_classes() {
+        let (a, b) = dense(2, 2, 2);
+        let part = Parallelization::Coarsest.assign(&a, &b);
+        let s = classify(&a, &b, &part);
+        assert_eq!(s, ClassSignature { r: true, l: true, u: true, a: true, b: true, c: true });
+    }
+
+    #[test]
+    fn fiber_and_slice_parallelizations_land_in_their_classes() {
+        let (a, b) = dense(2, 2, 2);
+        // by A-fiber: in A only (Tab. I row 2)
+        let s = classify(&a, &b, &Parallelization::ByAFiber.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: false, l: false, u: false, a: true, b: false, c: false });
+        // by B-fiber: in B only
+        let s = classify(&a, &b, &Parallelization::ByBFiber.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: false, l: false, u: false, a: false, b: true, c: false });
+        // by C-fiber: in C only
+        let s = classify(&a, &b, &Parallelization::ByCFiber.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: false, l: false, u: false, a: false, b: false, c: true });
+        // by row slice: R (hence A, C) but not B/L/U
+        let s = classify(&a, &b, &Parallelization::ByRowSlice.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: true, l: false, u: false, a: true, b: false, c: true });
+        // by col slice: L (hence B, C)
+        let s = classify(&a, &b, &Parallelization::ByColSlice.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: false, l: true, u: false, a: false, b: true, c: true });
+        // by outer slice: U = A∩B but not C
+        let s = classify(&a, &b, &Parallelization::ByOuterSlice.assign(&a, &b));
+        assert_eq!(s, ClassSignature { r: false, l: false, u: true, a: true, b: true, c: false });
+    }
+
+    #[test]
+    fn all_thirteen_parts_nonempty() {
+        // Tab. I: a constructive search over small instances and canonical
+        // parallelizations covers every one of the 13 parts.
+        let instances = vec![
+            dense(2, 2, 2),
+            diag_times_dense(),
+            dense_times_diag(),
+            dense_times_colvec(),
+            outer_product_instance(),
+            eq5_instance(),
+            {
+                // row-vector times dense: I = 1
+                let (_, b) = dense(1, 2, 2);
+                let a = Csr::from_coo(&Coo::from_triplets(1, 2, [(0, 0, 1.0), (0, 1, 1.0)]).unwrap());
+                (a, b)
+            },
+            {
+                // diagonal times diagonal
+                (Csr::identity(2), Csr::identity(2))
+            },
+        ];
+        let mut found: HashSet<ClassSignature> = HashSet::new();
+        for (a, b) in &instances {
+            for p in Parallelization::ALL {
+                let part = p.assign(a, b);
+                let s = classify(a, b, &part);
+                assert!(s.consistent(), "{p:?} on instance produced inconsistent {s:?}");
+                found.insert(s);
+            }
+        }
+        let all = ClassSignature::all_parts();
+        for sig in &all {
+            assert!(found.contains(sig), "part {sig:?} not witnessed");
+        }
+        assert_eq!(found.len(), 13);
+    }
+
+    #[test]
+    fn prop_u_equals_a_intersect_b() {
+        // The paper's claim U = A∩B holds for arbitrary partitions of
+        // arbitrary instances (with no zero rows/cols).
+        proptest::check(
+            "U == A∩B",
+            301,
+            proptest::default_cases(),
+            |r| {
+                let m = 2 + r.below(4);
+                let k = 2 + r.below(4);
+                let n = 2 + r.below(4);
+                let mut ca = Coo::new(m, k);
+                for i in 0..m {
+                    ca.push(i, r.below(k), 1.0);
+                    for j in 0..k {
+                        if r.chance(0.4) {
+                            ca.push(i, j, 1.0);
+                        }
+                    }
+                }
+                for j in 0..k {
+                    ca.push(r.below(m), j, 1.0);
+                }
+                let mut cb = Coo::new(k, n);
+                for i in 0..k {
+                    cb.push(i, r.below(n), 1.0);
+                    for j in 0..n {
+                        if r.chance(0.4) {
+                            cb.push(i, j, 1.0);
+                        }
+                    }
+                }
+                for j in 0..n {
+                    cb.push(r.below(k), j, 1.0);
+                }
+                let a = Csr::from_coo(&ca);
+                let b = Csr::from_coo(&cb);
+                let nm = MultEnum::new(&a, &b).count() as usize;
+                let nparts = 1 + r.below(4);
+                let part: Vec<u32> = (0..nm).map(|_| r.below(nparts) as u32).collect();
+                (a, b, part)
+            },
+            |(a, b, part)| {
+                let s = classify(a, b, part);
+                proptest::ensure(s.u == (s.a && s.b), format!("U={} A={} B={}", s.u, s.a, s.b))?;
+                proptest::ensure(!s.r || (s.a && s.c), "R not ⊆ A∩C".to_string())?;
+                proptest::ensure(!s.l || (s.b && s.c), "L not ⊆ B∩C".to_string())
+            },
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Generic vertex coarsening (Sec. 5.1).
+//!
+//! Given a hypergraph and a map assigning each vertex to a coarse vertex,
+//! produce the coarsened hypergraph: a coarse vertex joins every net any
+//! constituent was a member of; weights sum (or are reset to 1, the
+//! Sec. 5.6.1 "single stored copy" rule); coalesced nets (identical pin
+//! sets) are combined with summed costs; singleton nets are dropped.
+//!
+//! The direct model builders in [`super::models`] are cross-validated
+//! against this machinery: coarsening the fine-grained hypergraph by
+//! slice/fiber must reproduce them exactly.
+
+use super::{Hypergraph, HypergraphBuilder};
+use crate::{Error, Result};
+
+/// How coarsened vertex weights are derived from constituents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightRule {
+    /// Sum constituents' weights (Sec. 5.1 — models "one processor does
+    /// all of it / stores all of it").
+    Sum,
+    /// Set the memory weight of each coarse vertex to 1 and sum the
+    /// computation weights (Sec. 5.6.1 — equal entries stored once).
+    SumCompUnitMem,
+    /// Set both weights to min(sum, 1) (Sec. 5.6.1 with redundant
+    /// multiplications also eliminated).
+    UnitBoth,
+}
+
+/// Coarsen `h` according to `map: vertex -> coarse vertex` (`0..n_coarse`).
+pub fn coarsen(
+    h: &Hypergraph,
+    map: &[u32],
+    n_coarse: usize,
+    rule: WeightRule,
+    drop_singletons: bool,
+    coalesce: bool,
+) -> Result<Hypergraph> {
+    if map.len() != h.num_vertices() {
+        return Err(Error::invalid("coarsen: map length != num_vertices"));
+    }
+    if let Some(&m) = map.iter().max() {
+        if m as usize >= n_coarse {
+            return Err(Error::invalid("coarsen: map value out of range"));
+        }
+    }
+    let mut b = HypergraphBuilder::new(n_coarse);
+    for v in 0..h.num_vertices() {
+        let cv = map[v] as usize;
+        match rule {
+            WeightRule::Sum | WeightRule::SumCompUnitMem => {
+                b.add_comp(cv, h.w_comp[v]);
+            }
+            WeightRule::UnitBoth => {}
+            // comp handled below for UnitBoth
+        }
+        if rule == WeightRule::Sum {
+            b.add_mem(cv, h.w_mem[v]);
+        }
+    }
+    // unit-weight rules: weight 1 per coarse vertex that has any
+    // constituent with positive weight of that type
+    if matches!(rule, WeightRule::SumCompUnitMem | WeightRule::UnitBoth) {
+        let mut mem_seen = vec![false; n_coarse];
+        let mut comp_seen = vec![false; n_coarse];
+        for v in 0..h.num_vertices() {
+            let cv = map[v] as usize;
+            if h.w_mem[v] > 0 && !mem_seen[cv] {
+                mem_seen[cv] = true;
+                b.add_mem(cv, 1);
+            }
+            if rule == WeightRule::UnitBoth && h.w_comp[v] > 0 && !comp_seen[cv] {
+                comp_seen[cv] = true;
+                b.add_comp(cv, 1);
+            }
+        }
+    }
+    for n in 0..h.num_nets() {
+        let pins: Vec<u32> = h.pins_of(n).iter().map(|&v| map[v as usize]).collect();
+        b.add_net(h.net_cost[n], pins);
+    }
+    Ok(b.finalize(drop_singletons, coalesce))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::models::{build_model, fine_grained, ModelKind, MultEnum};
+    use crate::sparse::{Coo, Csr};
+    use crate::util::Rng;
+
+    fn random_instance(rng: &mut Rng, m: usize, k: usize, n: usize, d: f64) -> (Csr, Csr) {
+        // ensure no zero rows/columns by overlaying a diagonal-ish pattern
+        let mut ca = Coo::new(m, k);
+        for i in 0..m {
+            ca.push(i, i % k, 1.0);
+            for j in 0..k {
+                if rng.chance(d) {
+                    ca.push(i, j, 1.0);
+                }
+            }
+        }
+        for j in 0..k {
+            ca.push(j % m, j, 1.0);
+        }
+        let mut cb = Coo::new(k, n);
+        for i in 0..k {
+            cb.push(i, i % n, 1.0);
+            for j in 0..n {
+                if rng.chance(d) {
+                    cb.push(i, j, 1.0);
+                }
+            }
+        }
+        for j in 0..n {
+            cb.push(j % k, j, 1.0);
+        }
+        let mut a = Csr::from_coo(&ca);
+        let mut b = Csr::from_coo(&cb);
+        for v in &mut a.values {
+            *v = 1.0;
+        }
+        for v in &mut b.values {
+            *v = 1.0;
+        }
+        (a, b)
+    }
+
+    /// Map from fine-grained mult vertices to the coarse vertex each
+    /// Sec. 5.2 model assigns.
+    fn slice_map(a: &Csr, b: &Csr, kind: ModelKind) -> (Vec<u32>, usize) {
+        let me = MultEnum::new(a, b);
+        let mut map = vec![0u32; me.count() as usize];
+        let model = build_model(a, b, kind, false).unwrap();
+        me.for_each(|m| map[m.idx as usize] = model.mult_vertex(&m));
+        (map, model.h.num_vertices())
+    }
+
+    #[test]
+    fn coarsening_fine_reproduces_direct_models() {
+        let mut rng = Rng::new(77);
+        for trial in 0..6 {
+            let (a, b) = random_instance(&mut rng, 5 + trial, 4 + trial, 6, 0.25);
+            let fine = fine_grained(&a, &b, false).unwrap();
+            for kind in [
+                ModelKind::RowWise,
+                ModelKind::ColWise,
+                ModelKind::OuterProduct,
+                ModelKind::MonoA,
+                ModelKind::MonoB,
+                ModelKind::MonoC,
+            ] {
+                let direct = build_model(&a, &b, kind, false).unwrap();
+                let (map, nc) = slice_map(&a, &b, kind);
+                let coarse = coarsen(&fine.h, &map, nc, WeightRule::Sum, true, true).unwrap();
+                assert_eq!(
+                    coarse.canonical_nets(),
+                    direct.h.canonical_nets(),
+                    "{kind:?} nets differ (trial {trial})"
+                );
+                assert_eq!(coarse.w_comp, direct.h.w_comp, "{kind:?} weights differ");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_rules() {
+        let mut b = HypergraphBuilder::new(4);
+        b.set_weights(vec![1, 1, 0, 0], vec![0, 0, 1, 1]);
+        b.add_net(1, vec![0, 2]);
+        b.add_net(1, vec![1, 3]);
+        let h = b.finalize(false, false);
+        // merge {0,1} -> 0 and {2,3} -> 1
+        let map = vec![0, 0, 1, 1];
+        let sum = coarsen(&h, &map, 2, WeightRule::Sum, false, false).unwrap();
+        assert_eq!(sum.w_comp, vec![2, 0]);
+        assert_eq!(sum.w_mem, vec![0, 2]);
+        let unit_mem = coarsen(&h, &map, 2, WeightRule::SumCompUnitMem, false, false).unwrap();
+        assert_eq!(unit_mem.w_comp, vec![2, 0]);
+        assert_eq!(unit_mem.w_mem, vec![0, 1]);
+        let unit = coarsen(&h, &map, 2, WeightRule::UnitBoth, false, false).unwrap();
+        assert_eq!(unit.w_comp, vec![1, 0]);
+        assert_eq!(unit.w_mem, vec![0, 1]);
+        // both nets become {0,1}; coalesced
+        let merged = coarsen(&h, &map, 2, WeightRule::Sum, true, true).unwrap();
+        assert_eq!(merged.num_nets(), 1);
+        assert_eq!(merged.net_cost[0], 2);
+    }
+
+    #[test]
+    fn rejects_bad_map() {
+        let h = HypergraphBuilder::new(2).finalize(false, false);
+        assert!(coarsen(&h, &[0], 1, WeightRule::Sum, true, true).is_err());
+        assert!(coarsen(&h, &[0, 5], 2, WeightRule::Sum, true, true).is_err());
+    }
+}

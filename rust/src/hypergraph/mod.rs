@@ -1,0 +1,325 @@
+//! SpGEMM hypergraph models (Secs. 3 and 5 of the paper).
+//!
+//! * [`Hypergraph`] — the core structure: dual CSR pin lists, two vertex
+//!   weights (`w_comp`, `w_mem` — the paper's vector-valued weights), and
+//!   per-net costs.
+//! * [`models`] — the fine-grained model of Def. 3.1 and the six
+//!   slice-/fiber-wise coarsenings of Sec. 5.2 (row-wise, column-wise,
+//!   outer-product, monochrome-A/-B/-C), built directly from `S_A`/`S_B`.
+//! * [`coarsen`] — the generic vertex-coarsening machinery of Sec. 5.1
+//!   (net-membership union, weight summation, coalesced-net combining,
+//!   singleton elimination), used to cross-validate the direct builders.
+//! * [`restricted`] — the Sec. 5.4 restricted *algorithms* (Exs. 5.1–5.4:
+//!   RrR, CRf, Frf, ffF) with absorbed data distributions and memory
+//!   weights.
+//! * [`spmv`] — the Sec. 5.5 SpMV specializations (fine-grain, column-net,
+//!   row-net).
+//! * [`extensions`] — Sec. 5.6: masked SpGEMM and input-relation
+//!   (symmetry) coarsening.
+//! * [`classify`] — the Sec. 5.2 classification lattice (Fig. 6/Tab. I).
+
+pub mod classify;
+pub mod coarsen;
+pub mod extensions;
+pub mod models;
+pub mod restricted;
+pub mod spmv;
+
+pub use models::{build_model, fine_grained, MultEnum, Model, ModelKind};
+
+use crate::{Error, Result};
+
+/// A hypergraph with vector vertex weights and net costs.
+///
+/// Pins are stored twice (vertex→nets and net→vertices, both CSR) because
+/// both the partitioner's gain updates and cut evaluation need O(1) access
+/// in each direction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hypergraph {
+    /// vertex -> incident nets.
+    pub vtx_ptr: Vec<usize>,
+    pub vtx_nets: Vec<u32>,
+    /// net -> member vertices (pins).
+    pub net_ptr: Vec<usize>,
+    pub net_pins: Vec<u32>,
+    /// Computation weight per vertex (`w_comp`, Def. 3.1).
+    pub w_comp: Vec<u64>,
+    /// Memory weight per vertex (`w_mem`, Def. 3.1).
+    pub w_mem: Vec<u64>,
+    /// Cost per net (`c(n)`, unit in the fine-grained model; summed when
+    /// coalesced nets are combined, Sec. 5.1/5.3).
+    pub net_cost: Vec<u64>,
+}
+
+impl Hypergraph {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.vtx_ptr.len() - 1
+    }
+
+    /// Number of nets.
+    #[inline]
+    pub fn num_nets(&self) -> usize {
+        self.net_ptr.len() - 1
+    }
+
+    /// Total number of pins.
+    #[inline]
+    pub fn num_pins(&self) -> usize {
+        self.net_pins.len()
+    }
+
+    /// Nets incident to vertex `v`.
+    #[inline]
+    pub fn nets_of(&self, v: usize) -> &[u32] {
+        &self.vtx_nets[self.vtx_ptr[v]..self.vtx_ptr[v + 1]]
+    }
+
+    /// Pins of net `n`.
+    #[inline]
+    pub fn pins_of(&self, n: usize) -> &[u32] {
+        &self.net_pins[self.net_ptr[n]..self.net_ptr[n + 1]]
+    }
+
+    /// Total computation weight.
+    pub fn total_comp(&self) -> u64 {
+        self.w_comp.iter().sum()
+    }
+
+    /// Total memory weight.
+    pub fn total_mem(&self) -> u64 {
+        self.w_mem.iter().sum()
+    }
+
+    /// Total net cost (upper bound on any cut).
+    pub fn total_net_cost(&self) -> u64 {
+        self.net_cost.iter().sum()
+    }
+
+    /// Structural sanity check (consistent dual pin lists, sane weights).
+    pub fn validate(&self) -> Result<()> {
+        let nv = self.num_vertices();
+        let nn = self.num_nets();
+        if self.w_comp.len() != nv || self.w_mem.len() != nv {
+            return Err(Error::invalid("hypergraph: weight length mismatch"));
+        }
+        if self.net_cost.len() != nn {
+            return Err(Error::invalid("hypergraph: net cost length mismatch"));
+        }
+        if self.vtx_nets.len() != self.net_pins.len() {
+            return Err(Error::invalid("hypergraph: pin count mismatch between directions"));
+        }
+        // every (net, pin) edge must appear in the vertex direction
+        let mut pin_count = 0usize;
+        for n in 0..nn {
+            for &v in self.pins_of(n) {
+                if v as usize >= nv {
+                    return Err(Error::invalid(format!("net {n} has out-of-range pin {v}")));
+                }
+                pin_count += 1;
+            }
+            // pins sorted and unique
+            let pins = self.pins_of(n);
+            for w in pins.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::invalid(format!("net {n} pins not sorted/unique")));
+                }
+            }
+        }
+        if pin_count != self.num_pins() {
+            return Err(Error::invalid("hypergraph: pin count inconsistent"));
+        }
+        for v in 0..nv {
+            for &n in self.nets_of(v) {
+                if n as usize >= nn {
+                    return Err(Error::invalid(format!("vertex {v} lists out-of-range net {n}")));
+                }
+                if !self.pins_of(n as usize).binary_search(&(v as u32)).is_ok() {
+                    return Err(Error::invalid(format!("vertex {v} lists net {n} but is not a pin")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A canonical rendering `(w_comp, w_mem, sorted nets as (cost, pins))`
+    /// for structural equality tests that must ignore net order.
+    pub fn canonical_nets(&self) -> Vec<(u64, Vec<u32>)> {
+        let mut nets: Vec<(u64, Vec<u32>)> = (0..self.num_nets())
+            .map(|n| (self.net_cost[n], self.pins_of(n).to_vec()))
+            .collect();
+        nets.sort();
+        nets
+    }
+}
+
+/// Incremental builder: collect nets, then [`HypergraphBuilder::finalize`].
+#[derive(Debug, Clone)]
+pub struct HypergraphBuilder {
+    num_vertices: usize,
+    nets: Vec<(u64, Vec<u32>)>,
+    w_comp: Vec<u64>,
+    w_mem: Vec<u64>,
+}
+
+impl HypergraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        HypergraphBuilder {
+            num_vertices,
+            nets: Vec::new(),
+            w_comp: vec![0; num_vertices],
+            w_mem: vec![0; num_vertices],
+        }
+    }
+
+    /// Set per-vertex weights (defaults are zero).
+    pub fn set_weights(&mut self, w_comp: Vec<u64>, w_mem: Vec<u64>) {
+        assert_eq!(w_comp.len(), self.num_vertices);
+        assert_eq!(w_mem.len(), self.num_vertices);
+        self.w_comp = w_comp;
+        self.w_mem = w_mem;
+    }
+
+    pub fn add_comp(&mut self, v: usize, w: u64) {
+        self.w_comp[v] += w;
+    }
+
+    pub fn add_mem(&mut self, v: usize, w: u64) {
+        self.w_mem[v] += w;
+    }
+
+    /// Add a net; pins are sorted and deduplicated here.
+    pub fn add_net(&mut self, cost: u64, mut pins: Vec<u32>) {
+        pins.sort_unstable();
+        pins.dedup();
+        debug_assert!(pins.iter().all(|&p| (p as usize) < self.num_vertices));
+        self.nets.push((cost, pins));
+    }
+
+    /// Build the hypergraph.
+    ///
+    /// * `drop_singletons` — remove nets with ≤ 1 pin (they can never be
+    ///   cut; Sec. 5.1's "singleton" simplification).
+    /// * `coalesce` — combine nets with identical pin sets, summing their
+    ///   costs (Sec. 5.1/5.3's "coalesced" simplification). Cut metrics
+    ///   are invariant under both simplifications.
+    pub fn finalize(mut self, drop_singletons: bool, coalesce: bool) -> Hypergraph {
+        if drop_singletons {
+            self.nets.retain(|(_, pins)| pins.len() > 1);
+        }
+        if coalesce {
+            self.nets.sort_unstable_by(|a, b| a.1.cmp(&b.1));
+            let mut merged: Vec<(u64, Vec<u32>)> = Vec::with_capacity(self.nets.len());
+            for (cost, pins) in self.nets.drain(..) {
+                match merged.last_mut() {
+                    Some((mcost, mpins)) if *mpins == pins => *mcost += cost,
+                    _ => merged.push((cost, pins)),
+                }
+            }
+            self.nets = merged;
+        }
+        let nn = self.nets.len();
+        let nv = self.num_vertices;
+        let mut net_ptr = Vec::with_capacity(nn + 1);
+        net_ptr.push(0usize);
+        let mut net_pins = Vec::new();
+        let mut net_cost = Vec::with_capacity(nn);
+        let mut vtx_deg = vec![0usize; nv];
+        for (cost, pins) in &self.nets {
+            net_pins.extend_from_slice(pins);
+            net_ptr.push(net_pins.len());
+            net_cost.push(*cost);
+            for &p in pins {
+                vtx_deg[p as usize] += 1;
+            }
+        }
+        let mut vtx_ptr = vec![0usize; nv + 1];
+        for v in 0..nv {
+            vtx_ptr[v + 1] = vtx_ptr[v] + vtx_deg[v];
+        }
+        let mut vtx_nets = vec![0u32; net_pins.len()];
+        let mut next = vtx_ptr.clone();
+        for n in 0..nn {
+            for p in net_ptr[n]..net_ptr[n + 1] {
+                let v = net_pins[p] as usize;
+                vtx_nets[next[v]] = n as u32;
+                next[v] += 1;
+            }
+        }
+        Hypergraph {
+            vtx_ptr,
+            vtx_nets,
+            net_ptr,
+            net_pins,
+            w_comp: self.w_comp,
+            w_mem: self.w_mem,
+            net_cost,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hypergraph {
+        // 4 vertices; nets {0,1}, {1,2,3}, {0}, {1,2,3} (dup)
+        let mut b = HypergraphBuilder::new(4);
+        b.set_weights(vec![1, 1, 1, 1], vec![0, 0, 0, 0]);
+        b.add_net(1, vec![0, 1]);
+        b.add_net(2, vec![3, 1, 2]);
+        b.add_net(5, vec![0]);
+        b.add_net(1, vec![1, 2, 3]);
+        b.finalize(true, true)
+    }
+
+    #[test]
+    fn builder_sorts_dedups_coalesces() {
+        let h = tiny();
+        h.validate().unwrap();
+        // singleton {0} dropped; duplicate {1,2,3} coalesced with cost 3
+        assert_eq!(h.num_nets(), 2);
+        let nets = h.canonical_nets();
+        assert_eq!(nets, vec![(1, vec![0, 1]), (3, vec![1, 2, 3])]);
+        assert_eq!(h.num_pins(), 5);
+    }
+
+    #[test]
+    fn dual_views_consistent() {
+        let h = tiny();
+        // vertex 1 is in both nets
+        assert_eq!(h.nets_of(1).len(), 2);
+        assert_eq!(h.nets_of(0).len(), 1);
+        for v in 0..h.num_vertices() {
+            for &n in h.nets_of(v) {
+                assert!(h.pins_of(n as usize).contains(&(v as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn keep_singletons_when_asked() {
+        let mut b = HypergraphBuilder::new(2);
+        b.add_net(1, vec![0]);
+        b.add_net(1, vec![0, 1, 1, 0]); // dedups to {0,1}
+        let h = b.finalize(false, false);
+        assert_eq!(h.num_nets(), 2);
+        assert_eq!(h.pins_of(1), &[0, 1]);
+    }
+
+    #[test]
+    fn totals() {
+        let h = tiny();
+        assert_eq!(h.total_comp(), 4);
+        assert_eq!(h.total_mem(), 0);
+        assert_eq!(h.total_net_cost(), 4);
+    }
+
+    #[test]
+    fn validate_catches_bad_pin() {
+        let mut h = tiny();
+        h.net_pins[0] = 99;
+        assert!(h.validate().is_err());
+    }
+}

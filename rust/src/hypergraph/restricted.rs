@@ -1,0 +1,293 @@
+//! The restricted *algorithms* of Sec. 5.4 (Exs. 5.1–5.4): parallelization
+//! and data distribution coarsened together, with memory weights and
+//! coalesced net costs exactly as the paper specifies.
+//!
+//! Unlike the Sec. 5.2 models (which the experiments use with `V^nz`
+//! dropped), these hypergraphs carry the absorbed data distributions, so
+//! both balance constraints of Def. 4.4 are meaningful.
+
+use super::{Hypergraph, HypergraphBuilder};
+use crate::sparse::{spgemm_structure, Csr};
+use crate::Result;
+
+/// A restricted-algorithm hypergraph with its vertex layout.
+#[derive(Debug, Clone)]
+pub struct RestrictedModel {
+    pub name: &'static str,
+    pub h: Hypergraph,
+    /// Number of primary (computation-bearing) vertices; auxiliary
+    /// nonzero vertices are numbered afterwards.
+    pub n_primary: usize,
+}
+
+/// Ex. 5.1 — Row-wise (RrR): row-wise parallelization with matched
+/// row-wise distributions of A and C absorbed; B distributed row-wise.
+///
+/// Vertices: `v_i` (i ∈ [I], ids `0..I`), then `v^B_k` (ids `I..I+K`).
+/// Nets: `n^B_k = {v_i : (i,k) ∈ S_A} ∪ {v^B_k}` with cost `nnz(B[k,:])`.
+pub fn rrr(a: &Csr, b: &Csr) -> Result<RestrictedModel> {
+    let c = spgemm_structure(a, b)?;
+    let (i_dim, k_dim) = (a.nrows, a.ncols);
+    let mut builder = HypergraphBuilder::new(i_dim + k_dim);
+    // weights
+    for i in 0..i_dim {
+        let mut comp = 0u64;
+        for &k in a.row_cols(i) {
+            comp += (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64;
+        }
+        builder.add_comp(i, comp);
+        builder.add_mem(i, (a.row_cols(i).len() + c.row_cols(i).len()) as u64);
+    }
+    let acols = super::models::columns_with_positions(a);
+    for k in 0..k_dim {
+        let bk = (b.rowptr[k + 1] - b.rowptr[k]) as u64;
+        builder.add_mem(i_dim + k, bk);
+        let mut pins: Vec<u32> = acols[k].iter().map(|&(i, _)| i).collect();
+        pins.push((i_dim + k) as u32);
+        builder.add_net(bk, pins);
+    }
+    Ok(RestrictedModel { name: "RrR", h: builder.finalize(false, false), n_primary: i_dim })
+}
+
+/// Ex. 5.2 — Outer-product (CRf): outer-product parallelization with
+/// matched column-wise A and row-wise B absorbed; C fine-grained.
+///
+/// Vertices: `v_k` (ids `0..K`), then `v^C_ij` in C's CSR order
+/// (ids `K..K+nnz(C)`). Nets: `n^C_ij` with unit cost.
+pub fn crf(a: &Csr, b: &Csr) -> Result<RestrictedModel> {
+    let c = spgemm_structure(a, b)?;
+    let k_dim = a.ncols;
+    let mut builder = HypergraphBuilder::new(k_dim + c.nnz());
+    let acols = super::models::columns_with_positions(a);
+    for k in 0..k_dim {
+        let ak = acols[k].len() as u64;
+        let bk = (b.rowptr[k + 1] - b.rowptr[k]) as u64;
+        builder.add_comp(k, ak * bk);
+        builder.add_mem(k, ak + bk);
+    }
+    // nets: for each (i,j) ∈ S_C, pins = {k : (i,k) ∈ S_A ∧ (k,j) ∈ S_B}
+    // accumulate row-wise like the model builder
+    let mut jmap: Vec<u32> = vec![u32::MAX; b.ncols];
+    let mut local: Vec<Vec<u32>> = Vec::new();
+    for i in 0..a.nrows {
+        let c_lo = c.rowptr[i];
+        let c_hi = c.rowptr[i + 1];
+        local.resize(c_hi - c_lo, Vec::new());
+        for (slot, j) in c.row_cols(i).iter().enumerate() {
+            jmap[*j as usize] = slot as u32;
+            local[slot].clear();
+        }
+        for &k in a.row_cols(i) {
+            for &j in b.row_cols(k as usize) {
+                local[jmap[j as usize] as usize].push(k);
+            }
+        }
+        for (slot, pins) in local.iter_mut().enumerate() {
+            let mut p = std::mem::take(pins);
+            let cpos = c_lo + slot;
+            builder.add_mem(k_dim + cpos, 1);
+            p.push((k_dim + cpos) as u32);
+            builder.add_net(1, p);
+        }
+    }
+    Ok(RestrictedModel { name: "CRf", h: builder.finalize(false, false), n_primary: k_dim })
+}
+
+/// Ex. 5.3 — Monochrome-A (Frf): A fine-grained and matched with the
+/// parallelization; B row-wise; C fine-grained.
+///
+/// Vertices: `v_ik` in A's CSR order (ids `0..nnz(A)`), then `v^B_k`
+/// (ids `nnz(A)..nnz(A)+K`), then `v^C_ij` (ids `.. + nnz(C)`).
+pub fn frf(a: &Csr, b: &Csr) -> Result<RestrictedModel> {
+    let c = spgemm_structure(a, b)?;
+    let nnz_a = a.nnz();
+    let k_dim = a.ncols;
+    let mut builder = HypergraphBuilder::new(nnz_a + k_dim + c.nnz());
+    for i in 0..a.nrows {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            builder.add_comp(pa, (b.rowptr[k + 1] - b.rowptr[k]) as u64);
+            builder.add_mem(pa, 1);
+        }
+    }
+    let acols = super::models::columns_with_positions(a);
+    for k in 0..k_dim {
+        let bk = (b.rowptr[k + 1] - b.rowptr[k]) as u64;
+        builder.add_mem(nnz_a + k, bk);
+        let mut pins: Vec<u32> = acols[k].iter().map(|&(_, pa)| pa).collect();
+        pins.push((nnz_a + k) as u32);
+        builder.add_net(bk, pins);
+    }
+    // C nets: pins are the A positions (i,k) contributing to (i,j)
+    let mut jmap: Vec<u32> = vec![u32::MAX; b.ncols];
+    let mut local: Vec<Vec<u32>> = Vec::new();
+    for i in 0..a.nrows {
+        let c_lo = c.rowptr[i];
+        let c_hi = c.rowptr[i + 1];
+        local.resize(c_hi - c_lo, Vec::new());
+        for (slot, j) in c.row_cols(i).iter().enumerate() {
+            jmap[*j as usize] = slot as u32;
+            local[slot].clear();
+        }
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            for &j in b.row_cols(k) {
+                local[jmap[j as usize] as usize].push(pa as u32);
+            }
+        }
+        for (slot, pins) in local.iter_mut().enumerate() {
+            let mut p = std::mem::take(pins);
+            let cpos = c_lo + slot;
+            builder.add_mem(nnz_a + k_dim + cpos, 1);
+            p.push((nnz_a + k_dim + cpos) as u32);
+            builder.add_net(1, p);
+        }
+    }
+    Ok(RestrictedModel { name: "Frf", h: builder.finalize(false, false), n_primary: nnz_a })
+}
+
+/// Ex. 5.4 — Monochrome-C (ffF): C fine-grained and matched with the
+/// parallelization; A and B fine-grained.
+///
+/// Vertices: `v_ij` in C's CSR order (ids `0..nnz(C)`), then `v^A_ik`
+/// (ids `nnz(C)..nnz(C)+nnz(A)`), then `v^B_kj`.
+pub fn fff(a: &Csr, b: &Csr) -> Result<RestrictedModel> {
+    let c = spgemm_structure(a, b)?;
+    let (nnz_c, nnz_a) = (c.nnz(), a.nnz());
+    let mut builder = HypergraphBuilder::new(nnz_c + nnz_a + b.nnz());
+    // helper: C position of (i, j)
+    let cpos = |i: usize, j: u32| -> usize {
+        let off = c.row_cols(i).binary_search(&j).expect("(i,j) ∈ S_C");
+        c.rowptr[i] + off
+    };
+    // w_comp(v_ij) = number of k; accumulate while walking mults
+    for i in 0..a.nrows {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            for &j in b.row_cols(k) {
+                builder.add_comp(cpos(i, j), 1);
+            }
+        }
+    }
+    for v in 0..(nnz_c + nnz_a + b.nnz()) {
+        builder.add_mem(v, 1);
+    }
+    // A nets: n^A_ik = {v_ij : j ∈ B[k,:]} ∪ {v^A_ik}
+    for i in 0..a.nrows {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            let mut pins: Vec<u32> = b.row_cols(k).iter().map(|&j| cpos(i, j) as u32).collect();
+            pins.push((nnz_c + pa) as u32);
+            builder.add_net(1, pins);
+        }
+    }
+    // B nets: n^B_kj = {v_ij : i ∈ A[:,k]} ∪ {v^B_kj}
+    let acols = super::models::columns_with_positions(a);
+    for k in 0..b.nrows {
+        for pb in b.rowptr[k]..b.rowptr[k + 1] {
+            let j = b.colind[pb];
+            let mut pins: Vec<u32> =
+                acols[k].iter().map(|&(i, _)| cpos(i as usize, j) as u32).collect();
+            pins.push((nnz_c + nnz_a + pb) as u32);
+            builder.add_net(1, pins);
+        }
+    }
+    Ok(RestrictedModel { name: "ffF", h: builder.finalize(false, false), n_primary: nnz_c })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn fig1() -> (Csr, Csr) {
+        let a = Csr::from_coo(
+            &Coo::from_triplets(3, 4, [(0, 0, 1.), (0, 2, 1.), (1, 0, 1.), (1, 3, 1.), (2, 1, 1.)])
+                .unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(4, 2, [(0, 1, 1.), (1, 0, 1.), (2, 0, 1.), (2, 1, 1.), (3, 1, 1.)])
+                .unwrap(),
+        );
+        (a, b)
+    }
+
+    #[test]
+    fn rrr_matches_ex51_counts() {
+        let (a, b) = fig1();
+        let m = rrr(&a, &b).unwrap();
+        m.h.validate().unwrap();
+        // |V| = I + K = 3 + 4, |N| = K = 4
+        assert_eq!(m.h.num_vertices(), 7);
+        assert_eq!(m.h.num_nets(), 4);
+        // net costs = nnz(B[k,:]) = [1, 1, 2, 1]
+        let mut costs: Vec<u64> = m.h.net_cost.clone();
+        costs.sort();
+        assert_eq!(costs, vec![1, 1, 1, 2]);
+        // each net has between 2 and I+1 pins
+        for n in 0..m.h.num_nets() {
+            let p = m.h.pins_of(n).len();
+            assert!((2..=4).contains(&p));
+        }
+        // total comp = |V^m| = 6
+        assert_eq!(m.h.total_comp(), 6);
+        // w_mem(v_i) = nnz(A[i,:]) + nnz(C[i,:])
+        assert_eq!(m.h.w_mem[0], 2 + 2);
+    }
+
+    #[test]
+    fn crf_matches_ex52_counts() {
+        let (a, b) = fig1();
+        let m = crf(&a, &b).unwrap();
+        m.h.validate().unwrap();
+        // |V| = K + |S_C| = 4 + 4, |N| = |S_C| = 4
+        assert_eq!(m.h.num_vertices(), 8);
+        assert_eq!(m.h.num_nets(), 4);
+        assert!(m.h.net_cost.iter().all(|&c| c == 1));
+        // w_comp(v_k) = nnz(A[:,k]) * nnz(B[k,:]): col0: 2*1=2, col1: 1*1,
+        // col2: 1*2, col3: 1*1 → total 6
+        assert_eq!(m.h.total_comp(), 6);
+        assert_eq!(m.h.w_comp[0], 2);
+        assert_eq!(m.h.w_comp[2], 2);
+        // w_mem(v_k) = nnz(A[:,k]) + nnz(B[k,:])
+        assert_eq!(m.h.w_mem[0], 3);
+    }
+
+    #[test]
+    fn frf_matches_ex53_counts() {
+        let (a, b) = fig1();
+        let m = frf(&a, &b).unwrap();
+        m.h.validate().unwrap();
+        // |V| = |S_A| + K + |S_C| = 5 + 4 + 4
+        assert_eq!(m.h.num_vertices(), 13);
+        // |N| = K + |S_C| = 8
+        assert_eq!(m.h.num_nets(), 8);
+        assert_eq!(m.h.total_comp(), 6);
+        // v_ik comp = nnz(B[k,:]); first A entry is (0,0) → B row 0 has 1
+        assert_eq!(m.h.w_comp[0], 1);
+    }
+
+    #[test]
+    fn fff_matches_ex54_counts() {
+        let (a, b) = fig1();
+        let m = fff(&a, &b).unwrap();
+        m.h.validate().unwrap();
+        // |V| = |S_C| + |S_A| + |S_B| = 4 + 5 + 5
+        assert_eq!(m.h.num_vertices(), 14);
+        // |N| = |S_A| + |S_B| = 10
+        assert_eq!(m.h.num_nets(), 10);
+        assert!(m.h.net_cost.iter().all(|&c| c == 1));
+        assert_eq!(m.h.total_comp(), 6);
+        // every vertex has unit memory weight
+        assert!(m.h.w_mem.iter().all(|&w| w == 1));
+    }
+
+    #[test]
+    fn primary_counts() {
+        let (a, b) = fig1();
+        assert_eq!(rrr(&a, &b).unwrap().n_primary, 3);
+        assert_eq!(crf(&a, &b).unwrap().n_primary, 4);
+        assert_eq!(frf(&a, &b).unwrap().n_primary, 5);
+        assert_eq!(fff(&a, &b).unwrap().n_primary, 4);
+    }
+}

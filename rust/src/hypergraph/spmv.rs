@@ -1,0 +1,184 @@
+//! Sparse matrix-vector multiplication models (Sec. 5.5).
+//!
+//! The paper shows its SpGEMM hypergraph specializes, under vertex
+//! coarsening, to the classical SpMV hypergraphs of Çatalyürek & Aykanat:
+//! the "column-net" model (row-wise SpMV), the "row-net" model
+//! (column-wise SpMV), and the "fine-grain" model (2D SpMV with the
+//! consistency condition). We provide all three as direct builders.
+
+use super::{Hypergraph, HypergraphBuilder};
+use crate::{Error, Result};
+use crate::sparse::Csr;
+
+/// Column-net model (models row-wise `y = A·x`): one vertex per row
+/// (vector entries `x_i`, `y_i` absorbed, the consistency condition), one
+/// net per column. `A` must be square.
+pub fn column_net(a: &Csr) -> Result<Hypergraph> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("column_net: square matrix required (consistency condition)"));
+    }
+    let n = a.nrows;
+    let mut b = HypergraphBuilder::new(n);
+    for i in 0..n {
+        b.add_comp(i, a.row_cols(i).len() as u64);
+        b.add_mem(i, a.row_cols(i).len() as u64 + 2); // row of A + x_i + y_i
+    }
+    let cols = super::models::columns_with_positions(a);
+    for (k, col) in cols.iter().enumerate() {
+        let mut pins: Vec<u32> = col.iter().map(|&(i, _)| i).collect();
+        pins.push(k as u32); // consistency: x_k lives with vertex k
+        b.add_net(1, pins);
+    }
+    Ok(b.finalize(true, false))
+}
+
+/// Row-net model (models column-wise `y = A·x`): one vertex per column,
+/// one net per row.
+pub fn row_net(a: &Csr) -> Result<Hypergraph> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("row_net: square matrix required (consistency condition)"));
+    }
+    let n = a.nrows;
+    let mut b = HypergraphBuilder::new(n);
+    let cols = super::models::columns_with_positions(a);
+    for (k, col) in cols.iter().enumerate() {
+        b.add_comp(k, col.len() as u64);
+        b.add_mem(k, col.len() as u64 + 2);
+    }
+    for i in 0..n {
+        let mut pins: Vec<u32> = a.row_cols(i).to_vec();
+        pins.push(i as u32);
+        b.add_net(1, pins);
+    }
+    Ok(b.finalize(true, false))
+}
+
+/// Fine-grain 2D SpMV model (Çatalyürek & Aykanat 2001), derived in
+/// Sec. 5.5 from the SpGEMM hypergraph in three coarsening steps.
+///
+/// Vertices: ids `0..n` are the "diagonal" vertices `v̂_ii` (matrix
+/// diagonal entry, if present, merged with `x_i` and `y_i`); ids `n..`
+/// are the off-diagonal nonzeros in CSR order (diagonal positions
+/// skipped). Weights follow the paper: `w_comp(v̂_ii) = 1, w_mem = 3` if
+/// `(i,i) ∈ S_A`, else `w_comp = 0, w_mem = 2`; off-diagonal vertices
+/// have `w_comp = w_mem = 1`. Nets: one per row and one per column.
+pub fn fine_grain(a: &Csr) -> Result<Hypergraph> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("fine_grain: square matrix required"));
+    }
+    let n = a.nrows;
+    // map CSR positions to vertex ids
+    let mut vid = vec![0u32; a.nnz()];
+    let mut next = n as u32;
+    let mut has_diag = vec![false; n];
+    for i in 0..n {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            if a.colind[pa] as usize == i {
+                vid[pa] = i as u32;
+                has_diag[i] = true;
+            } else {
+                vid[pa] = next;
+                next += 1;
+            }
+        }
+    }
+    let total = next as usize;
+    let mut b = HypergraphBuilder::new(total);
+    for i in 0..n {
+        if has_diag[i] {
+            b.add_comp(i, 1);
+            b.add_mem(i, 3);
+        } else {
+            b.add_mem(i, 2);
+        }
+    }
+    for v in n..total {
+        b.add_comp(v, 1);
+        b.add_mem(v, 1);
+    }
+    // row nets: nonzeros of row i plus v̂_ii
+    for i in 0..n {
+        let mut pins: Vec<u32> = (a.rowptr[i]..a.rowptr[i + 1]).map(|p| vid[p]).collect();
+        pins.push(i as u32);
+        b.add_net(1, pins);
+    }
+    // column nets: nonzeros of column k plus v̂_kk
+    let cols = super::models::columns_with_positions(a);
+    for (k, col) in cols.iter().enumerate() {
+        let mut pins: Vec<u32> = col.iter().map(|&(_, pa)| vid[pa as usize]).collect();
+        pins.push(k as u32);
+        b.add_net(1, pins);
+    }
+    Ok(b.finalize(true, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        // [1 1 0]
+        // [0 1 1]
+        // [1 0 0]  (no diagonal at row 2)
+        Csr::from_coo(
+            &Coo::from_triplets(
+                3,
+                3,
+                [(0, 0, 1.), (0, 1, 1.), (1, 1, 1.), (1, 2, 1.), (2, 0, 1.)],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn column_net_structure() {
+        let a = sample();
+        let h = column_net(&a).unwrap();
+        h.validate().unwrap();
+        assert_eq!(h.num_vertices(), 3);
+        // col 0: rows {0,2} ∪ {0} = {0,2}; col 1: {0,1}; col 2: {1,2}
+        let nets = h.canonical_nets();
+        assert_eq!(nets, vec![(1, vec![0, 1]), (1, vec![0, 2]), (1, vec![1, 2])]);
+        // comp weights = row nnz
+        assert_eq!(h.w_comp, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn row_net_is_column_net_of_transpose() {
+        let a = sample();
+        let h1 = row_net(&a).unwrap();
+        let h2 = column_net(&a.transpose()).unwrap();
+        assert_eq!(h1.canonical_nets(), h2.canonical_nets());
+        assert_eq!(h1.w_comp, h2.w_comp);
+    }
+
+    #[test]
+    fn fine_grain_weights_follow_sec55() {
+        let a = sample();
+        let h = fine_grain(&a).unwrap();
+        h.validate().unwrap();
+        // 3 diagonal-slot vertices + 3 off-diagonal nonzeros
+        assert_eq!(h.num_vertices(), 6);
+        // rows 0,1 have diagonals: comp 1 / mem 3; row 2 has none: 0 / 2
+        assert_eq!(h.w_comp[0], 1);
+        assert_eq!(h.w_mem[0], 3);
+        assert_eq!(h.w_comp[2], 0);
+        assert_eq!(h.w_mem[2], 2);
+        // off-diagonal vertices are unit/unit
+        assert_eq!(h.w_comp[3], 1);
+        assert_eq!(h.w_mem[3], 1);
+        // one net per row + one per column (none are singletons here)
+        assert_eq!(h.num_nets(), 6);
+        // total comp = nnz
+        assert_eq!(h.total_comp(), 5);
+    }
+
+    #[test]
+    fn requires_square() {
+        let rect = Csr::zero(2, 3);
+        assert!(column_net(&rect).is_err());
+        assert!(row_net(&rect).is_err());
+        assert!(fine_grain(&rect).is_err());
+    }
+}

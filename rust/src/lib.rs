@@ -1,0 +1,36 @@
+//! # spgemm-hp
+//!
+//! A reproduction of *Hypergraph Partitioning for Sparse Matrix-Matrix
+//! Multiplication* (Ballard, Druinsky, Knight, Schwartz, 2016).
+//!
+//! The crate provides, end to end:
+//!
+//! * a sparse-matrix substrate ([`sparse`]) with Gustavson SpGEMM,
+//! * workload generators for the paper's three applications ([`gen`]),
+//! * the fine-grained SpGEMM hypergraph model of Def. 3.1 and all of its
+//!   Sec. 5 coarsenings ([`hypergraph`]),
+//! * a PaToH-like multilevel hypergraph partitioner ([`partition`]),
+//! * the communication-cost metrics and lower bounds of Sec. 4 ([`cost`]),
+//! * parallel and sequential SpGEMM simulators that *execute* a partition
+//!   and validate the modeled costs ([`sim`]),
+//! * a leader/worker coordinator that routes expand/fold traffic and
+//!   batches numeric tile-multiplies ([`coordinator`]) into
+//! * an AOT-compiled JAX/Pallas kernel executed through PJRT ([`runtime`]).
+//!
+//! Python (JAX + Pallas) is used only at build time (`make artifacts`);
+//! the binary is self-contained once `artifacts/` exists.
+
+pub mod error;
+pub mod gen;
+pub mod hypergraph;
+pub mod cost;
+pub mod cli;
+pub mod coordinator;
+pub mod repro;
+pub mod runtime;
+pub mod partition;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,365 @@
+//! Fiduccia–Mattheyses bisection refinement.
+//!
+//! Boundary FM with a lazy max-heap of gains, balance-aware feasibility,
+//! and rollback to the best prefix of each pass. For a bisection the
+//! connectivity-(λ−1) objective equals the total cost of cut nets.
+
+use crate::hypergraph::Hypergraph;
+use crate::util::Rng;
+use std::collections::BinaryHeap;
+
+/// Mutable bisection state over a hypergraph.
+pub struct Bisection<'h> {
+    pub h: &'h Hypergraph,
+    pub weights: &'h [u64],
+    /// Side (0/1) of each vertex.
+    pub side: Vec<u8>,
+    /// Per net: number of pins on each side.
+    pins: Vec<[u32; 2]>,
+    /// Total weight on each side.
+    pub load: [u64; 2],
+    /// Maximum allowed weight per side.
+    pub max: [u64; 2],
+    /// Current cut (total cost of nets with pins on both sides).
+    pub cut: u64,
+    /// Transient slack (one max-vertex weight): moves may exceed `max` by
+    /// this much *during* a pass, but the best-prefix rollback only
+    /// accepts states with zero violation, so final balance is preserved.
+    /// Without slack, FM is paralyzed at exactly balanced states.
+    tol: u64,
+}
+
+impl<'h> Bisection<'h> {
+    pub fn new(h: &'h Hypergraph, weights: &'h [u64], side: Vec<u8>, max: [u64; 2]) -> Self {
+        assert_eq!(side.len(), h.num_vertices());
+        let mut pins = vec![[0u32; 2]; h.num_nets()];
+        for n in 0..h.num_nets() {
+            for &v in h.pins_of(n) {
+                pins[n][side[v as usize] as usize] += 1;
+            }
+        }
+        let mut load = [0u64; 2];
+        for (v, &s) in side.iter().enumerate() {
+            load[s as usize] += weights[v];
+        }
+        let cut = pins
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p[0] > 0 && p[1] > 0)
+            .map(|(n, _)| h.net_cost[n])
+            .sum();
+        let tol = weights.iter().copied().max().unwrap_or(1).max(1);
+        Bisection { h, weights, side, pins, load, max, cut, tol }
+    }
+
+    /// Gain (cut reduction) of moving `v` to the other side.
+    #[inline]
+    pub fn gain(&self, v: usize) -> i64 {
+        let from = self.side[v] as usize;
+        let to = 1 - from;
+        let mut g = 0i64;
+        for &n in self.h.nets_of(v) {
+            let n = n as usize;
+            let c = self.h.net_cost[n] as i64;
+            let p = &self.pins[n];
+            if p[from] == 1 {
+                g += c; // net becomes internal to `to`
+            }
+            if p[to] == 0 {
+                g -= c; // net becomes cut
+            }
+        }
+        g
+    }
+
+    /// Is `v` on the cut boundary (incident to a cut net)?
+    #[inline]
+    pub fn is_boundary(&self, v: usize) -> bool {
+        self.h.nets_of(v).iter().any(|&n| {
+            let p = &self.pins[n as usize];
+            p[0] > 0 && p[1] > 0
+        })
+    }
+
+    /// Total balance violation (0 when feasible).
+    #[inline]
+    pub fn violation(&self) -> u64 {
+        self.load[0].saturating_sub(self.max[0]) + self.load[1].saturating_sub(self.max[1])
+    }
+
+    /// Would moving `v` keep/improve balance?
+    #[inline]
+    pub fn move_feasible(&self, v: usize) -> bool {
+        let from = self.side[v] as usize;
+        let to = 1 - from;
+        let w = self.weights[v];
+        if self.load[to] + w <= self.max[to] + self.tol {
+            return true;
+        }
+        // allow strict violation reduction (rescues infeasible states)
+        let before = self.violation();
+        let after = (self.load[from] - w).saturating_sub(self.max[from])
+            + (self.load[to] + w).saturating_sub(self.max[to]);
+        after < before
+    }
+
+    /// Apply the move of `v`, updating pins, loads, and cut.
+    pub fn apply(&mut self, v: usize) {
+        let from = self.side[v] as usize;
+        let to = 1 - from;
+        for &n in self.h.nets_of(v) {
+            let n = n as usize;
+            let c = self.h.net_cost[n];
+            let p = &mut self.pins[n];
+            let was_cut = p[0] > 0 && p[1] > 0;
+            p[from] -= 1;
+            p[to] += 1;
+            let now_cut = p[0] > 0 && p[1] > 0;
+            if was_cut && !now_cut {
+                self.cut -= c;
+            } else if !was_cut && now_cut {
+                self.cut += c;
+            }
+        }
+        self.load[from] -= self.weights[v];
+        self.load[to] += self.weights[v];
+        self.side[v] = to as u8;
+    }
+
+    /// One FM pass with incremental gain maintenance (the classic
+    /// Fiduccia–Mattheyses update rules: a move only perturbs the gains
+    /// of pins on nets whose side counts cross the 0/1/2 thresholds).
+    /// Returns true if the pass improved (cut or violation).
+    pub fn fm_pass(&mut self, rng: &mut Rng) -> bool {
+        let n = self.h.num_vertices();
+        let mut locked = vec![false; n];
+        // cached gain per vertex; i64::MIN = not yet in the structure
+        let mut gain: Vec<i64> = vec![i64::MIN; n];
+        let mut heap: BinaryHeap<(i64, u32)> = BinaryHeap::new();
+        // seed with boundary vertices (plus everything if infeasible —
+        // rebalancing may need interior moves)
+        let seed_all = self.violation() > 0;
+        let order = rng.permutation(n);
+        for v in order {
+            if seed_all || self.is_boundary(v) {
+                gain[v] = self.gain(v);
+                heap.push((gain[v], v as u32));
+            }
+        }
+        let start_cut = self.cut;
+        let start_violation = self.violation();
+        let mut best = (self.violation(), self.cut, 0usize); // (violation, cut, prefix)
+        let mut moves: Vec<u32> = Vec::new();
+        let stall_limit = (n / 2).max(64);
+        // nets larger than this skip incremental updates (their pins may
+        // keep stale cached gains — moves remain correct, just less
+        // informed; bounds the per-move update cost on hub nets)
+        const HUGE_NET: usize = 4096;
+
+        while let Some((g, v)) = heap.pop() {
+            let v = v as usize;
+            if locked[v] || gain[v] != g {
+                continue; // stale entry (the fresh one is also queued)
+            }
+            if !self.move_feasible(v) {
+                continue; // may be re-queued by a neighbor update
+            }
+            // --- FM gain updates around the move of v ---------------------
+            // (all deltas computed against PRE-move pin counts; `bump`
+            // lazily initializes newly-boundary vertices consistently)
+            let from = self.side[v] as usize;
+            let to = 1 - from;
+            locked[v] = true;
+            for &nid in self.h.nets_of(v) {
+                let nid = nid as usize;
+                let net_pins = self.pins_of_net(nid);
+                if net_pins.len() > HUGE_NET {
+                    continue;
+                }
+                let (pt, pf) = (self.pins[nid][to], self.pins[nid][from]);
+                let c = self.h.net_cost[nid] as i64;
+                if pt == 0 {
+                    // net becomes cut: every other pin gains by following
+                    for &u in net_pins {
+                        let u = u as usize;
+                        if u != v && !locked[u] {
+                            bump(&mut gain, &mut heap, self, u, c);
+                        }
+                    }
+                } else if pt == 1 {
+                    // the lone `to`-side pin loses its removal gain
+                    for &u in net_pins {
+                        let u = u as usize;
+                        if self.side[u] as usize == to {
+                            if !locked[u] {
+                                bump(&mut gain, &mut heap, self, u, -c);
+                            }
+                            break;
+                        }
+                    }
+                }
+                if pf == 1 {
+                    // net becomes internal to `to`: followers lose interest
+                    for &u in net_pins {
+                        let u = u as usize;
+                        if u != v && !locked[u] {
+                            bump(&mut gain, &mut heap, self, u, -c);
+                        }
+                    }
+                } else if pf == 2 {
+                    // exactly one `from`-side pin will remain: it gains
+                    for &u in net_pins {
+                        let u = u as usize;
+                        if u != v && self.side[u] as usize == from {
+                            if !locked[u] {
+                                bump(&mut gain, &mut heap, self, u, c);
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+            self.apply(v);
+            moves.push(v as u32);
+            let key = (self.violation(), self.cut, moves.len());
+            if (key.0, key.1) < (best.0, best.1) {
+                best = key;
+            }
+            if moves.len() >= best.2 + stall_limit {
+                break; // no improvement for a while
+            }
+        }
+        // rollback to the best prefix
+        while moves.len() > best.2 {
+            let v = moves.pop().unwrap();
+            self.apply(v as usize);
+        }
+        debug_assert_eq!(self.cut, best.1);
+        self.violation() < start_violation || self.cut < start_cut
+    }
+
+    #[inline]
+    fn pins_of_net(&self, nid: usize) -> &[u32] {
+        &self.h.net_pins[self.h.net_ptr[nid]..self.h.net_ptr[nid + 1]]
+    }
+}
+
+/// Adjust `u`'s cached gain by `delta` and requeue. A vertex seen for the
+/// first time this pass gets its gain computed from the (pre-move) state
+/// plus `delta`, so the running cache stays exact after the move lands.
+#[inline]
+fn bump(
+    gain: &mut [i64],
+    heap: &mut BinaryHeap<(i64, u32)>,
+    bi: &Bisection<'_>,
+    u: usize,
+    delta: i64,
+) {
+    if gain[u] == i64::MIN {
+        gain[u] = bi.gain(u) + delta;
+    } else {
+        gain[u] += delta;
+    }
+    heap.push((gain[u], u as u32));
+}
+
+impl<'h> Bisection<'h> {
+    /// Run FM passes until no improvement (at most `max_passes`).
+    pub fn refine(&mut self, max_passes: usize, rng: &mut Rng) {
+        for _ in 0..max_passes {
+            if !self.fm_pass(rng) {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn clustered() -> Hypergraph {
+        // vertices 0-3 and 4-7 cliques, one bridge {3,4}
+        let mut b = HypergraphBuilder::new(8);
+        b.set_weights(vec![1; 8], vec![0; 8]);
+        for c in 0..2u32 {
+            let base = c * 4;
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    b.add_net(1, vec![base + i, base + j]);
+                }
+            }
+        }
+        b.add_net(1, vec![3, 4]);
+        b.finalize(true, false)
+    }
+
+    #[test]
+    fn state_bookkeeping_consistent() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        // alternating sides: heavily cut
+        let side: Vec<u8> = (0..8).map(|v| (v % 2) as u8).collect();
+        let mut bi = Bisection::new(&h, &w, side, [4, 4]);
+        let brute = |bi: &Bisection| -> u64 {
+            (0..bi.h.num_nets())
+                .filter(|&n| {
+                    let pins = bi.h.pins_of(n);
+                    let s0 = pins.iter().any(|&v| bi.side[v as usize] == 0);
+                    let s1 = pins.iter().any(|&v| bi.side[v as usize] == 1);
+                    s0 && s1
+                })
+                .map(|n| bi.h.net_cost[n])
+                .sum()
+        };
+        assert_eq!(bi.cut, brute(&bi));
+        // gains match brute-force recomputation
+        for v in 0..8 {
+            let before = bi.cut;
+            let g = bi.gain(v);
+            bi.apply(v);
+            assert_eq!(bi.cut, brute(&bi));
+            assert_eq!(before as i64 - bi.cut as i64, g, "gain mismatch at {v}");
+            bi.apply(v); // undo
+            assert_eq!(bi.cut, before);
+        }
+    }
+
+    #[test]
+    fn fm_reaches_the_optimal_bisection() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        let side: Vec<u8> = (0..8).map(|v| (v % 2) as u8).collect();
+        let mut bi = Bisection::new(&h, &w, side, [4, 4]);
+        let mut rng = Rng::new(2);
+        bi.refine(8, &mut rng);
+        assert_eq!(bi.cut, 1, "should find the single-bridge cut");
+        assert_eq!(bi.load, [4, 4]);
+    }
+
+    #[test]
+    fn fm_repairs_imbalance() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        // all on side 0: violates max [4,4]
+        let mut bi = Bisection::new(&h, &w, vec![0; 8], [4, 4]);
+        assert!(bi.violation() > 0);
+        let mut rng = Rng::new(4);
+        bi.refine(8, &mut rng);
+        assert_eq!(bi.violation(), 0, "refine must restore feasibility");
+        assert_eq!(bi.cut, 1);
+    }
+
+    #[test]
+    fn respects_caps_during_refinement() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        let side: Vec<u8> = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let mut bi = Bisection::new(&h, &w, side, [5, 5]);
+        let mut rng = Rng::new(6);
+        bi.refine(4, &mut rng);
+        assert!(bi.load[0] <= 5 && bi.load[1] <= 5);
+        assert_eq!(bi.cut, 1);
+    }
+}

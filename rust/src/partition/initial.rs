@@ -1,0 +1,160 @@
+//! Initial bisections at the coarsest level: greedy hypergraph growing
+//! (GHG) and random balanced starts. Each candidate is FM-refined and the
+//! best (feasibility first, then cut) wins.
+
+use super::fm::Bisection;
+use crate::hypergraph::Hypergraph;
+use crate::util::Rng;
+
+/// Greedy hypergraph growing: grow side 0 from a random seed, repeatedly
+/// absorbing the candidate with the highest move gain, until side 0
+/// reaches its target weight.
+pub fn greedy_growing(
+    h: &Hypergraph,
+    weights: &[u64],
+    target0: u64,
+    max: [u64; 2],
+    rng: &mut Rng,
+) -> Vec<u8> {
+    let n = h.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut bi = Bisection::new(h, weights, vec![1; n], max);
+    let seed = rng.below(n);
+    bi.apply(seed);
+    while bi.load[0] < target0 {
+        // candidate set: side-1 vertices sharing a net with side 0
+        let mut best: Option<(i64, usize)> = None;
+        for v in 0..n {
+            if bi.side[v] == 1 && bi.load[0] + weights[v] <= max[0] && bi.is_boundary(v) {
+                let g = bi.gain(v);
+                if best.map(|(bg, _)| g > bg).unwrap_or(true) {
+                    best = Some((g, v));
+                }
+            }
+        }
+        let v = match best {
+            Some((_, v)) => v,
+            None => {
+                // disconnected: jump to a random side-1 vertex that fits
+                let candidates: Vec<usize> = (0..n)
+                    .filter(|&v| bi.side[v] == 1 && bi.load[0] + weights[v] <= max[0])
+                    .collect();
+                if candidates.is_empty() {
+                    break;
+                }
+                candidates[rng.below(candidates.len())]
+            }
+        };
+        bi.apply(v);
+    }
+    bi.side
+}
+
+/// Random balanced start: shuffle and fill side 0 up to `target0`.
+pub fn random_balanced(
+    h: &Hypergraph,
+    weights: &[u64],
+    target0: u64,
+    rng: &mut Rng,
+) -> Vec<u8> {
+    let n = h.num_vertices();
+    let mut side = vec![1u8; n];
+    let order = rng.permutation(n);
+    let mut w0 = 0u64;
+    for v in order {
+        if w0 + weights[v] <= target0 {
+            side[v] = 0;
+            w0 += weights[v];
+        }
+    }
+    side
+}
+
+/// Best-of-`n_starts` initial bisection, each candidate FM-refined.
+/// Ranking: feasibility violation first, then cut.
+pub fn best_initial(
+    h: &Hypergraph,
+    weights: &[u64],
+    target0: u64,
+    max: [u64; 2],
+    n_starts: usize,
+    fm_passes: usize,
+    rng: &mut Rng,
+) -> Vec<u8> {
+    let mut best: Option<(u64, u64, Vec<u8>)> = None;
+    // GHG scans all candidates per growth step (O(n²)); it is meant for
+    // the coarsest level only. On oversized inputs (coarsening disabled
+    // or ineffective) fall back to random starts + FM.
+    let ghg_ok = h.num_vertices() <= 4096;
+    for s in 0..n_starts.max(1) {
+        let side = if s % 2 == 0 && ghg_ok {
+            greedy_growing(h, weights, target0, max, rng)
+        } else {
+            random_balanced(h, weights, target0, rng)
+        };
+        let mut bi = Bisection::new(h, weights, side, max);
+        bi.refine(fm_passes, rng);
+        let key = (bi.violation(), bi.cut);
+        if best.as_ref().map(|(v, c, _)| key < (*v, *c)).unwrap_or(true) {
+            best = Some((key.0, key.1, bi.side));
+        }
+    }
+    best.map(|(_, _, s)| s).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn ring(n: usize) -> Hypergraph {
+        let mut b = HypergraphBuilder::new(n);
+        b.set_weights(vec![1; n], vec![0; n]);
+        for i in 0..n {
+            b.add_net(1, vec![i as u32, ((i + 1) % n) as u32]);
+        }
+        b.finalize(true, false)
+    }
+
+    #[test]
+    fn greedy_growing_hits_target() {
+        let h = ring(20);
+        let w = vec![1u64; 20];
+        let mut rng = Rng::new(1);
+        let side = greedy_growing(&h, &w, 10, [11, 11], &mut rng);
+        let w0 = side.iter().filter(|&&s| s == 0).count();
+        assert!((9..=11).contains(&w0), "w0={w0}");
+        // greedy growth on a ring yields a contiguous arc → cut 2
+        let bi = Bisection::new(&h, &w, side, [11, 11]);
+        assert_eq!(bi.cut, 2);
+    }
+
+    #[test]
+    fn random_balanced_hits_target() {
+        let h = ring(30);
+        let w = vec![1u64; 30];
+        let mut rng = Rng::new(2);
+        let side = random_balanced(&h, &w, 15, &mut rng);
+        assert_eq!(side.iter().filter(|&&s| s == 0).count(), 15);
+    }
+
+    #[test]
+    fn best_initial_is_feasible_and_good() {
+        let h = ring(24);
+        let w = vec![1u64; 24];
+        let mut rng = Rng::new(3);
+        let side = best_initial(&h, &w, 12, [13, 13], 6, 4, &mut rng);
+        let bi = Bisection::new(&h, &w, side, [13, 13]);
+        assert_eq!(bi.violation(), 0);
+        assert_eq!(bi.cut, 2, "ring optimal bisection cuts exactly 2 nets");
+    }
+
+    #[test]
+    fn empty_hypergraph() {
+        let h = HypergraphBuilder::new(0).finalize(true, true);
+        let side = best_initial(&h, &[], 0, [0, 0], 4, 2, &mut Rng::new(1));
+        assert!(side.is_empty());
+    }
+}

@@ -1,0 +1,142 @@
+//! Coarsening by agglomerative heavy-connectivity matching.
+//!
+//! Visit vertices in random order; match each unmatched vertex with the
+//! unmatched neighbor sharing the greatest total net cost, normalized by
+//! the candidate cluster weight (PaToH's "absorption" flavor). Pairs are
+//! contracted; a weight cap prevents monster clusters that would make
+//! balanced bisection infeasible.
+
+use crate::hypergraph::Hypergraph;
+use crate::util::Rng;
+
+/// Compute a matching map `v -> coarse id` and the number of coarse
+/// vertices. `weights` are the balance weights; no cluster may exceed
+/// `max_cluster_weight`.
+pub fn heavy_connectivity_matching(
+    h: &Hypergraph,
+    weights: &[u64],
+    max_cluster_weight: u64,
+    rng: &mut Rng,
+) -> (Vec<u32>, usize) {
+    let n = h.num_vertices();
+    let mut map = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let order = rng.permutation(n);
+    // scratch: candidate -> accumulated score
+    let mut score: Vec<f64> = vec![0.0; n];
+    let mut touched: Vec<u32> = Vec::with_capacity(64);
+    const MAX_NET: usize = 256; // skip very large nets when scoring
+
+    for &v in &order {
+        if map[v] != u32::MAX {
+            continue;
+        }
+        touched.clear();
+        for &nid in h.nets_of(v) {
+            let pins = h.pins_of(nid as usize);
+            if pins.len() > MAX_NET {
+                continue;
+            }
+            // connectivity score: cost / (|n| - 1) (spread the net's cost)
+            let s = h.net_cost[nid as usize] as f64 / (pins.len() as f64 - 1.0).max(1.0);
+            for &u in pins {
+                let u = u as usize;
+                if u == v || map[u] != u32::MAX {
+                    continue;
+                }
+                if score[u] == 0.0 {
+                    touched.push(u as u32);
+                }
+                score[u] += s;
+            }
+        }
+        // best candidate under the weight cap, normalized by its weight
+        let mut best: Option<(f64, usize)> = None;
+        for &u in &touched {
+            let u = u as usize;
+            if weights[v].saturating_add(weights[u]) > max_cluster_weight {
+                continue;
+            }
+            let norm = score[u] / (weights[u].max(1) as f64).sqrt();
+            if best.map(|(b, _)| norm > b).unwrap_or(true) {
+                best = Some((norm, u));
+            }
+        }
+        let id = next;
+        next += 1;
+        map[v] = id;
+        if let Some((_, u)) = best {
+            map[u] = id;
+        }
+        for &u in &touched {
+            score[u as usize] = 0.0;
+        }
+    }
+    (map, next as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::{coarsen, HypergraphBuilder};
+
+    fn path(n: usize) -> Hypergraph {
+        let mut b = HypergraphBuilder::new(n);
+        b.set_weights(vec![1; n], vec![0; n]);
+        for i in 0..n - 1 {
+            b.add_net(1, vec![i as u32, (i + 1) as u32]);
+        }
+        b.finalize(true, false)
+    }
+
+    #[test]
+    fn matching_is_a_valid_map() {
+        let h = path(40);
+        let w = vec![1u64; 40];
+        let mut rng = Rng::new(3);
+        let (map, nc) = heavy_connectivity_matching(&h, &w, u64::MAX, &mut rng);
+        assert!(nc <= 40 && nc >= 20);
+        // every coarse id < nc; every cluster has <= 2 members
+        let mut count = vec![0usize; nc];
+        for &m in &map {
+            assert!((m as usize) < nc);
+            count[m as usize] += 1;
+        }
+        assert!(count.iter().all(|&c| (1..=2).contains(&c)));
+    }
+
+    #[test]
+    fn matching_contracts_path_substantially() {
+        let h = path(100);
+        let w = vec![1u64; 100];
+        let mut rng = Rng::new(5);
+        let (_, nc) = heavy_connectivity_matching(&h, &w, u64::MAX, &mut rng);
+        // a path should almost perfectly pair up
+        assert!(nc <= 65, "nc={nc}");
+    }
+
+    #[test]
+    fn weight_cap_respected() {
+        let h = path(10);
+        let w = vec![6u64; 10];
+        let mut rng = Rng::new(1);
+        let (map, nc) = heavy_connectivity_matching(&h, &w, 10, &mut rng);
+        // no pair allowed (6+6 > 10): everything singleton
+        assert_eq!(nc, 10);
+        let mut sorted = map.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 10);
+    }
+
+    #[test]
+    fn coarsened_graph_preserves_totals() {
+        let h = path(30);
+        let w = vec![1u64; 30];
+        let mut rng = Rng::new(9);
+        let (map, nc) = heavy_connectivity_matching(&h, &w, u64::MAX, &mut rng);
+        let hc = coarsen::coarsen(&h, &map, nc, coarsen::WeightRule::Sum, true, true).unwrap();
+        assert_eq!(hc.total_comp(), h.total_comp());
+        assert!(hc.num_vertices() < h.num_vertices());
+    }
+}

@@ -1,0 +1,327 @@
+//! Regeneration drivers for every table and figure in Sec. 6 (plus the
+//! Sec. 4 bound comparisons). Each returns the measured rows so callers
+//! (CLI, benches, tests) can print, persist, or assert on them.
+
+use super::workloads::{self, Instance};
+use super::{measure_given_partition, measure_model, ExperimentRow};
+use crate::cost::bounds::{self, BoundParams};
+use crate::gen::{self, Grid3};
+use crate::hypergraph::models::{build_model, ModelKind};
+use crate::partition::{self, PartitionerConfig};
+use crate::sim::sequential::{block_schedule, row_major_schedule, simulate_sequential};
+use crate::sparse::{spgemm_flops, SpgemmStats};
+use crate::util::Rng;
+use crate::Result;
+
+/// The paper's plotted model set for Fig. 7 (all seven classes).
+pub const FIG7_MODELS: [ModelKind; 7] = ModelKind::ALL;
+/// Fig. 8 skips column-wise and monochrome-B (S_B = S_Aᵀ makes them
+/// equivalent to row-wise / monochrome-A — the paper omits those curves).
+pub const FIG8_MODELS: [ModelKind; 5] = [
+    ModelKind::FineGrained,
+    ModelKind::RowWise,
+    ModelKind::OuterProduct,
+    ModelKind::MonoA,
+    ModelKind::MonoC,
+];
+/// Fig. 9's curves (symmetric squaring: column-wise ≡ monochrome-B).
+pub const FIG9_MODELS: [ModelKind; 5] = [
+    ModelKind::FineGrained,
+    ModelKind::RowWise,
+    ModelKind::OuterProduct,
+    ModelKind::MonoA,
+    ModelKind::MonoC,
+];
+
+/// ε used in all partitioning experiments. The paper uses 0.01 on
+/// million-row instances; at container scale the same constraint is
+/// infeasibly tight for coarse vertices, so we use 0.03.
+pub const EPSILON: f64 = 0.03;
+
+/// Table II — statistics of every SpGEMM instance.
+pub fn table2(scale: u32, seed: u64) -> Result<Vec<(String, SpgemmStats)>> {
+    let mut out = Vec::new();
+    for (n, _) in workloads::amg_ladder(scale) {
+        let (ap, ptap) = workloads::amg_model_problem(n)?;
+        out.push((ap.name.clone(), SpgemmStats::compute(&ap.a, &ap.b)?));
+        out.push((ptap.name.clone(), SpgemmStats::compute(&ptap.a, &ptap.b)?));
+        let (sap, sptap) = workloads::amg_sa_problem(n.min(24))?;
+        out.push((sap.name.clone(), SpgemmStats::compute(&sap.a, &sap.b)?));
+        out.push((sptap.name.clone(), SpgemmStats::compute(&sptap.a, &sptap.b)?));
+    }
+    for inst in workloads::lp_instances(scale, seed)? {
+        out.push((inst.name.clone(), SpgemmStats::compute(&inst.a, &inst.b)?));
+    }
+    for inst in workloads::mcl_instances(scale, seed)? {
+        out.push((inst.name.clone(), SpgemmStats::compute(&inst.a, &inst.b)?));
+    }
+    Ok(out)
+}
+
+/// Pretty-print Table II.
+pub fn print_table2(rows: &[(String, SpgemmStats)]) {
+    println!("\n=== Table II: SpGEMM instance statistics (scaled analogues) ===");
+    println!(
+        "{:<16} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>11}",
+        "name", "I", "K", "J", "|SA|/I", "|SB|/K", "|SC|/I", "|Vm|/|SC|"
+    );
+    for (name, s) in rows {
+        println!(
+            "{:<16} {:>9} {:>9} {:>9} {:>9.1} {:>9.1} {:>9.1} {:>11.1}",
+            name,
+            s.i,
+            s.k,
+            s.j,
+            s.a_per_row(),
+            s.b_per_row(),
+            s.c_per_row(),
+            s.mults_per_output()
+        );
+    }
+}
+
+/// Fig. 7 — AMG weak scaling. Returns rows for both SpGEMMs of the model
+/// problem and the SA-ρAMGe analogue, all seven models, plus the
+/// geometric baselines ("Geometric-row" for A·P, "Geometric-outer" for
+/// PᵀAP) available on the regular grid.
+pub fn fig7(scale: u32, seed: u64, models: &[ModelKind]) -> Result<Vec<ExperimentRow>> {
+    let mut rows = Vec::new();
+    for (n, p) in workloads::amg_ladder(scale) {
+        let (ap, ptap) = workloads::amg_model_problem(n)?;
+        for &kind in models {
+            rows.push(measure_model("amg", &ap.name, &ap.a, &ap.b, kind, p, EPSILON, seed)?);
+            rows.push(measure_model("amg", &ptap.name, &ptap.a, &ptap.b, kind, p, EPSILON, seed)?);
+        }
+        // geometric baselines (the paper's "Geometric-row"/"Geometric-outer")
+        let fine_grid = Grid3::new(n);
+        if let Ok(gpart) = fine_grid.subcube_partition(p) {
+            // row-wise model of A·P: vertices are the n³ rows of A
+            rows.push(measure_given_partition(
+                "amg",
+                &ap.name,
+                &ap.a,
+                &ap.b,
+                ModelKind::RowWise,
+                "geometric-row",
+                &gpart,
+                p,
+            )?);
+            // outer-product model of PᵀAP: vertices are the n³ fine points
+            rows.push(measure_given_partition(
+                "amg",
+                &ptap.name,
+                &ptap.a,
+                &ptap.b,
+                ModelKind::OuterProduct,
+                "geometric-outer",
+                &gpart,
+                p,
+            )?);
+        }
+        // SA-ρAMGe analogue
+        let (sap, sptap) = workloads::amg_sa_problem(n)?;
+        for &kind in models {
+            rows.push(measure_model("amg", &sap.name, &sap.a, &sap.b, kind, p, EPSILON, seed)?);
+            rows.push(measure_model(
+                "amg", &sptap.name, &sptap.a, &sptap.b, kind, p, EPSILON, seed,
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 8 — LP normal equations, strong scaling.
+pub fn fig8(scale: u32, seed: u64, models: &[ModelKind]) -> Result<Vec<ExperimentRow>> {
+    let instances = workloads::lp_instances(scale, seed)?;
+    let mut rows = Vec::new();
+    for Instance { name, a, b } in &instances {
+        for &p in &workloads::lp_pvalues(scale) {
+            for &kind in models {
+                rows.push(measure_model("lp", name, a, b, kind, p, EPSILON, seed)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 9 — Markov clustering (squaring), strong scaling.
+pub fn fig9(scale: u32, seed: u64, models: &[ModelKind]) -> Result<Vec<ExperimentRow>> {
+    let instances = workloads::mcl_instances(scale, seed)?;
+    let mut rows = Vec::new();
+    for Instance { name, a, b } in &instances {
+        for &p in &workloads::mcl_pvalues(scale) {
+            for &kind in models {
+                rows.push(measure_model("mcl", name, a, b, kind, p, EPSILON, seed)?);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// One row of the eq. (1) bound-comparison experiment.
+#[derive(Debug, Clone)]
+pub struct BoundRow {
+    pub instance: String,
+    pub p: usize,
+    /// Hypergraph (fine-grained) partitioned comm max — an *upper* bound
+    /// on the optimum, which Thm. 4.5 says is also a valid lower-bound
+    /// witness family.
+    pub hypergraph_comm: u64,
+    pub eq1_memory_dependent: f64,
+    pub eq1_memory_independent: f64,
+    pub trivial: f64,
+}
+
+/// Sec. 4.1's comparison: hypergraph bound vs. eq. (1) on ER random
+/// matrices (where eq. (1) is loose) and diagonal matrices (where it
+/// vanishes entirely).
+pub fn bounds_comparison(seed: u64) -> Result<Vec<BoundRow>> {
+    let mut rng = Rng::new(seed);
+    let p = 16;
+    let mut out = Vec::new();
+    // Erdős–Rényi, d = 8
+    let n = 512;
+    let a = gen::erdos_renyi(n, n, 8.0, &mut rng)?;
+    let b = gen::erdos_renyi(n, n, 8.0, &mut rng)?;
+    for (name, a, b) in [
+        ("er512-d8".to_string(), a, b),
+        ("diagonal-4096".to_string(), crate::sparse::Csr::identity(4096), crate::sparse::Csr::identity(4096)),
+    ] {
+        let model = build_model(&a, &b, ModelKind::FineGrained, false)?;
+        let cfg = PartitionerConfig { epsilon: 0.10, seed, ..PartitionerConfig::new(p) };
+        let part = partition::partition(&model.h, &cfg)?;
+        let m = crate::cost::evaluate(&model.h, &part, p)?;
+        let flops = spgemm_flops(&a, &b)?;
+        let nnz_total =
+            (a.nnz() + b.nnz() + crate::sparse::spgemm_structure(&a, &b)?.nnz()) as u64;
+        let bp = BoundParams { flops, nnz_total, p, memory: nnz_total / p as u64 + 1 };
+        out.push(BoundRow {
+            instance: name,
+            p,
+            hypergraph_comm: m.comm_max,
+            eq1_memory_dependent: bounds::memory_dependent(&bp),
+            eq1_memory_independent: bounds::memory_independent(&bp),
+            trivial: nnz_total as f64 / p as f64,
+        });
+    }
+    Ok(out)
+}
+
+/// One row of the sequential (Thm. 4.10) experiment.
+#[derive(Debug, Clone)]
+pub struct SeqRow {
+    pub memory: usize,
+    pub row_major: u64,
+    pub hypergraph_blocked: u64,
+    pub hong_kung_bound: f64,
+    pub trivial_bound: f64,
+}
+
+/// Sec. 4.2: sequential schedules under an M-word fast memory — the
+/// row-major (Gustavson) order vs. a hypergraph-partitioned block order,
+/// against the Hong–Kung `|V^m|/√M` and trivial `|V^nz|` bounds.
+pub fn sequential_experiment(seed: u64) -> Result<Vec<SeqRow>> {
+    let a = gen::stencil27(6);
+    let at = a.clone();
+    let flops = spgemm_flops(&a, &at)?;
+    let c = crate::sparse::spgemm_structure(&a, &at)?;
+    let nnz_total = (2 * a.nnz() + c.nnz()) as u64;
+    let row_sched = row_major_schedule(&a, &at);
+    let model = build_model(&a, &at, ModelKind::FineGrained, false)?;
+    let mut out = Vec::new();
+    for m in [64usize, 256, 1024, 4096] {
+        // Lem. 4.9: partition the fine hypergraph into h blocks with
+        // boundary ≤ O(M); pick h so each block's data footprint ≈ M
+        let h = ((3 * flops as usize) / m).clamp(1, model.h.num_vertices().max(1)).max(1);
+        let h = h.min(64);
+        let cfg = PartitionerConfig { epsilon: 0.5, seed, ..PartitionerConfig::new(h) };
+        let part = partition::partition(&model.h, &cfg)?;
+        let block = block_schedule(&part, h);
+        let rm = simulate_sequential(&a, &at, &row_sched, m)?;
+        let bl = simulate_sequential(&a, &at, &block, m)?;
+        out.push(SeqRow {
+            memory: m,
+            row_major: rm.total(),
+            hypergraph_blocked: bl.total(),
+            hong_kung_bound: bounds::sequential_memory_dependent(flops, m as u64),
+            trivial_bound: bounds::sequential_trivial(nnz_total),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Miniature end-to-end check of the Fig. 7 qualitative claims at a
+    /// small grid: (1) for A·P the row-wise model is within ~2x of
+    /// fine-grained; (2) for PᵀAP outer-product beats row-wise.
+    #[test]
+    fn fig7_qualitative_shape_small() {
+        let (ap, ptap) = workloads::amg_model_problem(6).unwrap();
+        let p = 8;
+        let models = [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::ColWise];
+        let mut cost = std::collections::HashMap::new();
+        for kind in models {
+            let r = measure_model("amg", "ap", &ap.a, &ap.b, kind, p, 0.03, 3).unwrap();
+            cost.insert((0, kind.name()), r.comm_max.max(1));
+            let r = measure_model("amg", "ptap", &ptap.a, &ptap.b, kind, p, 0.03, 3).unwrap();
+            cost.insert((1, kind.name()), r.comm_max.max(1));
+        }
+        // A·P: row-wise within 3x of fine-grained; column-wise much worse
+        let fine = cost[&(0, "fine-grained")] as f64;
+        let row = cost[&(0, "row-wise")] as f64;
+        let col = cost[&(0, "column-wise")] as f64;
+        assert!(row <= 3.0 * fine, "row {row} vs fine {fine}");
+        assert!(col > 1.5 * row, "col {col} vs row {row}");
+        // PᵀAP: outer-product beats row-wise decisively
+        let outer = cost[&(1, "outer-product")] as f64;
+        let row2 = cost[&(1, "row-wise")] as f64;
+        assert!(outer * 1.5 < row2, "outer {outer} vs row {row2}");
+    }
+
+    #[test]
+    fn bounds_comparison_shows_looseness() {
+        let rows = bounds_comparison(5).unwrap();
+        let diag = rows.iter().find(|r| r.instance.starts_with("diag")).unwrap();
+        // eq. (1) vanishes on the diagonal instance...
+        assert_eq!(diag.eq1_memory_dependent, 0.0);
+        assert_eq!(diag.eq1_memory_independent, 0.0);
+        // ...and so does the hypergraph cost (embarrassingly parallel) —
+        // but the trivial per-processor data bound stays positive
+        assert_eq!(diag.hypergraph_comm, 0);
+        assert!(diag.trivial > 0.0);
+        let er = rows.iter().find(|r| r.instance.starts_with("er")).unwrap();
+        // on ER the hypergraph cost is positive and exceeds eq. (1)'s
+        // memory-independent prediction (eq. (1) is loose, Sec. 4.1)
+        assert!(er.hypergraph_comm > 0);
+    }
+
+    #[test]
+    fn sequential_blocked_beats_row_major_at_small_memory() {
+        let rows = sequential_experiment(5).unwrap();
+        let small = &rows[0];
+        assert!(
+            small.hypergraph_blocked < small.row_major,
+            "blocked {} vs row-major {}",
+            small.hypergraph_blocked,
+            small.row_major
+        );
+        // both respect the trivial bound
+        assert!(small.row_major as f64 >= small.trivial_bound * 0.99);
+        // costs decrease with memory
+        assert!(rows.last().unwrap().row_major <= rows[0].row_major);
+    }
+
+    #[test]
+    fn table2_smoke() {
+        let rows = table2(1, 5).unwrap();
+        // 4 AMG + 5 LP + 7 MCL
+        assert_eq!(rows.len(), 16);
+        for (name, s) in &rows {
+            assert!(s.flops > 0, "{name} has no work");
+            assert!(s.mults_per_output() >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Experiment drivers that regenerate every table and figure of the
+//! paper's evaluation (Sec. 6). See DESIGN.md §Experiment-index for the
+//! mapping and EXPERIMENTS.md for recorded paper-vs-measured results.
+
+pub mod figures;
+pub mod workloads;
+
+use crate::cost;
+use crate::hypergraph::models::{build_model, ModelKind};
+use crate::partition::{self, PartitionerConfig};
+use crate::sparse::Csr;
+use crate::util::Timer;
+use crate::Result;
+
+/// One measured point: a (workload, SpGEMM, model, p) cell of a figure.
+#[derive(Debug, Clone)]
+pub struct ExperimentRow {
+    pub app: String,
+    pub instance: String,
+    pub model: String,
+    pub p: usize,
+    /// `max_i |Q_i|` — the paper's plotted metric.
+    pub comm_max: u64,
+    /// Total connectivity-(λ−1) volume.
+    pub volume: u64,
+    pub comp_imbalance: f64,
+    pub partition_ms: f64,
+    /// Hypergraph size (vertices) — partitioning-cost context.
+    pub vertices: usize,
+}
+
+impl ExperimentRow {
+    pub fn header() -> String {
+        format!(
+            "{:<10} {:<22} {:<14} {:>6} {:>12} {:>12} {:>8} {:>10} {:>10}",
+            "app", "instance", "model", "p", "comm_max", "volume", "imbal", "part_ms", "vertices"
+        )
+    }
+}
+
+impl std::fmt::Display for ExperimentRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<10} {:<22} {:<14} {:>6} {:>12} {:>12} {:>8.3} {:>10.1} {:>10}",
+            self.app,
+            self.instance,
+            self.model,
+            self.p,
+            self.comm_max,
+            self.volume,
+            self.comp_imbalance,
+            self.partition_ms,
+            self.vertices
+        )
+    }
+}
+
+/// Partition one model of one SpGEMM instance for one processor count.
+pub fn measure_model(
+    app: &str,
+    instance: &str,
+    a: &Csr,
+    b: &Csr,
+    kind: ModelKind,
+    p: usize,
+    epsilon: f64,
+    seed: u64,
+) -> Result<ExperimentRow> {
+    let model = build_model(a, b, kind, false)?;
+    let t = Timer::start();
+    let cfg = PartitionerConfig { epsilon, seed, ..PartitionerConfig::new(p) };
+    let part = partition::partition(&model.h, &cfg)?;
+    let partition_ms = t.elapsed_ms();
+    let m = cost::evaluate(&model.h, &part, p)?;
+    Ok(ExperimentRow {
+        app: app.to_string(),
+        instance: instance.to_string(),
+        model: kind.name().to_string(),
+        p,
+        comm_max: m.comm_max,
+        volume: m.connectivity_volume,
+        comp_imbalance: m.comp_imbalance(),
+        partition_ms,
+        vertices: model.h.num_vertices(),
+    })
+}
+
+/// Evaluate a *given* partition of a model (geometric baselines).
+pub fn measure_given_partition(
+    app: &str,
+    instance: &str,
+    a: &Csr,
+    b: &Csr,
+    kind: ModelKind,
+    label: &str,
+    part: &[u32],
+    p: usize,
+) -> Result<ExperimentRow> {
+    let model = build_model(a, b, kind, false)?;
+    let m = cost::evaluate(&model.h, part, p)?;
+    Ok(ExperimentRow {
+        app: app.to_string(),
+        instance: instance.to_string(),
+        model: label.to_string(),
+        p,
+        comm_max: m.comm_max,
+        volume: m.connectivity_volume,
+        comp_imbalance: m.comp_imbalance(),
+        partition_ms: 0.0,
+        vertices: model.h.num_vertices(),
+    })
+}
+
+/// Pretty-print a block of rows with a title.
+pub fn print_rows(title: &str, rows: &[ExperimentRow]) {
+    println!("\n=== {title} ===");
+    println!("{}", ExperimentRow::header());
+    for r in rows {
+        println!("{r}");
+    }
+}
+
+/// Write rows as CSV (for downstream plotting).
+pub fn write_csv(path: &std::path::Path, rows: &[ExperimentRow]) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "app,instance,model,p,comm_max,volume,comp_imbalance,partition_ms,vertices")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{},{},{},{},{},{},{}",
+            r.app,
+            r.instance,
+            r.model,
+            r.p,
+            r.comm_max,
+            r.volume,
+            r.comp_imbalance,
+            r.partition_ms,
+            r.vertices
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Rng;
+
+    #[test]
+    fn measure_model_produces_sane_row() {
+        let mut rng = Rng::new(1);
+        let a = gen::erdos_renyi(40, 40, 4.0, &mut rng).unwrap();
+        let b = gen::erdos_renyi(40, 40, 4.0, &mut rng).unwrap();
+        let row =
+            measure_model("test", "er", &a, &b, ModelKind::RowWise, 4, 0.1, 7).unwrap();
+        assert_eq!(row.p, 4);
+        assert!(row.comp_imbalance >= 1.0);
+        assert!(row.vertices > 0);
+        assert!(row.volume >= row.comm_max);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let row = ExperimentRow {
+            app: "a".into(),
+            instance: "i".into(),
+            model: "m".into(),
+            p: 2,
+            comm_max: 10,
+            volume: 20,
+            comp_imbalance: 1.01,
+            partition_ms: 5.0,
+            vertices: 100,
+        };
+        let dir = std::env::temp_dir().join("spgemm_hp_csv");
+        let path = dir.join("rows.csv");
+        write_csv(&path, &[row]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("a,i,m,2,10,20"));
+    }
+}

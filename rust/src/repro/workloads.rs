@@ -1,0 +1,177 @@
+//! The workload catalog: scaled analogues of every SpGEMM in Tab. II.
+//!
+//! Scaling is controlled by a single `scale ∈ {1, 2, 3}` knob (container
+//! sizes; the paper's exact dimensions need a 1 TB node — see DESIGN.md
+//! §Substitutions). Structure parameters (densities, coarsening ratios,
+//! skew) match the paper; dimensions shrink proportionally.
+
+use crate::gen::{self, LpParams, RmatParams};
+use crate::sparse::{ops, Csr};
+use crate::util::Rng;
+use crate::Result;
+
+/// A named SpGEMM instance `C = A · B`.
+pub struct Instance {
+    pub name: String,
+    pub a: Csr,
+    pub b: Csr,
+}
+
+/// AMG weak-scaling ladder: `(grid N, p)` pairs with N³/p ≈ 729
+/// (the paper's 18³ on 8 processors).
+pub fn amg_ladder(scale: u32) -> Vec<(usize, usize)> {
+    let mut ladder = vec![(18, 8)];
+    if scale >= 2 {
+        ladder.push((27, 27));
+    }
+    if scale >= 3 {
+        ladder.push((36, 64));
+    }
+    ladder
+}
+
+/// The model problem's two SpGEMMs at grid size `n`:
+/// `(A·P instance, PᵀAP's (Pᵀ, AP) instance)`.
+pub fn amg_model_problem(n: usize) -> Result<(Instance, Instance)> {
+    let a = gen::stencil27(n);
+    let p = gen::smoothed_aggregation_prolongator(&a, n)?;
+    let ap = crate::sparse::spgemm(&a, &p)?;
+    let pt = p.transpose();
+    Ok((
+        Instance { name: format!("27-AP-n{n}"), a, b: p },
+        Instance { name: format!("27-PTAP-n{n}"), a: pt, b: ap },
+    ))
+}
+
+/// The SA-ρAMGe analogue (aggressive coarsening + wider smoother).
+pub fn amg_sa_problem(n: usize) -> Result<(Instance, Instance)> {
+    let a = gen::stencil27(n);
+    let p = gen::sa_rho_amge_prolongator(&a, n, 3, 2)?;
+    let ap = crate::sparse::spgemm(&a, &p)?;
+    let pt = p.transpose();
+    Ok((
+        Instance { name: format!("SA-AP-n{n}"), a, b: p },
+        Instance { name: format!("SA-PTAP-n{n}"), a: pt, b: ap },
+    ))
+}
+
+/// The five LP instances (Sec. 6.2): `C = A·D²·Aᵀ` expressed as
+/// `A · (D²Aᵀ)` so `S_B = S_Aᵀ`.
+pub fn lp_instances(scale: u32, seed: u64) -> Result<Vec<Instance>> {
+    let mut rng = Rng::new(seed);
+    let s = scale as usize;
+    // (name, params) shaped after Tab. II's dimension ratios
+    let specs: Vec<(&str, LpParams)> = vec![
+        ("fome21", LpParams::pds_like(678 * s, 2164 * s)),
+        ("pds80", LpParams::pds_like(1292 * s, 4346 * s)),
+        ("pds100", LpParams::pds_like(1562 * s, 5146 * s)),
+        ("cont11l", LpParams::cont_like(2937 * s, 3923 * s)),
+        ("sgpf5y6", LpParams::sgpf_like(1230 * s, 1563 * s)),
+    ];
+    let mut out = Vec::new();
+    for (name, params) in specs {
+        let a = gen::lp_constraints(&params, &mut rng)?;
+        let d2 = gen::lp::ipm_scaling(a.ncols, &mut rng);
+        let b = ops::scale_rows(&a.transpose(), &d2)?;
+        out.push(Instance { name: name.to_string(), a, b });
+    }
+    Ok(out)
+}
+
+/// The seven MCL instances (Sec. 6.3): `C = A²` for symmetric A.
+pub fn mcl_instances(scale: u32, seed: u64) -> Result<Vec<Instance>> {
+    let mut rng = Rng::new(seed);
+    let up = scale.saturating_sub(1); // bump graph sizes with scale
+    let mut specs: Vec<(&str, Csr)> = Vec::new();
+    // protein-protein interaction graphs: mild skew, ~5.8k nodes (paper)
+    specs.push(("biogrid11", gen::rmat(&RmatParams::protein(9 + up, 10.0), &mut rng)?));
+    specs.push(("dip", gen::rmat(&RmatParams::protein(9 + up, 4.4), &mut rng)?));
+    specs.push(("wiphi", gen::rmat(&RmatParams::protein(9 + up, 4.2), &mut rng)?));
+    // social networks: strong skew
+    specs.push(("dblp", gen::rmat(&RmatParams::social(11 + up, 2.5), &mut rng)?));
+    specs.push(("enron", gen::rmat(&RmatParams::social(10 + up, 5.0), &mut rng)?));
+    specs.push(("facebook", gen::rmat(&RmatParams::social(9 + up, 21.0), &mut rng)?));
+    // road network: regular, near-planar
+    let side = 40 << up.min(2);
+    specs.push(("roadnetca", gen::road_network(side, side, 0.3, &mut rng)?));
+    Ok(specs
+        .into_iter()
+        .map(|(name, a)| Instance { name: name.to_string(), b: a.clone(), a })
+        .collect())
+}
+
+/// Strong-scaling processor counts for the LP experiments (paper: 4–128).
+pub fn lp_pvalues(scale: u32) -> Vec<usize> {
+    match scale {
+        1 => vec![4, 16],
+        2 => vec![4, 16, 64],
+        _ => vec![4, 16, 64, 128],
+    }
+}
+
+/// Strong-scaling processor counts for the MCL experiments (paper: up to 4096).
+pub fn mcl_pvalues(scale: u32) -> Vec<usize> {
+    match scale {
+        1 => vec![4, 16],
+        2 => vec![4, 16, 64],
+        _ => vec![4, 16, 64, 256],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SpgemmStats;
+
+    #[test]
+    fn amg_instances_have_paper_shape() {
+        let (ap, ptap) = amg_model_problem(9).unwrap();
+        // A·P: I = K = n³, J = (n/3)³
+        assert_eq!(ap.a.nrows, 729);
+        assert_eq!(ap.b.ncols, 27);
+        // PᵀAP: I = J = coarse, K = fine
+        assert_eq!(ptap.a.nrows, 27);
+        assert_eq!(ptap.b.ncols, 27);
+        assert_eq!(ptap.a.ncols, 729);
+        // fold ratio of PTAP exceeds AP's (Tab. II: 49.0 vs 9.9)
+        let s1 = SpgemmStats::compute(&ap.a, &ap.b).unwrap();
+        let s2 = SpgemmStats::compute(&ptap.a, &ptap.b).unwrap();
+        assert!(s2.mults_per_output() > s1.mults_per_output());
+    }
+
+    #[test]
+    fn lp_instances_are_normal_equations() {
+        let inst = lp_instances(1, 5).unwrap();
+        assert_eq!(inst.len(), 5);
+        for i in &inst {
+            assert_eq!(i.a.nrows, i.b.ncols); // C is square
+            assert_eq!(i.a.ncols, i.b.nrows);
+            // S_B = S_Aᵀ structurally
+            assert_eq!(i.b.nnz(), i.a.nnz());
+        }
+    }
+
+    #[test]
+    fn mcl_instances_are_square_symmetric() {
+        let inst = mcl_instances(1, 5).unwrap();
+        assert_eq!(inst.len(), 7);
+        for i in &inst {
+            assert_eq!(i.a.nrows, i.a.ncols);
+            assert!(i.a.is_symmetric(0.0), "{} not symmetric", i.name);
+        }
+        // facebook analogue is denser per row than dblp analogue
+        let fb = inst.iter().find(|i| i.name == "facebook").unwrap();
+        let dblp = inst.iter().find(|i| i.name == "dblp").unwrap();
+        assert!(
+            fb.a.nnz() as f64 / fb.a.nrows as f64 > dblp.a.nnz() as f64 / dblp.a.nrows as f64
+        );
+    }
+
+    #[test]
+    fn ladders_grow_with_scale() {
+        assert_eq!(amg_ladder(1).len(), 1);
+        assert_eq!(amg_ladder(3).len(), 3);
+        assert!(lp_pvalues(3).len() > lp_pvalues(1).len());
+        assert!(mcl_pvalues(2).contains(&64));
+    }
+}

@@ -1,0 +1,330 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the rust hot path.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, producing
+//! `artifacts/*.hlo.txt` plus `artifacts/manifest.txt`; this module
+//! parses the manifest, compiles each variant on the PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile`), and exposes a batched tile-matmul entry point.
+//!
+//! Python never runs at execution time. When artifacts are absent (unit
+//! tests, cold checkouts) [`Engine::load_or_reference`] falls back to a
+//! pure-rust reference backend with identical semantics, so every caller
+//! works in both modes; integration tests assert the PJRT path when
+//! artifacts exist.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact kinds emitted by `aot.py`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VariantKind {
+    /// `tile_products`: `[B,T,T] × [B,T,T] → [B,T,T]`.
+    Products,
+    /// `fused_products`: adds the segment-sum fold to `[S,T,T]`.
+    Fused,
+}
+
+/// One line of `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub kind: VariantKind,
+    pub name: String,
+    pub tile: usize,
+    pub batch: usize,
+    pub num_out: usize,
+    pub file: PathBuf,
+}
+
+/// Parse `manifest.txt`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<Variant>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+    let mut variants = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            return Err(Error::Artifact(format!("bad manifest line: {line}")));
+        }
+        let kind = match f[0] {
+            "products" => VariantKind::Products,
+            "fused" => VariantKind::Fused,
+            other => return Err(Error::Artifact(format!("unknown kind {other}"))),
+        };
+        let parse = |s: &str| -> Result<usize> {
+            s.parse().map_err(|_| Error::Artifact(format!("bad number in line: {line}")))
+        };
+        variants.push(Variant {
+            kind,
+            name: f[1].to_string(),
+            tile: parse(f[2])?,
+            batch: parse(f[3])?,
+            num_out: parse(f[4])?,
+            file: dir.join(f[5]),
+        });
+    }
+    if variants.is_empty() {
+        return Err(Error::Artifact("manifest has no variants".into()));
+    }
+    Ok(variants)
+}
+
+enum Backend {
+    /// PJRT CPU client with compiled executables per variant name.
+    Pjrt {
+        #[allow(dead_code)] // owns the executables' device
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    },
+    /// Pure-rust reference (identical numerics; used when artifacts are
+    /// missing and as the ground truth in integration tests).
+    Reference,
+}
+
+/// The tile-compute engine. NOT `Send`: PJRT handles hold raw pointers.
+/// The coordinator owns one engine per service thread (created inside the
+/// thread), which is also the deployment-correct topology.
+pub struct Engine {
+    backend: Backend,
+    variants: Vec<Variant>,
+    /// Executions performed (for batching-efficiency metrics).
+    pub dispatches: u64,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref();
+        let variants = parse_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut exes = HashMap::new();
+        for v in &variants {
+            let proto = xla::HloModuleProto::from_text_file(
+                v.file
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", v.file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile {}: {e}", v.name)))?;
+            exes.insert(v.name.clone(), exe);
+        }
+        Ok(Engine { backend: Backend::Pjrt { client, exes }, variants, dispatches: 0 })
+    }
+
+    /// Pure-rust fallback with the same interface.
+    pub fn reference() -> Engine {
+        // a synthetic variant table so batching logic behaves identically
+        let variants = vec![
+            Variant { kind: VariantKind::Products, name: "ref_T8".into(), tile: 8, batch: 64, num_out: 0, file: PathBuf::new() },
+            Variant { kind: VariantKind::Products, name: "ref_T16".into(), tile: 16, batch: 64, num_out: 0, file: PathBuf::new() },
+            Variant { kind: VariantKind::Products, name: "ref_T32".into(), tile: 32, batch: 64, num_out: 0, file: PathBuf::new() },
+        ];
+        Engine { backend: Backend::Reference, variants, dispatches: 0 }
+    }
+
+    /// Try PJRT; fall back to the reference backend if artifacts are
+    /// missing or unloadable.
+    pub fn load_or_reference(dir: impl AsRef<Path>) -> Engine {
+        match Engine::load(dir) {
+            Ok(e) => e,
+            Err(err) => {
+                log::warn!("PJRT artifacts unavailable ({err}); using reference backend");
+                Engine::reference()
+            }
+        }
+    }
+
+    /// True when running through PJRT-compiled artifacts.
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt { .. })
+    }
+
+    /// Tile sizes available for `tile_products`.
+    pub fn product_tiles(&self) -> Vec<usize> {
+        let mut t: Vec<usize> = self
+            .variants
+            .iter()
+            .filter(|v| v.kind == VariantKind::Products)
+            .map(|v| v.tile)
+            .collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+
+    fn pick_products_variant(&self, tile: usize, n: usize) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.kind == VariantKind::Products && v.tile == tile)
+            .filter(|v| v.batch >= n)
+            .min_by_key(|v| v.batch)
+            .or_else(|| {
+                // no variant large enough: take the largest (caller chunks)
+                self.variants
+                    .iter()
+                    .filter(|v| v.kind == VariantKind::Products && v.tile == tile)
+                    .max_by_key(|v| v.batch)
+            })
+            .ok_or_else(|| Error::Artifact(format!("no products variant for tile {tile}")))
+    }
+
+    /// Batched tile products: `out[b] = A[b] · B[b]` for `n` tiles of
+    /// edge `tile`, each stored row-major in `a`/`b` (`n·tile²` floats).
+    /// Batches larger than any compiled variant are chunked; short
+    /// batches are zero-padded.
+    pub fn tile_products(&mut self, tile: usize, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let t2 = tile * tile;
+        if a.len() != n * t2 || b.len() != n * t2 {
+            return Err(Error::dim(format!(
+                "tile_products: expected {}x{} floats, got {}/{}",
+                n,
+                t2,
+                a.len(),
+                b.len()
+            )));
+        }
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        match &self.backend {
+            Backend::Reference => {
+                self.dispatches += 1;
+                let mut out = vec![0f32; n * t2];
+                for bi in 0..n {
+                    let ab = &a[bi * t2..][..t2];
+                    let bb = &b[bi * t2..][..t2];
+                    let ob = &mut out[bi * t2..][..t2];
+                    for i in 0..tile {
+                        for k in 0..tile {
+                            let av = ab[i * tile + k];
+                            if av != 0.0 {
+                                for j in 0..tile {
+                                    ob[i * tile + j] += av * bb[k * tile + j];
+                                }
+                            }
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            Backend::Pjrt { exes, .. } => {
+                let variant = self.pick_products_variant(tile, n)?.clone();
+                let cap = variant.batch;
+                let exe = &exes[&variant.name];
+                let mut out = vec![0f32; n * t2];
+                let mut done = 0usize;
+                let mut dispatches = 0u64;
+                while done < n {
+                    let take = (n - done).min(cap);
+                    // zero-pad to the compiled batch
+                    let mut abuf = vec![0f32; cap * t2];
+                    let mut bbuf = vec![0f32; cap * t2];
+                    abuf[..take * t2].copy_from_slice(&a[done * t2..][..take * t2]);
+                    bbuf[..take * t2].copy_from_slice(&b[done * t2..][..take * t2]);
+                    let la = xla::Literal::vec1(&abuf)
+                        .reshape(&[cap as i64, tile as i64, tile as i64])
+                        .map_err(|e| Error::Runtime(format!("reshape A: {e}")))?;
+                    let lb = xla::Literal::vec1(&bbuf)
+                        .reshape(&[cap as i64, tile as i64, tile as i64])
+                        .map_err(|e| Error::Runtime(format!("reshape B: {e}")))?;
+                    let result = exe
+                        .execute::<xla::Literal>(&[la, lb])
+                        .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+                    let tuple = result
+                        .to_tuple1()
+                        .map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+                    let vals: Vec<f32> =
+                        tuple.to_vec().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+                    out[done * t2..][..take * t2].copy_from_slice(&vals[..take * t2]);
+                    done += take;
+                    dispatches += 1;
+                }
+                self.dispatches += dispatches;
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("spgemm_hp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nproducts tile_matmul_T8_B64 8 64 0 tile_matmul_T8_B64.hlo.txt\nfused fused_T8_B64_S32 8 64 32 f.hlo.txt\n",
+        )
+        .unwrap();
+        let v = parse_manifest(&dir).unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].kind, VariantKind::Products);
+        assert_eq!(v[0].tile, 8);
+        assert_eq!(v[1].kind, VariantKind::Fused);
+        assert_eq!(v[1].num_out, 32);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join("spgemm_hp_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "products too few fields\n").unwrap();
+        assert!(parse_manifest(&dir).is_err());
+        std::fs::write(dir.join("manifest.txt"), "").unwrap();
+        assert!(parse_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn reference_backend_tile_products() {
+        let mut e = Engine::reference();
+        assert!(!e.is_pjrt());
+        // 2 tiles of 4x4: identity * M = M
+        let t = 4usize;
+        let mut a = vec![0f32; 2 * 16];
+        for b in 0..2 {
+            for i in 0..t {
+                a[b * 16 + i * t + i] = 1.0;
+            }
+        }
+        let mut bm = vec![0f32; 2 * 16];
+        for (i, v) in bm.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let out = e.tile_products(4, 2, &a, &bm).unwrap();
+        assert_eq!(out, bm);
+        assert_eq!(e.dispatches, 1);
+    }
+
+    #[test]
+    fn reference_rejects_bad_lengths() {
+        let mut e = Engine::reference();
+        assert!(e.tile_products(4, 2, &[0.0; 10], &[0.0; 32]).is_err());
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let mut e = Engine::reference();
+        assert!(e.tile_products(8, 0, &[], &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn product_tiles_listing() {
+        let e = Engine::reference();
+        assert_eq!(e.product_tiles(), vec![8, 16, 32]);
+    }
+}

@@ -1,0 +1,18 @@
+//! SpGEMM simulators.
+//!
+//! * [`parallel`] — executes a partitioned SpGEMM on `p` simulated
+//!   processors with the expand/fold communication pattern of Lem. 4.3
+//!   (binary-tree broadcasts and reductions), counting per-processor and
+//!   critical-path words and *numerically validating* the result against
+//!   the reference [`crate::sparse::spgemm`]. The measured costs bracket
+//!   the hypergraph bound of Lem. 4.2: `|Q_i| ≤ send_i+recv_i ≤ 3·|Q_i|`.
+//! * [`sequential`] — the two-level-memory model of Sec. 4.2: executes a
+//!   multiplication schedule against an LRU fast memory of `M` words,
+//!   counting loads and stores (Lem. 4.9's blocked algorithm is one such
+//!   schedule).
+
+pub mod parallel;
+pub mod sequential;
+
+pub use parallel::{lower, simulate, Algorithm, SimReport};
+pub use sequential::{simulate_sequential, SeqReport};

@@ -1,0 +1,395 @@
+//! Distributed-memory SpGEMM simulator (Sec. 4.1, Lem. 4.3).
+
+use crate::hypergraph::models::{Mat, Model, MultEnum};
+use crate::sparse::{spgemm_structure, Csr};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// A concrete parallel SpGEMM algorithm: who multiplies what and who owns
+/// each nonzero. (A partition of the model's vertices lowers to this; see
+/// [`lower`].)
+#[derive(Debug, Clone)]
+pub struct Algorithm {
+    pub p: usize,
+    /// Processor of each multiplication, indexed by canonical mult index.
+    pub mult_part: Vec<u32>,
+    /// Owner of each A nonzero (by CSR position).
+    pub owner_a: Vec<u32>,
+    /// Owner of each B nonzero.
+    pub owner_b: Vec<u32>,
+    /// Owner of each C nonzero (C in canonical structure order).
+    pub owner_c: Vec<u32>,
+}
+
+/// Lower a model-vertex partition to a concrete algorithm.
+///
+/// When the model carries `V^nz` vertices their parts give the owners;
+/// otherwise each nonzero is assigned to the part of its first user
+/// (the "arbitrary intersecting part" rule of Lem. 4.8, which adds no
+/// communication).
+pub fn lower(model: &Model, part: &[u32], a: &Csr, b: &Csr, p: usize) -> Result<Algorithm> {
+    if part.len() != model.h.num_vertices() {
+        return Err(Error::Partition("partition length mismatch".into()));
+    }
+    let flops = MultEnum::new(a, b).count() as usize;
+    let mut mult_part = vec![0u32; flops];
+    let (nnz_a, nnz_b, nnz_c) = model.nnz;
+    let mut owner_a = vec![u32::MAX; nnz_a];
+    let mut owner_b = vec![u32::MAX; nnz_b];
+    let mut owner_c = vec![u32::MAX; nnz_c];
+    MultEnum::new(a, b).for_each(|m| {
+        let q = part[model.mult_vertex(&m) as usize];
+        mult_part[m.idx as usize] = q;
+        if owner_a[m.pa as usize] == u32::MAX {
+            owner_a[m.pa as usize] = q;
+        }
+        if owner_b[m.pb as usize] == u32::MAX {
+            owner_b[m.pb as usize] = q;
+        }
+        let pc = model.c_position(m.i as usize, m.j).expect("mult projects into S_C");
+        if owner_c[pc] == u32::MAX {
+            owner_c[pc] = q;
+        }
+    });
+    // nz vertices present: their parts override the first-user rule
+    if model.with_nz {
+        for pos in 0..nnz_a {
+            owner_a[pos] = part[model.nz_vertex(Mat::A, pos).unwrap() as usize];
+        }
+        for pos in 0..nnz_b {
+            owner_b[pos] = part[model.nz_vertex(Mat::B, pos).unwrap() as usize];
+        }
+        for pos in 0..nnz_c {
+            owner_c[pos] = part[model.nz_vertex(Mat::C, pos).unwrap() as usize];
+        }
+    }
+    // unused nonzeros (possible only in masked settings): owner = 0
+    for o in owner_a.iter_mut().chain(&mut owner_b).chain(&mut owner_c) {
+        if *o == u32::MAX {
+            *o = 0;
+        }
+    }
+    Ok(Algorithm { p, mult_part, owner_a, owner_b, owner_c })
+}
+
+/// Per-processor and aggregate communication measurements.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub p: usize,
+    pub sends: Vec<u64>,
+    pub recvs: Vec<u64>,
+    /// Expand-phase words (A and B entries multicast).
+    pub expand_volume: u64,
+    /// Fold-phase words (C partial sums reduced).
+    pub fold_volume: u64,
+    /// Binary-tree rounds executed (`O(log p)` factor of Lem. 4.3).
+    pub rounds: u64,
+    /// Local multiplications per processor (computational balance check).
+    pub local_mults: Vec<u64>,
+}
+
+impl SimReport {
+    /// `max_i (send_i + recv_i)` — the simulated critical-path bandwidth
+    /// cost, which Lems. 4.2/4.3 bracket by `[max|Q_i|, 3·max|Q_i|]`.
+    pub fn max_send_recv(&self) -> u64 {
+        (0..self.p).map(|i| self.sends[i] + self.recvs[i]).max().unwrap_or(0)
+    }
+
+    pub fn total_volume(&self) -> u64 {
+        self.expand_volume + self.fold_volume
+    }
+}
+
+/// Account a binary-tree multicast/reduction over `participants`
+/// (`participants[0]` is the root). For a broadcast, data flows root →
+/// leaves: node `t` sends to `2t+1`, `2t+2`; every non-root receives one
+/// word. For a reduction the flow reverses (sends/recvs swap).
+fn tree_traffic(
+    participants: &[u32],
+    broadcast: bool,
+    sends: &mut [u64],
+    recvs: &mut [u64],
+) -> u64 {
+    let s = participants.len();
+    if s <= 1 {
+        return 0;
+    }
+    for t in 0..s {
+        let me = participants[t] as usize;
+        let kids = [2 * t + 1, 2 * t + 2];
+        let n_kids = kids.iter().filter(|&&c| c < s).count() as u64;
+        if broadcast {
+            sends[me] += n_kids;
+            if t > 0 {
+                recvs[me] += 1;
+            }
+        } else {
+            recvs[me] += n_kids;
+            if t > 0 {
+                sends[me] += 1;
+            }
+        }
+    }
+    // tree depth in rounds
+    (usize::BITS - s.leading_zeros()) as u64
+}
+
+/// Execute the algorithm: expand A and B, multiply locally, fold C.
+/// Returns the communication report and the numerically computed C
+/// (already validated to share the reference structure).
+pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
+    let p = alg.p;
+    let c_struct = spgemm_structure(a, b)?;
+    if alg.owner_c.len() != c_struct.nnz() {
+        return Err(Error::Partition("owner_c length != nnz(C)".into()));
+    }
+    let mut sends = vec![0u64; p];
+    let mut recvs = vec![0u64; p];
+    let mut rounds = 0u64;
+    let mut expand_volume = 0u64;
+    let mut fold_volume = 0u64;
+
+    // --- consumers of each input nonzero --------------------------------
+    // consumers[pos] = sorted distinct parts whose mults read the nonzero
+    let mut need_a: Vec<Vec<u32>> = vec![Vec::new(); a.nnz()];
+    let mut need_b: Vec<Vec<u32>> = vec![Vec::new(); b.nnz()];
+    // producers of each output nonzero
+    let mut producers_c: Vec<Vec<u32>> = vec![Vec::new(); c_struct.nnz()];
+    let mut local_mults = vec![0u64; p];
+    {
+        let me = MultEnum::new(a, b);
+        // c position lookup per (i, j)
+        me.for_each(|m| {
+            let q = alg.mult_part[m.idx as usize];
+            local_mults[q as usize] += 1;
+            push_unique(&mut need_a[m.pa as usize], q);
+            push_unique(&mut need_b[m.pb as usize], q);
+            let pc = c_struct.rowptr[m.i as usize]
+                + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("S_C") ;
+            push_unique(&mut producers_c[pc], q);
+        });
+    }
+
+    // --- expand phase -----------------------------------------------------
+    let mut max_depth = 0u64;
+    for (pos, need) in need_a.iter().enumerate() {
+        let owner = alg.owner_a[pos];
+        let participants = tree_participants(owner, need);
+        if participants.len() > 1 {
+            expand_volume += participants.len() as u64 - 1;
+            let d = tree_traffic(&participants, true, &mut sends, &mut recvs);
+            max_depth = max_depth.max(d);
+        }
+    }
+    for (pos, need) in need_b.iter().enumerate() {
+        let owner = alg.owner_b[pos];
+        let participants = tree_participants(owner, need);
+        if participants.len() > 1 {
+            expand_volume += participants.len() as u64 - 1;
+            let d = tree_traffic(&participants, true, &mut sends, &mut recvs);
+            max_depth = max_depth.max(d);
+        }
+    }
+    rounds += max_depth;
+
+    // --- local multiply ---------------------------------------------------
+    // per-processor partial sums keyed by C position
+    let mut partial: Vec<HashMap<u32, f64>> = vec![HashMap::new(); p];
+    MultEnum::new(a, b).for_each(|m| {
+        let q = alg.mult_part[m.idx as usize] as usize;
+        let pc = c_struct.rowptr[m.i as usize]
+            + c_struct.row_cols(m.i as usize).binary_search(&m.j).unwrap();
+        let v = a.values[m.pa as usize] * b.values[m.pb as usize];
+        *partial[q].entry(pc as u32).or_insert(0.0) += v;
+    });
+
+    // --- fold phase ---------------------------------------------------------
+    let mut max_depth = 0u64;
+    let mut c_values = vec![0f64; c_struct.nnz()];
+    for (pc, prod) in producers_c.iter().enumerate() {
+        let owner = alg.owner_c[pc];
+        let participants = tree_participants(owner, prod);
+        if participants.len() > 1 {
+            fold_volume += participants.len() as u64 - 1;
+            let d = tree_traffic(&participants, false, &mut sends, &mut recvs);
+            max_depth = max_depth.max(d);
+        }
+        // numeric reduction
+        let mut sum = 0.0;
+        for &q in prod {
+            if let Some(v) = partial[q as usize].get(&(pc as u32)) {
+                sum += v;
+            }
+        }
+        c_values[pc] = sum;
+    }
+    rounds += max_depth;
+
+    let c = Csr {
+        nrows: c_struct.nrows,
+        ncols: c_struct.ncols,
+        rowptr: c_struct.rowptr.clone(),
+        colind: c_struct.colind.clone(),
+        values: c_values,
+    };
+    Ok((
+        SimReport { p, sends, recvs, expand_volume, fold_volume, rounds, local_mults },
+        c,
+    ))
+}
+
+#[inline]
+fn push_unique(v: &mut Vec<u32>, q: u32) {
+    if !v.contains(&q) {
+        v.push(q);
+    }
+}
+
+/// Owner first, then the remaining consumers.
+fn tree_participants(owner: u32, need: &[u32]) -> Vec<u32> {
+    let mut parts = Vec::with_capacity(need.len() + 1);
+    parts.push(owner);
+    for &q in need {
+        if q != owner {
+            parts.push(q);
+        }
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost;
+    use crate::hypergraph::models::{build_model, ModelKind};
+    use crate::partition::{partition, PartitionerConfig};
+    use crate::sparse::{spgemm, Coo};
+    use crate::util::Rng;
+
+    fn random_instance(rng: &mut Rng, m: usize, k: usize, n: usize, d: f64) -> (Csr, Csr) {
+        let mut ca = Coo::new(m, k);
+        for i in 0..m {
+            ca.push(i, rng.below(k), rng.range(0.5, 1.5));
+            for j in 0..k {
+                if rng.chance(d) {
+                    ca.push(i, j, rng.range(-1.0, 1.0));
+                }
+            }
+        }
+        for j in 0..k {
+            ca.push(rng.below(m), j, rng.range(0.5, 1.5));
+        }
+        let mut cb = Coo::new(k, n);
+        for i in 0..k {
+            cb.push(i, rng.below(n), rng.range(0.5, 1.5));
+            for j in 0..n {
+                if rng.chance(d) {
+                    cb.push(i, j, rng.range(-1.0, 1.0));
+                }
+            }
+        }
+        for j in 0..n {
+            cb.push(rng.below(k), j, rng.range(0.5, 1.5));
+        }
+        (Csr::from_coo(&ca), Csr::from_coo(&cb))
+    }
+
+    #[test]
+    fn single_processor_no_communication() {
+        let mut rng = Rng::new(1);
+        let (a, b) = random_instance(&mut rng, 10, 8, 9, 0.2);
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let part = vec![0u32; model.h.num_vertices()];
+        let alg = lower(&model, &part, &a, &b, 1).unwrap();
+        let (rep, c) = simulate(&a, &b, &alg).unwrap();
+        assert_eq!(rep.total_volume(), 0);
+        assert_eq!(rep.max_send_recv(), 0);
+        let c_ref = spgemm(&a, &b).unwrap();
+        assert!(c.approx_eq(&c_ref, 1e-12));
+    }
+
+    #[test]
+    fn numeric_result_matches_reference_for_all_models() {
+        let mut rng = Rng::new(7);
+        let (a, b) = random_instance(&mut rng, 14, 12, 10, 0.25);
+        let c_ref = spgemm(&a, &b).unwrap();
+        for kind in ModelKind::ALL {
+            let model = build_model(&a, &b, kind, false).unwrap();
+            let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(4) };
+            let part = partition(&model.h, &cfg).unwrap();
+            let alg = lower(&model, &part, &a, &b, 4).unwrap();
+            let (_, c) = simulate(&a, &b, &alg).unwrap();
+            assert!(c.approx_eq(&c_ref, 1e-10), "{kind:?} numeric mismatch");
+        }
+    }
+
+    #[test]
+    fn sim_cost_brackets_hypergraph_bound() {
+        // Lem. 4.2 / Lem. 4.3: per-processor words ∈ [|Q_i|, 3·|Q_i|].
+        let mut rng = Rng::new(3);
+        let (a, b) = random_instance(&mut rng, 20, 16, 18, 0.2);
+        for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoC] {
+            let model = build_model(&a, &b, kind, false).unwrap();
+            let p = 4;
+            let cfg = PartitionerConfig { epsilon: 0.25, seed: 11, ..PartitionerConfig::new(p) };
+            let part = partition(&model.h, &cfg).unwrap();
+            let bound = cost::evaluate(&model.h, &part, p).unwrap();
+            let alg = lower(&model, &part, &a, &b, p).unwrap();
+            let (rep, _) = simulate(&a, &b, &alg).unwrap();
+            for i in 0..p {
+                let words = rep.sends[i] + rep.recvs[i];
+                let q = bound.boundary_cost[i];
+                assert!(words >= q, "{kind:?} proc {i}: sim {words} < bound {q}");
+                assert!(words <= 3 * q, "{kind:?} proc {i}: sim {words} > 3x bound {q}");
+            }
+            assert!(rep.max_send_recv() >= bound.comm_max);
+            assert!(rep.max_send_recv() <= 3 * bound.comm_max.max(1));
+        }
+    }
+
+    #[test]
+    fn local_mults_match_partition_weights() {
+        let mut rng = Rng::new(5);
+        let (a, b) = random_instance(&mut rng, 12, 10, 8, 0.3);
+        let model = build_model(&a, &b, ModelKind::MonoA, false).unwrap();
+        let p = 3;
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let m = cost::evaluate(&model.h, &part, p).unwrap();
+        let alg = lower(&model, &part, &a, &b, p).unwrap();
+        let (rep, _) = simulate(&a, &b, &alg).unwrap();
+        assert_eq!(rep.local_mults, m.comp_weight);
+    }
+
+    #[test]
+    fn rounds_bounded_by_log_p() {
+        let mut rng = Rng::new(9);
+        let (a, b) = random_instance(&mut rng, 16, 16, 16, 0.25);
+        let model = build_model(&a, &b, ModelKind::FineGrained, false).unwrap();
+        let p = 8;
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = lower(&model, &part, &a, &b, p).unwrap();
+        let (rep, _) = simulate(&a, &b, &alg).unwrap();
+        // expand depth ≤ ⌈log2(p+1)⌉, fold likewise → rounds ≤ 2(log2 p + 1)
+        assert!(rep.rounds <= 2 * (p.ilog2() as u64 + 1), "rounds={}", rep.rounds);
+    }
+
+    #[test]
+    fn tree_traffic_accounting() {
+        let mut sends = vec![0u64; 4];
+        let mut recvs = vec![0u64; 4];
+        // broadcast from 0 to {1,2,3}
+        let d = tree_traffic(&[0, 1, 2, 3], true, &mut sends, &mut recvs);
+        assert_eq!(recvs, vec![0, 1, 1, 1]); // everyone but root receives once
+        assert_eq!(sends.iter().sum::<u64>(), 3); // one send per received word
+        assert_eq!(sends[0], 2); // root sends to two children
+        assert_eq!(d, 3); // depth of a 4-node binary tree (levels)
+        // reduction mirrors
+        let mut s2 = vec![0u64; 4];
+        let mut r2 = vec![0u64; 4];
+        tree_traffic(&[0, 1, 2, 3], false, &mut s2, &mut r2);
+        assert_eq!(s2, vec![0, 1, 1, 1]);
+        assert_eq!(r2[0], 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Coordinate-format sparse matrix (builder format).
+
+use crate::{Error, Result};
+
+/// A sparse matrix in coordinate (triplet) form. Duplicate entries are
+/// allowed and are summed on conversion to [`super::Csr`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// An empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// With pre-reserved capacity for `cap` entries.
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of stored entries (before duplicate summation).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append one entry. Panics in debug builds on out-of-range indices.
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols, "entry ({i},{j}) out of {}x{}", self.nrows, self.ncols);
+        self.rows.push(i as u32);
+        self.cols.push(j as u32);
+        self.vals.push(v);
+    }
+
+    /// Build from explicit triplets, validating bounds.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> Result<Self> {
+        let mut m = Coo::new(nrows, ncols);
+        for (i, j, v) in triplets {
+            if i >= nrows || j >= ncols {
+                return Err(Error::invalid(format!(
+                    "triplet ({i},{j}) out of bounds for {nrows}x{ncols}"
+                )));
+            }
+            m.push(i, j, v);
+        }
+        Ok(m)
+    }
+
+    /// The identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Coo::with_capacity(n, n, n);
+        for i in 0..n {
+            m.push(i, i, 1.0);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_len() {
+        let mut m = Coo::new(3, 4);
+        assert!(m.is_empty());
+        m.push(0, 0, 1.0);
+        m.push(2, 3, -2.0);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn from_triplets_validates() {
+        assert!(Coo::from_triplets(2, 2, [(0, 0, 1.0), (1, 1, 2.0)]).is_ok());
+        assert!(Coo::from_triplets(2, 2, [(2, 0, 1.0)]).is_err());
+        assert!(Coo::from_triplets(2, 2, [(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn identity_shape() {
+        let i3 = Coo::identity(3);
+        assert_eq!(i3.len(), 3);
+        assert_eq!((i3.nrows, i3.ncols), (3, 3));
+    }
+}

@@ -1,0 +1,353 @@
+//! Compressed sparse row storage — the workhorse format.
+
+use super::Coo;
+use crate::{Error, Result};
+
+/// CSR sparse matrix with `u32` column indices and `f64` values.
+///
+/// Invariants (checked by [`Csr::validate`]):
+/// * `rowptr.len() == nrows + 1`, `rowptr[0] == 0`, nondecreasing;
+/// * `colind.len() == values.len() == rowptr[nrows]`;
+/// * column indices strictly increasing within each row (canonical form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rowptr: Vec<usize>,
+    pub colind: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// An empty (all-zero) matrix.
+    pub fn zero(nrows: usize, ncols: usize) -> Self {
+        Csr { nrows, ncols, rowptr: vec![0; nrows + 1], colind: Vec::new(), values: Vec::new() }
+    }
+
+    /// The identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            rowptr: (0..=n).collect(),
+            colind: (0..n as u32).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        Csr {
+            nrows: n,
+            ncols: n,
+            rowptr: (0..=n).collect(),
+            colind: (0..n as u32).collect(),
+            values: d.to_vec(),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.colind.len()
+    }
+
+    /// Column indices of row `i`.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.colind[self.rowptr[i]..self.rowptr[i + 1]]
+    }
+
+    /// Values of row `i`.
+    #[inline]
+    pub fn row_vals(&self, i: usize) -> &[f64] {
+        &self.values[self.rowptr[i]..self.rowptr[i + 1]]
+    }
+
+    /// `(col, val)` pairs of row `i`.
+    #[inline]
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.row_cols(i).iter().copied().zip(self.row_vals(i).iter().copied())
+    }
+
+    /// Iterate all `(row, col, val)` entries.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u32, f64)> + '_ {
+        (0..self.nrows).flat_map(move |i| self.row_iter(i).map(move |(j, v)| (i, j, v)))
+    }
+
+    /// Build canonical CSR from COO, summing duplicates and dropping
+    /// explicit zeros produced by the summation (input zeros are kept).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let nrows = coo.nrows;
+        let mut rowptr = vec![0usize; nrows + 1];
+        for &r in &coo.rows {
+            rowptr[r as usize + 1] += 1;
+        }
+        for i in 0..nrows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        // scatter into row order
+        let nnz = coo.len();
+        let mut colind = vec![0u32; nnz];
+        let mut values = vec![0f64; nnz];
+        let mut next = rowptr.clone();
+        for idx in 0..nnz {
+            let r = coo.rows[idx] as usize;
+            let p = next[r];
+            colind[p] = coo.cols[idx];
+            values[p] = coo.vals[idx];
+            next[r] += 1;
+        }
+        // sort within rows and sum duplicates
+        let mut out_colind = Vec::with_capacity(nnz);
+        let mut out_values = Vec::with_capacity(nnz);
+        let mut out_rowptr = vec![0usize; nrows + 1];
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..nrows {
+            scratch.clear();
+            scratch.extend(
+                colind[rowptr[i]..rowptr[i + 1]]
+                    .iter()
+                    .copied()
+                    .zip(values[rowptr[i]..rowptr[i + 1]].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < scratch.len() {
+                let (c, mut v) = scratch[k];
+                let mut k2 = k + 1;
+                while k2 < scratch.len() && scratch[k2].0 == c {
+                    v += scratch[k2].1;
+                    k2 += 1;
+                }
+                out_colind.push(c);
+                out_values.push(v);
+                k = k2;
+            }
+            out_rowptr[i + 1] = out_colind.len();
+        }
+        Csr { nrows, ncols: coo.ncols, rowptr: out_rowptr, colind: out_colind, values: out_values }
+    }
+
+    /// Convert back to COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for (i, j, v) in self.iter() {
+            coo.push(i, j as usize, v);
+        }
+        coo
+    }
+
+    /// Check the CSR invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.rowptr.len() != self.nrows + 1 {
+            return Err(Error::invalid("rowptr length != nrows+1"));
+        }
+        if self.rowptr[0] != 0 {
+            return Err(Error::invalid("rowptr[0] != 0"));
+        }
+        if *self.rowptr.last().unwrap() != self.colind.len() || self.colind.len() != self.values.len() {
+            return Err(Error::invalid("rowptr/colind/values lengths inconsistent"));
+        }
+        for i in 0..self.nrows {
+            if self.rowptr[i] > self.rowptr[i + 1] || self.rowptr[i + 1] > self.colind.len() {
+                return Err(Error::invalid(format!("rowptr out of order/bounds at row {i}")));
+            }
+            let cols = self.row_cols(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::invalid(format!("row {i} not strictly increasing")));
+                }
+            }
+            if let Some(&last) = cols.last() {
+                if last as usize >= self.ncols {
+                    return Err(Error::invalid(format!("row {i} column out of range")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Transpose (also used as CSR→CSC conversion).
+    pub fn transpose(&self) -> Csr {
+        let mut rowptr = vec![0usize; self.ncols + 1];
+        for &c in &self.colind {
+            rowptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut colind = vec![0u32; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        let mut next = rowptr.clone();
+        for i in 0..self.nrows {
+            for (j, v) in self.row_iter(i) {
+                let p = next[j as usize];
+                colind[p] = i as u32;
+                values[p] = v;
+                next[j as usize] += 1;
+            }
+        }
+        // rows were visited in increasing order, so each output row is sorted
+        Csr { nrows: self.ncols, ncols: self.nrows, rowptr, colind, values }
+    }
+
+    /// Structural + numeric equality within `tol` (same pattern required).
+    pub fn approx_eq(&self, other: &Csr, tol: f64) -> bool {
+        self.nrows == other.nrows
+            && self.ncols == other.ncols
+            && self.rowptr == other.rowptr
+            && self.colind == other.colind
+            && self
+                .values
+                .iter()
+                .zip(&other.values)
+                .all(|(a, b)| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())))
+    }
+
+    /// Dense row-major rendering (tests/small examples only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.ncols]; self.nrows];
+        for (i, j, v) in self.iter() {
+            d[i][j as usize] += v;
+        }
+        d
+    }
+
+    /// Matrix-vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.ncols {
+            return Err(Error::dim(format!("matvec: x has {} entries, A has {} cols", x.len(), self.ncols)));
+        }
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let mut acc = 0.0;
+            for (j, v) in self.row_iter(i) {
+                acc += v * x[j as usize];
+            }
+            y[i] = acc;
+        }
+        Ok(y)
+    }
+
+    /// Number of nonzeros in each row.
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.nrows).map(|i| self.rowptr[i + 1] - self.rowptr[i]).collect()
+    }
+
+    /// Number of nonzeros in each column.
+    pub fn col_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.ncols];
+        for &j in &self.colind {
+            c[j as usize] += 1;
+        }
+        c
+    }
+
+    /// True if the nonzero pattern and values are symmetric (square only).
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        self.nrows == self.ncols && self.approx_eq(&self.transpose(), tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [1 0 2]
+        // [0 0 0]
+        // [3 4 0]
+        let coo = Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)]).unwrap();
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn from_coo_canonical() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.rowptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.colind, vec![0, 2, 0, 1]);
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates() {
+        let coo = Coo::from_triplets(2, 2, [(0, 1, 1.0), (0, 1, 2.5), (1, 0, -1.0)]).unwrap();
+        let m = Csr::from_coo(&coo);
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense(), vec![vec![0.0, 3.5], vec![-1.0, 0.0]]);
+    }
+
+    #[test]
+    fn from_coo_unsorted_input() {
+        let coo = Coo::from_triplets(2, 3, [(1, 2, 1.0), (0, 1, 2.0), (1, 0, 3.0), (0, 0, 4.0)]).unwrap();
+        let m = Csr::from_coo(&coo);
+        m.validate().unwrap();
+        assert_eq!(m.to_dense(), vec![vec![4.0, 2.0, 0.0], vec![3.0, 0.0, 1.0]]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!((t.nrows, t.ncols), (3, 3));
+        assert_eq!(t.to_dense()[0], vec![1.0, 0.0, 3.0]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_rectangular() {
+        let coo = Coo::from_triplets(2, 4, [(0, 3, 1.0), (1, 0, 2.0)]).unwrap();
+        let m = Csr::from_coo(&coo);
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!((t.nrows, t.ncols), (4, 2));
+        assert_eq!(t.to_dense()[3], vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let y = m.matvec(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(y, vec![7.0, 0.0, 11.0]);
+        assert!(m.matvec(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn identity_and_diag() {
+        let i = Csr::identity(4);
+        i.validate().unwrap();
+        assert_eq!(i.matvec(&[1.0, 2.0, 3.0, 4.0]).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let d = Csr::diag(&[2.0, 3.0]);
+        assert_eq!(d.matvec(&[1.0, 1.0]).unwrap(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn counts() {
+        let m = sample();
+        assert_eq!(m.row_counts(), vec![2, 0, 2]);
+        assert_eq!(m.col_counts(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn symmetry_detection() {
+        let coo = Coo::from_triplets(2, 2, [(0, 1, 5.0), (1, 0, 5.0), (0, 0, 1.0)]).unwrap();
+        assert!(Csr::from_coo(&coo).is_symmetric(1e-12));
+        let coo = Coo::from_triplets(2, 2, [(0, 1, 5.0)]).unwrap();
+        assert!(!Csr::from_coo(&coo).is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut m = sample();
+        m.colind[0] = 99;
+        assert!(m.validate().is_err());
+        let mut m2 = sample();
+        m2.rowptr[1] = 5;
+        assert!(m2.validate().is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Sparse-matrix substrate.
+//!
+//! Everything the paper's experiments need from a sparse-matrix library:
+//! COO/CSR storage, Matrix Market IO, structural ops (transpose, permute,
+//! diagonal scaling), and Gustavson's row-wise SpGEMM in both symbolic
+//! (structure-only) and numeric forms. Index type is `u32` (the paper's
+//! largest instance has ~2M rows), values are `f64`.
+
+pub mod coo;
+pub mod csr;
+pub mod io;
+pub mod ops;
+pub mod spgemm;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use spgemm::{spgemm, spgemm_flops, spgemm_structure, triple_product};
+
+/// Nonzero structure statistics used by Table II of the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpgemmStats {
+    /// Rows of A (= rows of C).
+    pub i: usize,
+    /// Cols of A = rows of B.
+    pub k: usize,
+    /// Cols of B (= cols of C).
+    pub j: usize,
+    /// nnz(A).
+    pub nnz_a: usize,
+    /// nnz(B).
+    pub nnz_b: usize,
+    /// nnz(C).
+    pub nnz_c: usize,
+    /// Number of nontrivial multiplications |V^m|.
+    pub flops: u64,
+}
+
+impl SpgemmStats {
+    /// Compute the Table II row for `C = A * B` (structure only).
+    pub fn compute(a: &Csr, b: &Csr) -> crate::Result<Self> {
+        if a.ncols != b.nrows {
+            return Err(crate::Error::dim(format!(
+                "SpgemmStats: A is {}x{}, B is {}x{}",
+                a.nrows, a.ncols, b.nrows, b.ncols
+            )));
+        }
+        let c = spgemm_structure(a, b)?;
+        Ok(SpgemmStats {
+            i: a.nrows,
+            k: a.ncols,
+            j: b.ncols,
+            nnz_a: a.nnz(),
+            nnz_b: b.nnz(),
+            nnz_c: c.nnz(),
+            flops: spgemm_flops(a, b)?,
+        })
+    }
+
+    /// Average nonzeros per row of A — the `|S_A|/I` column.
+    pub fn a_per_row(&self) -> f64 {
+        self.nnz_a as f64 / self.i as f64
+    }
+    /// `|S_B|/K`.
+    pub fn b_per_row(&self) -> f64 {
+        self.nnz_b as f64 / self.k as f64
+    }
+    /// `|S_C|/I`.
+    pub fn c_per_row(&self) -> f64 {
+        self.nnz_c as f64 / self.i as f64
+    }
+    /// `|V^m| / |S_C|` — the compression ratio of the fold phase.
+    pub fn mults_per_output(&self) -> f64 {
+        self.flops as f64 / self.nnz_c as f64
+    }
+}

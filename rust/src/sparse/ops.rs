@@ -1,0 +1,188 @@
+//! Structural operations used by the workloads: permutation, diagonal
+//! scaling, element-wise combination, pruning, and symmetrization.
+
+use super::{Coo, Csr};
+use crate::{Error, Result};
+
+/// Symmetric permutation `P A P^T`, i.e. relabel row `i` → `perm[i]` and
+/// column `j` → `perm[j]`. `perm` must be a permutation of `0..n`.
+pub fn permute_symmetric(a: &Csr, perm: &[usize]) -> Result<Csr> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("permute_symmetric requires a square matrix"));
+    }
+    if perm.len() != a.nrows {
+        return Err(Error::invalid("permutation length mismatch"));
+    }
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for (i, j, v) in a.iter() {
+        coo.push(perm[i], perm[j as usize], v);
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+/// Row permutation: output row `perm[i]` = input row `i`.
+pub fn permute_rows(a: &Csr, perm: &[usize]) -> Result<Csr> {
+    if perm.len() != a.nrows {
+        return Err(Error::invalid("permutation length mismatch"));
+    }
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for (i, j, v) in a.iter() {
+        coo.push(perm[i], j as usize, v);
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+/// Scale rows: `diag(d) · A`.
+pub fn scale_rows(a: &Csr, d: &[f64]) -> Result<Csr> {
+    if d.len() != a.nrows {
+        return Err(Error::dim("scale_rows: diag length != nrows"));
+    }
+    let mut out = a.clone();
+    for i in 0..a.nrows {
+        for p in out.rowptr[i]..out.rowptr[i + 1] {
+            out.values[p] *= d[i];
+        }
+    }
+    Ok(out)
+}
+
+/// Scale columns: `A · diag(d)`.
+pub fn scale_cols(a: &Csr, d: &[f64]) -> Result<Csr> {
+    if d.len() != a.ncols {
+        return Err(Error::dim("scale_cols: diag length != ncols"));
+    }
+    let mut out = a.clone();
+    for p in 0..out.values.len() {
+        out.values[p] *= d[out.colind[p] as usize];
+    }
+    Ok(out)
+}
+
+/// Element-wise sum `A + B` (same shape).
+pub fn add(a: &Csr, b: &Csr) -> Result<Csr> {
+    if a.nrows != b.nrows || a.ncols != b.ncols {
+        return Err(Error::dim("add: shape mismatch"));
+    }
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz() + b.nnz());
+    for (i, j, v) in a.iter() {
+        coo.push(i, j as usize, v);
+    }
+    for (i, j, v) in b.iter() {
+        coo.push(i, j as usize, v);
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+/// Drop entries with `|v| <= threshold` (but keep at least the diagonal
+/// when `keep_diag` and the matrix is square).
+pub fn prune(a: &Csr, threshold: f64, keep_diag: bool) -> Csr {
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for (i, j, v) in a.iter() {
+        if v.abs() > threshold || (keep_diag && i == j as usize) {
+            coo.push(i, j as usize, v);
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Make the pattern (and values) symmetric: `(A + A^T) / 2` on the union
+/// pattern. Used to turn directed graph edge lists into adjacency matrices.
+pub fn symmetrize(a: &Csr) -> Result<Csr> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("symmetrize requires a square matrix"));
+    }
+    let t = a.transpose();
+    let mut s = add(a, &t)?;
+    for v in &mut s.values {
+        *v *= 0.5;
+    }
+    Ok(s)
+}
+
+/// Remove the diagonal of a square matrix.
+pub fn drop_diagonal(a: &Csr) -> Csr {
+    let mut coo = Coo::with_capacity(a.nrows, a.ncols, a.nnz());
+    for (i, j, v) in a.iter() {
+        if i != j as usize {
+            coo.push(i, j as usize, v);
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+/// Ensure every diagonal entry is present (adding `value` where missing).
+pub fn with_full_diagonal(a: &Csr, value: f64) -> Result<Csr> {
+    if a.nrows != a.ncols {
+        return Err(Error::dim("with_full_diagonal requires a square matrix"));
+    }
+    let mut coo = a.to_coo();
+    for i in 0..a.nrows {
+        if !a.row_cols(i).contains(&(i as u32)) {
+            coo.push(i, i, value);
+        }
+    }
+    Ok(Csr::from_coo(&coo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample() -> Csr {
+        Csr::from_coo(
+            &Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 1, 2.0), (1, 2, 3.0), (2, 0, 4.0)]).unwrap(),
+        )
+    }
+
+    #[test]
+    fn permute_symmetric_roundtrip() {
+        let a = sample();
+        let mut rng = Rng::new(1);
+        let perm = rng.permutation(3);
+        let p = permute_symmetric(&a, &perm).unwrap();
+        assert_eq!(p.nnz(), a.nnz());
+        // inverse permutation restores
+        let mut inv = vec![0usize; 3];
+        for (i, &pi) in perm.iter().enumerate() {
+            inv[pi] = i;
+        }
+        assert_eq!(permute_symmetric(&p, &inv).unwrap(), a);
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let a = sample();
+        let r = scale_rows(&a, &[2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(r.to_dense()[0], vec![2.0, 4.0, 0.0]);
+        let c = scale_cols(&a, &[2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(c.to_dense()[0], vec![2.0, 6.0, 0.0]);
+        assert!(scale_rows(&a, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn add_and_symmetrize() {
+        let a = sample();
+        let s = symmetrize(&a).unwrap();
+        assert!(s.is_symmetric(1e-14));
+        // union pattern includes both (0,1) and (1,0)
+        assert!(s.to_dense()[1][0] != 0.0);
+        let sum = add(&a, &a).unwrap();
+        assert_eq!(sum.to_dense()[2][0], 8.0);
+    }
+
+    #[test]
+    fn prune_and_diag() {
+        let a = sample();
+        let p = prune(&a, 2.5, false);
+        assert_eq!(p.nnz(), 2); // 3.0 and 4.0 survive
+        let pk = prune(&a, 10.0, true);
+        assert_eq!(pk.nnz(), 1); // only the (0,0) diagonal kept
+        let nd = drop_diagonal(&a);
+        assert_eq!(nd.nnz(), 3);
+        let fd = with_full_diagonal(&a, 9.0).unwrap();
+        assert_eq!(fd.to_dense()[1][1], 9.0);
+        assert_eq!(fd.to_dense()[2][2], 9.0);
+        assert_eq!(fd.to_dense()[0][0], 1.0);
+    }
+}

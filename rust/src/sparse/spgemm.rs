@@ -1,0 +1,281 @@
+//! Gustavson's row-wise sparse matrix-matrix multiplication.
+//!
+//! The reference algorithm the paper builds on (Gustavson 1978): for each
+//! row `i` of `A`, accumulate `Σ_k a_ik · B[k,:]` into a sparse
+//! accumulator. We provide a symbolic pass (structure of `C` only, used to
+//! build hypergraphs without touching values), the numeric multiply, and
+//! the nontrivial-multiplication count `|V^m|` that parameterizes all of
+//! the paper's models.
+
+use super::Csr;
+use crate::{Error, Result};
+
+fn check_dims(a: &Csr, b: &Csr) -> Result<()> {
+    if a.ncols != b.nrows {
+        return Err(Error::dim(format!(
+            "spgemm: A is {}x{}, B is {}x{}",
+            a.nrows, a.ncols, b.nrows, b.ncols
+        )));
+    }
+    Ok(())
+}
+
+/// Number of nontrivial multiplications `|V^m| = Σ_{(i,k)∈S_A} nnz(B[k,:])`.
+pub fn spgemm_flops(a: &Csr, b: &Csr) -> Result<u64> {
+    check_dims(a, b)?;
+    let brow: Vec<u64> = (0..b.nrows).map(|k| (b.rowptr[k + 1] - b.rowptr[k]) as u64).collect();
+    let mut total = 0u64;
+    for &k in &a.colind {
+        total += brow[k as usize];
+    }
+    Ok(total)
+}
+
+/// Symbolic SpGEMM: the nonzero structure of `C = A·B` with all stored
+/// values set to 1.0. Columns are sorted (canonical CSR).
+pub fn spgemm_structure(a: &Csr, b: &Csr) -> Result<Csr> {
+    check_dims(a, b)?;
+    let n = b.ncols;
+    let mut marker = vec![u32::MAX; n];
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut colind: Vec<u32> = Vec::new();
+    for i in 0..a.nrows {
+        let start = colind.len();
+        for &k in a.row_cols(i) {
+            for &j in b.row_cols(k as usize) {
+                if marker[j as usize] != i as u32 {
+                    marker[j as usize] = i as u32;
+                    colind.push(j);
+                }
+            }
+        }
+        colind[start..].sort_unstable();
+        rowptr.push(colind.len());
+    }
+    let nnz = colind.len();
+    Ok(Csr { nrows: a.nrows, ncols: n, rowptr, colind, values: vec![1.0; nnz] })
+}
+
+/// Numeric SpGEMM `C = A·B` via Gustavson with a dense accumulator (SPA)
+/// reused across rows. Output is canonical CSR.
+///
+/// Note: entries that cancel to exactly 0.0 are *kept* — the paper's model
+/// ignores numerical cancellation (Sec. 3.1), so `S_C` is induced by
+/// `S_A`/`S_B` and the numeric structure matches [`spgemm_structure`].
+pub fn spgemm(a: &Csr, b: &Csr) -> Result<Csr> {
+    check_dims(a, b)?;
+    let n = b.ncols;
+    let mut accum = vec![0f64; n];
+    let mut marker = vec![u32::MAX; n];
+    let mut pattern: Vec<u32> = Vec::new();
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut colind: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for i in 0..a.nrows {
+        pattern.clear();
+        for (k, av) in a.row_iter(i) {
+            for (j, bv) in b.row_iter(k as usize) {
+                let ju = j as usize;
+                if marker[ju] != i as u32 {
+                    marker[ju] = i as u32;
+                    accum[ju] = av * bv;
+                    pattern.push(j);
+                } else {
+                    accum[ju] += av * bv;
+                }
+            }
+        }
+        pattern.sort_unstable();
+        for &j in &pattern {
+            colind.push(j);
+            values.push(accum[j as usize]);
+        }
+        rowptr.push(colind.len());
+    }
+    Ok(Csr { nrows: a.nrows, ncols: n, rowptr, colind, values })
+}
+
+/// The AMG triple product `P^T · (A · P)` computed as two SpGEMMs,
+/// returning `(AP, PtAP)` — the two SpGEMM instances of eq. (6).
+pub fn triple_product(a: &Csr, p: &Csr) -> Result<(Csr, Csr)> {
+    let ap = spgemm(a, p)?;
+    let pt = p.transpose();
+    let ptap = spgemm(&pt, &ap)?;
+    Ok((ap, ptap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{proptest, Rng};
+
+    fn dense_mul(a: &Csr, b: &Csr) -> Vec<Vec<f64>> {
+        let da = a.to_dense();
+        let db = b.to_dense();
+        let mut c = vec![vec![0.0; b.ncols]; a.nrows];
+        for i in 0..a.nrows {
+            for k in 0..a.ncols {
+                if da[i][k] != 0.0 {
+                    for j in 0..b.ncols {
+                        c[i][j] += da[i][k] * db[k][j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn random_csr(rng: &mut Rng, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(i, j, rng.range(-2.0, 2.0));
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn paper_fig1_instance() {
+        // The 3x4 * 4x2 instance of Fig. 1:
+        // A nonzeros: (0,0),(0,2),(1,0),(1,3),(2,1)
+        // B nonzeros: (0,1),(1,0),(2,0),(2,1),(3,1)
+        let a = Csr::from_coo(
+            &Coo::from_triplets(3, 4, [(0, 0, 1.), (0, 2, 1.), (1, 0, 1.), (1, 3, 1.), (2, 1, 1.)])
+                .unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(4, 2, [(0, 1, 1.), (1, 0, 1.), (2, 0, 1.), (2, 1, 1.), (3, 1, 1.)])
+                .unwrap(),
+        );
+        // |V^m| = 6 nontrivial multiplications (v020,v001,v021,v101,v131,v210)
+        assert_eq!(spgemm_flops(&a, &b).unwrap(), 6);
+        let c = spgemm_structure(&a, &b).unwrap();
+        // S_C = {(0,0),(0,1),(1,1),(2,0)}
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.to_dense(), vec![vec![1.0, 1.0], vec![0.0, 1.0], vec![1.0, 0.0]]);
+    }
+
+    #[test]
+    fn numeric_matches_dense_small() {
+        let a = Csr::from_coo(
+            &Coo::from_triplets(2, 3, [(0, 0, 2.0), (0, 2, -1.0), (1, 1, 3.0)]).unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(3, 2, [(0, 0, 1.0), (1, 1, 4.0), (2, 0, 5.0)]).unwrap(),
+        );
+        let c = spgemm(&a, &b).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.to_dense(), dense_mul(&a, &b));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(&mut rng, 8, 8, 0.3);
+        let i = Csr::identity(8);
+        assert!(spgemm(&a, &i).unwrap().approx_eq(&a, 1e-14));
+        assert!(spgemm(&i, &a).unwrap().approx_eq(&a, 1e-14));
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let a = Csr::zero(2, 3);
+        let b = Csr::zero(4, 2);
+        assert!(spgemm(&a, &b).is_err());
+        assert!(spgemm_structure(&a, &b).is_err());
+        assert!(spgemm_flops(&a, &b).is_err());
+    }
+
+    #[test]
+    fn structure_matches_numeric_pattern() {
+        let mut rng = Rng::new(17);
+        for _ in 0..10 {
+            let a = random_csr(&mut rng, 12, 9, 0.2);
+            let b = random_csr(&mut rng, 9, 11, 0.2);
+            let s = spgemm_structure(&a, &b).unwrap();
+            let c = spgemm(&a, &b).unwrap();
+            assert_eq!(s.rowptr, c.rowptr);
+            assert_eq!(s.colind, c.colind);
+        }
+    }
+
+    #[test]
+    fn prop_numeric_matches_dense() {
+        proptest::check(
+            "spgemm == dense",
+            101,
+            proptest::default_cases(),
+            |r| {
+                let m = 1 + r.below(12);
+                let k = 1 + r.below(12);
+                let n = 1 + r.below(12);
+                let d = r.range(0.05, 0.5);
+                (random_csr(r, m, k, d), random_csr(r, k, n, d))
+            },
+            |(a, b)| {
+                let c = spgemm(a, b).map_err(|e| e.to_string())?;
+                c.validate().map_err(|e| e.to_string())?;
+                let dd = dense_mul(a, b);
+                let cd = c.to_dense();
+                for i in 0..a.nrows {
+                    for j in 0..b.ncols {
+                        if (cd[i][j] - dd[i][j]).abs() > 1e-10 {
+                            return Err(format!("mismatch at ({i},{j}): {} vs {}", cd[i][j], dd[i][j]));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_flops_equals_expansion_size() {
+        proptest::check(
+            "flops == Σ nnz(B[k,:]) over S_A",
+            102,
+            proptest::default_cases(),
+            |r| {
+                let m = 1 + r.below(10);
+                let k = 1 + r.below(10);
+                let n = 1 + r.below(10);
+                (random_csr(r, m, k, 0.3), random_csr(r, k, n, 0.3))
+            },
+            |(a, b)| {
+                let f = spgemm_flops(a, b).map_err(|e| e.to_string())?;
+                let mut manual = 0u64;
+                for i in 0..a.nrows {
+                    for &k in a.row_cols(i) {
+                        manual += b.row_cols(k as usize).len() as u64;
+                    }
+                }
+                proptest::ensure(f == manual, format!("{f} != {manual}"))
+            },
+        );
+    }
+
+    #[test]
+    fn triple_product_small() {
+        // A = 3x3 laplacian-ish, P = 3x1 aggregate of all points
+        let a = Csr::from_coo(
+            &Coo::from_triplets(
+                3,
+                3,
+                [(0, 0, 2.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 2.0), (1, 2, -1.0), (2, 1, -1.0), (2, 2, 2.0)],
+            )
+            .unwrap(),
+        );
+        let p = Csr::from_coo(&Coo::from_triplets(3, 1, [(0, 0, 1.0), (1, 0, 1.0), (2, 0, 1.0)]).unwrap());
+        let (ap, ptap) = triple_product(&a, &p).unwrap();
+        assert_eq!((ap.nrows, ap.ncols), (3, 1));
+        assert_eq!((ptap.nrows, ptap.ncols), (1, 1));
+        // sum of all entries of A = 2 (galerkin coarse operator)
+        assert!((ptap.values[0] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,75 @@
+//! A miniature property-based-testing harness.
+//!
+//! The build is fully offline, so the `proptest` crate is unavailable; this
+//! module provides the small subset we need: run a property over many
+//! randomly generated cases with a deterministic seed, and on failure
+//! report the case number and seed so the exact input can be regenerated.
+
+use super::rng::Rng;
+
+/// Number of cases run per property (override with `SPGEMM_HP_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("SPGEMM_HP_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen` from a seeded RNG.
+///
+/// `prop` returns `Err(msg)` to fail. Panics with the case index, seed,
+/// and message on the first failure, so failures are reproducible.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion macro-alike for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "count",
+            1,
+            10,
+            |r| r.below(100),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fail`")]
+    fn failing_property_panics_with_context() {
+        check("fail", 2, 5, |r| r.below(10), |&x| ensure(x > 100, "too small"));
+    }
+}

@@ -1,0 +1,59 @@
+//! Tiny descriptive-statistics helpers used by the report generators.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Maximum (0.0 for empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(0.0)
+}
+
+/// Geometric mean of strictly positive values (0.0 if any nonpositive).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Load imbalance of per-part weights: `max / mean` (1.0 = perfect).
+pub fn imbalance(weights: &[u64]) -> f64 {
+    if weights.is_empty() {
+        return 1.0;
+    }
+    let sum: u64 = weights.iter().sum();
+    if sum == 0 {
+        return 1.0;
+    }
+    let mean = sum as f64 / weights.len() as f64;
+    let max = *weights.iter().max().unwrap() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_max_geomean() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(max(&[1.0, 5.0, 3.0]), 5.0);
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(geomean(&[1.0, -1.0]), 0.0);
+    }
+
+    #[test]
+    fn imbalance_basics() {
+        assert_eq!(imbalance(&[10, 10, 10]), 1.0);
+        assert!((imbalance(&[20, 10, 0]) - 2.0).abs() < 1e-12);
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0, 0]), 1.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Wall-clock timing helpers for the bench harness (no `criterion`
+//! offline; the bench binaries use these directly).
+
+use std::time::{Duration, Instant};
+
+/// A simple start/elapsed timer.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then `iters`
+/// measured ones. Returns (min, median, mean) in seconds. A black-box
+/// sink prevents the optimizer from deleting the work.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats { min, median, mean, iters: samples.len() }
+}
+
+/// Aggregate statistics from [`bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Human-readable time (auto unit).
+    pub fn fmt_time(secs: f64) -> String {
+        if secs >= 1.0 {
+            format!("{secs:.3} s")
+        } else if secs >= 1e-3 {
+            format!("{:.3} ms", secs * 1e3)
+        } else {
+            format!("{:.1} µs", secs * 1e6)
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "min {} | median {} | mean {} ({} iters)",
+            Self::fmt_time(self.min),
+            Self::fmt_time(self.median),
+            Self::fmt_time(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_ordered_stats() {
+        let s = bench(1, 5, || (0..1000u64).sum::<u64>());
+        assert!(s.min <= s.median);
+        assert!(s.min > 0.0);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Cross-module integration tests: the full pipeline
+//! (generator → model → partitioner → cost → lowering → simulator →
+//! coordinator → PJRT runtime) on each of the paper's three applications,
+//! plus end-to-end invariants that only hold if every layer composes.
+
+use spgemm_hp::coordinator::{self, CoordinatorConfig};
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::classify::{classify, Parallelization};
+use spgemm_hp::hypergraph::models::{build_model, ModelKind, MultEnum};
+use spgemm_hp::partition::{is_balanced, partition, random_partition, PartitionerConfig};
+use spgemm_hp::util::Rng;
+use spgemm_hp::{cost, sim, sparse};
+
+/// The whole stack on the AMG application: generate the hierarchy,
+/// partition both SpGEMMs, execute them on the coordinator, validate.
+#[test]
+fn amg_pipeline_end_to_end() {
+    let n = 6;
+    let a = gen::stencil27(n);
+    let p1 = gen::smoothed_aggregation_prolongator(&a, n).unwrap();
+    let (ap, ptap) = sparse::triple_product(&a, &p1).unwrap();
+    assert_eq!(ptap.nrows, 8);
+    for (name, x, y) in [("AP", &a, &p1), ("PTAP", &p1.transpose(), &ap)] {
+        let c_ref = sparse::spgemm(x, y).unwrap();
+        let model = build_model(x, y, ModelKind::OuterProduct, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.10, ..PartitionerConfig::new(4) };
+        let part = partition(&model.h, &cfg).unwrap();
+        assert!(is_balanced(&model.h, &part, 4, 0.101), "{name} imbalanced");
+        let alg = sim::lower(&model, &part, x, y, 4).unwrap();
+        let (rep, c_sim) = sim::simulate(x, y, &alg).unwrap();
+        assert!(c_sim.approx_eq(&c_ref, 1e-9), "{name} simulator numerics");
+        let bound = cost::evaluate(&model.h, &part, 4).unwrap();
+        assert!(rep.max_send_recv() >= bound.comm_max, "{name} below bound");
+        assert!(rep.max_send_recv() <= 3 * bound.comm_max.max(1), "{name} above 3x bound");
+        let (crep, c) = coordinator::run(x, y, &alg, &CoordinatorConfig::default()).unwrap();
+        assert!(c.approx_eq(&c_ref, 1e-3), "{name} coordinator numerics");
+        assert_eq!(crep.expand_volume, rep.expand_volume, "{name} volumes");
+    }
+}
+
+/// LP: the partition is structure-only, so it transfers across
+/// interior-point iterations with different diagonal scalings.
+#[test]
+fn lp_partition_reuse_across_iterations() {
+    let mut rng = Rng::new(33);
+    let a = gen::lp_constraints(&gen::LpParams::pds_like(200, 640), &mut rng).unwrap();
+    let d1 = gen::lp::ipm_scaling(a.ncols, &mut rng);
+    let b1 = sparse::ops::scale_rows(&a.transpose(), &d1).unwrap();
+    let model = build_model(&a, &b1, ModelKind::OuterProduct, false).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(4) };
+    let part = partition(&model.h, &cfg).unwrap();
+    let m1 = cost::evaluate(&model.h, &part, 4).unwrap();
+    // new iterate: same structure, new values
+    let d2 = gen::lp::ipm_scaling(a.ncols, &mut rng);
+    let b2 = sparse::ops::scale_rows(&a.transpose(), &d2).unwrap();
+    let model2 = build_model(&a, &b2, ModelKind::OuterProduct, false).unwrap();
+    // hypergraph identical → partition & metrics transfer verbatim
+    assert_eq!(model.h.canonical_nets(), model2.h.canonical_nets());
+    let m2 = cost::evaluate(&model2.h, &part, 4).unwrap();
+    assert_eq!(m1.comm_max, m2.comm_max);
+    // and the algorithm still computes the right numbers
+    let alg = sim::lower(&model2, &part, &a, &b2, 4).unwrap();
+    let (_, c) = sim::simulate(&a, &b2, &alg).unwrap();
+    assert!(c.approx_eq(&sparse::spgemm(&a, &b2).unwrap(), 1e-9));
+}
+
+/// MCL: partitions from every model, executed and validated; 1D
+/// outer-product shows its scale-free load-balance pathology.
+#[test]
+fn mcl_models_execute_and_1d_pathology_shows() {
+    let mut rng = Rng::new(44);
+    let a = gen::rmat(&gen::RmatParams::social(8, 10.0), &mut rng).unwrap();
+    let c_ref = sparse::spgemm(&a, &a).unwrap();
+    let p = 8;
+    let mut outer_imbal = 0.0f64;
+    let mut best_2d = u64::MAX;
+    for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC] {
+        let model = build_model(&a, &a, kind, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(p) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let m = cost::evaluate(&model.h, &part, p).unwrap();
+        if kind == ModelKind::OuterProduct {
+            outer_imbal = m.comp_imbalance();
+        } else if kind != ModelKind::RowWise {
+            best_2d = best_2d.min(m.comm_max);
+        }
+        let alg = sim::lower(&model, &part, &a, &a, p).unwrap();
+        let (_, c) = sim::simulate(&a, &a, &alg).unwrap();
+        assert!(c.approx_eq(&c_ref, 1e-9), "{kind:?}");
+    }
+    // heavy k-slices (hub columns) make balanced 1D outer partitions hard:
+    // imbalance exceeds the 2D models' (which meet ε)
+    assert!(outer_imbal > 1.05, "outer imbalance {outer_imbal}");
+    assert!(best_2d > 0);
+}
+
+/// The partitioner beats the random baseline on every application class.
+#[test]
+fn partitioner_beats_random_everywhere() {
+    let mut rng = Rng::new(55);
+    let instances: Vec<(&str, sparse::Csr, sparse::Csr)> = vec![
+        ("amg", gen::stencil27(6), gen::smoothed_aggregation_prolongator(&gen::stencil27(6), 6).unwrap()),
+        (
+            "lp",
+            gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut rng).unwrap(),
+            gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut Rng::new(55)).unwrap().transpose(),
+        ),
+        ("mcl", gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut rng).unwrap(), gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut Rng::new(56)).unwrap()),
+    ];
+    for (name, a, b) in &instances {
+        let model = build_model(a, b, ModelKind::MonoC, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.10, ..PartitionerConfig::new(8) };
+        let ours = partition(&model.h, &cfg).unwrap();
+        let rand = random_partition(&model.h, 8, 99);
+        let mo = cost::evaluate(&model.h, &ours, 8).unwrap();
+        let mr = cost::evaluate(&model.h, &rand, 8).unwrap();
+        assert!(
+            mo.connectivity_volume < mr.connectivity_volume,
+            "{name}: ours {} !< random {}",
+            mo.connectivity_volume,
+            mr.connectivity_volume
+        );
+    }
+}
+
+/// Model partitions land in their Fig. 6 classes after the whole
+/// model→partition→mult-assignment lowering.
+#[test]
+fn lowered_partitions_respect_their_classes() {
+    let mut rng = Rng::new(66);
+    let a = gen::erdos_renyi(24, 24, 4.0, &mut rng).unwrap();
+    let b = gen::erdos_renyi(24, 24, 4.0, &mut rng).unwrap();
+    let n_mults = MultEnum::new(&a, &b).count() as usize;
+    type Check = fn(&spgemm_hp::hypergraph::classify::ClassSignature) -> bool;
+    let cases: [(ModelKind, Check); 6] = [
+        (ModelKind::RowWise, |s| s.r),
+        (ModelKind::ColWise, |s| s.l),
+        (ModelKind::OuterProduct, |s| s.u),
+        (ModelKind::MonoA, |s| s.a),
+        (ModelKind::MonoB, |s| s.b),
+        (ModelKind::MonoC, |s| s.c),
+    ];
+    for (kind, check) in cases {
+        let model = build_model(&a, &b, kind, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(4) };
+        let part = partition(&model.h, &cfg).unwrap();
+        // lower to a per-mult assignment and classify it
+        let mut mult_part = vec![0u32; n_mults];
+        MultEnum::new(&a, &b)
+            .for_each(|m| mult_part[m.idx as usize] = part[model.mult_vertex(&m) as usize]);
+        let sig = classify(&a, &b, &mult_part);
+        assert!(check(&sig), "{kind:?} partition not in its class: {sig:?}");
+        assert!(sig.consistent());
+    }
+    // sanity: the canonical constructors still classify correctly here
+    let finest = Parallelization::Finest.assign(&a, &b);
+    assert!(classify(&a, &b, &finest).consistent());
+}
+
+/// The PJRT artifacts, when present, drive the coordinator end to end.
+#[test]
+fn pjrt_runtime_composes_when_artifacts_exist() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rng = Rng::new(77);
+    let a = gen::rmat(&gen::RmatParams::social(8, 6.0), &mut rng).unwrap();
+    let c_ref = sparse::spgemm(&a, &a).unwrap();
+    let model = build_model(&a, &a, ModelKind::RowWise, false).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(3) };
+    let part = partition(&model.h, &cfg).unwrap();
+    let alg = sim::lower(&model, &part, &a, &a, 3).unwrap();
+    let ccfg = CoordinatorConfig { artifacts_dir: Some(dir), ..Default::default() };
+    let (rep, c) = coordinator::run(&a, &a, &alg, &ccfg).unwrap();
+    assert!(rep.used_pjrt);
+    assert!(rep.tile_mults > 0);
+    assert_eq!(rep.scalar_mults, 0, "row-wise groups are closed");
+    assert!(c.approx_eq(&c_ref, 1e-3));
+}
+
+/// Masked SpGEMM composes with partitioning and shrinks communication.
+#[test]
+fn masked_model_partitions() {
+    use spgemm_hp::hypergraph::extensions::masked_fine_grained;
+    let mut rng = Rng::new(88);
+    let a = gen::erdos_renyi(32, 32, 5.0, &mut rng).unwrap();
+    let b = gen::erdos_renyi(32, 32, 5.0, &mut rng).unwrap();
+    let c = sparse::spgemm_structure(&a, &b).unwrap();
+    // mask: keep the diagonal band only
+    let mut keep = sparse::Coo::new(c.nrows, c.ncols);
+    for (i, j, _) in c.iter() {
+        if (i as i64 - j as i64).abs() <= 2 {
+            keep.push(i, j as usize, 1.0);
+        }
+    }
+    let mask = sparse::Csr::from_coo(&keep);
+    let (hm, kept) = masked_fine_grained(&a, &b, &mask).unwrap();
+    assert!(kept > 0 && kept < sparse::spgemm_flops(&a, &b).unwrap());
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(4) };
+    let pm = partition(&hm, &cfg).unwrap();
+    let full = build_model(&a, &b, ModelKind::FineGrained, false).unwrap();
+    let pf = partition(&full.h, &cfg).unwrap();
+    let mm = cost::evaluate(&hm, &pm, 4).unwrap();
+    let mf = cost::evaluate(&full.h, &pf, 4).unwrap();
+    assert!(
+        mm.connectivity_volume < mf.connectivity_volume,
+        "masking should reduce communication: {} vs {}",
+        mm.connectivity_volume,
+        mf.connectivity_volume
+    );
+}
+
+/// A·Aᵀ symmetry exploitation halves computation and cuts volume.
+#[test]
+fn aat_symmetry_reduces_work() {
+    use spgemm_hp::hypergraph::extensions::aat_symmetric;
+    let mut rng = Rng::new(99);
+    let a = gen::lp_constraints(&gen::LpParams::pds_like(80, 260), &mut rng).unwrap();
+    let at = a.transpose();
+    let flops = sparse::spgemm_flops(&a, &at).unwrap();
+    let (h, classes) = aat_symmetric(&a).unwrap();
+    assert!(classes < flops, "classes {classes} !< flops {flops}");
+    assert!(classes * 2 >= flops, "pairing can at most halve");
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(4) };
+    let part = partition(&h, &cfg).unwrap();
+    let m = cost::evaluate(&h, &part, 4).unwrap();
+    assert!(m.comp_imbalance() <= 1.25);
+}
+
+/// SpMV specializations partition and their costs order sensibly.
+#[test]
+fn spmv_models_partition() {
+    use spgemm_hp::hypergraph::spmv;
+    let mut rng = Rng::new(111);
+    let a = gen::rmat(&gen::RmatParams::protein(8, 5.0), &mut rng).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(8) };
+    let col_net = spmv::column_net(&a).unwrap();
+    let fine = spmv::fine_grain(&a).unwrap();
+    let p1 = partition(&col_net, &cfg).unwrap();
+    let p2 = partition(&fine, &cfg).unwrap();
+    let m1 = cost::evaluate(&col_net, &p1, 8).unwrap();
+    let m2 = cost::evaluate(&fine, &p2, 8).unwrap();
+    // 2D fine-grain SpMV should not be (much) worse than 1D
+    assert!(m2.comm_max <= 2 * m1.comm_max.max(1), "fine {} vs 1D {}", m2.comm_max, m1.comm_max);
+}
