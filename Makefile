@@ -1,0 +1,31 @@
+# spgemm-hp build entry points. `make ci` is the authoritative local gate
+# (mirrors .github/workflows/ci.yml); everything else is convenience.
+
+.PHONY: ci build test bench smoke artifacts clean
+
+ci:
+	scripts/ci.sh
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Full self-timed bench suite (no criterion; see benches/*.rs).
+bench:
+	cargo bench
+
+# The fast bench path CI runs; writes BENCH_spgemm.json.
+smoke:
+	cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+
+# AOT-compile the JAX/Pallas kernels to HLO text artifacts for the
+# `pallas` runtime path. Requires python3 + jax (build time only; the
+# rust binary never runs python).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+clean:
+	cargo clean
+	rm -f BENCH_spgemm.json

@@ -36,7 +36,9 @@ fn main() {
         "workload", "model", "vertices", "pins", "partition time"
     );
     for (name, a, b) in &workloads {
-        for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::FineGrained] {
+        for kind in
+            [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::FineGrained]
+        {
             let model = build_model(a, b, kind, false).unwrap();
             let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(16) };
             let iters = if model.h.num_vertices() > 100_000 { 1 } else { 3 };

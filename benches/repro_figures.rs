@@ -39,7 +39,12 @@ fn main() {
     for r in figures::bounds_comparison(seed).expect("bounds") {
         println!(
             "{:<16} p={:<3} hypergraph={:<8} eq1_dep={:<10.0} eq1_ind={:<10.0} trivial={:.0}",
-            r.instance, r.p, r.hypergraph_comm, r.eq1_memory_dependent, r.eq1_memory_independent, r.trivial
+            r.instance,
+            r.p,
+            r.hypergraph_comm,
+            r.eq1_memory_dependent,
+            r.eq1_memory_independent,
+            r.trivial
         );
     }
 

@@ -1,42 +1,142 @@
-//! SpGEMM substrate + kernel-path benches: Gustavson numeric multiply,
-//! hypergraph construction, the sequential memory simulator, and the
-//! PJRT tile-product engine vs. the pure-rust reference backend.
+//! SpGEMM substrate + kernel-path benches: Gustavson numeric multiply
+//! (sequential and row-block threaded), hypergraph construction, and the
+//! tile-product engine (PJRT vs the pure-rust reference backend).
+//!
+//! Flags (after `--`):
+//!
+//! * `--smoke` — small workloads and few iterations (the CI gate).
+//! * `--json [path]` — write machine-readable records (kernel, workload,
+//!   threads, ns/op) to `path`, default `BENCH_spgemm.json`.
+//! * `--threads 1,2,4,8` — thread counts for the parallel-SpGEMM sweep.
+//!
+//! ```bash
+//! cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+//! ```
 
+use spgemm_hp::cli::Args;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, fine_grained, ModelKind};
 use spgemm_hp::runtime::Engine;
+use spgemm_hp::sim::spgemm_parallel;
 use spgemm_hp::sparse;
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
+use spgemm_hp::{Error, Result};
+
+/// One measured point, serialized to `BENCH_spgemm.json`.
+struct Record {
+    kernel: &'static str,
+    workload: String,
+    threads: usize,
+    ns_per_op: f64,
+}
+
+fn write_json(path: &str, records: &[Record]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let comma = if i + 1 < records.len() { "," } else { "" };
+        writeln!(
+            f,
+            "  {{\"kernel\": \"{}\", \"workload\": \"{}\", \"threads\": {}, \"ns_per_op\": {:.1}}}{comma}",
+            r.kernel, r.workload, r.threads, r.ns_per_op
+        )?;
+    }
+    writeln!(f, "]")?;
+    f.flush()?;
+    Ok(())
+}
 
 fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("bench error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.has_flag("smoke");
+    let json_path: Option<String> = match args.get("json") {
+        Some(p) => Some(p.to_string()),
+        None if args.has_flag("json") => Some("BENCH_spgemm.json".to_string()),
+        None => None,
+    };
+    let threads: Vec<usize> = match args.get("threads") {
+        Some(list) => list
+            .split(',')
+            .map(|t| match t.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(Error::Config(format!("--threads expects integers >= 1, got {t}"))),
+            })
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 4, 8],
+    };
+    let iters = if smoke { 3 } else { 5 };
+    let mut records: Vec<Record> = Vec::new();
     let mut rng = Rng::new(3);
 
-    println!("== Gustavson SpGEMM ==");
-    for (name, a, b) in [
-        ("stencil27-n16 A*A", gen::stencil27(16), gen::stencil27(16)),
+    println!("== Gustavson SpGEMM (sequential) ==");
+    let stencil_n = if smoke { 10 } else { 16 };
+    let rmat_scale = if smoke { 9 } else { 12 };
+    let workloads = [
+        (format!("stencil27-n{stencil_n}"), gen::stencil27(stencil_n)),
         (
-            "rmat-s12 A*A",
-            gen::rmat(&gen::RmatParams::social(12, 8.0), &mut rng).unwrap(),
-            gen::rmat(&gen::RmatParams::social(12, 8.0), &mut Rng::new(3)).unwrap(),
+            format!("rmat-s{rmat_scale}"),
+            gen::rmat(&gen::RmatParams::social(rmat_scale, 8.0), &mut rng)?,
         ),
-    ] {
-        let flops = sparse::spgemm_flops(&a, &b).unwrap();
-        let s = bench(1, 5, || sparse::spgemm(&a, &b).unwrap());
+    ];
+    let mut seq_stats = Vec::with_capacity(workloads.len());
+    for (name, a) in &workloads {
+        let flops = sparse::spgemm_flops(a, a)?;
+        let s = bench(1, iters, || sparse::spgemm(a, a).unwrap());
         println!(
             "{name:<22} {:>12} mults  {:>12}  ({:.1} Mmult/s)",
             flops,
             BenchStats::fmt_time(s.median),
             flops as f64 / s.median / 1e6
         );
+        records.push(Record {
+            kernel: "spgemm",
+            workload: name.clone(),
+            threads: 1,
+            ns_per_op: s.median * 1e9,
+        });
+        seq_stats.push(s);
+    }
+
+    println!("\n== row-block parallel Gustavson (spgemm_parallel) ==");
+    let (par_name, par_a) = &workloads[1]; // the RMAT workload (skewed rows)
+    let seq = seq_stats[1]; // reuse the sequential measurement from above
+    println!("{par_name:<22} sequential baseline: {:>12}", BenchStats::fmt_time(seq.median));
+    let mut best_speedup = 0.0f64;
+    for &t in &threads {
+        let s = bench(1, iters, || spgemm_parallel(par_a, par_a, t).unwrap());
+        let speedup = seq.median / s.median;
+        best_speedup = best_speedup.max(speedup);
+        println!(
+            "{par_name:<22} threads={t:<3} {:>12}  ({speedup:.2}x vs sequential)",
+            BenchStats::fmt_time(s.median)
+        );
+        records.push(Record {
+            kernel: "spgemm_parallel",
+            workload: par_name.clone(),
+            threads: t,
+            ns_per_op: s.median * 1e9,
+        });
+    }
+    if threads.iter().any(|&t| t > 1) {
+        println!("best speedup: {best_speedup:.2}x");
     }
 
     println!("\n== hypergraph model construction ==");
-    let a = gen::stencil27(12);
-    let p = gen::smoothed_aggregation_prolongator(&a, 12).unwrap();
+    let grid_n = if smoke { 9 } else { 12 };
+    let a = gen::stencil27(grid_n);
+    let p = gen::smoothed_aggregation_prolongator(&a, grid_n)?;
     for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::MonoC] {
-        let s = bench(1, 5, || build_model(&a, &p, kind, false).unwrap());
-        let m = build_model(&a, &p, kind, false).unwrap();
+        let s = bench(1, iters, || build_model(&a, &p, kind, false).unwrap());
+        let m = build_model(&a, &p, kind, false)?;
         println!(
             "{:<16} |V|={:<9} pins={:<9} {:>12}",
             kind.name(),
@@ -44,13 +144,23 @@ fn main() {
             m.h.num_pins(),
             BenchStats::fmt_time(s.median)
         );
+        records.push(Record {
+            kernel: "build_model",
+            workload: format!("amg-n{grid_n}-{}", kind.name()),
+            threads: 1,
+            ns_per_op: s.median * 1e9,
+        });
     }
     let s = bench(1, 3, || fine_grained(&a, &p, true).unwrap());
-    println!("{:<16} (with V^nz)                    {:>12}", "fine-grained", BenchStats::fmt_time(s.median));
+    println!(
+        "{:<16} (with V^nz)                    {:>12}",
+        "fine-grained",
+        BenchStats::fmt_time(s.median)
+    );
 
     println!("\n== tile-product engine: PJRT vs reference ==");
     let tile = 8usize;
-    let n = 256usize;
+    let n = if smoke { 64 } else { 256 };
     let t2 = tile * tile;
     let mut rngf = Rng::new(8);
     let abuf: Vec<f32> = (0..n * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
@@ -63,31 +173,47 @@ fn main() {
         BenchStats::fmt_time(s.median),
         flops / s.median / 1e9
     );
+    records.push(Record {
+        kernel: "tile_products_ref",
+        workload: format!("{n}xT{tile}"),
+        threads: 1,
+        ns_per_op: s.median * 1e9,
+    });
     if std::path::Path::new("artifacts/manifest.txt").exists() {
-        let mut engine = Engine::load("artifacts").expect("artifacts loadable");
-        let s = bench(2, 10, || engine.tile_products(tile, n, &abuf, &bbuf).unwrap());
-        println!(
-            "pjrt       {n} tiles of {tile}x{tile}: {:>12}  ({:.2} GFLOP/s)",
-            BenchStats::fmt_time(s.median),
-            flops / s.median / 1e9
-        );
-        // larger tiles favor the compiled path
-        for t in [16usize, 32] {
-            let t2 = t * t;
-            let ab: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
-            let bb: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
-            let sp = bench(2, 10, || engine.tile_products(t, 64, &ab, &bb).unwrap());
-            let sr = bench(1, 10, || reference.tile_products(t, 64, &ab, &bb).unwrap());
-            let fl = 2.0 * (64 * t * t * t) as f64;
-            println!(
-                "tile {t:>2}: pjrt {:>12} ({:.2} GFLOP/s) vs reference {:>12} ({:.2} GFLOP/s)",
-                BenchStats::fmt_time(sp.median),
-                fl / sp.median / 1e9,
-                BenchStats::fmt_time(sr.median),
-                fl / sr.median / 1e9
-            );
+        match Engine::load("artifacts") {
+            Ok(mut engine) => {
+                let s = bench(2, 10, || engine.tile_products(tile, n, &abuf, &bbuf).unwrap());
+                println!(
+                    "pjrt       {n} tiles of {tile}x{tile}: {:>12}  ({:.2} GFLOP/s)",
+                    BenchStats::fmt_time(s.median),
+                    flops / s.median / 1e9
+                );
+                // larger tiles favor the compiled path
+                for t in [16usize, 32] {
+                    let t2 = t * t;
+                    let ab: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+                    let bb: Vec<f32> = (0..64 * t2).map(|_| rngf.range(-1.0, 1.0) as f32).collect();
+                    let sp = bench(2, 10, || engine.tile_products(t, 64, &ab, &bb).unwrap());
+                    let sr = bench(1, 10, || reference.tile_products(t, 64, &ab, &bb).unwrap());
+                    let fl = 2.0 * (64 * t * t * t) as f64;
+                    println!(
+                        "tile {t:>2}: pjrt {:>12} ({:.2} GFLOP/s) vs reference {:>12} ({:.2} GFLOP/s)",
+                        BenchStats::fmt_time(sp.median),
+                        fl / sp.median / 1e9,
+                        BenchStats::fmt_time(sr.median),
+                        fl / sr.median / 1e9
+                    );
+                }
+            }
+            Err(e) => println!("(PJRT path unavailable: {e})"),
         }
     } else {
         println!("(artifacts missing — run `make artifacts` for the PJRT side)");
     }
+
+    if let Some(path) = json_path {
+        write_json(&path, &records)?;
+        println!("\nwrote {} records to {path}", records.len());
+    }
+    Ok(())
 }

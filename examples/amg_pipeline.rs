@@ -28,33 +28,79 @@ fn main() -> spgemm_hp::Result<()> {
     // --- SpGEMM 1: A·P ----------------------------------------------------
     println!("\n--- SpGEMM 1: A·P on p={p} ---");
     println!("{:<18} {:>12} {:>12} {:>8}", "model", "comm_max", "volume", "imbal");
-    for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::ColWise] {
+    for kind in
+        [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::ColWise]
+    {
         let model = build_model(&a1, &p1, kind, false)?;
         let cfg = PartitionerConfig { epsilon: 0.03, ..PartitionerConfig::new(p) };
         let prt = partition(&model.h, &cfg)?;
         let m = cost::evaluate(&model.h, &prt, p)?;
-        println!("{:<18} {:>12} {:>12} {:>8.3}", kind.name(), m.comm_max, m.connectivity_volume, m.comp_imbalance());
+        println!(
+            "{:<18} {:>12} {:>12} {:>8.3}",
+            kind.name(),
+            m.comm_max,
+            m.connectivity_volume,
+            m.comp_imbalance()
+        );
     }
     // geometric baseline on the regular grid (paper's "Geometric-row")
     if let Ok(gpart) = Grid3::new(n).subcube_partition(p) {
-        let row = repro::measure_given_partition("amg", "AP", &a1, &p1, ModelKind::RowWise, "geometric-row", &gpart, p)?;
-        println!("{:<18} {:>12} {:>12} {:>8.3}", row.model, row.comm_max, row.volume, row.comp_imbalance);
+        let row = repro::measure_given_partition(
+            "amg",
+            "AP",
+            &a1,
+            &p1,
+            ModelKind::RowWise,
+            "geometric-row",
+            &gpart,
+            p,
+        )?;
+        println!(
+            "{:<18} {:>12} {:>12} {:>8.3}",
+            row.model,
+            row.comm_max,
+            row.volume,
+            row.comp_imbalance
+        );
     }
 
     // --- SpGEMM 2: Pᵀ·(AP) --------------------------------------------------
     let pt = p1.transpose();
     println!("\n--- SpGEMM 2: Pᵀ·(AP) on p={p} ---");
     println!("{:<18} {:>12} {:>12} {:>8}", "model", "comm_max", "volume", "imbal");
-    for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA] {
+    for kind in
+        [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA]
+    {
         let model = build_model(&pt, &ap, kind, false)?;
         let cfg = PartitionerConfig { epsilon: 0.03, ..PartitionerConfig::new(p) };
         let prt = partition(&model.h, &cfg)?;
         let m = cost::evaluate(&model.h, &prt, p)?;
-        println!("{:<18} {:>12} {:>12} {:>8.3}", kind.name(), m.comm_max, m.connectivity_volume, m.comp_imbalance());
+        println!(
+            "{:<18} {:>12} {:>12} {:>8.3}",
+            kind.name(),
+            m.comm_max,
+            m.connectivity_volume,
+            m.comp_imbalance()
+        );
     }
     if let Ok(gpart) = Grid3::new(n).subcube_partition(p) {
-        let row = repro::measure_given_partition("amg", "PTAP", &pt, &ap, ModelKind::OuterProduct, "geometric-outer", &gpart, p)?;
-        println!("{:<18} {:>12} {:>12} {:>8.3}", row.model, row.comm_max, row.volume, row.comp_imbalance);
+        let row = repro::measure_given_partition(
+            "amg",
+            "PTAP",
+            &pt,
+            &ap,
+            ModelKind::OuterProduct,
+            "geometric-outer",
+            &gpart,
+            p,
+        )?;
+        println!(
+            "{:<18} {:>12} {:>12} {:>8.3}",
+            row.model,
+            row.comm_max,
+            row.volume,
+            row.comp_imbalance
+        );
     }
 
     println!("\npaper's conclusion (Sec. 6.1): row-wise suffices for A·P; outer-product");

@@ -51,7 +51,16 @@ fn main() -> spgemm_hp::Result<()> {
 
     println!(
         "{:<16} {:>10} {:>10} {:>11} {:>10} {:>9} {:>9} {:>8} {:>8} {:>6}",
-        "model", "bound_maxQ", "sim_words", "coord_words", "tile_mult", "scalar", "batches", "ms", "pjrt", "ok"
+        "model",
+        "bound_maxQ",
+        "sim_words",
+        "coord_words",
+        "tile_mult",
+        "scalar",
+        "batches",
+        "ms",
+        "pjrt",
+        "ok"
     );
     let mut all_ok = true;
     for kind in [

@@ -22,7 +22,13 @@ fn main() -> spgemm_hp::Result<()> {
 
     // three interior-point iterations: D changes, S_A does not — partition
     // once on the structure, reuse every iteration
-    let kinds = [ModelKind::FineGrained, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::RowWise, ModelKind::MonoC];
+    let kinds = [
+        ModelKind::FineGrained,
+        ModelKind::OuterProduct,
+        ModelKind::MonoA,
+        ModelKind::RowWise,
+        ModelKind::MonoC,
+    ];
     let p = 16;
     // partition ONCE per model using the first iterate's structure
     let d2 = ipm_scaling(a.ncols, &mut rng);
@@ -37,7 +43,13 @@ fn main() -> spgemm_hp::Result<()> {
         let prt = partition(&model.h, &cfg)?;
         let ms = t.elapsed().as_secs_f64() * 1e3;
         let m = cost::evaluate(&model.h, &prt, p)?;
-        println!("{:<16} {:>12} {:>12} {:>10.1}", kind.name(), m.comm_max, m.connectivity_volume, ms);
+        println!(
+            "{:<16} {:>12} {:>12} {:>10.1}",
+            kind.name(),
+            m.comm_max,
+            m.connectivity_volume,
+            ms
+        );
         partitions.push((kind, model, prt));
     }
 

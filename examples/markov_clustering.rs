@@ -50,12 +50,23 @@ fn main() -> spgemm_hp::Result<()> {
     println!("{:<16} {:>12} {:>12}", "model", "comm_max", "volume");
     let mut best: Option<(&str, u64)> = None;
     let mut worst_1d: u64 = 0;
-    for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC] {
+    for kind in [
+        ModelKind::FineGrained,
+        ModelKind::RowWise,
+        ModelKind::OuterProduct,
+        ModelKind::MonoA,
+        ModelKind::MonoC,
+    ] {
         let model = build_model(&m, &m, kind, false)?;
         let cfg = PartitionerConfig { epsilon: 0.10, ..PartitionerConfig::new(p) };
         let prt = partition(&model.h, &cfg)?;
         let metrics = cost::evaluate(&model.h, &prt, p)?;
-        println!("{:<16} {:>12} {:>12}", kind.name(), metrics.comm_max, metrics.connectivity_volume);
+        println!(
+            "{:<16} {:>12} {:>12}",
+            kind.name(),
+            metrics.comm_max,
+            metrics.connectivity_volume
+        );
         if matches!(kind, ModelKind::RowWise) {
             worst_1d = worst_1d.max(metrics.comm_max);
         }
@@ -75,12 +86,7 @@ fn main() -> spgemm_hp::Result<()> {
         let squared = sparse::spgemm(&m, &m)?;
         let inflated = inflate(&squared, 2.0);
         m = ops::prune(&inflated, 1e-4, false);
-        println!(
-            "  iter {}: nnz {} -> {} after prune",
-            it + 1,
-            squared.nnz(),
-            m.nnz()
-        );
+        println!("  iter {}: nnz {} -> {} after prune", it + 1, squared.nnz(), m.nnz());
     }
     // interpret clusters: attractors are rows with a diagonal-dominant entry
     let mut attractors = 0;
@@ -102,7 +108,8 @@ fn main() -> spgemm_hp::Result<()> {
             cluster_of[j] = i as usize;
         }
     }
-    let mut distinct: Vec<usize> = cluster_of.iter().copied().filter(|&c| c != usize::MAX).collect();
+    let mut distinct: Vec<usize> =
+        cluster_of.iter().copied().filter(|&c| c != usize::MAX).collect();
     distinct.sort_unstable();
     distinct.dedup();
     println!("{} clusters identified", distinct.len());

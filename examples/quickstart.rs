@@ -26,7 +26,14 @@ fn main() -> spgemm_hp::Result<()> {
 
     // 2. Build each parallelization model and partition it for p = 8.
     let p = 8;
-    println!("\n{:<16} {:>10} {:>10} {:>12} {:>10}", "model", "vertices", "nets", "comm_max", "volume");
+    println!(
+        "\n{:<16} {:>10} {:>10} {:>12} {:>10}",
+        "model",
+        "vertices",
+        "nets",
+        "comm_max",
+        "volume"
+    );
     for kind in ModelKind::ALL {
         let model = build_model(&a, &b, kind, false)?;
         let cfg = PartitionerConfig { epsilon: 0.03, ..PartitionerConfig::new(p) };

@@ -76,8 +76,7 @@ impl ExecutionPlan {
         let mut need_b: Vec<Vec<u32>> = vec![Vec::new(); b.nnz()];
         let mut producers_c: Vec<Vec<u32>> = vec![Vec::new(); c_struct.nnz()];
         // local mults grouped per worker per tile key
-        let mut groups: Vec<HashMap<(u32, u32, u32), Vec<LocalMult>>> =
-            vec![HashMap::new(); p];
+        let mut groups = vec![HashMap::<(u32, u32, u32), Vec<LocalMult>>::new(); p];
         MultEnum::new(a, b).for_each(|m| {
             let q = alg.mult_part[m.idx as usize];
             push_unique(&mut need_a[m.pa as usize], q);
@@ -86,8 +85,7 @@ impl ExecutionPlan {
                 + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("S_C"))
                 as u32;
             push_unique(&mut producers_c[pc as usize], q);
-            let key =
-                (m.i / tile as u32, m.k / tile as u32, m.j / tile as u32);
+            let key = (m.i / tile as u32, m.k / tile as u32, m.j / tile as u32);
             groups[q as usize]
                 .entry(key)
                 .or_default()

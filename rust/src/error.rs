@@ -1,38 +1,66 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the crate builds fully offline
+//! with no external dependencies, so `thiserror` is not available.
+
+use std::fmt;
 
 /// Unified error type for all spgemm-hp subsystems.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch between operands (e.g. `A.ncols != B.nrows`).
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 
     /// Malformed input data (Matrix Market parse errors, bad triplets, ...).
-    #[error("invalid input: {0}")]
     Invalid(String),
 
     /// A partition violated a structural requirement (wrong length, part
     /// id out of range, balance infeasible, ...).
-    #[error("partition error: {0}")]
     Partition(String),
 
     /// The PJRT runtime could not load, compile, or execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest missing or no variant matches the request.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Configuration / CLI error.
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// An underlying I/O failure.
+    Io(std::io::Error),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Dimension(msg) => write!(f, "dimension mismatch: {msg}"),
+            Error::Invalid(msg) => write!(f, "invalid input: {msg}"),
+            Error::Partition(msg) => write!(f, "partition error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Io(err) => write!(f, "{err}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(err) => Some(err),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(err: std::io::Error) -> Self {
+        Error::Io(err)
+    }
+}
 
 impl Error {
     pub fn dim(msg: impl Into<String>) -> Self {
@@ -40,5 +68,26 @@ impl Error {
     }
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::Invalid(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_prefix() {
+        assert_eq!(Error::dim("A vs B").to_string(), "dimension mismatch: A vs B");
+        assert_eq!(Error::invalid("bad").to_string(), "invalid input: bad");
+        assert_eq!(Error::Runtime("x".into()).to_string(), "runtime error: x");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert!(err.to_string().contains("gone"));
+        assert!(std::error::Error::source(&err).is_some());
+        assert!(std::error::Error::source(&Error::dim("x")).is_none());
     }
 }

@@ -10,7 +10,7 @@ use crate::{Error, Result};
 /// probability `d / ncols` (so each row has ≈ `d` nonzeros). Nonzero
 /// values are uniform in `[0.5, 1.5)`.
 pub fn erdos_renyi(nrows: usize, ncols: usize, d: f64, rng: &mut Rng) -> Result<Csr> {
-    if d < 0.0 || d > ncols as f64 {
+    if !(0.0..=ncols as f64).contains(&d) {
         return Err(Error::invalid(format!("erdos_renyi: d={d} out of range")));
     }
     let p = d / ncols as f64;

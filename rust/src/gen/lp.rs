@@ -175,7 +175,8 @@ mod tests {
     #[test]
     fn rejects_degenerate_params() {
         let mut rng = Rng::new(1);
-        assert!(lp_constraints(&LpParams { nnz_per_col: 0.5, ..LpParams::pds_like(10, 10) }, &mut rng).is_err());
+        let degenerate = LpParams { nnz_per_col: 0.5, ..LpParams::pds_like(10, 10) };
+        assert!(lp_constraints(&degenerate, &mut rng).is_err());
         assert!(lp_constraints(&LpParams::pds_like(0, 10), &mut rng).is_err());
     }
 

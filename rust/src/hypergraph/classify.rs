@@ -209,7 +209,8 @@ mod tests {
         let (a, b) = dense(2, 2, 2);
         let part = Parallelization::Finest.assign(&a, &b);
         let s = classify(&a, &b, &part);
-        assert_eq!(s, ClassSignature { r: false, l: false, u: false, a: false, b: false, c: false });
+        let none = ClassSignature { r: false, l: false, u: false, a: false, b: false, c: false };
+        assert_eq!(s, none);
         assert!(s.consistent());
     }
 
@@ -258,7 +259,9 @@ mod tests {
             {
                 // row-vector times dense: I = 1
                 let (_, b) = dense(1, 2, 2);
-                let a = Csr::from_coo(&Coo::from_triplets(1, 2, [(0, 0, 1.0), (0, 1, 1.0)]).unwrap());
+                let a = Csr::from_coo(
+                    &Coo::from_triplets(1, 2, [(0, 0, 1.0), (0, 1, 1.0)]).unwrap(),
+                );
                 (a, b)
             },
             {

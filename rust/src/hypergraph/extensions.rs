@@ -90,7 +90,7 @@ pub fn aat_symmetric(a: &Csr) -> Result<(Hypergraph, u64)> {
     let mut n_classes = 0u64;
     let mut a_net: Vec<Vec<u32>> = vec![Vec::new(); a.nnz()]; // per A-position
     let mut c_net_pins: Vec<Vec<u32>> = Vec::new();
-    let mut c_net_ids: std::collections::HashMap<(u32, u32), u32> = std::collections::HashMap::new();
+    let mut c_net_ids = std::collections::HashMap::<(u32, u32), u32>::new();
     // iterate mults of A·Aᵀ: (i, k, j) with (i,k) ∈ S_A and (j,k) ∈ S_A
     let acols = super::models::columns_with_positions(a);
     for i in 0..a.nrows {

@@ -135,8 +135,10 @@ impl Hypergraph {
                 if n as usize >= nn {
                     return Err(Error::invalid(format!("vertex {v} lists out-of-range net {n}")));
                 }
-                if !self.pins_of(n as usize).binary_search(&(v as u32)).is_ok() {
-                    return Err(Error::invalid(format!("vertex {v} lists net {n} but is not a pin")));
+                if self.pins_of(n as usize).binary_search(&(v as u32)).is_err() {
+                    return Err(Error::invalid(format!(
+                        "vertex {v} lists net {n} but is not a pin"
+                    )));
                 }
             }
         }

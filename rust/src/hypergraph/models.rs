@@ -288,7 +288,11 @@ pub fn build_model(a: &Csr, b: &Csr, kind: ModelKind, with_nz: bool) -> Result<M
                     j,
                     pa: pa as u32,
                     pb: pb as u32,
-                    idx: if kind == ModelKind::FineGrained { model.fine_off[pa] + (pb - b.rowptr[k]) as u64 } else { 0 },
+                    idx: if kind == ModelKind::FineGrained {
+                        model.fine_off[pa] + (pb - b.rowptr[k]) as u64
+                    } else {
+                        0
+                    },
                 };
                 pins.push(vert(&m));
             }

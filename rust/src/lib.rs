@@ -12,23 +12,31 @@
 //! * a PaToH-like multilevel hypergraph partitioner ([`partition`]),
 //! * the communication-cost metrics and lower bounds of Sec. 4 ([`cost`]),
 //! * parallel and sequential SpGEMM simulators that *execute* a partition
-//!   and validate the modeled costs ([`sim`]),
+//!   and validate the modeled costs, plus a scoped-thread row-block
+//!   parallel Gustavson kernel ([`sim`]),
 //! * a leader/worker coordinator that routes expand/fold traffic and
 //!   batches numeric tile-multiplies ([`coordinator`]) into
-//! * an AOT-compiled JAX/Pallas kernel executed through PJRT ([`runtime`]).
+//! * a tile-product engine ([`runtime`]) with a pure-Rust reference
+//!   backend and, behind the `pallas` cargo feature, the PJRT path for
+//!   AOT-compiled JAX/Pallas kernels,
+//! * experiment drivers regenerating the paper's tables and figures
+//!   ([`repro`]), and a dependency-free CLI layer ([`cli`], [`util`]).
 //!
-//! Python (JAX + Pallas) is used only at build time (`make artifacts`);
-//! the binary is self-contained once `artifacts/` exists.
+//! The default build is fully self-contained: no external crates, no
+//! network, no Python. Python (JAX + Pallas) is used only at build time
+//! (`make artifacts`) to produce HLO artifacts for the opt-in `pallas`
+//! runtime path; without them the reference backend serves every caller
+//! with identical semantics.
 
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
 pub mod error;
 pub mod gen;
 pub mod hypergraph;
-pub mod cost;
-pub mod cli;
-pub mod coordinator;
+pub mod partition;
 pub mod repro;
 pub mod runtime;
-pub mod partition;
 pub mod sim;
 pub mod sparse;
 pub mod util;

@@ -110,7 +110,8 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let model = build_model(&a, &b, kind, false)?;
     let build_ms = t.elapsed_ms();
     let t = Timer::start();
-    let cfg = partition::PartitionerConfig { epsilon, seed, ..partition::PartitionerConfig::new(p) };
+    let cfg =
+        partition::PartitionerConfig { epsilon, seed, ..partition::PartitionerConfig::new(p) };
     let part = partition::partition(&model.h, &cfg)?;
     let part_ms = t.elapsed_ms();
     let m = cost::evaluate(&model.h, &part, p)?;
@@ -169,9 +170,15 @@ fn cmd_repro(args: &Args) -> Result<()> {
             let rows = repro::figures::table2(scale, seed)?;
             repro::figures::print_table2(&rows);
         }
-        "fig7" => run_fig("fig7-amg", repro::figures::fig7(scale, seed, &repro::figures::FIG7_MODELS)?)?,
-        "fig8" => run_fig("fig8-lp", repro::figures::fig8(scale, seed, &repro::figures::FIG8_MODELS)?)?,
-        "fig9" => run_fig("fig9-mcl", repro::figures::fig9(scale, seed, &repro::figures::FIG9_MODELS)?)?,
+        "fig7" => {
+            run_fig("fig7-amg", repro::figures::fig7(scale, seed, &repro::figures::FIG7_MODELS)?)?
+        }
+        "fig8" => {
+            run_fig("fig8-lp", repro::figures::fig8(scale, seed, &repro::figures::FIG8_MODELS)?)?
+        }
+        "fig9" => {
+            run_fig("fig9-mcl", repro::figures::fig9(scale, seed, &repro::figures::FIG9_MODELS)?)?
+        }
         "bounds" => {
             println!("\n=== eq. (1) bound comparison (Sec. 4.1) ===");
             println!(
@@ -240,7 +247,15 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 
     println!(
         "\n{:<14} {:>12} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8} {:>6}",
-        "model", "bound_maxQ", "sim_words", "coord_words", "tile_mult", "scalar", "batches", "ms", "ok"
+        "model",
+        "bound_maxQ",
+        "sim_words",
+        "coord_words",
+        "tile_mult",
+        "scalar",
+        "batches",
+        "ms",
+        "ok"
     );
     for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC] {
         let model = build_model(&inst.a, &inst.b, kind, false)?;

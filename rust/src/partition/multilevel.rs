@@ -85,7 +85,12 @@ pub fn bisect_multilevel(
 
 /// Extract the sub-hypergraph induced by `side == which`. Returns the
 /// sub-hypergraph and the original vertex ids.
-fn induce(h: &Hypergraph, weights: &[u64], side: &[u8], which: u8) -> (Hypergraph, Vec<u64>, Vec<u32>) {
+fn induce(
+    h: &Hypergraph,
+    weights: &[u64],
+    side: &[u8],
+    which: u8,
+) -> (Hypergraph, Vec<u64>, Vec<u32>) {
     let mut orig: Vec<u32> = Vec::new();
     let mut newid = vec![u32::MAX; h.num_vertices()];
     for v in 0..h.num_vertices() {

@@ -183,9 +183,10 @@ pub fn bounds_comparison(seed: u64) -> Result<Vec<BoundRow>> {
     let n = 512;
     let a = gen::erdos_renyi(n, n, 8.0, &mut rng)?;
     let b = gen::erdos_renyi(n, n, 8.0, &mut rng)?;
+    let diag = crate::sparse::Csr::identity(4096);
     for (name, a, b) in [
         ("er512-d8".to_string(), a, b),
-        ("diagonal-4096".to_string(), crate::sparse::Csr::identity(4096), crate::sparse::Csr::identity(4096)),
+        ("diagonal-4096".to_string(), diag.clone(), diag),
     ] {
         let model = build_model(&a, &b, ModelKind::FineGrained, false)?;
         let cfg = PartitionerConfig { epsilon: 0.10, seed, ..PartitionerConfig::new(p) };
@@ -261,7 +262,12 @@ mod tests {
     fn fig7_qualitative_shape_small() {
         let (ap, ptap) = workloads::amg_model_problem(6).unwrap();
         let p = 8;
-        let models = [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::ColWise];
+        let models = [
+            ModelKind::FineGrained,
+            ModelKind::RowWise,
+            ModelKind::OuterProduct,
+            ModelKind::ColWise,
+        ];
         let mut cost = std::collections::HashMap::new();
         for kind in models {
             let r = measure_model("amg", "ap", &ap.a, &ap.b, kind, p, 0.03, 3).unwrap();

@@ -57,6 +57,7 @@ impl std::fmt::Display for ExperimentRow {
 }
 
 /// Partition one model of one SpGEMM instance for one processor count.
+#[allow(clippy::too_many_arguments)]
 pub fn measure_model(
     app: &str,
     instance: &str,
@@ -87,6 +88,7 @@ pub fn measure_model(
 }
 
 /// Evaluate a *given* partition of a model (geometric baselines).
+#[allow(clippy::too_many_arguments)]
 pub fn measure_given_partition(
     app: &str,
     instance: &str,

@@ -82,18 +82,18 @@ pub fn lp_instances(scale: u32, seed: u64) -> Result<Vec<Instance>> {
 pub fn mcl_instances(scale: u32, seed: u64) -> Result<Vec<Instance>> {
     let mut rng = Rng::new(seed);
     let up = scale.saturating_sub(1); // bump graph sizes with scale
-    let mut specs: Vec<(&str, Csr)> = Vec::new();
-    // protein-protein interaction graphs: mild skew, ~5.8k nodes (paper)
-    specs.push(("biogrid11", gen::rmat(&RmatParams::protein(9 + up, 10.0), &mut rng)?));
-    specs.push(("dip", gen::rmat(&RmatParams::protein(9 + up, 4.4), &mut rng)?));
-    specs.push(("wiphi", gen::rmat(&RmatParams::protein(9 + up, 4.2), &mut rng)?));
-    // social networks: strong skew
-    specs.push(("dblp", gen::rmat(&RmatParams::social(11 + up, 2.5), &mut rng)?));
-    specs.push(("enron", gen::rmat(&RmatParams::social(10 + up, 5.0), &mut rng)?));
-    specs.push(("facebook", gen::rmat(&RmatParams::social(9 + up, 21.0), &mut rng)?));
-    // road network: regular, near-planar
-    let side = 40 << up.min(2);
-    specs.push(("roadnetca", gen::road_network(side, side, 0.3, &mut rng)?));
+    let side = 40 << up.min(2); // road network: regular, near-planar
+    let specs: Vec<(&str, Csr)> = vec![
+        // protein-protein interaction graphs: mild skew, ~5.8k nodes (paper)
+        ("biogrid11", gen::rmat(&RmatParams::protein(9 + up, 10.0), &mut rng)?),
+        ("dip", gen::rmat(&RmatParams::protein(9 + up, 4.4), &mut rng)?),
+        ("wiphi", gen::rmat(&RmatParams::protein(9 + up, 4.2), &mut rng)?),
+        // social networks: strong skew
+        ("dblp", gen::rmat(&RmatParams::social(11 + up, 2.5), &mut rng)?),
+        ("enron", gen::rmat(&RmatParams::social(10 + up, 5.0), &mut rng)?),
+        ("facebook", gen::rmat(&RmatParams::social(9 + up, 21.0), &mut rng)?),
+        ("roadnetca", gen::road_network(side, side, 0.3, &mut rng)?),
+    ];
     Ok(specs
         .into_iter()
         .map(|(name, a)| Instance { name: name.to_string(), b: a.clone(), a })
@@ -162,9 +162,7 @@ mod tests {
         // facebook analogue is denser per row than dblp analogue
         let fb = inst.iter().find(|i| i.name == "facebook").unwrap();
         let dblp = inst.iter().find(|i| i.name == "dblp").unwrap();
-        assert!(
-            fb.a.nnz() as f64 / fb.a.nrows as f64 > dblp.a.nnz() as f64 / dblp.a.nrows as f64
-        );
+        assert!(fb.a.nnz() as f64 / fb.a.nrows as f64 > dblp.a.nnz() as f64 / dblp.a.nrows as f64);
     }
 
     #[test]

@@ -7,13 +7,19 @@
 //! (`HloModuleProto::from_text_file` → `XlaComputation` →
 //! `client.compile`), and exposes a batched tile-matmul entry point.
 //!
-//! Python never runs at execution time. When artifacts are absent (unit
-//! tests, cold checkouts) [`Engine::load_or_reference`] falls back to a
-//! pure-rust reference backend with identical semantics, so every caller
-//! works in both modes; integration tests assert the PJRT path when
-//! artifacts exist.
+//! Python never runs at execution time, and the PJRT path is gated behind
+//! the `pallas` cargo feature (off by default) so a clean checkout builds
+//! with no network and no artifacts. In the default build — and whenever
+//! artifacts are absent (unit tests, cold checkouts) —
+//! [`Engine::load_or_reference`] falls back to a pure-rust reference
+//! backend with identical semantics, so every caller works in both modes;
+//! integration tests assert the PJRT path when artifacts exist.
+
+#[cfg(feature = "pallas")]
+mod xla;
 
 use crate::{Error, Result};
+#[cfg(feature = "pallas")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -77,6 +83,7 @@ pub fn parse_manifest(dir: &Path) -> Result<Vec<Variant>> {
 
 enum Backend {
     /// PJRT CPU client with compiled executables per variant name.
+    #[cfg(feature = "pallas")]
     Pjrt {
         #[allow(dead_code)] // owns the executables' device
         client: xla::PjRtClient,
@@ -99,11 +106,12 @@ pub struct Engine {
 
 impl Engine {
     /// Load and compile every artifact in `dir`.
+    #[cfg(feature = "pallas")]
     pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
         let dir = dir.as_ref();
         let variants = parse_manifest(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
         let mut exes = HashMap::new();
         for v in &variants {
             let proto = xla::HloModuleProto::from_text_file(
@@ -121,13 +129,45 @@ impl Engine {
         Ok(Engine { backend: Backend::Pjrt { client, exes }, variants, dispatches: 0 })
     }
 
+    /// Load and compile every artifact in `dir`. Without the `pallas`
+    /// feature the PJRT path is not compiled in, so loading always fails
+    /// (and [`Engine::load_or_reference`] falls back cleanly).
+    #[cfg(not(feature = "pallas"))]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        Err(Error::Runtime(format!(
+            "built without the `pallas` feature; cannot load PJRT artifacts from {}",
+            dir.as_ref().display()
+        )))
+    }
+
     /// Pure-rust fallback with the same interface.
     pub fn reference() -> Engine {
         // a synthetic variant table so batching logic behaves identically
         let variants = vec![
-            Variant { kind: VariantKind::Products, name: "ref_T8".into(), tile: 8, batch: 64, num_out: 0, file: PathBuf::new() },
-            Variant { kind: VariantKind::Products, name: "ref_T16".into(), tile: 16, batch: 64, num_out: 0, file: PathBuf::new() },
-            Variant { kind: VariantKind::Products, name: "ref_T32".into(), tile: 32, batch: 64, num_out: 0, file: PathBuf::new() },
+            Variant {
+                kind: VariantKind::Products,
+                name: "ref_T8".into(),
+                tile: 8,
+                batch: 64,
+                num_out: 0,
+                file: PathBuf::new(),
+            },
+            Variant {
+                kind: VariantKind::Products,
+                name: "ref_T16".into(),
+                tile: 16,
+                batch: 64,
+                num_out: 0,
+                file: PathBuf::new(),
+            },
+            Variant {
+                kind: VariantKind::Products,
+                name: "ref_T32".into(),
+                tile: 32,
+                batch: 64,
+                num_out: 0,
+                file: PathBuf::new(),
+            },
         ];
         Engine { backend: Backend::Reference, variants, dispatches: 0 }
     }
@@ -138,7 +178,7 @@ impl Engine {
         match Engine::load(dir) {
             Ok(e) => e,
             Err(err) => {
-                log::warn!("PJRT artifacts unavailable ({err}); using reference backend");
+                eprintln!("spgemm-hp: PJRT artifacts unavailable ({err}); using reference backend");
                 Engine::reference()
             }
         }
@@ -146,7 +186,14 @@ impl Engine {
 
     /// True when running through PJRT-compiled artifacts.
     pub fn is_pjrt(&self) -> bool {
-        matches!(self.backend, Backend::Pjrt { .. })
+        #[cfg(feature = "pallas")]
+        {
+            matches!(self.backend, Backend::Pjrt { .. })
+        }
+        #[cfg(not(feature = "pallas"))]
+        {
+            false
+        }
     }
 
     /// Tile sizes available for `tile_products`.
@@ -162,6 +209,7 @@ impl Engine {
         t
     }
 
+    #[cfg(feature = "pallas")]
     fn pick_products_variant(&self, tile: usize, n: usize) -> Result<&Variant> {
         self.variants
             .iter()
@@ -182,7 +230,13 @@ impl Engine {
     /// edge `tile`, each stored row-major in `a`/`b` (`n·tile²` floats).
     /// Batches larger than any compiled variant are chunked; short
     /// batches are zero-padded.
-    pub fn tile_products(&mut self, tile: usize, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    pub fn tile_products(
+        &mut self,
+        tile: usize,
+        n: usize,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
         let t2 = tile * tile;
         if a.len() != n * t2 || b.len() != n * t2 {
             return Err(Error::dim(format!(
@@ -217,6 +271,7 @@ impl Engine {
                 }
                 Ok(out)
             }
+            #[cfg(feature = "pallas")]
             Backend::Pjrt { exes, .. } => {
                 let variant = self.pick_products_variant(tile, n)?.clone();
                 let cap = variant.batch;
@@ -238,7 +293,7 @@ impl Engine {
                         .reshape(&[cap as i64, tile as i64, tile as i64])
                         .map_err(|e| Error::Runtime(format!("reshape B: {e}")))?;
                     let result = exe
-                        .execute::<xla::Literal>(&[la, lb])
+                        .execute(&[la, lb])
                         .map_err(|e| Error::Runtime(format!("execute: {e}")))?[0][0]
                         .to_literal_sync()
                         .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
@@ -287,6 +342,14 @@ mod tests {
         assert!(parse_manifest(&dir).is_err());
         std::fs::write(dir.join("manifest.txt"), "").unwrap();
         assert!(parse_manifest(&dir).is_err());
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let dir = std::env::temp_dir().join("spgemm_hp_no_such_artifacts");
+        assert!(Engine::load(&dir).is_err());
+        let e = Engine::load_or_reference(&dir);
+        assert!(!e.is_pjrt());
     }
 
     #[test]

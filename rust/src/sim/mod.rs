@@ -1,4 +1,4 @@
-//! SpGEMM simulators.
+//! SpGEMM simulators and the shared-memory execution layer.
 //!
 //! * [`parallel`] — executes a partitioned SpGEMM on `p` simulated
 //!   processors with the expand/fold communication pattern of Lem. 4.3
@@ -6,6 +6,10 @@
 //!   critical-path words and *numerically validating* the result against
 //!   the reference [`crate::sparse::spgemm`]. The measured costs bracket
 //!   the hypergraph bound of Lem. 4.2: `|Q_i| ≤ send_i+recv_i ≤ 3·|Q_i|`.
+//! * [`threads`] — scoped-thread row-block parallelism: a parallel
+//!   Gustavson SpGEMM ([`spgemm_parallel`]) that is bit-identical to the
+//!   sequential kernel, and a threaded driver for the Lem. 4.3 simulator
+//!   ([`simulate_threaded`]).
 //! * [`sequential`] — the two-level-memory model of Sec. 4.2: executes a
 //!   multiplication schedule against an LRU fast memory of `M` words,
 //!   counting loads and stores (Lem. 4.9's blocked algorithm is one such
@@ -13,6 +17,8 @@
 
 pub mod parallel;
 pub mod sequential;
+pub mod threads;
 
 pub use parallel::{lower, simulate, Algorithm, SimReport};
 pub use sequential::{simulate_sequential, SeqReport};
+pub use threads::{simulate_threaded, spgemm_parallel};

@@ -73,7 +73,7 @@ pub fn lower(model: &Model, part: &[u32], a: &Csr, b: &Csr, p: usize) -> Result<
 }
 
 /// Per-processor and aggregate communication measurements.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     pub p: usize,
     pub sends: Vec<u64>,
@@ -104,7 +104,7 @@ impl SimReport {
 /// (`participants[0]` is the root). For a broadcast, data flows root →
 /// leaves: node `t` sends to `2t+1`, `2t+2`; every non-root receives one
 /// word. For a reduction the flow reverses (sends/recvs swap).
-fn tree_traffic(
+pub(crate) fn tree_traffic(
     participants: &[u32],
     broadcast: bool,
     sends: &mut [u64],
@@ -134,45 +134,44 @@ fn tree_traffic(
     (usize::BITS - s.leading_zeros()) as u64
 }
 
-/// Execute the algorithm: expand A and B, multiply locally, fold C.
-/// Returns the communication report and the numerically computed C
-/// (already validated to share the reference structure).
-pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
-    let p = alg.p;
-    let c_struct = spgemm_structure(a, b)?;
-    if alg.owner_c.len() != c_struct.nnz() {
-        return Err(Error::Partition("owner_c length != nnz(C)".into()));
+/// Everything a simulation gathers from the multiplication sweep before
+/// the communication accounting: consumer/producer lists in canonical
+/// encounter order, per-part mult counts, and per-part partial sums. The
+/// sequential and row-block-threaded drivers both produce this (with
+/// identical contents) and share [`finish`].
+pub(crate) struct Gathered {
+    pub need_a: Vec<Vec<u32>>,
+    pub need_b: Vec<Vec<u32>>,
+    pub producers_c: Vec<Vec<u32>>,
+    pub local_mults: Vec<u64>,
+    pub partial: Vec<HashMap<u32, f64>>,
+}
+
+impl Gathered {
+    pub fn new(nnz_a: usize, nnz_b: usize, nnz_c: usize, p: usize) -> Self {
+        Gathered {
+            need_a: vec![Vec::new(); nnz_a],
+            need_b: vec![Vec::new(); nnz_b],
+            producers_c: vec![Vec::new(); nnz_c],
+            local_mults: vec![0u64; p],
+            partial: vec![HashMap::new(); p],
+        }
     }
+}
+
+/// Shared back half of the simulation: expand/fold tree accounting and
+/// the numeric fold, from gathered per-mult data.
+pub(crate) fn finish(alg: &Algorithm, c_struct: &Csr, g: Gathered) -> (SimReport, Csr) {
+    let p = alg.p;
     let mut sends = vec![0u64; p];
     let mut recvs = vec![0u64; p];
     let mut rounds = 0u64;
     let mut expand_volume = 0u64;
     let mut fold_volume = 0u64;
 
-    // --- consumers of each input nonzero --------------------------------
-    // consumers[pos] = sorted distinct parts whose mults read the nonzero
-    let mut need_a: Vec<Vec<u32>> = vec![Vec::new(); a.nnz()];
-    let mut need_b: Vec<Vec<u32>> = vec![Vec::new(); b.nnz()];
-    // producers of each output nonzero
-    let mut producers_c: Vec<Vec<u32>> = vec![Vec::new(); c_struct.nnz()];
-    let mut local_mults = vec![0u64; p];
-    {
-        let me = MultEnum::new(a, b);
-        // c position lookup per (i, j)
-        me.for_each(|m| {
-            let q = alg.mult_part[m.idx as usize];
-            local_mults[q as usize] += 1;
-            push_unique(&mut need_a[m.pa as usize], q);
-            push_unique(&mut need_b[m.pb as usize], q);
-            let pc = c_struct.rowptr[m.i as usize]
-                + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("S_C") ;
-            push_unique(&mut producers_c[pc], q);
-        });
-    }
-
-    // --- expand phase -----------------------------------------------------
+    // --- expand phase ----------------------------------------------------
     let mut max_depth = 0u64;
-    for (pos, need) in need_a.iter().enumerate() {
+    for (pos, need) in g.need_a.iter().enumerate() {
         let owner = alg.owner_a[pos];
         let participants = tree_participants(owner, need);
         if participants.len() > 1 {
@@ -181,7 +180,7 @@ pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
             max_depth = max_depth.max(d);
         }
     }
-    for (pos, need) in need_b.iter().enumerate() {
+    for (pos, need) in g.need_b.iter().enumerate() {
         let owner = alg.owner_b[pos];
         let participants = tree_participants(owner, need);
         if participants.len() > 1 {
@@ -192,21 +191,10 @@ pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
     }
     rounds += max_depth;
 
-    // --- local multiply ---------------------------------------------------
-    // per-processor partial sums keyed by C position
-    let mut partial: Vec<HashMap<u32, f64>> = vec![HashMap::new(); p];
-    MultEnum::new(a, b).for_each(|m| {
-        let q = alg.mult_part[m.idx as usize] as usize;
-        let pc = c_struct.rowptr[m.i as usize]
-            + c_struct.row_cols(m.i as usize).binary_search(&m.j).unwrap();
-        let v = a.values[m.pa as usize] * b.values[m.pb as usize];
-        *partial[q].entry(pc as u32).or_insert(0.0) += v;
-    });
-
-    // --- fold phase ---------------------------------------------------------
+    // --- fold phase ------------------------------------------------------
     let mut max_depth = 0u64;
     let mut c_values = vec![0f64; c_struct.nnz()];
-    for (pc, prod) in producers_c.iter().enumerate() {
+    for (pc, prod) in g.producers_c.iter().enumerate() {
         let owner = alg.owner_c[pc];
         let participants = tree_participants(owner, prod);
         if participants.len() > 1 {
@@ -217,7 +205,7 @@ pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
         // numeric reduction
         let mut sum = 0.0;
         for &q in prod {
-            if let Some(v) = partial[q as usize].get(&(pc as u32)) {
+            if let Some(v) = g.partial[q as usize].get(&(pc as u32)) {
                 sum += v;
             }
         }
@@ -232,21 +220,50 @@ pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
         colind: c_struct.colind.clone(),
         values: c_values,
     };
-    Ok((
-        SimReport { p, sends, recvs, expand_volume, fold_volume, rounds, local_mults },
-        c,
-    ))
+    let report = SimReport {
+        p,
+        sends,
+        recvs,
+        expand_volume,
+        fold_volume,
+        rounds,
+        local_mults: g.local_mults,
+    };
+    (report, c)
+}
+
+/// Execute the algorithm: expand A and B, multiply locally, fold C.
+/// Returns the communication report and the numerically computed C
+/// (already validated to share the reference structure).
+pub fn simulate(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(SimReport, Csr)> {
+    let c_struct = spgemm_structure(a, b)?;
+    if alg.owner_c.len() != c_struct.nnz() {
+        return Err(Error::Partition("owner_c length != nnz(C)".into()));
+    }
+    let mut g = Gathered::new(a.nnz(), b.nnz(), c_struct.nnz(), alg.p);
+    MultEnum::new(a, b).for_each(|m| {
+        let q = alg.mult_part[m.idx as usize];
+        g.local_mults[q as usize] += 1;
+        push_unique(&mut g.need_a[m.pa as usize], q);
+        push_unique(&mut g.need_b[m.pb as usize], q);
+        let pc = c_struct.rowptr[m.i as usize]
+            + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("S_C");
+        push_unique(&mut g.producers_c[pc], q);
+        let v = a.values[m.pa as usize] * b.values[m.pb as usize];
+        *g.partial[q as usize].entry(pc as u32).or_insert(0.0) += v;
+    });
+    Ok(finish(alg, &c_struct, g))
 }
 
 #[inline]
-fn push_unique(v: &mut Vec<u32>, q: u32) {
+pub(crate) fn push_unique(v: &mut Vec<u32>, q: u32) {
     if !v.contains(&q) {
         v.push(q);
     }
 }
 
 /// Owner first, then the remaining consumers.
-fn tree_participants(owner: u32, need: &[u32]) -> Vec<u32> {
+pub(crate) fn tree_participants(owner: u32, need: &[u32]) -> Vec<u32> {
     let mut parts = Vec::with_capacity(need.len() + 1);
     parts.push(owner);
     for &q in need {
@@ -262,6 +279,7 @@ mod tests {
     use super::*;
     use crate::cost;
     use crate::hypergraph::models::{build_model, ModelKind};
+    use crate::sim::threads::simulate_threaded;
     use crate::partition::{partition, PartitionerConfig};
     use crate::sparse::{spgemm, Coo};
     use crate::util::Rng;
@@ -328,7 +346,9 @@ mod tests {
         // Lem. 4.2 / Lem. 4.3: per-processor words ∈ [|Q_i|, 3·|Q_i|].
         let mut rng = Rng::new(3);
         let (a, b) = random_instance(&mut rng, 20, 16, 18, 0.2);
-        for kind in [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoC] {
+        for kind in
+            [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoC]
+        {
             let model = build_model(&a, &b, kind, false).unwrap();
             let p = 4;
             let cfg = PartitionerConfig { epsilon: 0.25, seed: 11, ..PartitionerConfig::new(p) };
@@ -391,5 +411,23 @@ mod tests {
         tree_traffic(&[0, 1, 2, 3], false, &mut s2, &mut r2);
         assert_eq!(s2, vec![0, 1, 1, 1]);
         assert_eq!(r2[0], 2);
+    }
+
+    #[test]
+    fn threaded_simulation_is_bit_identical() {
+        let mut rng = Rng::new(13);
+        let (a, b) = random_instance(&mut rng, 24, 20, 22, 0.2);
+        for kind in [ModelKind::RowWise, ModelKind::MonoC, ModelKind::FineGrained] {
+            let model = build_model(&a, &b, kind, false).unwrap();
+            let cfg = PartitionerConfig { epsilon: 0.25, ..PartitionerConfig::new(5) };
+            let part = partition(&model.h, &cfg).unwrap();
+            let alg = lower(&model, &part, &a, &b, 5).unwrap();
+            let (rep_seq, c_seq) = simulate(&a, &b, &alg).unwrap();
+            for t in [1usize, 2, 4, 8] {
+                let (rep_par, c_par) = simulate_threaded(&a, &b, &alg, t).unwrap();
+                assert_eq!(rep_par, rep_seq, "{kind:?} t={t} report");
+                assert_eq!(c_par, c_seq, "{kind:?} t={t} values");
+            }
+        }
     }
 }

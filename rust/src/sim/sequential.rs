@@ -85,7 +85,12 @@ impl Lru {
 /// Execute the multiplications of `C = A·B` in `schedule` order (a
 /// permutation of the canonical mult indices — or any subsequence) with
 /// fast-memory capacity `m_words ≥ 3`.
-pub fn simulate_sequential(a: &Csr, b: &Csr, schedule: &[u64], m_words: usize) -> Result<SeqReport> {
+pub fn simulate_sequential(
+    a: &Csr,
+    b: &Csr,
+    schedule: &[u64],
+    m_words: usize,
+) -> Result<SeqReport> {
     if m_words < 3 {
         return Err(Error::invalid("fast memory must hold at least 3 words"));
     }

@@ -1,0 +1,337 @@
+//! Scoped-thread execution layer: row-block parallel Gustavson SpGEMM and
+//! a threaded driver for the distributed-memory simulator.
+//!
+//! Parallelization is by contiguous blocks of A-rows, balanced by the
+//! per-row multiplication count `Σ_{k ∈ A[i,:]} nnz(B[k,:])` (the same
+//! `|V^m|` weight the hypergraph models use). Row blocks are the natural
+//! shared-memory unit for Gustavson's algorithm — every output row of C
+//! depends on exactly one row of A — so workers share the inputs
+//! immutably and write disjoint slices of the output, in the spirit of
+//! Buluç & Gilbert's parallel SpGEMM work (arXiv:1109.3739) and the
+//! in-node level of Azad et al. (arXiv:1510.00844).
+//!
+//! Both entry points are *bit-identical* to their sequential
+//! counterparts: each C row is accumulated by one thread in canonical
+//! order, so no floating-point reassociation occurs. The integration
+//! suite asserts exact equality across thread counts and workloads.
+
+use super::parallel::{finish, push_unique, Algorithm, Gathered, SimReport};
+use crate::sparse::spgemm::spgemm_rows;
+use crate::sparse::{spgemm, spgemm_structure, Csr};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::ops::Range;
+
+/// Split `0..costs.len()` into exactly `nthreads` contiguous ranges with
+/// near-equal total cost (some may be empty when costs are skewed or
+/// there are fewer items than threads).
+pub fn row_blocks(costs: &[u64], nthreads: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    let t = nthreads.max(1);
+    let total: u64 = costs.iter().sum();
+    let mut out = Vec::with_capacity(t);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for bidx in 0..t {
+        let end = if bidx == t - 1 {
+            n
+        } else if total == 0 {
+            n * (bidx + 1) / t
+        } else {
+            let target = (total as u128 * (bidx as u128 + 1) / t as u128) as u64;
+            let mut e = start;
+            while e < n && acc < target {
+                acc += costs[e];
+                e += 1;
+            }
+            e
+        };
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Per-row multiplication counts of `C = A·B` (the row-block balance
+/// weights).
+pub fn row_mult_counts(a: &Csr, b: &Csr) -> Vec<u64> {
+    (0..a.nrows)
+        .map(|i| {
+            a.row_cols(i)
+                .iter()
+                .map(|&k| (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64)
+                .sum()
+        })
+        .collect()
+}
+
+/// Row-block parallel Gustavson SpGEMM on `nthreads` scoped threads.
+///
+/// Produces exactly the same canonical CSR — rowptr, colind, *and* values
+/// bit for bit — as the sequential [`spgemm`], for any thread count: both
+/// build on the shared `spgemm_rows` kernel, and each C row is produced
+/// by exactly one thread in canonical order.
+pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Result<Csr> {
+    if a.ncols != b.nrows {
+        return Err(Error::dim(format!(
+            "spgemm_parallel: A is {}x{}, B is {}x{}",
+            a.nrows, a.ncols, b.nrows, b.ncols
+        )));
+    }
+    if nthreads == 0 {
+        return Err(Error::invalid("spgemm_parallel: nthreads must be >= 1"));
+    }
+    if nthreads == 1 || a.nrows <= 1 {
+        return spgemm(a, b);
+    }
+    let blocks = row_blocks(&row_mult_counts(a, b), nthreads);
+    let results: Vec<(Vec<usize>, Vec<u32>, Vec<f64>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = blocks
+            .iter()
+            .cloned()
+            .map(|r| s.spawn(move || spgemm_rows(a, b, r)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("spgemm_parallel worker panicked")).collect()
+    });
+    let nnz: usize = results.iter().map(|(_, c, _)| c.len()).sum();
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut colind: Vec<u32> = Vec::with_capacity(nnz);
+    let mut values: Vec<f64> = Vec::with_capacity(nnz);
+    let mut acc = 0usize;
+    for (row_len, c, v) in results {
+        for len in row_len {
+            acc += len;
+            rowptr.push(acc);
+        }
+        colind.extend_from_slice(&c);
+        values.extend_from_slice(&v);
+    }
+    Ok(Csr { nrows: a.nrows, ncols: b.ncols, rowptr, colind, values })
+}
+
+/// Per-block gather output for the threaded simulator (offsets are
+/// relative to the block's first A/C position).
+struct BlockGather {
+    rows: Range<usize>,
+    need_a: Vec<Vec<u32>>,
+    need_b_pairs: Vec<(u32, u32)>,
+    producers_c: Vec<Vec<u32>>,
+    local_mults: Vec<u64>,
+    partial: Vec<HashMap<u32, f64>>,
+}
+
+fn gather_row_block(
+    a: &Csr,
+    b: &Csr,
+    c_struct: &Csr,
+    alg: &Algorithm,
+    rows: Range<usize>,
+    idx_start: u64,
+) -> BlockGather {
+    let pa_lo = a.rowptr[rows.start];
+    let pa_hi = a.rowptr[rows.end];
+    let pc_lo = c_struct.rowptr[rows.start];
+    let pc_hi = c_struct.rowptr[rows.end];
+    let mut out = BlockGather {
+        rows: rows.clone(),
+        need_a: vec![Vec::new(); pa_hi - pa_lo],
+        need_b_pairs: Vec::new(),
+        producers_c: vec![Vec::new(); pc_hi - pc_lo],
+        local_mults: vec![0u64; alg.p],
+        partial: vec![HashMap::new(); alg.p],
+    };
+    let mut idx = idx_start;
+    for i in rows {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            for pb in b.rowptr[k]..b.rowptr[k + 1] {
+                let j = b.colind[pb];
+                let q = alg.mult_part[idx as usize];
+                idx += 1;
+                out.local_mults[q as usize] += 1;
+                push_unique(&mut out.need_a[pa - pa_lo], q);
+                out.need_b_pairs.push((pb as u32, q));
+                let pc = c_struct.rowptr[i]
+                    + c_struct.row_cols(i).binary_search(&j).expect("mult projects into S_C");
+                push_unique(&mut out.producers_c[pc - pc_lo], q);
+                let v = a.values[pa] * b.values[pb];
+                *out.partial[q as usize].entry(pc as u32).or_insert(0.0) += v;
+            }
+        }
+    }
+    out
+}
+
+/// The threaded per-part simulator driver: the multiplication sweep
+/// (consumer/producer discovery and per-part partial sums) runs on
+/// `nthreads` scoped threads over balanced row blocks; the expand/fold
+/// tree accounting then runs on the merged result. Bit-identical to
+/// [`super::parallel::simulate`] — block merge preserves the canonical
+/// encounter order, and each C position's partials are accumulated by a
+/// single thread.
+pub fn simulate_threaded(
+    a: &Csr,
+    b: &Csr,
+    alg: &Algorithm,
+    nthreads: usize,
+) -> Result<(SimReport, Csr)> {
+    if nthreads == 0 {
+        return Err(Error::invalid("simulate_threaded: nthreads must be >= 1"));
+    }
+    if nthreads == 1 {
+        return super::parallel::simulate(a, b, alg);
+    }
+    let c_struct = spgemm_structure(a, b)?;
+    if alg.owner_c.len() != c_struct.nnz() {
+        return Err(Error::Partition("owner_c length != nnz(C)".into()));
+    }
+    let costs = row_mult_counts(a, b);
+    let mut row_off = vec![0u64; a.nrows + 1];
+    for i in 0..a.nrows {
+        row_off[i + 1] = row_off[i] + costs[i];
+    }
+    if *row_off.last().unwrap() != alg.mult_part.len() as u64 {
+        return Err(Error::Partition("mult_part length != |V^m|".into()));
+    }
+    let blocks = row_blocks(&costs, nthreads);
+    let c_ref = &c_struct;
+    let row_off_ref = &row_off;
+    let outs: Vec<BlockGather> = std::thread::scope(|s| {
+        let handles: Vec<_> = blocks
+            .iter()
+            .cloned()
+            .map(|r| {
+                s.spawn(move || gather_row_block(a, b, c_ref, alg, r.clone(), row_off_ref[r.start]))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("simulate worker panicked")).collect()
+    });
+
+    // merge in block order = canonical mult order
+    let mut g = Gathered::new(a.nnz(), b.nnz(), c_struct.nnz(), alg.p);
+    for out in outs {
+        let pa_lo = a.rowptr[out.rows.start];
+        for (off, consumers) in out.need_a.into_iter().enumerate() {
+            g.need_a[pa_lo + off] = consumers;
+        }
+        let pc_lo = c_struct.rowptr[out.rows.start];
+        for (off, producers) in out.producers_c.into_iter().enumerate() {
+            g.producers_c[pc_lo + off] = producers;
+        }
+        for (pb, q) in out.need_b_pairs {
+            push_unique(&mut g.need_b[pb as usize], q);
+        }
+        for (q, count) in out.local_mults.into_iter().enumerate() {
+            g.local_mults[q] += count;
+        }
+        // C positions are row-local, so the per-part maps from different
+        // blocks have disjoint key sets — this merge never reassociates.
+        for (q, map) in out.partial.into_iter().enumerate() {
+            for (pc, v) in map {
+                *g.partial[q].entry(pc).or_insert(0.0) += v;
+            }
+        }
+    }
+    Ok(finish(alg, &c_struct, g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn random_csr(rng: &mut Rng, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(i, j, rng.range(-2.0, 2.0));
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn row_blocks_cover_and_balance() {
+        let costs = vec![5u64, 1, 1, 1, 5, 1, 1, 1, 5, 3];
+        for t in [1usize, 2, 3, 4, 16] {
+            let blocks = row_blocks(&costs, t);
+            assert_eq!(blocks.len(), t);
+            assert_eq!(blocks[0].start, 0);
+            assert_eq!(blocks[t - 1].end, costs.len());
+            for w in blocks.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "blocks must be contiguous");
+            }
+        }
+        // two threads split 24 total cost near 12/12
+        let two = row_blocks(&costs, 2);
+        let w0: u64 = costs[two[0].clone()].iter().sum();
+        assert!((8..=16).contains(&w0), "w0={w0}");
+    }
+
+    #[test]
+    fn row_blocks_degenerate_inputs() {
+        assert_eq!(row_blocks(&[], 3), vec![0..0, 0..0, 0..0]);
+        let zero = row_blocks(&[0, 0, 0, 0], 2);
+        assert_eq!(zero, vec![0..2, 2..4]);
+        let blocks = row_blocks(&[7], 4);
+        assert_eq!(blocks.iter().map(|r| r.len()).sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise_random() {
+        let mut rng = Rng::new(42);
+        for trial in 0..6 {
+            let m = 10 + 13 * trial;
+            let a = random_csr(&mut rng, m, 40, 0.15);
+            let b = random_csr(&mut rng, 40, 35, 0.15);
+            let seq = spgemm(&a, &b).unwrap();
+            for t in [1usize, 2, 3, 4, 7, 8] {
+                let par = spgemm_parallel(&a, &b, t).unwrap();
+                par.validate().unwrap();
+                assert_eq!(par, seq, "trial {trial} threads {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_on_generator_workloads() {
+        let mut rng = Rng::new(7);
+        let a = gen::rmat(&gen::RmatParams::social(7, 6.0), &mut rng).unwrap();
+        let seq = spgemm(&a, &a).unwrap();
+        for t in [2usize, 4] {
+            assert_eq!(spgemm_parallel(&a, &a, t).unwrap(), seq);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(&mut rng, 3, 8, 0.5);
+        let b = random_csr(&mut rng, 8, 6, 0.5);
+        let seq = spgemm(&a, &b).unwrap();
+        assert_eq!(spgemm_parallel(&a, &b, 16).unwrap(), seq);
+    }
+
+    #[test]
+    fn empty_and_zero_matrices() {
+        let a = Csr::zero(5, 4);
+        let b = Csr::zero(4, 3);
+        let par = spgemm_parallel(&a, &b, 4).unwrap();
+        assert_eq!(par, spgemm(&a, &b).unwrap());
+        assert_eq!(par.nnz(), 0);
+    }
+
+    #[test]
+    fn rejects_bad_arguments() {
+        let a = Csr::zero(2, 3);
+        let b = Csr::zero(4, 2);
+        assert!(spgemm_parallel(&a, &b, 2).is_err()); // dim mismatch
+        let ok = Csr::zero(3, 3);
+        assert!(spgemm_parallel(&ok, &ok, 0).is_err()); // zero threads
+    }
+}

@@ -42,7 +42,12 @@ impl Coo {
     /// Append one entry. Panics in debug builds on out-of-range indices.
     #[inline]
     pub fn push(&mut self, i: usize, j: usize, v: f64) {
-        debug_assert!(i < self.nrows && j < self.ncols, "entry ({i},{j}) out of {}x{}", self.nrows, self.ncols);
+        debug_assert!(
+            i < self.nrows && j < self.ncols,
+            "entry ({i},{j}) out of {}x{}",
+            self.nrows,
+            self.ncols
+        );
         self.rows.push(i as u32);
         self.cols.push(j as u32);
         self.vals.push(v);

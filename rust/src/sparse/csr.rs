@@ -147,7 +147,9 @@ impl Csr {
         if self.rowptr[0] != 0 {
             return Err(Error::invalid("rowptr[0] != 0"));
         }
-        if *self.rowptr.last().unwrap() != self.colind.len() || self.colind.len() != self.values.len() {
+        if *self.rowptr.last().unwrap() != self.colind.len()
+            || self.colind.len() != self.values.len()
+        {
             return Err(Error::invalid("rowptr/colind/values lengths inconsistent"));
         }
         for i in 0..self.nrows {
@@ -218,7 +220,11 @@ impl Csr {
     /// Matrix-vector product `y = A x`.
     pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
         if x.len() != self.ncols {
-            return Err(Error::dim(format!("matvec: x has {} entries, A has {} cols", x.len(), self.ncols)));
+            return Err(Error::dim(format!(
+                "matvec: x has {} entries, A has {} cols",
+                x.len(),
+                self.ncols
+            )));
         }
         let mut y = vec![0.0; self.nrows];
         for i in 0..self.nrows {
@@ -259,7 +265,8 @@ mod tests {
         // [1 0 2]
         // [0 0 0]
         // [3 4 0]
-        let coo = Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)]).unwrap();
+        let coo =
+            Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)]).unwrap();
         Csr::from_coo(&coo)
     }
 
@@ -283,7 +290,8 @@ mod tests {
 
     #[test]
     fn from_coo_unsorted_input() {
-        let coo = Coo::from_triplets(2, 3, [(1, 2, 1.0), (0, 1, 2.0), (1, 0, 3.0), (0, 0, 4.0)]).unwrap();
+        let coo =
+            Coo::from_triplets(2, 3, [(1, 2, 1.0), (0, 1, 2.0), (1, 0, 3.0), (0, 0, 4.0)]).unwrap();
         let m = Csr::from_coo(&coo);
         m.validate().unwrap();
         assert_eq!(m.to_dense(), vec![vec![4.0, 2.0, 0.0], vec![3.0, 0.0, 1.0]]);

@@ -130,9 +130,9 @@ mod tests {
     use crate::util::Rng;
 
     fn sample() -> Csr {
-        Csr::from_coo(
-            &Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 1, 2.0), (1, 2, 3.0), (2, 0, 4.0)]).unwrap(),
-        )
+        let coo =
+            Coo::from_triplets(3, 3, [(0, 0, 1.0), (0, 1, 2.0), (1, 2, 3.0), (2, 0, 4.0)]).unwrap();
+        Csr::from_coo(&coo)
     }
 
     #[test]

@@ -57,23 +57,25 @@ pub fn spgemm_structure(a: &Csr, b: &Csr) -> Result<Csr> {
     Ok(Csr { nrows: a.nrows, ncols: n, rowptr, colind, values: vec![1.0; nnz] })
 }
 
-/// Numeric SpGEMM `C = A·B` via Gustavson with a dense accumulator (SPA)
-/// reused across rows. Output is canonical CSR.
-///
-/// Note: entries that cancel to exactly 0.0 are *kept* — the paper's model
-/// ignores numerical cancellation (Sec. 3.1), so `S_C` is induced by
-/// `S_A`/`S_B` and the numeric structure matches [`spgemm_structure`].
-pub fn spgemm(a: &Csr, b: &Csr) -> Result<Csr> {
-    check_dims(a, b)?;
+/// The numeric Gustavson row kernel over a contiguous range of A-rows:
+/// per-row output counts plus the concatenated column/value arrays, with
+/// a dense accumulator (SPA) reused across rows and sorted (canonical)
+/// columns per row. Shared by [`spgemm`] and the row-block parallel
+/// kernel in [`crate::sim::threads`], so the two are bit-identical by
+/// construction.
+pub(crate) fn spgemm_rows(
+    a: &Csr,
+    b: &Csr,
+    rows: std::ops::Range<usize>,
+) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
     let n = b.ncols;
     let mut accum = vec![0f64; n];
     let mut marker = vec![u32::MAX; n];
     let mut pattern: Vec<u32> = Vec::new();
-    let mut rowptr = Vec::with_capacity(a.nrows + 1);
-    rowptr.push(0usize);
+    let mut row_len = Vec::with_capacity(rows.len());
     let mut colind: Vec<u32> = Vec::new();
     let mut values: Vec<f64> = Vec::new();
-    for i in 0..a.nrows {
+    for i in rows {
         pattern.clear();
         for (k, av) in a.row_iter(i) {
             for (j, bv) in b.row_iter(k as usize) {
@@ -92,9 +94,28 @@ pub fn spgemm(a: &Csr, b: &Csr) -> Result<Csr> {
             colind.push(j);
             values.push(accum[j as usize]);
         }
-        rowptr.push(colind.len());
+        row_len.push(pattern.len());
     }
-    Ok(Csr { nrows: a.nrows, ncols: n, rowptr, colind, values })
+    (row_len, colind, values)
+}
+
+/// Numeric SpGEMM `C = A·B` via Gustavson with a dense accumulator (SPA)
+/// reused across rows. Output is canonical CSR.
+///
+/// Note: entries that cancel to exactly 0.0 are *kept* — the paper's model
+/// ignores numerical cancellation (Sec. 3.1), so `S_C` is induced by
+/// `S_A`/`S_B` and the numeric structure matches [`spgemm_structure`].
+pub fn spgemm(a: &Csr, b: &Csr) -> Result<Csr> {
+    check_dims(a, b)?;
+    let (row_len, colind, values) = spgemm_rows(a, b, 0..a.nrows);
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut acc = 0usize;
+    for len in row_len {
+        acc += len;
+        rowptr.push(acc);
+    }
+    Ok(Csr { nrows: a.nrows, ncols: b.ncols, rowptr, colind, values })
 }
 
 /// The AMG triple product `P^T · (A · P)` computed as two SpGEMMs,
@@ -226,7 +247,11 @@ mod tests {
                 for i in 0..a.nrows {
                     for j in 0..b.ncols {
                         if (cd[i][j] - dd[i][j]).abs() > 1e-10 {
-                            return Err(format!("mismatch at ({i},{j}): {} vs {}", cd[i][j], dd[i][j]));
+                            return Err(format!(
+                                "mismatch at ({i},{j}): {} vs {}",
+                                cd[i][j],
+                                dd[i][j]
+                            ));
                         }
                     }
                 }
@@ -267,11 +292,21 @@ mod tests {
             &Coo::from_triplets(
                 3,
                 3,
-                [(0, 0, 2.0), (0, 1, -1.0), (1, 0, -1.0), (1, 1, 2.0), (1, 2, -1.0), (2, 1, -1.0), (2, 2, 2.0)],
+                [
+                    (0, 0, 2.0),
+                    (0, 1, -1.0),
+                    (1, 0, -1.0),
+                    (1, 1, 2.0),
+                    (1, 2, -1.0),
+                    (2, 1, -1.0),
+                    (2, 2, 2.0),
+                ],
             )
             .unwrap(),
         );
-        let p = Csr::from_coo(&Coo::from_triplets(3, 1, [(0, 0, 1.0), (1, 0, 1.0), (2, 0, 1.0)]).unwrap());
+        let p = Csr::from_coo(
+            &Coo::from_triplets(3, 1, [(0, 0, 1.0), (1, 0, 1.0), (2, 0, 1.0)]).unwrap(),
+        );
         let (ap, ptap) = triple_product(&a, &p).unwrap();
         assert_eq!((ap.nrows, ap.ncols), (3, 1));
         assert_eq!((ptap.nrows, ptap.ncols), (1, 1));

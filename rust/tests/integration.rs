@@ -99,13 +99,23 @@ fn mcl_models_execute_and_1d_pathology_shows() {
 fn partitioner_beats_random_everywhere() {
     let mut rng = Rng::new(55);
     let instances: Vec<(&str, sparse::Csr, sparse::Csr)> = vec![
-        ("amg", gen::stencil27(6), gen::smoothed_aggregation_prolongator(&gen::stencil27(6), 6).unwrap()),
+        (
+            "amg",
+            gen::stencil27(6),
+            gen::smoothed_aggregation_prolongator(&gen::stencil27(6), 6).unwrap(),
+        ),
         (
             "lp",
             gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut rng).unwrap(),
-            gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut Rng::new(55)).unwrap().transpose(),
+            gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut Rng::new(55))
+                .unwrap()
+                .transpose(),
         ),
-        ("mcl", gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut rng).unwrap(), gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut Rng::new(56)).unwrap()),
+        (
+            "mcl",
+            gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut rng).unwrap(),
+            gen::rmat(&gen::RmatParams::protein(8, 6.0), &mut Rng::new(56)).unwrap(),
+        ),
     ];
     for (name, a, b) in &instances {
         let model = build_model(a, b, ModelKind::MonoC, false).unwrap();
@@ -227,6 +237,62 @@ fn aat_symmetry_reduces_work() {
     let part = partition(&h, &cfg).unwrap();
     let m = cost::evaluate(&h, &part, 4).unwrap();
     assert!(m.comp_imbalance() <= 1.25);
+}
+
+/// The row-block parallel Gustavson kernel is bit-identical to the
+/// sequential reference — rowptr, colind, and every f64 value — on all
+/// five workload generators, for 1, 2, 4, and 8 threads.
+#[test]
+fn spgemm_parallel_bit_identical_on_all_generators() {
+    let mut rng = Rng::new(20160711);
+    let er_a = gen::erdos_renyi(96, 96, 6.0, &mut rng).unwrap();
+    let er_b = gen::erdos_renyi(96, 96, 6.0, &mut rng).unwrap();
+    let rmat_a = gen::rmat(&gen::RmatParams::social(8, 8.0), &mut rng).unwrap();
+    let amg_a = gen::stencil27(6);
+    let amg_p = gen::smoothed_aggregation_prolongator(&amg_a, 6).unwrap();
+    let lp_a = gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut rng).unwrap();
+    let lp_d = gen::lp::ipm_scaling(lp_a.ncols, &mut rng);
+    let lp_b = sparse::ops::scale_rows(&lp_a.transpose(), &lp_d).unwrap();
+    let road_a = gen::road_network(24, 20, 0.3, &mut rng).unwrap();
+    let cases: Vec<(&str, &sparse::Csr, &sparse::Csr)> = vec![
+        ("er", &er_a, &er_b),
+        ("rmat", &rmat_a, &rmat_a),
+        ("amg", &amg_a, &amg_p),
+        ("lp", &lp_a, &lp_b),
+        ("roadnet", &road_a, &road_a),
+    ];
+    for (name, a, b) in cases {
+        let seq = sparse::spgemm(a, b).unwrap();
+        for nthreads in [1usize, 2, 4, 8] {
+            let par = sim::spgemm_parallel(a, b, nthreads).unwrap();
+            par.validate().unwrap();
+            assert_eq!(par.rowptr, seq.rowptr, "{name} t={nthreads}: rowptr differs");
+            assert_eq!(par.colind, seq.colind, "{name} t={nthreads}: colind differs");
+            assert!(
+                par.values.iter().zip(&seq.values).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{name} t={nthreads}: values not bit-identical"
+            );
+        }
+    }
+}
+
+/// The threaded simulator driver reproduces the sequential simulator
+/// exactly (report and numerics) after the whole model→partition→lowering
+/// pipeline.
+#[test]
+fn threaded_simulator_matches_sequential_end_to_end() {
+    let mut rng = Rng::new(2023);
+    let a = gen::rmat(&gen::RmatParams::protein(7, 5.0), &mut rng).unwrap();
+    let model = build_model(&a, &a, ModelKind::MonoC, false).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(6) };
+    let part = partition(&model.h, &cfg).unwrap();
+    let alg = sim::lower(&model, &part, &a, &a, 6).unwrap();
+    let (rep_seq, c_seq) = sim::simulate(&a, &a, &alg).unwrap();
+    for nthreads in [2usize, 4, 8] {
+        let (rep_par, c_par) = sim::simulate_threaded(&a, &a, &alg, nthreads).unwrap();
+        assert_eq!(rep_par, rep_seq, "t={nthreads}");
+        assert_eq!(c_par, c_seq, "t={nthreads}");
+    }
 }
 
 /// SpMV specializations partition and their costs order sensibly.

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Local mirror of .github/workflows/ci.yml — the exact CI gate, runnable
+# offline. rustfmt/clippy steps degrade to a warning when the component is
+# not installed (minimal toolchains); the build/test/bench gate always runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() {
+    echo
+    echo "==> $*"
+}
+
+step "cargo fmt --check"
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "WARNING: rustfmt not installed; skipping (install with: rustup component add rustfmt)"
+fi
+
+step "cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+    cargo clippy --all-targets --features pallas -- -D warnings
+else
+    echo "WARNING: clippy not installed; skipping (install with: rustup component add clippy)"
+fi
+
+step "cargo build --release"
+cargo build --release
+
+step "cargo test -q"
+cargo test -q
+
+step "cargo test -q --features pallas"
+cargo test -q --features pallas
+
+step "bench smoke (writes BENCH_spgemm.json)"
+cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+
+echo
+echo "CI gate passed."
