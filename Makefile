@@ -18,7 +18,7 @@ bench:
 
 # The fast bench path CI runs; writes BENCH_spgemm.json.
 smoke:
-	cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+	cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 
 # AOT-compile the JAX/Pallas kernels to HLO text artifacts for the
 # `pallas` runtime path. Requires python3 + jax (build time only; the

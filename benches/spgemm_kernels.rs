@@ -8,17 +8,19 @@
 //! * `--json [path]` — write machine-readable records (kernel, workload,
 //!   threads, ns/op) to `path`, default `BENCH_spgemm.json`.
 //! * `--threads 1,2,4,8` — thread counts for the parallel-SpGEMM sweep.
+//! * `--kernel auto|sortmerge|densespa|hashaccum|all` — restrict the
+//!   RowKernel strategy sweep (default `all`).
 //!
 //! ```bash
-//! cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+//! cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 //! ```
 
 use spgemm_hp::cli::Args;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, fine_grained, ModelKind};
 use spgemm_hp::runtime::Engine;
-use spgemm_hp::sim::spgemm_parallel;
-use spgemm_hp::sparse;
+use spgemm_hp::sim::{spgemm_parallel, spgemm_parallel_with};
+use spgemm_hp::sparse::{self, KernelKind};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{Error, Result};
@@ -72,6 +74,11 @@ fn real_main() -> Result<()> {
             })
             .collect::<Result<_>>()?,
         None => vec![1, 2, 4, 8],
+    };
+    let kernels: Vec<KernelKind> = match args.get("kernel") {
+        None | Some("all") => KernelKind::ALL.to_vec(),
+        Some(s) => vec![KernelKind::parse(s)
+            .ok_or_else(|| Error::Config(format!("--kernel: unrecognized value {s}")))?],
     };
     let iters = if smoke { 3 } else { 5 };
     let mut records: Vec<Record> = Vec::new();
@@ -128,6 +135,34 @@ fn real_main() -> Result<()> {
     }
     if threads.iter().any(|&t| t > 1) {
         println!("best speedup: {best_speedup:.2}x");
+    }
+
+    println!("\n== RowKernel strategies (kernel x workload x threads) ==");
+    // a third, hypersparse workload so each accumulator has a regime to win
+    let er_n = if smoke { 512 } else { 4096 };
+    let er = gen::erdos_renyi(er_n, er_n, 4.0, &mut rng)?;
+    let kernel_workloads: Vec<(String, &sparse::Csr)> = vec![
+        (workloads[0].0.clone(), &workloads[0].1),
+        (workloads[1].0.clone(), &workloads[1].1),
+        (format!("er-n{er_n}"), &er),
+    ];
+    for &kind in &kernels {
+        for (name, a) in &kernel_workloads {
+            for &t in &threads {
+                let s = bench(1, iters, || spgemm_parallel_with(a, a, t, kind).unwrap());
+                println!(
+                    "{:<10} {name:<22} threads={t:<3} {:>12}",
+                    kind.name(),
+                    BenchStats::fmt_time(s.median)
+                );
+                records.push(Record {
+                    kernel: kind.name(),
+                    workload: name.clone(),
+                    threads: t,
+                    ns_per_op: s.median * 1e9,
+                });
+            }
+        }
     }
 
     println!("\n== hypergraph model construction ==");

@@ -72,6 +72,23 @@ impl Args {
     pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
         Ok(self.get_u64(key, default as u64)? as u32)
     }
+
+    /// Parse `--key` through a domain parser (e.g. `KernelKind::parse`),
+    /// falling back to `default` when absent and erroring on values the
+    /// parser rejects.
+    pub fn get_parsed<T>(
+        &self,
+        key: &str,
+        default: T,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => {
+                parse(s).ok_or_else(|| Error::Config(format!("--{key}: unrecognized value {s}")))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +117,20 @@ mod tests {
         assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
         let bad = parse("x --n twelve");
         assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn parsed_getter() {
+        let a = parse("x --mode fast");
+        let parse_mode = |s: &str| match s {
+            "fast" => Some(1u8),
+            "slow" => Some(2u8),
+            _ => None,
+        };
+        assert_eq!(a.get_parsed("mode", 0u8, parse_mode).unwrap(), 1);
+        assert_eq!(a.get_parsed("missing", 7u8, parse_mode).unwrap(), 7);
+        let bad = parse("x --mode warp");
+        assert!(bad.get_parsed("mode", 0u8, parse_mode).is_err());
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod plan;
 
 use crate::runtime::Engine;
 use crate::sim::Algorithm;
-use crate::sparse::{spgemm_structure, Csr};
+use crate::sparse::{spgemm_structure, Csr, KernelKind};
 use crate::{Error, Result};
 use plan::{ExecutionPlan, TileGroup, WorkerPlan};
 use std::collections::HashMap;
@@ -50,6 +50,12 @@ pub struct CoordinatorConfig {
     /// Scoped threads per worker for the compute phase (1 = the classic
     /// single-threaded worker loop).
     pub compute_threads: usize,
+    /// Accumulator strategy for the scalar (open-group) compute path.
+    /// `Auto` resolves to the hash accumulator — the seed behavior —
+    /// since per-worker mult sets are usually hypersparse in C positions.
+    /// All strategies accumulate each C position in the same order, so
+    /// the computed C is identical across settings.
+    pub kernel: KernelKind,
 }
 
 impl Default for CoordinatorConfig {
@@ -57,7 +63,13 @@ impl Default for CoordinatorConfig {
         // tile = 16 won the §Perf sweep (EXPERIMENTS.md): vs 8 it quarters
         // kernel dispatches for ~20% wall-clock; 32 wastes 3.5× on
         // mostly-empty tiles of sparse iteration-space cubes.
-        CoordinatorConfig { tile: 16, artifacts_dir: None, min_tile_batch: 1, compute_threads: 1 }
+        CoordinatorConfig {
+            tile: 16,
+            artifacts_dir: None,
+            min_tile_batch: 1,
+            compute_threads: 1,
+            kernel: KernelKind::Auto,
+        }
     }
 }
 
@@ -204,6 +216,8 @@ pub fn run(
             tile: cfg.tile,
             min_batch: cfg.min_tile_batch,
             threads: cfg.compute_threads,
+            kernel: cfg.kernel,
+            c_nnz: c_struct.nnz(),
         };
         handles.push(thread::spawn(move || {
             worker_main(wplan, my_rx, peer_tx, my_jobs, my_result, knobs)
@@ -271,6 +285,88 @@ struct ComputeKnobs {
     tile: usize,
     min_batch: usize,
     threads: usize,
+    kernel: KernelKind,
+    /// nnz(C), the key space of scalar partial sums (sizes the dense
+    /// accumulator variant).
+    c_nnz: usize,
+}
+
+/// Scalar-path partial-sum accumulator, strategy-selected by
+/// [`CoordinatorConfig::kernel`]. The key space is C positions rather
+/// than output columns, but the regimes mirror the row kernels: a dense
+/// array over nnz(C), an open hash map, or collect-sort-merge. Every
+/// variant adds contributions for a C position in push order, so the
+/// resulting sums are identical across strategies.
+enum ScalarAccum {
+    Hash(HashMap<u32, f64>),
+    Dense { vals: Vec<f64>, touched: Vec<u32>, seen: Vec<bool> },
+    Sort(Vec<(u32, f64)>),
+}
+
+impl ScalarAccum {
+    /// `est_mults` is the chunk's scalar multiplication count: the dense
+    /// variant's two `O(nnz(C))` arrays only pay off when the chunk
+    /// actually touches a dense-ish fraction of C, so a sparse chunk
+    /// falls back to the hash map rather than allocating `c_nnz` slots.
+    fn new(kind: KernelKind, c_nnz: usize, est_mults: usize) -> ScalarAccum {
+        match kind {
+            // seed behavior: hash accumulation over sparse C positions
+            KernelKind::Auto | KernelKind::HashAccum => ScalarAccum::Hash(HashMap::new()),
+            KernelKind::DenseSpa if est_mults >= c_nnz / 16 => ScalarAccum::Dense {
+                vals: vec![0.0; c_nnz],
+                touched: Vec::new(),
+                seen: vec![false; c_nnz],
+            },
+            KernelKind::DenseSpa => ScalarAccum::Hash(HashMap::new()),
+            KernelKind::SortMerge => ScalarAccum::Sort(Vec::new()),
+        }
+    }
+
+    /// Every variant seeds a fresh C position with `0.0 + v` (the seed
+    /// hash-map behavior), so the sums are bit-identical across
+    /// strategies even for -0.0 contributions.
+    fn add(&mut self, pc: u32, v: f64) {
+        match self {
+            ScalarAccum::Hash(map) => *map.entry(pc).or_insert(0.0) += v,
+            ScalarAccum::Dense { vals, touched, seen } => {
+                let at = pc as usize;
+                if !seen[at] {
+                    seen[at] = true;
+                    touched.push(pc);
+                    vals[at] = 0.0 + v;
+                } else {
+                    vals[at] += v;
+                }
+            }
+            ScalarAccum::Sort(pairs) => pairs.push((pc, v)),
+        }
+    }
+
+    fn into_map(self) -> HashMap<u32, f64> {
+        match self {
+            ScalarAccum::Hash(map) => map,
+            ScalarAccum::Dense { vals, touched, .. } => {
+                touched.into_iter().map(|pc| (pc, vals[pc as usize])).collect()
+            }
+            ScalarAccum::Sort(mut pairs) => {
+                // stable: contributions per C position merge in push order
+                pairs.sort_by_key(|p| p.0);
+                let mut map = HashMap::new();
+                let mut idx = 0usize;
+                while idx < pairs.len() {
+                    let pc = pairs[idx].0;
+                    let mut sum = 0.0 + pairs[idx].1;
+                    idx += 1;
+                    while idx < pairs.len() && pairs[idx].0 == pc {
+                        sum += pairs[idx].1;
+                        idx += 1;
+                    }
+                    map.insert(pc, sum);
+                }
+                map
+            }
+        }
+    }
 }
 
 /// Result of sweeping a slice of tile groups: scalar partials plus the
@@ -285,15 +381,22 @@ struct ComputeOut {
 }
 
 /// Sweep `groups`: closed groups of at least `min_batch` mults become
-/// dense tile jobs, the rest take the scalar path.
+/// dense tile jobs, the rest take the scalar path (accumulated with the
+/// strategy `knobs.kernel` selects).
 fn compute_groups(
     groups: &[TileGroup],
     a_vals: &HashMap<u32, f64>,
     b_vals: &HashMap<u32, f64>,
-    tile: usize,
-    min_batch: usize,
+    knobs: ComputeKnobs,
 ) -> ComputeOut {
+    let ComputeKnobs { tile, min_batch, kernel, c_nnz, .. } = knobs;
     let t2 = tile * tile;
+    let est_scalar: usize = groups
+        .iter()
+        .filter(|g| !(g.closed && g.mults.len() >= min_batch))
+        .map(|g| g.mults.len())
+        .sum();
+    let mut accum = ScalarAccum::new(kernel, c_nnz, est_scalar);
     let mut out = ComputeOut {
         partials: HashMap::new(),
         job_a: Vec::new(),
@@ -325,11 +428,12 @@ fn compute_groups(
         } else {
             for m in &group.mults {
                 let v = a_vals[&m.pa] * b_vals[&m.pb];
-                *out.partials.entry(m.pc).or_insert(0.0) += v;
+                accum.add(m.pc, v);
                 out.scalar_mults += 1;
             }
         }
     }
+    out.partials = accum.into_map();
     out
 }
 
@@ -341,7 +445,7 @@ fn worker_main(
     results: Sender<(usize, Vec<(u32, f64)>, WorkerStats)>,
     knobs: ComputeKnobs,
 ) -> Result<()> {
-    let ComputeKnobs { tile, min_batch, threads } = knobs;
+    let ComputeKnobs { tile, threads, .. } = knobs;
     let mut sent = 0u64;
     let mut recv_count = 0u64;
     // local value tables (sparse: only owned + received slots filled)
@@ -394,7 +498,7 @@ fn worker_main(
     // sweep the tile groups, optionally fanned out over scoped threads
     let nt = threads.clamp(1, plan.groups.len().max(1));
     let chunk_outs: Vec<ComputeOut> = if nt <= 1 {
-        vec![compute_groups(&plan.groups, &a_vals, &b_vals, tile, min_batch)]
+        vec![compute_groups(&plan.groups, &a_vals, &b_vals, knobs)]
     } else {
         let per = plan.groups.len().div_ceil(nt);
         let a_ref = &a_vals;
@@ -403,7 +507,7 @@ fn worker_main(
             let handles: Vec<_> = plan
                 .groups
                 .chunks(per)
-                .map(|chunk| s.spawn(move || compute_groups(chunk, a_ref, b_ref, tile, min_batch)))
+                .map(|chunk| s.spawn(move || compute_groups(chunk, a_ref, b_ref, knobs)))
                 .collect();
             handles.into_iter().map(|h| h.join().expect("compute thread panicked")).collect()
         })
@@ -620,6 +724,32 @@ mod tests {
         let part = vec![0u32; model.h.num_vertices()];
         let alg = sim::lower(&model, &part, &a, &b, 1).unwrap();
         assert!(run(&a, &b, &alg, &bad).is_err());
+    }
+
+    #[test]
+    fn scalar_kernel_settings_agree() {
+        // min_tile_batch = MAX forces every group onto the scalar path, so
+        // each accumulator strategy actually executes; all must agree
+        let mut rng = Rng::new(23);
+        let (a, b) = random_instance(&mut rng, 16, 14, 15, 0.25);
+        let c_ref = spgemm(&a, &b).unwrap();
+        let model = build_model(&a, &b, ModelKind::RowWise, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(4) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, 4).unwrap();
+        for kernel in crate::sparse::KernelKind::ALL {
+            let ccfg =
+                CoordinatorConfig { kernel, min_tile_batch: usize::MAX, ..Default::default() };
+            let (rep, c) = run(&a, &b, &alg, &ccfg).unwrap();
+            assert_eq!(rep.tile_mults, 0, "{}: tile path must be disabled", kernel.name());
+            assert_eq!(
+                rep.scalar_mults,
+                crate::sparse::spgemm_flops(&a, &b).unwrap(),
+                "{}: all mults through the scalar path",
+                kernel.name()
+            );
+            assert!(c.approx_eq(&c_ref, 1e-4), "{}: numeric mismatch", kernel.name());
+        }
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! spgemm-hp info
 //! spgemm-hp gen <stencil27|rmat|roadnet|lp|er> [--n ..] [--out file.mtx]
 //! spgemm-hp partition --a A.mtx --b B.mtx --model row --parts 8 [--epsilon 0.03]
-//! spgemm-hp spgemm --a A.mtx --b B.mtx [--out C.mtx]
+//! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
+//!           [--threads N] [--out C.mtx]
 //! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound> [--scale 1..3] [--seed N] [--csv dir]
-//! spgemm-hp e2e [--graph facebook] [--parts 4] [--tile 8] [--artifacts artifacts]
+//! spgemm-hp e2e [--graph facebook] [--parts 4] [--tile 8] [--kernel auto]
+//!           [--artifacts artifacts]
 //! ```
 
 use spgemm_hp::cli::Args;
@@ -47,6 +49,7 @@ fn info() -> Result<()> {
     println!("commands: info | gen | partition | spgemm | repro | e2e");
     println!("models:   fine-grained row-wise column-wise outer-product");
     println!("          monochrome-A monochrome-B monochrome-C");
+    println!("kernels:  auto sortmerge densespa hashaccum (--kernel, see README)");
     println!("repro:    table2 fig7 fig8 fig9 bounds seqbound all");
     Ok(())
 }
@@ -134,14 +137,21 @@ fn cmd_partition(args: &Args) -> Result<()> {
 
 fn cmd_spgemm(args: &Args) -> Result<()> {
     let (a, b) = load_pair(args)?;
+    let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
+    let threads = args.get_usize("threads", 1)?;
     let t = Timer::start();
-    let c = sparse::spgemm(&a, &b)?;
+    let c = if threads > 1 {
+        sim::spgemm_parallel_with(&a, &b, threads, kernel)?
+    } else {
+        sparse::spgemm_with(&a, &b, kernel)?
+    };
     println!(
-        "C = A*B: {}x{} with {} nonzeros ({} mults, {:.1} ms)",
+        "C = A*B: {}x{} with {} nonzeros ({} mults, kernel={}, threads={threads}, {:.1} ms)",
         c.nrows,
         c.ncols,
         fmt_count(c.nnz() as u64),
         fmt_count(sparse::spgemm_flops(&a, &b)?),
+        kernel.name(),
         t.elapsed_ms()
     );
     if let Some(out) = args.get("out") {
@@ -229,6 +239,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 20160711)?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
+    let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
 
     let instances = repro::workloads::mcl_instances(scale, seed)?;
     let inst = instances
@@ -271,6 +282,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         let ccfg = coordinator::CoordinatorConfig {
             tile,
             artifacts_dir: Some(artifacts.into()),
+            kernel,
             ..Default::default()
         };
         let t = Timer::start();

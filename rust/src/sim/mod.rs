@@ -7,9 +7,10 @@
 //!   the reference [`crate::sparse::spgemm`]. The measured costs bracket
 //!   the hypergraph bound of Lem. 4.2: `|Q_i| ≤ send_i+recv_i ≤ 3·|Q_i|`.
 //! * [`threads`] — scoped-thread row-block parallelism: a parallel
-//!   Gustavson SpGEMM ([`spgemm_parallel`]) that is bit-identical to the
-//!   sequential kernel, and a threaded driver for the Lem. 4.3 simulator
-//!   ([`simulate_threaded`]).
+//!   Gustavson SpGEMM ([`spgemm_parallel`], with selectable accumulator
+//!   strategy via [`spgemm_parallel_with`]) that is bit-identical to the
+//!   sequential kernel for every [`crate::sparse::KernelKind`], and a
+//!   threaded driver for the Lem. 4.3 simulator ([`simulate_threaded`]).
 //! * [`sequential`] — the two-level-memory model of Sec. 4.2: executes a
 //!   multiplication schedule against an LRU fast memory of `M` words,
 //!   counting loads and stores (Lem. 4.9's blocked algorithm is one such
@@ -21,4 +22,4 @@ pub mod threads;
 
 pub use parallel::{lower, simulate, Algorithm, SimReport};
 pub use sequential::{simulate_sequential, SeqReport};
-pub use threads::{simulate_threaded, spgemm_parallel};
+pub use threads::{simulate_threaded, spgemm_parallel, spgemm_parallel_with};

@@ -279,8 +279,8 @@ mod tests {
     use super::*;
     use crate::cost;
     use crate::hypergraph::models::{build_model, ModelKind};
-    use crate::sim::threads::simulate_threaded;
     use crate::partition::{partition, PartitionerConfig};
+    use crate::sim::threads::simulate_threaded;
     use crate::sparse::{spgemm, Coo};
     use crate::util::Rng;
 

@@ -16,8 +16,8 @@
 //! suite asserts exact equality across thread counts and workloads.
 
 use super::parallel::{finish, push_unique, Algorithm, Gathered, SimReport};
-use crate::sparse::spgemm::spgemm_rows;
-use crate::sparse::{spgemm, spgemm_structure, Csr};
+use crate::sparse::kernels::spgemm_rows_with;
+use crate::sparse::{choose_kernel, spgemm_structure, spgemm_with, Csr, KernelKind};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::ops::Range;
@@ -65,13 +65,26 @@ pub fn row_mult_counts(a: &Csr, b: &Csr) -> Vec<u64> {
         .collect()
 }
 
-/// Row-block parallel Gustavson SpGEMM on `nthreads` scoped threads.
+/// Row-block parallel Gustavson SpGEMM on `nthreads` scoped threads with
+/// the seed dense-SPA accumulator. Equivalent to
+/// [`spgemm_parallel_with`] with [`KernelKind::DenseSpa`].
+pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Result<Csr> {
+    spgemm_parallel_with(a, b, nthreads, KernelKind::DenseSpa)
+}
+
+/// Row-block parallel Gustavson SpGEMM on `nthreads` scoped threads with
+/// a selectable row accumulator ([`KernelKind`]).
 ///
 /// Produces exactly the same canonical CSR — rowptr, colind, *and* values
-/// bit for bit — as the sequential [`spgemm`], for any thread count: both
-/// build on the shared `spgemm_rows` kernel, and each C row is produced
-/// by exactly one thread in canonical order.
-pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Result<Csr> {
+/// bit for bit — as the sequential [`crate::sparse::spgemm`], for any
+/// thread count *and any kernel*: every accumulator strategy sums each
+/// output entry in the same canonical encounter order, and each C row is
+/// produced by exactly one thread in canonical order. `KernelKind::Auto`
+/// resolves per row block from the block's average multiplication count
+/// (the same [`row_mult_counts`] weights used for load balancing), so
+/// skewed inputs can mix accumulators across blocks — the bit-identity
+/// contract still holds.
+pub fn spgemm_parallel_with(a: &Csr, b: &Csr, nthreads: usize, kind: KernelKind) -> Result<Csr> {
     if a.ncols != b.nrows {
         return Err(Error::dim(format!(
             "spgemm_parallel: A is {}x{}, B is {}x{}",
@@ -82,14 +95,27 @@ pub fn spgemm_parallel(a: &Csr, b: &Csr, nthreads: usize) -> Result<Csr> {
         return Err(Error::invalid("spgemm_parallel: nthreads must be >= 1"));
     }
     if nthreads == 1 || a.nrows <= 1 {
-        return spgemm(a, b);
+        return spgemm_with(a, b, kind);
     }
-    let blocks = row_blocks(&row_mult_counts(a, b), nthreads);
+    let costs = row_mult_counts(a, b);
+    let blocks = row_blocks(&costs, nthreads);
+    // resolve Auto per block from the balance weights we already have
+    let kinds: Vec<KernelKind> = blocks
+        .iter()
+        .map(|r| match kind {
+            KernelKind::Auto => {
+                let mults: u64 = costs[r.clone()].iter().sum();
+                choose_kernel(mults as f64 / r.len().max(1) as f64, b.ncols)
+            }
+            concrete => concrete,
+        })
+        .collect();
     let results: Vec<(Vec<usize>, Vec<u32>, Vec<f64>)> = std::thread::scope(|s| {
         let handles: Vec<_> = blocks
             .iter()
             .cloned()
-            .map(|r| s.spawn(move || spgemm_rows(a, b, r)))
+            .zip(kinds)
+            .map(|(r, k)| s.spawn(move || spgemm_rows_with(a, b, r, k)))
             .collect();
         handles.into_iter().map(|h| h.join().expect("spgemm_parallel worker panicked")).collect()
     });
@@ -240,7 +266,7 @@ pub fn simulate_threaded(
 mod tests {
     use super::*;
     use crate::gen;
-    use crate::sparse::Coo;
+    use crate::sparse::{spgemm, Coo};
     use crate::util::Rng;
 
     fn random_csr(rng: &mut Rng, nrows: usize, ncols: usize, density: f64) -> Csr {
@@ -315,6 +341,21 @@ mod tests {
         let b = random_csr(&mut rng, 8, 6, 0.5);
         let seq = spgemm(&a, &b).unwrap();
         assert_eq!(spgemm_parallel(&a, &b, 16).unwrap(), seq);
+    }
+
+    #[test]
+    fn every_kernel_matches_sequential_bitwise() {
+        let mut rng = Rng::new(71);
+        let a = random_csr(&mut rng, 30, 26, 0.18);
+        let b = random_csr(&mut rng, 26, 40, 0.18);
+        let seq = spgemm(&a, &b).unwrap();
+        for kind in KernelKind::ALL {
+            for t in [1usize, 2, 3, 5] {
+                let par = spgemm_parallel_with(&a, &b, t, kind).unwrap();
+                par.validate().unwrap();
+                assert_eq!(par, seq, "kernel {} threads {t}", kind.name());
+            }
+        }
     }
 
     #[test]

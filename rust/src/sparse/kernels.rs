@@ -1,0 +1,491 @@
+//! Multi-strategy row accumulators for Gustavson SpGEMM.
+//!
+//! The best SpGEMM accumulator depends on the *input sparsity*, not just
+//! the machine (Gao et al.'s SpGEMM survey, arXiv:2002.11273; Buluç &
+//! Gilbert, arXiv:1109.3739): dense accumulators win on dense-ish rows,
+//! hash accumulators on hypersparse rows, and sort/merge in between. This
+//! module makes that a first-class axis of the system: a [`RowKernel`]
+//! trait with three implementations, a [`KernelKind`] selector whose
+//! `Auto` variant dispatches per row block from multiplication-count
+//! density estimates, and a sequential entry point [`spgemm_with`].
+//!
+//! **Bit-identity contract.** Every kernel produces output bit-identical
+//! to the seed [`super::spgemm`]: columns in canonical sorted order, and
+//! each output value summed in the *encounter order* of the Gustavson
+//! sweep (rows of A in order, `k` within a row in CSR order, `j` within
+//! `B[k,:]` in CSR order). All three accumulators preserve that per-entry
+//! order — the dense SPA adds into `accum[j]` as contributions arrive,
+//! the hash accumulator adds into its slot as contributions arrive, and
+//! the sort/merge kernel uses a *stable* sort by column so equal-`j`
+//! products are reduced left-to-right in encounter order. Since IEEE-754
+//! addition is deterministic for a fixed operand order, the three
+//! strategies (and any per-block mix of them, hence `Auto`) agree bit
+//! for bit. The differential suite in `rust/tests/kernels.rs` enforces
+//! this across all workload generators and thread counts.
+
+use super::spgemm::check_dims;
+use super::Csr;
+use crate::Result;
+use std::ops::Range;
+
+/// Accumulator strategy selector for [`spgemm_with`] and the row-block
+/// parallel multiply [`crate::sim::threads::spgemm_parallel_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelKind {
+    /// Pick a concrete kernel per row block from the block's average
+    /// multiplication count (see [`choose_kernel`]).
+    #[default]
+    Auto,
+    /// Expand all products into `(j, value)` pairs, stable-sort by `j`,
+    /// and merge-reduce runs. No `O(ncols)` state: best in the mid-range
+    /// where rows are neither tiny nor dense.
+    SortMerge,
+    /// Dense sparse-accumulator (SPA): an `O(ncols)` value array plus a
+    /// row-stamped marker and an occupancy (pattern) list, reset lazily
+    /// per row. The seed `spgemm` kernel; best for dense-ish rows.
+    DenseSpa,
+    /// Open-addressing hash accumulator keyed by output column; table
+    /// sized per row from the multiplication-count upper bound. Best for
+    /// hypersparse rows of very wide matrices, where even touching an
+    /// `O(ncols)` array is wasteful.
+    HashAccum,
+}
+
+impl KernelKind {
+    /// All selectable kinds, `Auto` first.
+    pub const ALL: [KernelKind; 4] =
+        [KernelKind::Auto, KernelKind::SortMerge, KernelKind::DenseSpa, KernelKind::HashAccum];
+
+    /// The three concrete (non-dispatching) kernels.
+    pub const CONCRETE: [KernelKind; 3] =
+        [KernelKind::SortMerge, KernelKind::DenseSpa, KernelKind::HashAccum];
+
+    /// Stable CLI / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::SortMerge => "sortmerge",
+            KernelKind::DenseSpa => "densespa",
+            KernelKind::HashAccum => "hashaccum",
+        }
+    }
+
+    /// Parse a CLI name (accepts a few ergonomic aliases).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "auto" => Some(KernelKind::Auto),
+            "sort" | "sortmerge" | "sort-merge" | "merge" => Some(KernelKind::SortMerge),
+            "dense" | "densespa" | "dense-spa" | "spa" => Some(KernelKind::DenseSpa),
+            "hash" | "hashaccum" | "hash-accum" => Some(KernelKind::HashAccum),
+            _ => None,
+        }
+    }
+}
+
+/// The `Auto` heuristic: pick a concrete kernel for a row block with
+/// `avg_mults_per_row` expected multiplications per row of a `ncols`-wide
+/// output.
+///
+/// * fill ≥ 1/16 — dense-ish rows: the SPA's `O(1)` probes beat sorting
+///   and hashing, and its `O(ncols)` arrays are well amortized;
+/// * ≤ 24 products per row — hypersparse: a tiny per-row hash table
+///   beats both the SPA's footprint and the sort's `O(m log m)`;
+/// * otherwise — sort/merge, the robust middle ground.
+pub fn choose_kernel(avg_mults_per_row: f64, ncols: usize) -> KernelKind {
+    if ncols == 0 {
+        return KernelKind::SortMerge;
+    }
+    let fill = avg_mults_per_row / ncols as f64;
+    if fill >= 1.0 / 16.0 {
+        KernelKind::DenseSpa
+    } else if avg_mults_per_row <= 24.0 {
+        KernelKind::HashAccum
+    } else {
+        KernelKind::SortMerge
+    }
+}
+
+/// A sparse accumulator strategy for one row of `C = A·B`.
+///
+/// Implementations keep their workspace across rows (the driver calls
+/// [`RowKernel::row`] for ascending row indices of one matrix product)
+/// and must append the row's nonzeros to `colind`/`values` in canonical
+/// (sorted-column) order, summing each output entry in Gustavson
+/// encounter order — the bit-identity contract of this module.
+pub trait RowKernel {
+    /// Strategy name (matches [`KernelKind::name`]).
+    fn name(&self) -> &'static str;
+
+    /// Compute row `i` of `C = A·B`, appending to `colind`/`values`.
+    /// Returns the number of nonzeros produced for this row.
+    fn row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        colind: &mut Vec<u32>,
+        values: &mut Vec<f64>,
+    ) -> usize;
+}
+
+/// Sort/merge accumulator: expand, stable-sort, reduce runs.
+#[derive(Debug, Default)]
+pub struct SortMerge {
+    pairs: Vec<(u32, f64)>,
+}
+
+impl SortMerge {
+    pub fn new() -> Self {
+        SortMerge { pairs: Vec::new() }
+    }
+}
+
+impl RowKernel for SortMerge {
+    fn name(&self) -> &'static str {
+        "sortmerge"
+    }
+
+    fn row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        colind: &mut Vec<u32>,
+        values: &mut Vec<f64>,
+    ) -> usize {
+        self.pairs.clear();
+        for (k, av) in a.row_iter(i) {
+            for (j, bv) in b.row_iter(k as usize) {
+                self.pairs.push((j, av * bv));
+            }
+        }
+        // stable: equal-j products stay in encounter order, so the run
+        // reduction below sums them exactly as the dense SPA does
+        self.pairs.sort_by_key(|p| p.0);
+        let mut len = 0usize;
+        let mut idx = 0usize;
+        while idx < self.pairs.len() {
+            let j = self.pairs[idx].0;
+            let mut sum = self.pairs[idx].1;
+            idx += 1;
+            while idx < self.pairs.len() && self.pairs[idx].0 == j {
+                sum += self.pairs[idx].1;
+                idx += 1;
+            }
+            colind.push(j);
+            values.push(sum);
+            len += 1;
+        }
+        len
+    }
+}
+
+/// Dense sparse-accumulator (SPA) with a row-stamped marker and an
+/// occupancy list — the kernel extracted from the seed `spgemm_rows`.
+#[derive(Debug)]
+pub struct DenseSpa {
+    accum: Vec<f64>,
+    marker: Vec<u32>,
+    pattern: Vec<u32>,
+}
+
+impl DenseSpa {
+    /// `ncols` is the width of `B` (= width of `C`).
+    pub fn new(ncols: usize) -> Self {
+        DenseSpa { accum: vec![0f64; ncols], marker: vec![u32::MAX; ncols], pattern: Vec::new() }
+    }
+}
+
+impl RowKernel for DenseSpa {
+    fn name(&self) -> &'static str {
+        "densespa"
+    }
+
+    fn row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        colind: &mut Vec<u32>,
+        values: &mut Vec<f64>,
+    ) -> usize {
+        self.pattern.clear();
+        for (k, av) in a.row_iter(i) {
+            for (j, bv) in b.row_iter(k as usize) {
+                let ju = j as usize;
+                if self.marker[ju] != i as u32 {
+                    self.marker[ju] = i as u32;
+                    self.accum[ju] = av * bv;
+                    self.pattern.push(j);
+                } else {
+                    self.accum[ju] += av * bv;
+                }
+            }
+        }
+        self.pattern.sort_unstable();
+        for &j in &self.pattern {
+            colind.push(j);
+            values.push(self.accum[j as usize]);
+        }
+        self.pattern.len()
+    }
+}
+
+/// Open-addressing (linear-probe) hash accumulator keyed by output
+/// column. Slots store `index + 1` into the insertion-ordered key/value
+/// arrays (0 = empty); the table is sized per row to twice the row's
+/// multiplication-count upper bound.
+#[derive(Debug, Default)]
+pub struct HashAccum {
+    slots: Vec<u32>,
+    keys: Vec<u32>,
+    vals: Vec<f64>,
+    out: Vec<(u32, f64)>,
+}
+
+impl HashAccum {
+    pub fn new() -> Self {
+        HashAccum::default()
+    }
+
+    #[inline]
+    fn hash(j: u32) -> u64 {
+        // Fibonacci multiplicative hash; high bits feed the mask below.
+        (j as u64).wrapping_mul(0x9e3779b97f4a7c15)
+    }
+}
+
+impl RowKernel for HashAccum {
+    fn name(&self) -> &'static str {
+        "hashaccum"
+    }
+
+    fn row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        colind: &mut Vec<u32>,
+        values: &mut Vec<f64>,
+    ) -> usize {
+        // distinct columns of the row ≤ its multiplication count
+        let bound: usize = a
+            .row_cols(i)
+            .iter()
+            .map(|&k| b.rowptr[k as usize + 1] - b.rowptr[k as usize])
+            .sum();
+        if bound == 0 {
+            return 0;
+        }
+        let cap = (2 * bound).next_power_of_two().max(8);
+        if self.slots.len() < cap {
+            self.slots.resize(cap, 0);
+        }
+        self.slots[..cap].fill(0);
+        self.keys.clear();
+        self.vals.clear();
+        let mask = cap - 1;
+        let shift = 64 - cap.trailing_zeros();
+        for (k, av) in a.row_iter(i) {
+            for (j, bv) in b.row_iter(k as usize) {
+                let mut pos = (Self::hash(j) >> shift) as usize & mask;
+                loop {
+                    let slot = self.slots[pos];
+                    if slot == 0 {
+                        self.keys.push(j);
+                        self.vals.push(av * bv);
+                        self.slots[pos] = self.keys.len() as u32;
+                        break;
+                    }
+                    let at = (slot - 1) as usize;
+                    if self.keys[at] == j {
+                        self.vals[at] += av * bv;
+                        break;
+                    }
+                    pos = (pos + 1) & mask;
+                }
+            }
+        }
+        self.out.clear();
+        self.out.extend(self.keys.iter().copied().zip(self.vals.iter().copied()));
+        // keys are distinct, so unstable is fine
+        self.out.sort_unstable_by_key(|p| p.0);
+        for &(j, v) in &self.out {
+            colind.push(j);
+            values.push(v);
+        }
+        self.out.len()
+    }
+}
+
+/// Construct the concrete kernel for `kind` (`Auto` is invalid here; the
+/// drivers resolve it first via [`choose_kernel`]).
+pub fn make_kernel(kind: KernelKind, ncols: usize) -> Box<dyn RowKernel> {
+    match kind {
+        KernelKind::SortMerge => Box::new(SortMerge::new()),
+        KernelKind::DenseSpa => Box::new(DenseSpa::new(ncols)),
+        KernelKind::HashAccum => Box::new(HashAccum::new()),
+        KernelKind::Auto => unreachable!("Auto must be resolved before make_kernel"),
+    }
+}
+
+/// Resolve `Auto` for a block of rows from its average multiplication
+/// count (the same per-row weights `sim::threads::row_mult_counts`
+/// computes for load balancing).
+fn resolve_for_block(a: &Csr, b: &Csr, rows: &Range<usize>, kind: KernelKind) -> KernelKind {
+    match kind {
+        KernelKind::Auto => {
+            let mults: u64 = rows
+                .clone()
+                .flat_map(|i| a.row_cols(i).iter())
+                .map(|&k| (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64)
+                .sum();
+            choose_kernel(mults as f64 / rows.len().max(1) as f64, b.ncols)
+        }
+        concrete => concrete,
+    }
+}
+
+/// The numeric Gustavson kernel over a contiguous range of A-rows with a
+/// selectable accumulator: per-row output counts plus the concatenated
+/// column/value arrays, in canonical order. Shared by [`spgemm_with`] and
+/// the row-block parallel kernel in [`crate::sim::threads`], so all entry
+/// points are bit-identical by construction.
+pub(crate) fn spgemm_rows_with(
+    a: &Csr,
+    b: &Csr,
+    rows: Range<usize>,
+    kind: KernelKind,
+) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
+    let mut kernel = make_kernel(resolve_for_block(a, b, &rows, kind), b.ncols);
+    let mut row_len = Vec::with_capacity(rows.len());
+    let mut colind: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for i in rows {
+        row_len.push(kernel.row(a, b, i, &mut colind, &mut values));
+    }
+    (row_len, colind, values)
+}
+
+/// Numeric SpGEMM `C = A·B` with a selectable row accumulator. Output is
+/// canonical CSR, bit-identical to [`super::spgemm`] for every `kind`.
+///
+/// Entries that cancel to exactly 0.0 are kept, matching the seed kernel
+/// (the paper's model ignores numerical cancellation, Sec. 3.1).
+pub fn spgemm_with(a: &Csr, b: &Csr, kind: KernelKind) -> Result<Csr> {
+    check_dims(a, b)?;
+    let (row_len, colind, values) = spgemm_rows_with(a, b, 0..a.nrows, kind);
+    let mut rowptr = Vec::with_capacity(a.nrows + 1);
+    rowptr.push(0usize);
+    let mut acc = 0usize;
+    for len in row_len {
+        acc += len;
+        rowptr.push(acc);
+    }
+    Ok(Csr { nrows: a.nrows, ncols: b.ncols, rowptr, colind, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{spgemm, Coo};
+    use crate::util::Rng;
+
+    fn random_csr(rng: &mut Rng, nrows: usize, ncols: usize, density: f64) -> Csr {
+        let mut coo = Coo::new(nrows, ncols);
+        for i in 0..nrows {
+            for j in 0..ncols {
+                if rng.chance(density) {
+                    coo.push(i, j, rng.range(-2.0, 2.0));
+                }
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    fn assert_bit_identical(tag: &str, want: &Csr, got: &Csr) {
+        assert_eq!(got.rowptr, want.rowptr, "{tag}: rowptr");
+        assert_eq!(got.colind, want.colind, "{tag}: colind");
+        assert!(
+            got.values.iter().zip(&want.values).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{tag}: values not bit-identical"
+        );
+    }
+
+    #[test]
+    fn all_kernels_bit_identical_to_seed() {
+        let mut rng = Rng::new(2026);
+        for trial in 0..4 {
+            let a = random_csr(&mut rng, 20 + trial, 17, 0.2);
+            let b = random_csr(&mut rng, 17, 23, 0.2);
+            let seq = spgemm(&a, &b).unwrap();
+            for kind in KernelKind::ALL {
+                let c = spgemm_with(&a, &b, kind).unwrap();
+                c.validate().unwrap();
+                assert_bit_identical(kind.name(), &seq, &c);
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_handle_degenerate_shapes() {
+        let zero_a = Csr::zero(4, 3);
+        let zero_b = Csr::zero(3, 5);
+        for kind in KernelKind::ALL {
+            let c = spgemm_with(&zero_a, &zero_b, kind).unwrap();
+            assert_eq!(c.nnz(), 0, "{}", kind.name());
+            assert_eq!((c.nrows, c.ncols), (4, 5));
+            // zero-width output
+            let w = spgemm_with(&Csr::zero(2, 3), &Csr::zero(3, 0), kind).unwrap();
+            assert_eq!((w.nrows, w.ncols, w.nnz()), (2, 0, 0));
+            // dimension mismatch still rejected
+            assert!(spgemm_with(&Csr::zero(2, 3), &Csr::zero(4, 2), kind).is_err());
+        }
+    }
+
+    #[test]
+    fn auto_heuristic_regimes() {
+        // dense-ish rows → SPA
+        assert_eq!(choose_kernel(40.0, 100), KernelKind::DenseSpa);
+        // hypersparse rows of a wide matrix → hash
+        assert_eq!(choose_kernel(5.0, 1 << 20), KernelKind::HashAccum);
+        // mid-range → sort/merge
+        assert_eq!(choose_kernel(200.0, 1 << 20), KernelKind::SortMerge);
+        // degenerate width
+        assert_eq!(choose_kernel(0.0, 0), KernelKind::SortMerge);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse("sort"), Some(KernelKind::SortMerge));
+        assert_eq!(KernelKind::parse("spa"), Some(KernelKind::DenseSpa));
+        assert_eq!(KernelKind::parse("hash"), Some(KernelKind::HashAccum));
+        assert_eq!(KernelKind::parse("nope"), None);
+        assert_eq!(KernelKind::default(), KernelKind::Auto);
+    }
+
+    #[test]
+    fn hash_accum_survives_collision_heavy_rows() {
+        // one dense row times a matrix with clustered columns exercises
+        // probe chains; compare against the SPA kernel
+        let mut coo_a = Coo::new(1, 64);
+        for k in 0..64 {
+            coo_a.push(0, k, 1.0 + k as f64);
+        }
+        let mut coo_b = Coo::new(64, 256);
+        let mut rng = Rng::new(7);
+        for k in 0..64 {
+            for _ in 0..4 {
+                coo_b.push(k, rng.below(8) * 32, rng.range(-1.0, 1.0));
+            }
+        }
+        let a = Csr::from_coo(&coo_a);
+        let b = Csr::from_coo(&coo_b);
+        let seq = spgemm(&a, &b).unwrap();
+        let c = spgemm_with(&a, &b, KernelKind::HashAccum).unwrap();
+        assert_bit_identical("hash-collisions", &seq, &c);
+    }
+}

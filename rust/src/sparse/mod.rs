@@ -9,11 +9,13 @@
 pub mod coo;
 pub mod csr;
 pub mod io;
+pub mod kernels;
 pub mod ops;
 pub mod spgemm;
 
 pub use coo::Coo;
 pub use csr::Csr;
+pub use kernels::{choose_kernel, spgemm_with, DenseSpa, HashAccum, KernelKind, RowKernel, SortMerge};
 pub use spgemm::{spgemm, spgemm_flops, spgemm_structure, triple_product};
 
 /// Nonzero structure statistics used by Table II of the paper.

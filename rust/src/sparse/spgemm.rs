@@ -10,7 +10,7 @@
 use super::Csr;
 use crate::{Error, Result};
 
-fn check_dims(a: &Csr, b: &Csr) -> Result<()> {
+pub(crate) fn check_dims(a: &Csr, b: &Csr) -> Result<()> {
     if a.ncols != b.nrows {
         return Err(Error::dim(format!(
             "spgemm: A is {}x{}, B is {}x{}",
@@ -57,65 +57,20 @@ pub fn spgemm_structure(a: &Csr, b: &Csr) -> Result<Csr> {
     Ok(Csr { nrows: a.nrows, ncols: n, rowptr, colind, values: vec![1.0; nnz] })
 }
 
-/// The numeric Gustavson row kernel over a contiguous range of A-rows:
-/// per-row output counts plus the concatenated column/value arrays, with
-/// a dense accumulator (SPA) reused across rows and sorted (canonical)
-/// columns per row. Shared by [`spgemm`] and the row-block parallel
-/// kernel in [`crate::sim::threads`], so the two are bit-identical by
-/// construction.
-pub(crate) fn spgemm_rows(
-    a: &Csr,
-    b: &Csr,
-    rows: std::ops::Range<usize>,
-) -> (Vec<usize>, Vec<u32>, Vec<f64>) {
-    let n = b.ncols;
-    let mut accum = vec![0f64; n];
-    let mut marker = vec![u32::MAX; n];
-    let mut pattern: Vec<u32> = Vec::new();
-    let mut row_len = Vec::with_capacity(rows.len());
-    let mut colind: Vec<u32> = Vec::new();
-    let mut values: Vec<f64> = Vec::new();
-    for i in rows {
-        pattern.clear();
-        for (k, av) in a.row_iter(i) {
-            for (j, bv) in b.row_iter(k as usize) {
-                let ju = j as usize;
-                if marker[ju] != i as u32 {
-                    marker[ju] = i as u32;
-                    accum[ju] = av * bv;
-                    pattern.push(j);
-                } else {
-                    accum[ju] += av * bv;
-                }
-            }
-        }
-        pattern.sort_unstable();
-        for &j in &pattern {
-            colind.push(j);
-            values.push(accum[j as usize]);
-        }
-        row_len.push(pattern.len());
-    }
-    (row_len, colind, values)
-}
-
 /// Numeric SpGEMM `C = A·B` via Gustavson with a dense accumulator (SPA)
 /// reused across rows. Output is canonical CSR.
+///
+/// This is the seed reference kernel the rest of the system is measured
+/// against: the row loop lives in [`super::kernels::DenseSpa`], and the
+/// alternative accumulators selected through [`super::spgemm_with`] are
+/// bit-identical to it by construction (enforced by the differential
+/// suite in `rust/tests/kernels.rs`).
 ///
 /// Note: entries that cancel to exactly 0.0 are *kept* — the paper's model
 /// ignores numerical cancellation (Sec. 3.1), so `S_C` is induced by
 /// `S_A`/`S_B` and the numeric structure matches [`spgemm_structure`].
 pub fn spgemm(a: &Csr, b: &Csr) -> Result<Csr> {
-    check_dims(a, b)?;
-    let (row_len, colind, values) = spgemm_rows(a, b, 0..a.nrows);
-    let mut rowptr = Vec::with_capacity(a.nrows + 1);
-    rowptr.push(0usize);
-    let mut acc = 0usize;
-    for len in row_len {
-        acc += len;
-        rowptr.push(acc);
-    }
-    Ok(Csr { nrows: a.nrows, ncols: b.ncols, rowptr, colind, values })
+    super::kernels::spgemm_with(a, b, super::kernels::KernelKind::DenseSpa)
 }
 
 /// The AMG triple product `P^T · (A · P)` computed as two SpGEMMs,

@@ -1,0 +1,283 @@
+//! Differential test harness for the multi-strategy SpGEMM kernels.
+//!
+//! The oracle is the seed sequential `sparse::spgemm`. Every
+//! `KernelKind` (including `Auto`'s per-block dispatch) at every thread
+//! count in {1, 2, 4, 8} must reproduce it **bit for bit**: identical
+//! rowptr, identical colind, and identical `f64` bit patterns — across
+//! all five workload generators, adversarial edge cases, and
+//! property-test sweeps over random shapes and densities.
+
+use spgemm_hp::gen;
+use spgemm_hp::sim;
+use spgemm_hp::sparse::{self, Coo, Csr, KernelKind};
+use spgemm_hp::util::{proptest, Rng};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Bit-level CSR equality (PartialEq on f64 would accept -0.0 == 0.0 and
+/// reject NaN == NaN; the contract is stricter — identical bits).
+fn assert_bits(tag: &str, want: &Csr, got: &Csr) {
+    assert_eq!(got.nrows, want.nrows, "{tag}: nrows");
+    assert_eq!(got.ncols, want.ncols, "{tag}: ncols");
+    assert_eq!(got.rowptr, want.rowptr, "{tag}: rowptr");
+    assert_eq!(got.colind, want.colind, "{tag}: colind");
+    for (pos, (x, y)) in got.values.iter().zip(&want.values).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{tag}: value at position {pos} not bit-identical ({x} vs {y})"
+        );
+    }
+}
+
+/// Run the full differential matrix: all kernels, sequential and at all
+/// thread counts, against the seed oracle.
+fn differential(tag: &str, a: &Csr, b: &Csr) {
+    let oracle = sparse::spgemm(a, b).unwrap();
+    for kind in KernelKind::ALL {
+        let seq = sparse::spgemm_with(a, b, kind).unwrap();
+        seq.validate().unwrap();
+        assert_bits(&format!("{tag}/{}/seq", kind.name()), &oracle, &seq);
+        for t in THREADS {
+            let par = sim::spgemm_parallel_with(a, b, t, kind).unwrap();
+            par.validate().unwrap();
+            assert_bits(&format!("{tag}/{}/t{t}", kind.name()), &oracle, &par);
+        }
+    }
+}
+
+fn random_csr(rng: &mut Rng, nrows: usize, ncols: usize, density: f64) -> Csr {
+    let mut coo = Coo::new(nrows, ncols);
+    for i in 0..nrows {
+        for j in 0..ncols {
+            if rng.chance(density) {
+                coo.push(i, j, rng.range(-2.0, 2.0));
+            }
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+// ---------------------------------------------------------------------
+// workload generators
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_er() {
+    let mut rng = Rng::new(20260726);
+    let a = gen::erdos_renyi(96, 96, 6.0, &mut rng).unwrap();
+    let b = gen::erdos_renyi(96, 96, 6.0, &mut rng).unwrap();
+    differential("er", &a, &b);
+}
+
+#[test]
+fn differential_rmat() {
+    let mut rng = Rng::new(20260726);
+    let a = gen::rmat(&gen::RmatParams::social(8, 8.0), &mut rng).unwrap();
+    differential("rmat", &a, &a);
+}
+
+#[test]
+fn differential_amg() {
+    let a = gen::stencil27(6);
+    let p = gen::smoothed_aggregation_prolongator(&a, 6).unwrap();
+    differential("amg-ap", &a, &p);
+    let (ap, _) = sparse::triple_product(&a, &p).unwrap();
+    differential("amg-ptap", &p.transpose(), &ap);
+}
+
+#[test]
+fn differential_lp() {
+    let mut rng = Rng::new(20260726);
+    let a = gen::lp_constraints(&gen::LpParams::pds_like(150, 480), &mut rng).unwrap();
+    let d = gen::lp::ipm_scaling(a.ncols, &mut rng);
+    let b = sparse::ops::scale_rows(&a.transpose(), &d).unwrap();
+    differential("lp", &a, &b);
+}
+
+#[test]
+fn differential_roadnet() {
+    let mut rng = Rng::new(20260726);
+    let a = gen::road_network(24, 20, 0.3, &mut rng).unwrap();
+    differential("roadnet", &a, &a);
+}
+
+// ---------------------------------------------------------------------
+// adversarial edge cases
+// ---------------------------------------------------------------------
+
+#[test]
+fn adversarial_empty_and_zero() {
+    // fully empty matrices
+    differential("zero", &Csr::zero(5, 4), &Csr::zero(4, 3));
+    // empty output rows: A rows that are empty, or whose k hits empty B rows
+    let a = Csr::from_coo(
+        &Coo::from_triplets(4, 3, [(0, 0, 2.0), (2, 1, -1.0), (2, 2, 0.5)]).unwrap(),
+    );
+    let b = Csr::from_coo(&Coo::from_triplets(3, 5, [(1, 0, 3.0), (1, 4, -2.0)]).unwrap());
+    differential("empty-rows", &a, &b);
+    // empty columns of B (narrow projection), and zero-width output
+    differential("zero-width", &a, &Csr::zero(3, 0));
+    differential("zero-height", &Csr::zero(0, 3), &b);
+}
+
+#[test]
+fn adversarial_vector_shapes() {
+    let mut rng = Rng::new(5);
+    // 1 x n times n x 1 (inner product) and the outer product back
+    let row = random_csr(&mut rng, 1, 40, 0.4);
+    let col = random_csr(&mut rng, 40, 1, 0.4);
+    differential("inner-1xn", &row, &col);
+    differential("outer-nx1", &col, &row);
+    // 1 x 1
+    let one = Csr::from_coo(&Coo::from_triplets(1, 1, [(0, 0, 2.5)]).unwrap());
+    differential("one-by-one", &one, &one);
+}
+
+#[test]
+fn adversarial_all_dense_row() {
+    // one completely dense row of A (every accumulator's worst/best case
+    // in one instance) over a random B
+    let mut rng = Rng::new(9);
+    let mut coo = Coo::new(6, 32);
+    for k in 0..32 {
+        coo.push(2, k, rng.range(-1.0, 1.0));
+    }
+    coo.push(0, 3, 1.0);
+    coo.push(5, 31, -2.0);
+    let a = Csr::from_coo(&coo);
+    let b = random_csr(&mut rng, 32, 24, 0.3);
+    differential("dense-row", &a, &b);
+    // fully dense square product
+    let da = random_csr(&mut rng, 12, 12, 1.0);
+    differential("all-dense", &da, &da);
+}
+
+#[test]
+fn adversarial_duplicate_free_coo_round_trip() {
+    // duplicate-free COO -> CSR -> COO -> CSR must be lossless, and the
+    // kernels must agree on the round-tripped operands
+    let mut rng = Rng::new(13);
+    let mut coo = Coo::new(20, 18);
+    for i in 0..20 {
+        for j in 0..18 {
+            if rng.chance(0.2) {
+                coo.push(i, j, rng.range(-3.0, 3.0));
+            }
+        }
+    }
+    let a = Csr::from_coo(&coo);
+    let round = Csr::from_coo(&a.to_coo());
+    assert_eq!(a, round, "duplicate-free COO round-trip must be lossless");
+    let b = random_csr(&mut rng, 18, 15, 0.25);
+    differential("coo-round-trip", &round, &b);
+}
+
+// ---------------------------------------------------------------------
+// property-based sweeps
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_kernels_bit_identical_random_shapes() {
+    proptest::check(
+        "all kernels x threads == seed spgemm (bitwise)",
+        0xD1FF,
+        proptest::default_cases(),
+        |r| {
+            let m = 1 + r.below(24);
+            let k = 1 + r.below(20);
+            let n = 1 + r.below(28);
+            // densities spanning hypersparse to dense (Auto crosses all
+            // three dispatch regimes over these cases)
+            let d = match r.below(4) {
+                0 => 0.02,
+                1 => r.range(0.05, 0.3),
+                2 => r.range(0.3, 0.7),
+                _ => 1.0,
+            };
+            (random_csr(r, m, k, d), random_csr(r, k, n, d))
+        },
+        |(a, b)| {
+            let oracle = sparse::spgemm(a, b).map_err(|e| e.to_string())?;
+            for kind in KernelKind::ALL {
+                let seq = sparse::spgemm_with(a, b, kind).map_err(|e| e.to_string())?;
+                seq.validate().map_err(|e| e.to_string())?;
+                for (got, want) in seq.values.iter().zip(&oracle.values) {
+                    proptest::ensure(
+                        got.to_bits() == want.to_bits(),
+                        format!("{}: sequential values differ", kind.name()),
+                    )?;
+                }
+                proptest::ensure(
+                    seq.rowptr == oracle.rowptr && seq.colind == oracle.colind,
+                    format!("{}: sequential structure differs", kind.name()),
+                )?;
+                for t in THREADS {
+                    let par =
+                        sim::spgemm_parallel_with(a, b, t, kind).map_err(|e| e.to_string())?;
+                    proptest::ensure(
+                        par.rowptr == oracle.rowptr
+                            && par.colind == oracle.colind
+                            && par
+                                .values
+                                .iter()
+                                .zip(&oracle.values)
+                                .all(|(x, y)| x.to_bits() == y.to_bits()),
+                        format!("{} t={t}: parallel result differs", kind.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dimension_mismatch_rejected_by_all_kernels() {
+    proptest::check(
+        "dim mismatch rejected",
+        0xBAD,
+        16,
+        |r| (1 + r.below(6), 1 + r.below(6), 2 + r.below(6)),
+        |&(m, k, extra)| {
+            let a = Csr::zero(m, k);
+            let b = Csr::zero(k + extra, m); // guaranteed mismatch
+            for kind in KernelKind::ALL {
+                proptest::ensure(
+                    sparse::spgemm_with(&a, &b, kind).is_err(),
+                    format!("{}: accepted mismatched dims", kind.name()),
+                )?;
+                proptest::ensure(
+                    sim::spgemm_parallel_with(&a, &b, 2, kind).is_err(),
+                    format!("{}: parallel accepted mismatched dims", kind.name()),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// dispatch heuristic
+// ---------------------------------------------------------------------
+
+#[test]
+fn auto_dispatch_covers_all_regimes() {
+    // the chooser itself
+    assert_eq!(sparse::choose_kernel(100.0, 128), KernelKind::DenseSpa);
+    assert_eq!(sparse::choose_kernel(4.0, 100_000), KernelKind::HashAccum);
+    assert_eq!(sparse::choose_kernel(500.0, 100_000), KernelKind::SortMerge);
+    // and Auto end-to-end on a skewed instance whose blocks fall in
+    // different regimes (a few dense rows, many hypersparse rows)
+    let mut rng = Rng::new(31);
+    let mut coo = Coo::new(64, 64);
+    for i in 0..4 {
+        for j in 0..64 {
+            coo.push(i, j, rng.range(-1.0, 1.0));
+        }
+    }
+    for i in 4..64 {
+        coo.push(i, rng.below(64), rng.range(-1.0, 1.0));
+    }
+    let a = Csr::from_coo(&coo);
+    differential("skewed-auto", &a, &a);
+}

@@ -1,0 +1,142 @@
+//! Oracle invariants connecting the hypergraph cost models to the
+//! simulator (Theorem-level conformance from the paper):
+//!
+//! 1. For the fine-grained model (Def. 3.1, experiment mode, `V^nz`
+//!    omitted) the connectivity-(λ−1) cut of a partition equals the
+//!    total communication volume `sim::parallel` reports for the lowered
+//!    algorithm: every net is a nonzero, its pin parts are exactly the
+//!    processors that need (or produce) that nonzero, and the first-user
+//!    owner rule of `sim::lower` adds no extra participants.
+//! 2. The 1D/2D coarse models restrict the fine-grained solution space
+//!    (Sec. 5.2), so the fine-grained cut of the multiplication
+//!    assignment a coarse partition induces can never exceed the coarse
+//!    model's own cut.
+
+use spgemm_hp::cost;
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::{build_model, ModelKind, MultEnum};
+use spgemm_hp::partition::{partition, random_partition, PartitionerConfig};
+use spgemm_hp::sim;
+use spgemm_hp::sparse::Csr;
+use spgemm_hp::util::Rng;
+
+/// Fine-grained cut == simulator volume, for a given fine partition.
+fn assert_fine_cut_is_sim_volume(tag: &str, a: &Csr, b: &Csr, p: usize, part: &[u32]) {
+    let fine = build_model(a, b, ModelKind::FineGrained, false).unwrap();
+    assert_eq!(part.len(), fine.h.num_vertices(), "{tag}: partition length");
+    let metrics = cost::evaluate(&fine.h, part, p).unwrap();
+    let alg = sim::lower(&fine, part, a, b, p).unwrap();
+    let (rep, _) = sim::simulate(a, b, &alg).unwrap();
+    assert_eq!(
+        rep.total_volume(),
+        metrics.connectivity_volume,
+        "{tag}: simulator volume != connectivity-1 cut"
+    );
+}
+
+/// Induce the fine-grained (per-mult) partition of a coarse-model
+/// partition.
+fn induce_fine_partition(
+    a: &Csr,
+    b: &Csr,
+    model: &spgemm_hp::hypergraph::models::Model,
+    coarse_part: &[u32],
+) -> Vec<u32> {
+    let flops = MultEnum::new(a, b).count() as usize;
+    let mut fine_part = vec![0u32; flops];
+    MultEnum::new(a, b)
+        .for_each(|m| fine_part[m.idx as usize] = coarse_part[model.mult_vertex(&m) as usize]);
+    fine_part
+}
+
+#[test]
+fn fine_cut_is_sim_volume_er() {
+    let mut rng = Rng::new(101);
+    let a = gen::erdos_renyi(28, 28, 4.0, &mut rng).unwrap();
+    let b = gen::erdos_renyi(28, 28, 4.0, &mut rng).unwrap();
+    let fine = build_model(&a, &b, ModelKind::FineGrained, false).unwrap();
+    for p in [2usize, 4] {
+        let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(p) };
+        let part = partition(&fine.h, &cfg).unwrap();
+        assert_fine_cut_is_sim_volume("er/partitioned", &a, &b, p, &part);
+    }
+}
+
+#[test]
+fn fine_cut_is_sim_volume_rmat() {
+    let mut rng = Rng::new(202);
+    let a = gen::rmat(&gen::RmatParams::protein(6, 4.0), &mut rng).unwrap();
+    let fine = build_model(&a, &a, ModelKind::FineGrained, false).unwrap();
+    let p = 4;
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(p) };
+    let part = partition(&fine.h, &cfg).unwrap();
+    assert_fine_cut_is_sim_volume("rmat/partitioned", &a, &a, p, &part);
+}
+
+#[test]
+fn fine_cut_is_sim_volume_for_random_partitions() {
+    // the identity must hold for *any* assignment, not just good ones
+    let mut rng = Rng::new(303);
+    let a = gen::erdos_renyi(20, 20, 3.0, &mut rng).unwrap();
+    let b = gen::erdos_renyi(20, 20, 3.0, &mut rng).unwrap();
+    let fine = build_model(&a, &b, ModelKind::FineGrained, false).unwrap();
+    for seed in [1u64, 2, 3] {
+        let part = random_partition(&fine.h, 5, seed);
+        assert_fine_cut_is_sim_volume("er/random", &a, &b, 5, &part);
+    }
+}
+
+#[test]
+fn coarse_cuts_upper_bound_fine_cut() {
+    let mut rng = Rng::new(404);
+    let instances = [
+        ("er", gen::erdos_renyi(24, 24, 4.0, &mut rng).unwrap()),
+        ("rmat", gen::rmat(&gen::RmatParams::social(5, 4.0), &mut rng).unwrap()),
+    ];
+    let p = 4;
+    let coarse_kinds = [
+        ModelKind::RowWise,
+        ModelKind::ColWise,
+        ModelKind::OuterProduct,
+        ModelKind::MonoA,
+        ModelKind::MonoB,
+        ModelKind::MonoC,
+    ];
+    for (name, a) in &instances {
+        let fine = build_model(a, a, ModelKind::FineGrained, false).unwrap();
+        for kind in coarse_kinds {
+            let coarse = build_model(a, a, kind, false).unwrap();
+            let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+            let coarse_part = partition(&coarse.h, &cfg).unwrap();
+            let coarse_cut = cost::evaluate(&coarse.h, &coarse_part, p).unwrap();
+            let fine_part = induce_fine_partition(a, a, &coarse, &coarse_part);
+            let fine_cut = cost::evaluate(&fine.h, &fine_part, p).unwrap();
+            assert!(
+                fine_cut.connectivity_volume <= coarse_cut.connectivity_volume,
+                "{name}/{kind:?}: fine cut {} exceeds coarse cut {}",
+                fine_cut.connectivity_volume,
+                coarse_cut.connectivity_volume
+            );
+            // and the coarse-lowered algorithm's simulated volume is
+            // exactly the induced fine-grained cut (Lem. 4.2 exactness)
+            let alg = sim::lower(&coarse, &coarse_part, a, a, p).unwrap();
+            let (rep, _) = sim::simulate(a, a, &alg).unwrap();
+            assert_eq!(
+                rep.total_volume(),
+                fine_cut.connectivity_volume,
+                "{name}/{kind:?}: simulated volume != induced fine cut"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_part_has_zero_cut_and_volume() {
+    let mut rng = Rng::new(505);
+    let a = gen::erdos_renyi(16, 16, 3.0, &mut rng).unwrap();
+    let fine = build_model(&a, &a, ModelKind::FineGrained, false).unwrap();
+    let part = vec![0u32; fine.h.num_vertices()];
+    let metrics = cost::evaluate(&fine.h, &part, 1).unwrap();
+    assert_eq!(metrics.connectivity_volume, 0);
+    assert_fine_cut_is_sim_volume("single-part", &a, &a, 1, &part);
+}

@@ -31,11 +31,14 @@ cargo build --release
 step "cargo test -q"
 cargo test -q
 
+step "kernel differential + model oracle suites (deep property sweep)"
+SPGEMM_HP_PROP_CASES=192 cargo test -q --test kernels --test models
+
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
 
 step "bench smoke (writes BENCH_spgemm.json)"
-cargo bench --bench spgemm_kernels -- --smoke --json BENCH_spgemm.json
+cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 
 echo
 echo "CI gate passed."
