@@ -1,7 +1,7 @@
 # spgemm-hp build entry points. `make ci` is the authoritative local gate
 # (mirrors .github/workflows/ci.yml); everything else is convenience.
 
-.PHONY: ci build test bench smoke artifacts clean
+.PHONY: ci build test doc bench smoke artifacts clean
 
 ci:
 	scripts/ci.sh
@@ -12,13 +12,20 @@ build:
 test:
 	cargo test -q
 
+# Rustdoc with broken intra-doc links / bad markdown as hard errors
+# (the same gate CI runs).
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 # Full self-timed bench suite (no criterion; see benches/*.rs).
 bench:
 	cargo bench
 
-# The fast bench path CI runs; writes BENCH_spgemm.json.
+# The fast bench path CI runs; writes BENCH_spgemm.json and
+# BENCH_partition.json.
 smoke:
 	cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
+	cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
 
 # AOT-compile the JAX/Pallas kernels to HLO text artifacts for the
 # `pallas` runtime path. Requires python3 + jax (build time only; the
@@ -28,4 +35,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -f BENCH_spgemm.json
+	rm -f BENCH_spgemm.json BENCH_partition.json

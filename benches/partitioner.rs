@@ -1,56 +1,207 @@
-//! Partitioner performance bench (criterion is unavailable offline; this
-//! is a self-timed harness — run with `cargo bench --offline`).
+//! Partitioner quality + speed harness (criterion is unavailable
+//! offline; this is a self-timed binary — run with `cargo bench`).
 //!
-//! Times the multilevel partitioner across model kinds and hypergraph
-//! sizes, the §Perf hot path of the system (the paper reports PaToH
-//! times from seconds to 5 hours; relative model-to-model ratios are the
-//! comparable signal).
+//! Sweeps model × workload × p, recording both *quality* (cut nets,
+//! connectivity-(λ−1) volume, max boundary cost, imbalance) and *speed*
+//! (ns/op) — the partitioner is the planning stage whose cost must be
+//! amortizable, so it is tracked across commits exactly like the kernels
+//! in `BENCH_spgemm.json`. A final sweep times `PartitionerConfig::
+//! threads` on the largest workload and verifies the bit-determinism
+//! contract while doing so.
+//!
+//! Flags (after `--`):
+//!
+//! * `--smoke` — small workloads and a single iteration (the CI gate).
+//! * `--json [path]` — write machine-readable records (model, workload,
+//!   parts, threads, cut, volume, comm_max, imbalance, ns_per_op) to
+//!   `path`, default `BENCH_partition.json`.
+//! * `--parts 4,16` — part counts for the sweep.
+//! * `--threads 1,2,4,8` — thread counts for the parallel-bisection sweep.
+//!
+//! ```bash
+//! cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
+//! ```
 
+use spgemm_hp::cli::Args;
+use spgemm_hp::cost;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
 use spgemm_hp::partition::{partition, PartitionerConfig};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
+use spgemm_hp::{Error, Result};
+
+/// One measured point, serialized to `BENCH_partition.json`.
+struct Record {
+    model: &'static str,
+    workload: String,
+    parts: usize,
+    threads: usize,
+    cut: usize,
+    volume: u64,
+    comm_max: u64,
+    imbalance: f64,
+    ns_per_op: f64,
+}
+
+fn write_json(path: &str, records: &[Record]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let comma = if i + 1 < records.len() { "," } else { "" };
+        writeln!(
+            f,
+            "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"threads\": {}, \
+             \"cut\": {}, \"volume\": {}, \"comm_max\": {}, \"imbalance\": {:.4}, \
+             \"ns_per_op\": {:.1}}}{comma}",
+            r.model,
+            r.workload,
+            r.parts,
+            r.threads,
+            r.cut,
+            r.volume,
+            r.comm_max,
+            r.imbalance,
+            r.ns_per_op
+        )?;
+    }
+    writeln!(f, "]")?;
+    f.flush()?;
+    Ok(())
+}
 
 fn main() {
-    println!("== partitioner bench ==");
+    if let Err(e) = real_main() {
+        eprintln!("bench error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.has_flag("smoke");
+    let json_path: Option<String> = match args.get("json") {
+        Some(p) => Some(p.to_string()),
+        None if args.has_flag("json") => Some("BENCH_partition.json".to_string()),
+        None => None,
+    };
+    let parts_sweep = args.get_usize_list("parts", &[4, 16])?;
+    let threads_sweep = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    // one iteration in smoke mode and for huge models (the fine-grained
+    // hypergraphs have one vertex per flop); three otherwise
+    let iters_for = |nv: usize| if smoke || nv > 100_000 { 1 } else { 3 };
+    let mut records: Vec<Record> = Vec::new();
     let mut rng = Rng::new(5);
 
-    // AMG A·P at two grid sizes; MCL squaring at two scales
+    // the paper's three application classes, sized for the mode
     let workloads: Vec<(String, spgemm_hp::sparse::Csr, spgemm_hp::sparse::Csr)> = {
         let mut v = Vec::new();
-        for n in [9usize, 12] {
-            let a = gen::stencil27(n);
-            let p = gen::smoothed_aggregation_prolongator(&a, n).unwrap();
-            v.push((format!("amg-AP-n{n}"), a, p));
-        }
-        for scale in [9u32, 10] {
-            let a = gen::rmat(&gen::RmatParams::social(scale, 8.0), &mut rng).unwrap();
-            v.push((format!("mcl-rmat-s{scale}"), a.clone(), a));
-        }
+        let stencil_n = if smoke { 6 } else { 10 };
+        let a = gen::stencil27(stencil_n);
+        let p = gen::smoothed_aggregation_prolongator(&a, stencil_n)?;
+        v.push((format!("amg-AP-n{stencil_n}"), a, p));
+        let lp_rows = if smoke { 160 } else { 512 };
+        let lp = gen::lp_constraints(&gen::LpParams::pds_like(lp_rows, lp_rows * 3), &mut rng)?;
+        let lpt = lp.transpose();
+        v.push((format!("lp-pds-r{lp_rows}"), lp, lpt));
+        let scale = if smoke { 8u32 } else { 10 };
+        let m = gen::rmat(&gen::RmatParams::social(scale, 8.0), &mut rng)?;
+        v.push((format!("mcl-rmat-s{scale}"), m.clone(), m));
         v
     };
 
+    println!("== partitioner quality + speed (model x workload x p) ==");
     println!(
-        "{:<16} {:<14} {:>10} {:>10} {:>14}",
-        "workload", "model", "vertices", "pins", "partition time"
+        "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7} {:>12}",
+        "workload", "model", "p", "vertices", "cut", "volume", "comm_max", "imbal", "time"
     );
+    let models =
+        [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoC, ModelKind::FineGrained];
     for (name, a, b) in &workloads {
-        for kind in
-            [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::FineGrained]
-        {
-            let model = build_model(a, b, kind, false).unwrap();
-            let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(16) };
-            let iters = if model.h.num_vertices() > 100_000 { 1 } else { 3 };
-            let stats = bench(0, iters, || partition(&model.h, &cfg).unwrap());
-            println!(
-                "{:<16} {:<14} {:>10} {:>10} {:>14}",
-                name,
-                kind.name(),
-                model.h.num_vertices(),
-                model.h.num_pins(),
-                BenchStats::fmt_time(stats.median)
-            );
+        for kind in models {
+            let model = build_model(a, b, kind, false)?;
+            for &p in &parts_sweep {
+                let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(p) };
+                // deterministic per cfg, so the last timed run IS the result
+                let mut part: Vec<u32> = Vec::new();
+                let iters = iters_for(model.h.num_vertices());
+                let stats = bench(0, iters, || part = partition(&model.h, &cfg).unwrap());
+                let m = cost::evaluate(&model.h, &part, p)?;
+                println!(
+                    "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7.3} {:>12}",
+                    name,
+                    kind.name(),
+                    p,
+                    model.h.num_vertices(),
+                    m.cut_nets,
+                    m.connectivity_volume,
+                    m.comm_max,
+                    m.comp_imbalance(),
+                    BenchStats::fmt_time(stats.median)
+                );
+                records.push(Record {
+                    model: kind.name(),
+                    workload: name.clone(),
+                    parts: p,
+                    threads: 1,
+                    cut: m.cut_nets,
+                    volume: m.connectivity_volume,
+                    comm_max: m.comm_max,
+                    imbalance: m.comp_imbalance(),
+                    ns_per_op: stats.median * 1e9,
+                });
+            }
         }
     }
+
+    println!("\n== threaded recursive bisection (largest workload, monochrome-C) ==");
+    let (tname, ta, tb) = workloads.last().expect("workloads nonempty");
+    let model = build_model(ta, tb, ModelKind::MonoC, false)?;
+    let p = *parts_sweep.last().unwrap_or(&16);
+    let mut baseline: Option<(f64, Vec<u32>)> = None;
+    for &t in &threads_sweep {
+        let cfg = PartitionerConfig { epsilon: 0.05, threads: t, ..PartitionerConfig::new(p) };
+        let mut part: Vec<u32> = Vec::new();
+        let iters = iters_for(model.h.num_vertices());
+        let stats = bench(0, iters, || part = partition(&model.h, &cfg).unwrap());
+        let m = cost::evaluate(&model.h, &part, p)?;
+        match &baseline {
+            None => {
+                println!("{tname:<16} threads={t:<3} {:>12}", BenchStats::fmt_time(stats.median));
+                baseline = Some((stats.median, part));
+            }
+            Some((t1, p1)) => {
+                // the determinism contract is part of the harness: any
+                // drift across thread counts is a bug, not a data point
+                if *p1 != part {
+                    return Err(Error::Runtime(format!(
+                        "partition not bit-identical at threads={t}"
+                    )));
+                }
+                println!(
+                    "{tname:<16} threads={t:<3} {:>12}  ({:.2}x vs first)",
+                    BenchStats::fmt_time(stats.median),
+                    t1 / stats.median
+                );
+            }
+        }
+        records.push(Record {
+            model: ModelKind::MonoC.name(),
+            workload: format!("{tname}-threaded"),
+            parts: p,
+            threads: t,
+            cut: m.cut_nets,
+            volume: m.connectivity_volume,
+            comm_max: m.comm_max,
+            imbalance: m.comp_imbalance(),
+            ns_per_op: stats.median * 1e9,
+        });
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, &records)?;
+        println!("\nwrote {} records to {path}", records.len());
+    }
+    Ok(())
 }

@@ -65,16 +65,7 @@ fn real_main() -> Result<()> {
         None if args.has_flag("json") => Some("BENCH_spgemm.json".to_string()),
         None => None,
     };
-    let threads: Vec<usize> = match args.get("threads") {
-        Some(list) => list
-            .split(',')
-            .map(|t| match t.trim().parse::<usize>() {
-                Ok(n) if n >= 1 => Ok(n),
-                _ => Err(Error::Config(format!("--threads expects integers >= 1, got {t}"))),
-            })
-            .collect::<Result<_>>()?,
-        None => vec![1, 2, 4, 8],
-    };
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
     let kernels: Vec<KernelKind> = match args.get("kernel") {
         None | Some("all") => KernelKind::ALL.to_vec(),
         Some(s) => vec![KernelKind::parse(s)

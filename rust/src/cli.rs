@@ -73,6 +73,22 @@ impl Args {
         Ok(self.get_u64(key, default as u64)? as u32)
     }
 
+    /// Parse a comma-separated `--key 1,2,4` list of positive integers,
+    /// falling back to `default` when absent (the bench sweeps' shared
+    /// `--threads`/`--parts` syntax).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(list) => list
+                .split(',')
+                .map(|t| match t.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => Ok(n),
+                    _ => Err(Error::Config(format!("--{key} expects integers >= 1, got {t}"))),
+                })
+                .collect(),
+        }
+    }
+
     /// Parse `--key` through a domain parser (e.g. `KernelKind::parse`),
     /// falling back to `default` when absent and erroring on values the
     /// parser rejects.
@@ -117,6 +133,18 @@ mod tests {
         assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
         let bad = parse("x --n twelve");
         assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn usize_list_getter() {
+        let a = parse("x --threads 1,2, 8");
+        // "1,2," then "8": the space splits the value, so only "1,2," binds
+        assert!(a.get_usize_list("threads", &[4]).is_err(), "trailing comma rejected");
+        let b = parse("x --threads 1,2,8");
+        assert_eq!(b.get_usize_list("threads", &[4]).unwrap(), vec![1, 2, 8]);
+        assert_eq!(b.get_usize_list("missing", &[4, 16]).unwrap(), vec![4, 16]);
+        assert!(parse("x --threads 0").get_usize_list("threads", &[1]).is_err());
+        assert!(parse("x --threads two").get_usize_list("threads", &[1]).is_err());
     }
 
     #[test]

@@ -27,6 +27,24 @@
 //! (`make artifacts`) to produce HLO artifacts for the opt-in `pallas`
 //! runtime path; without them the reference backend serves every caller
 //! with identical semantics.
+//!
+//! # Paper map
+//!
+//! Where each module sits in the source paper (`docs/ARCHITECTURE.md`
+//! carries the full module graph and data-flow narrative):
+//!
+//! | Module | Paper anchor |
+//! |---|---|
+//! | [`sparse`] | the SpGEMM computation being modeled (Sec. 2 notation; Gustavson row form) |
+//! | [`gen`] | the Sec. 6 applications: AMG (6.1), LP normal equations (6.2), MCL graphs (6.3) |
+//! | [`hypergraph`] | Def. 3.1 fine-grained model; Sec. 5.1 coarsening; Sec. 5.2 1D/2D models; Sec. 5.4 restricted algorithms; Sec. 5.5 SpMV; Sec. 5.6 extensions |
+//! | [`partition`] | the PaToH role: connectivity-(λ−1) minimization under the ε balance constraint of Def. 4.4 |
+//! | [`cost`] | Def. 4.1 boundary cost, Lem. 4.2 communication bound, eq. (1) and Thm. 4.10 lower bounds |
+//! | [`sim`] | Lem. 4.3 expand/fold execution (parallel), Sec. 4.2 two-level memory (sequential) |
+//! | [`coordinator`] | a deployment-shaped executor of the partitioned algorithm (expand → compute → fold) |
+//! | [`runtime`] | the batched tile-product engine behind the coordinator's compute phase |
+//! | [`repro`] | Sec. 6 experiment drivers (Table II, Figs. 7–9, bound comparisons) |
+//! | [`cli`], [`util`], [`error`] | dependency-free scaffolding (args, RNG, timing, errors) |
 
 pub mod cli;
 pub mod coordinator;

@@ -4,11 +4,12 @@
 //! spgemm-hp info
 //! spgemm-hp gen <stencil27|rmat|roadnet|lp|er> [--n ..] [--out file.mtx]
 //! spgemm-hp partition --a A.mtx --b B.mtx --model row --parts 8 [--epsilon 0.03]
+//!           [--partition-threads N]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
 //! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound> [--scale 1..3] [--seed N] [--csv dir]
 //! spgemm-hp e2e [--graph facebook] [--parts 4] [--tile 8] [--kernel auto]
-//!           [--artifacts artifacts]
+//!           [--artifacts artifacts] [--partition-threads N]
 //! ```
 
 use spgemm_hp::cli::Args;
@@ -109,12 +110,17 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let p = args.get_usize("parts", 8)?;
     let epsilon = args.get_f64("epsilon", 0.03)?;
     let seed = args.get_u64("seed", 0xC0FFEE)?;
+    let threads = args.get_usize("partition-threads", 1)?;
     let t = Timer::start();
     let model = build_model(&a, &b, kind, false)?;
     let build_ms = t.elapsed_ms();
     let t = Timer::start();
-    let cfg =
-        partition::PartitionerConfig { epsilon, seed, ..partition::PartitionerConfig::new(p) };
+    let cfg = partition::PartitionerConfig {
+        epsilon,
+        seed,
+        threads,
+        ..partition::PartitionerConfig::new(p)
+    };
     let part = partition::partition(&model.h, &cfg)?;
     let part_ms = t.elapsed_ms();
     let m = cost::evaluate(&model.h, &part, p)?;
@@ -240,6 +246,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
+    let partition_threads = args.get_usize("partition-threads", 1)?;
 
     let instances = repro::workloads::mcl_instances(scale, seed)?;
     let inst = instances
@@ -273,6 +280,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         let cfg = partition::PartitionerConfig {
             epsilon: 0.1,
             seed,
+            threads: partition_threads,
             ..partition::PartitionerConfig::new(parts)
         };
         let part = partition::partition(&model.h, &cfg)?;

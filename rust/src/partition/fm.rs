@@ -1,12 +1,172 @@
-//! Fiduccia–Mattheyses bisection refinement.
+//! Fiduccia–Mattheyses bisection refinement with gain buckets.
 //!
-//! Boundary FM with a lazy max-heap of gains, balance-aware feasibility,
-//! and rollback to the best prefix of each pass. For a bisection the
+//! Boundary FM built on the classic gain-bucket structure
+//! ([`GainBuckets`]): per-side arrays of doubly-linked vertex lists
+//! indexed by gain, giving O(1) insert / remove / gain-adjust and
+//! amortized-O(1) extraction of the best move. Incremental gain updates
+//! follow the textbook pin-count threshold rules (a move only perturbs
+//! pins on nets whose side counts cross 0/1/2). Balance-aware
+//! feasibility and rollback to the best prefix of each pass are
+//! unchanged from the scanning implementation this replaces — see
+//! [`Bisection::refine`] for the contract. For a bisection the
 //! connectivity-(λ−1) objective equals the total cost of cut nets.
 
 use crate::hypergraph::Hypergraph;
 use crate::util::Rng;
-use std::collections::BinaryHeap;
+
+/// Sentinel for "no vertex" in the intrusive bucket lists.
+const NIL: u32 = u32::MAX;
+
+/// Hard cap on the bucket-array half-width. Gains are bounded by
+/// `max_v Σ_{n ∋ v} c(n)` (every incident net can contribute at most its
+/// cost), but with heavily-weighted coalesced nets that bound can be
+/// enormous; outliers beyond the cap share the two extreme buckets.
+const MAX_BUCKET_CAP: u64 = 1 << 16;
+
+/// The classic Fiduccia–Mattheyses gain-bucket priority structure.
+///
+/// For each side of the bisection it keeps an array of doubly-linked
+/// vertex lists indexed by gain (offset by `cap` so negative gains index
+/// the lower half). All mutations are O(1):
+///
+/// * [`insert`](GainBuckets::insert) pushes a vertex at the head of its
+///   gain's list (LIFO, the classic tie-break) and raises the per-side
+///   max-bucket hint;
+/// * [`remove`](GainBuckets::remove) unlinks a vertex through its
+///   intrusive `prev`/`next` links;
+/// * [`adjust`](GainBuckets::adjust) — the FM "bump" — relocates a vertex
+///   between two bucket heads after a gain delta;
+/// * [`peek`](GainBuckets::peek) returns the head of the highest
+///   nonempty bucket. The hint only moves down between inserts, so a
+///   full FM pass spends O(gain range + touched vertices) on all scans
+///   combined.
+///
+/// Gains outside `[-cap, +cap]` are clamped to the extreme buckets for
+/// *filing* only; the exact gain is cached per vertex and used for
+/// cross-side comparison, so clamping merely coarsens the ordering among
+/// same-bucket outliers (it never affects correctness — every applied
+/// move goes through the exact [`Bisection::apply`] bookkeeping).
+pub struct GainBuckets {
+    /// Bucket half-width: bucket index = clamp(gain, -cap, cap) + cap.
+    cap: i64,
+    /// `heads[side][bucket]` — first vertex of that bucket's list.
+    heads: [Vec<u32>; 2],
+    /// Upper bound on the max nonempty bucket per side.
+    hint: [usize; 2],
+    /// Intrusive doubly-linked list links per vertex.
+    prev: Vec<u32>,
+    next: Vec<u32>,
+    /// Cached exact gain per vertex; `i64::MIN` = never filed this pass.
+    gain: Vec<i64>,
+    /// The side a vertex was filed under (stable while filed: vertices
+    /// are removed before their side flips).
+    side_of: Vec<u8>,
+    /// Current membership flag.
+    filed: Vec<bool>,
+}
+
+impl GainBuckets {
+    /// An empty structure for `n` vertices whose gains are bounded by
+    /// `gain_bound` in absolute value (the classic FM bound: the total
+    /// incident net cost of the heaviest vertex).
+    pub fn new(n: usize, gain_bound: u64) -> Self {
+        let cap = gain_bound.clamp(1, MAX_BUCKET_CAP) as i64;
+        let nb = (2 * cap + 1) as usize;
+        GainBuckets {
+            cap,
+            heads: [vec![NIL; nb], vec![NIL; nb]],
+            hint: [0, 0],
+            prev: vec![NIL; n],
+            next: vec![NIL; n],
+            gain: vec![i64::MIN; n],
+            side_of: vec![0; n],
+            filed: vec![false; n],
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, g: i64) -> usize {
+        (g.clamp(-self.cap, self.cap) + self.cap) as usize
+    }
+
+    /// Is `v` currently filed in a bucket?
+    #[inline]
+    pub fn contains(&self, v: usize) -> bool {
+        self.filed[v]
+    }
+
+    /// Cached exact gain of `v`, or `i64::MIN` if never filed this pass.
+    /// Stays valid after [`remove`](GainBuckets::remove) so a dropped
+    /// vertex can be re-filed with accumulated deltas.
+    #[inline]
+    pub fn cached_gain(&self, v: usize) -> i64 {
+        self.gain[v]
+    }
+
+    /// File `v` (currently on `side`) with exact gain `g` at the head of
+    /// its bucket.
+    pub fn insert(&mut self, v: usize, side: u8, g: i64) {
+        debug_assert!(!self.filed[v]);
+        let b = self.bucket_of(g);
+        let s = side as usize;
+        let head = self.heads[s][b];
+        self.prev[v] = NIL;
+        self.next[v] = head;
+        if head != NIL {
+            self.prev[head as usize] = v as u32;
+        }
+        self.heads[s][b] = v as u32;
+        self.gain[v] = g;
+        self.side_of[v] = side;
+        self.filed[v] = true;
+        if b > self.hint[s] {
+            self.hint[s] = b;
+        }
+    }
+
+    /// Unlink `v` from its bucket list (cached gain survives).
+    pub fn remove(&mut self, v: usize) {
+        debug_assert!(self.filed[v]);
+        let b = self.bucket_of(self.gain[v]);
+        let s = self.side_of[v] as usize;
+        let (p, nx) = (self.prev[v], self.next[v]);
+        if p != NIL {
+            self.next[p as usize] = nx;
+        } else {
+            self.heads[s][b] = nx;
+        }
+        if nx != NIL {
+            self.prev[nx as usize] = p;
+        }
+        self.filed[v] = false;
+    }
+
+    /// Add `delta` to `v`'s gain and refile it — the O(1) FM bump.
+    pub fn adjust(&mut self, v: usize, delta: i64) {
+        let side = self.side_of[v];
+        self.remove(v);
+        let g = self.gain[v] + delta;
+        self.insert(v, side, g);
+    }
+
+    /// Head of the highest nonempty bucket on `side` with its exact
+    /// gain, tightening the max-bucket hint as a side effect.
+    pub fn peek(&mut self, side: usize) -> Option<(usize, i64)> {
+        let mut b = self.hint[side];
+        loop {
+            let head = self.heads[side][b];
+            if head != NIL {
+                self.hint[side] = b;
+                return Some((head as usize, self.gain[head as usize]));
+            }
+            if b == 0 {
+                self.hint[side] = 0;
+                return None;
+            }
+            b -= 1;
+        }
+    }
+}
 
 /// Mutable bisection state over a hypergraph.
 pub struct Bisection<'h> {
@@ -27,6 +187,9 @@ pub struct Bisection<'h> {
     /// accepts states with zero violation, so final balance is preserved.
     /// Without slack, FM is paralyzed at exactly balanced states.
     tol: u64,
+    /// The classic FM gain bound `max_v Σ_{n ∋ v} c(n)`, computed once —
+    /// it depends only on the hypergraph, not on the bisection state.
+    gain_bound: u64,
 }
 
 impl<'h> Bisection<'h> {
@@ -49,7 +212,11 @@ impl<'h> Bisection<'h> {
             .map(|(n, _)| h.net_cost[n])
             .sum();
         let tol = weights.iter().copied().max().unwrap_or(1).max(1);
-        Bisection { h, weights, side, pins, load, max, cut, tol }
+        let gain_bound = (0..h.num_vertices())
+            .map(|v| h.nets_of(v).iter().map(|&m| h.net_cost[m as usize]).sum::<u64>())
+            .max()
+            .unwrap_or(1);
+        Bisection { h, weights, side, pins, load, max, cut, tol, gain_bound }
     }
 
     /// Gain (cut reduction) of moving `v` to the other side.
@@ -126,29 +293,40 @@ impl<'h> Bisection<'h> {
         self.side[v] = to as u8;
     }
 
-    /// One FM pass with incremental gain maintenance (the classic
-    /// Fiduccia–Mattheyses update rules: a move only perturbs the gains
-    /// of pins on nets whose side counts cross the 0/1/2 thresholds).
-    /// Returns true if the pass improved (cut or violation).
+    /// One FM pass over the gain buckets. Move selection takes the
+    /// higher exact gain of the two sides' top candidates (ties go to
+    /// the heavier side); infeasible candidates are dropped and may be
+    /// re-filed by a neighbor update. Gain maintenance is the classic
+    /// incremental rule set: a move only perturbs the gains of pins on
+    /// nets whose side counts cross the 0/1/2 thresholds, each handled
+    /// with an O(1) [`GainBuckets::adjust`]. Returns true if the pass
+    /// improved (cut or violation).
     pub fn fm_pass(&mut self, rng: &mut Rng) -> bool {
         let n = self.h.num_vertices();
         let mut locked = vec![false; n];
-        // cached gain per vertex; i64::MIN = not yet in the structure
-        let mut gain: Vec<i64> = vec![i64::MIN; n];
-        let mut heap: BinaryHeap<(i64, u32)> = BinaryHeap::new();
         // seed with boundary vertices (plus everything if infeasible —
-        // rebalancing may need interior moves)
+        // rebalancing may need interior moves); random filing order is
+        // the tie-break within a bucket (LIFO)
         let seed_all = self.violation() > 0;
         let order = rng.permutation(n);
+        let mut seeds: Vec<(u32, i64)> = Vec::new();
         for v in order {
             if seed_all || self.is_boundary(v) {
-                gain[v] = self.gain(v);
-                heap.push((gain[v], v as u32));
+                seeds.push((v as u32, self.gain(v)));
             }
+        }
+        // size the bucket arrays from this pass's actual gain range (×2
+        // headroom for in-pass bumps) rather than the static worst-case
+        // bound — outliers beyond the cap just share the extreme buckets
+        let seed_max = seeds.iter().map(|&(_, g)| g.unsigned_abs()).max().unwrap_or(0);
+        let cap = seed_max.saturating_mul(2).saturating_add(1).min(self.gain_bound.max(1));
+        let mut buckets = GainBuckets::new(n, cap);
+        for (v, g) in seeds {
+            buckets.insert(v as usize, self.side[v as usize], g);
         }
         let start_cut = self.cut;
         let start_violation = self.violation();
-        let mut best = (self.violation(), self.cut, 0usize); // (violation, cut, prefix)
+        let mut best = (start_violation, self.cut, 0usize); // (violation, cut, prefix)
         let mut moves: Vec<u32> = Vec::new();
         let stall_limit = (n / 2).max(64);
         // nets larger than this skip incremental updates (their pins may
@@ -156,13 +334,27 @@ impl<'h> Bisection<'h> {
         // informed; bounds the per-move update cost on hub nets)
         const HUGE_NET: usize = 4096;
 
-        while let Some((g, v)) = heap.pop() {
-            let v = v as usize;
-            if locked[v] || gain[v] != g {
-                continue; // stale entry (the fresh one is also queued)
-            }
+        loop {
+            let c0 = buckets.peek(0);
+            let c1 = buckets.peek(1);
+            let v = match (c0, c1) {
+                (None, None) => break,
+                (Some((v, _)), None) | (None, Some((v, _))) => v,
+                (Some((v0, g0)), Some((v1, g1))) => {
+                    if g0 > g1 {
+                        v0
+                    } else if g1 > g0 {
+                        v1
+                    } else if self.load[0] >= self.load[1] {
+                        v0
+                    } else {
+                        v1
+                    }
+                }
+            };
+            buckets.remove(v);
             if !self.move_feasible(v) {
-                continue; // may be re-queued by a neighbor update
+                continue; // dropped; a neighbor bump may re-file it
             }
             // --- FM gain updates around the move of v ---------------------
             // (all deltas computed against PRE-move pin counts; `bump`
@@ -183,7 +375,7 @@ impl<'h> Bisection<'h> {
                     for &u in net_pins {
                         let u = u as usize;
                         if u != v && !locked[u] {
-                            bump(&mut gain, &mut heap, self, u, c);
+                            bump(&mut buckets, self, u, c);
                         }
                     }
                 } else if pt == 1 {
@@ -192,7 +384,7 @@ impl<'h> Bisection<'h> {
                         let u = u as usize;
                         if self.side[u] as usize == to {
                             if !locked[u] {
-                                bump(&mut gain, &mut heap, self, u, -c);
+                                bump(&mut buckets, self, u, -c);
                             }
                             break;
                         }
@@ -203,7 +395,7 @@ impl<'h> Bisection<'h> {
                     for &u in net_pins {
                         let u = u as usize;
                         if u != v && !locked[u] {
-                            bump(&mut gain, &mut heap, self, u, -c);
+                            bump(&mut buckets, self, u, -c);
                         }
                     }
                 } else if pf == 2 {
@@ -212,7 +404,7 @@ impl<'h> Bisection<'h> {
                         let u = u as usize;
                         if u != v && self.side[u] as usize == from {
                             if !locked[u] {
-                                bump(&mut gain, &mut heap, self, u, c);
+                                bump(&mut buckets, self, u, c);
                             }
                             break;
                         }
@@ -244,27 +436,28 @@ impl<'h> Bisection<'h> {
     }
 }
 
-/// Adjust `u`'s cached gain by `delta` and requeue. A vertex seen for the
+/// Adjust `u`'s gain by `delta` and (re)file it. A vertex seen for the
 /// first time this pass gets its gain computed from the (pre-move) state
-/// plus `delta`, so the running cache stays exact after the move lands.
+/// plus `delta`; one dropped earlier (infeasible at extraction time) is
+/// re-filed with its cached gain plus all deltas since, so the running
+/// cache stays exact after the move lands.
 #[inline]
-fn bump(
-    gain: &mut [i64],
-    heap: &mut BinaryHeap<(i64, u32)>,
-    bi: &Bisection<'_>,
-    u: usize,
-    delta: i64,
-) {
-    if gain[u] == i64::MIN {
-        gain[u] = bi.gain(u) + delta;
+fn bump(buckets: &mut GainBuckets, bi: &Bisection<'_>, u: usize, delta: i64) {
+    if buckets.contains(u) {
+        buckets.adjust(u, delta);
+    } else if buckets.cached_gain(u) == i64::MIN {
+        buckets.insert(u, bi.side[u], bi.gain(u) + delta);
     } else {
-        gain[u] += delta;
+        let g = buckets.cached_gain(u) + delta;
+        buckets.insert(u, bi.side[u], g);
     }
-    heap.push((gain[u], u as u32));
 }
 
 impl<'h> Bisection<'h> {
-    /// Run FM passes until no improvement (at most `max_passes`).
+    /// Run FM passes until no improvement (at most `max_passes`). Each
+    /// pass ends with a rollback to its best prefix, so the (violation,
+    /// cut) pair is non-increasing across the whole call — refinement
+    /// never leaves the bisection worse than it found it.
     pub fn refine(&mut self, max_passes: usize, rng: &mut Rng) {
         for _ in 0..max_passes {
             if !self.fm_pass(rng) {
@@ -361,5 +554,55 @@ mod tests {
         bi.refine(4, &mut rng);
         assert!(bi.load[0] <= 5 && bi.load[1] <= 5);
         assert_eq!(bi.cut, 1);
+    }
+
+    #[test]
+    fn buckets_order_and_links() {
+        let mut gb = GainBuckets::new(6, 10);
+        gb.insert(0, 0, -3);
+        gb.insert(1, 0, 5);
+        gb.insert(2, 0, 5); // same bucket: LIFO, 2 is the head
+        gb.insert(3, 1, 7);
+        assert_eq!(gb.peek(0), Some((2, 5)));
+        assert_eq!(gb.peek(1), Some((3, 7)));
+        gb.remove(2);
+        assert_eq!(gb.peek(0), Some((1, 5)));
+        assert!(!gb.contains(2));
+        assert_eq!(gb.cached_gain(2), 5, "cache survives removal");
+        // middle-of-list removal relinks correctly
+        gb.insert(4, 0, 5);
+        gb.insert(5, 0, 5); // list: 5, 4, 1
+        gb.remove(4);
+        assert_eq!(gb.peek(0), Some((5, 5)));
+        gb.remove(5);
+        assert_eq!(gb.peek(0), Some((1, 5)));
+        gb.remove(1);
+        assert_eq!(gb.peek(0), Some((0, -3)));
+    }
+
+    #[test]
+    fn buckets_adjust_moves_between_buckets() {
+        let mut gb = GainBuckets::new(3, 4);
+        gb.insert(0, 0, 1);
+        gb.insert(1, 0, 2);
+        gb.adjust(0, 3); // 0 now gain 4 > 2
+        assert_eq!(gb.peek(0), Some((0, 4)));
+        gb.adjust(0, -6); // down to -2
+        assert_eq!(gb.peek(0), Some((1, 2)));
+        assert_eq!(gb.cached_gain(0), -2);
+    }
+
+    #[test]
+    fn buckets_clamp_extreme_gains() {
+        // cap is 4: gains beyond share the extreme buckets but keep
+        // exact cached values for cross-side comparison
+        let mut gb = GainBuckets::new(4, 4);
+        gb.insert(0, 0, 100);
+        gb.insert(1, 0, 7); // same extreme bucket, LIFO head
+        assert_eq!(gb.peek(0), Some((1, 7)));
+        gb.remove(1);
+        assert_eq!(gb.peek(0), Some((0, 100)));
+        gb.insert(2, 1, -50);
+        assert_eq!(gb.peek(1), Some((2, -50)));
     }
 }

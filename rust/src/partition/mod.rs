@@ -8,19 +8,27 @@
 //!    matching until the hypergraph is small.
 //! 2. **Initial partitioning** ([`initial`]) — greedy hypergraph growing
 //!    and random balanced starts.
-//! 3. **Refinement** ([`fm`]) — boundary Fiduccia–Mattheyses passes with
-//!    rollback to the best prefix.
+//! 3. **Refinement** ([`fm`]) — boundary Fiduccia–Mattheyses passes over
+//!    the classic gain-bucket structure, with rollback to the best prefix.
 //! 4. **K-way** ([`multilevel`]) — recursive bisection with proportional
 //!    targets (handles non-power-of-two part counts) and a per-level
-//!    balance budget so the final k-way imbalance stays within ε.
+//!    balance budget so the final k-way imbalance stays within ε. The two
+//!    sub-problems of a bisection are independent and fan out on scoped
+//!    threads ([`PartitionerConfig::threads`]), bit-identically for any
+//!    thread count.
+//! 5. **Direct k-way refinement** ([`kway`]) — a final boundary sweep
+//!    over all `p` parts on the true connectivity-(λ−1) objective, which
+//!    strictly never worsens cut or balance.
 //!
 //! The objective is the connectivity-(λ−1) metric — exactly what PaToH
 //! minimizes — under the computation-weight balance constraint of
 //! Def. 4.4 (the paper's experiments use ε = 0.01, 0.03 here by default
 //! since our instances are smaller, and leave memory unconstrained).
+//! `docs/PARTITIONING.md` is the tuning guide for every knob below.
 
 pub mod fm;
 pub mod initial;
+pub mod kway;
 pub mod matching;
 pub mod multilevel;
 
@@ -44,9 +52,28 @@ pub struct PartitionerConfig {
     pub n_starts: usize,
     /// Maximum FM passes per refinement invocation.
     pub fm_passes: usize,
+    /// Scoped-thread fan-out budget for recursive bisection (1 = fully
+    /// serial). After each bisection the two sub-hypergraphs are
+    /// independent, so they recurse on separate threads while a budget
+    /// remains. The result is **bit-identical for every value**: each
+    /// branch gets its own deterministically-forked RNG before any
+    /// spawn decision is made.
+    pub threads: usize,
 }
 
 impl PartitionerConfig {
+    /// Defaults tuned for this repo's workload generators; see
+    /// `docs/PARTITIONING.md` for the knob-by-knob tuning guide.
+    ///
+    /// ```
+    /// use spgemm_hp::partition::PartitionerConfig;
+    ///
+    /// let cfg = PartitionerConfig { epsilon: 0.10, threads: 4, ..PartitionerConfig::new(8) };
+    /// assert_eq!((cfg.parts, cfg.threads), (8, 4));
+    /// assert!((cfg.epsilon - 0.10).abs() < 1e-12);
+    /// // the planning stage is serial unless asked otherwise
+    /// assert_eq!(PartitionerConfig::new(2).threads, 1);
+    /// ```
     pub fn new(parts: usize) -> Self {
         PartitionerConfig {
             parts,
@@ -55,8 +82,16 @@ impl PartitionerConfig {
             coarse_to: 160,
             n_starts: 8,
             fm_passes: 4,
+            threads: 1,
         }
     }
+}
+
+/// The per-part weight cap implied by ε (Def. 4.4): every part must end
+/// at or below `(1+ε)·(W/p)`, rounded up so integer weights cannot make
+/// an exactly-balanced partition infeasible.
+pub(crate) fn part_cap(total_weight: u64, parts: usize, epsilon: f64) -> u64 {
+    ((1.0 + epsilon) * total_weight as f64 / parts as f64).ceil() as u64
 }
 
 /// The balance weights used throughout: `w_comp`, falling back to unit
@@ -71,6 +106,11 @@ pub(crate) fn balance_weights(h: &Hypergraph) -> Vec<u64> {
 
 /// Partition `h` into `cfg.parts` parts minimizing connectivity-(λ−1)
 /// under the ε balance constraint. Returns `part[v] ∈ 0..parts`.
+///
+/// Runs [`multilevel::recursive_bisection`] and then the direct k-way
+/// cleanup pass of [`kway::refine`], which never worsens the cut or the
+/// balance — so this is always at least as good as recursive bisection
+/// alone under the same seed.
 pub fn partition(h: &Hypergraph, cfg: &PartitionerConfig) -> Result<Vec<u32>> {
     if cfg.parts == 0 {
         return Err(Error::Partition("parts must be >= 1".into()));
@@ -79,7 +119,14 @@ pub fn partition(h: &Hypergraph, cfg: &PartitionerConfig) -> Result<Vec<u32>> {
         return Err(Error::Partition("epsilon must be >= 0".into()));
     }
     let mut rng = Rng::new(cfg.seed);
-    Ok(multilevel::recursive_bisection(h, cfg, &mut rng))
+    let mut part = multilevel::recursive_bisection(h, cfg, &mut rng);
+    if cfg.parts >= 2 && h.num_vertices() > 0 {
+        let weights = balance_weights(h);
+        let total: u64 = weights.iter().sum();
+        let cap = part_cap(total, cfg.parts, cfg.epsilon);
+        kway::refine(h, &weights, &mut part, cfg.parts, cap, cfg.fm_passes.max(1), &mut rng);
+    }
+    Ok(part)
 }
 
 /// Random balanced baseline: shuffle vertices, place each on the

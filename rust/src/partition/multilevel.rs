@@ -1,8 +1,16 @@
 //! The multilevel bisection pipeline and recursive-bisection k-way
 //! driver.
+//!
+//! After a bisection the two induced sub-hypergraphs are completely
+//! independent, so [`recursive_bisection`] fans them out on scoped
+//! threads (the [`crate::sim::threads`] pattern) when
+//! [`PartitionerConfig::threads`] allows. Determinism is preserved by
+//! construction: every branch receives its own RNG forked from the
+//! parent *before* the spawn decision, so the random streams depend only
+//! on the recursion tree — never on the thread budget or scheduling.
 
 use super::fm::Bisection;
-use super::{balance_weights, initial, matching, PartitionerConfig};
+use super::{balance_weights, initial, matching, part_cap, PartitionerConfig};
 use crate::hypergraph::{coarsen, Hypergraph};
 use crate::util::Rng;
 
@@ -121,19 +129,48 @@ fn induce(
     (b.finalize(true, true), sub_w, orig)
 }
 
+/// Both induced halves must be at least this large before a bisection
+/// spawns a thread for the second half — below it, the spawn costs more
+/// than the sub-partition.
+const PAR_MIN_VERTICES: usize = 512;
+
 /// Recursive-bisection k-way partitioning (the public entry point's
-/// engine).
+/// engine). With `cfg.threads > 1` the two branches of each bisection
+/// run on scoped threads; the output is bit-identical for every thread
+/// count because branch RNGs are forked deterministically first.
+///
+/// ```
+/// use spgemm_hp::hypergraph::HypergraphBuilder;
+/// use spgemm_hp::partition::multilevel::recursive_bisection;
+/// use spgemm_hp::partition::PartitionerConfig;
+/// use spgemm_hp::util::Rng;
+///
+/// // two 2-cliques: the optimal bisection keeps each net internal
+/// let mut b = HypergraphBuilder::new(4);
+/// b.set_weights(vec![1; 4], vec![0; 4]);
+/// b.add_net(1, vec![0, 1]);
+/// b.add_net(1, vec![2, 3]);
+/// let h = b.finalize(true, true);
+///
+/// let cfg = PartitionerConfig { epsilon: 0.0, ..PartitionerConfig::new(2) };
+/// let part = recursive_bisection(&h, &cfg, &mut Rng::new(1));
+/// assert_eq!(part.len(), 4);
+/// assert_eq!(part[0], part[1]);
+/// assert_eq!(part[2], part[3]);
+/// assert_ne!(part[0], part[2], "the zero-cut split pairs the cliques");
+/// ```
 pub fn recursive_bisection(h: &Hypergraph, cfg: &PartitionerConfig, rng: &mut Rng) -> Vec<u32> {
     let weights = balance_weights(h);
     let total: u64 = weights.iter().sum();
     // fixed per-part cap derived once at the root (cascades through the
     // recursion; each leaf part ends ≤ cap, i.e. within ε)
-    let cap = ((1.0 + cfg.epsilon) * total as f64 / cfg.parts as f64).ceil() as u64;
+    let cap = part_cap(total, cfg.parts, cfg.epsilon);
     let mut part = vec![0u32; h.num_vertices()];
-    recurse(h, &weights, cfg.parts, cap, 0, &mut part, cfg, rng);
+    recurse(h, &weights, cfg.parts, cap, 0, &mut part, cfg, rng, cfg.threads.max(1));
     part
 }
 
+#[allow(clippy::too_many_arguments)]
 fn recurse(
     h: &Hypergraph,
     weights: &[u64],
@@ -143,6 +180,7 @@ fn recurse(
     out: &mut [u32],
     cfg: &PartitionerConfig,
     rng: &mut Rng,
+    threads: usize,
 ) {
     if k <= 1 || h.num_vertices() == 0 {
         for v in 0..h.num_vertices() {
@@ -160,10 +198,28 @@ fn recurse(
     let (h0, w0, orig0) = induce(h, weights, &side, 0);
     let (h1, w1, orig1) = induce(h, weights, &side, 1);
 
+    // Fork one child RNG per branch *unconditionally and in branch
+    // order*: the streams depend only on the recursion tree, never on
+    // `threads`, which is what makes the partition bit-identical for
+    // every thread count.
+    let mut rng0 = rng.fork();
+    let mut rng1 = rng.fork();
     let mut out0 = vec![0u32; h0.num_vertices()];
     let mut out1 = vec![0u32; h1.num_vertices()];
-    recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, rng);
-    recurse(&h1, &w1, k1, cap, 0, &mut out1, cfg, rng);
+    if threads > 1 && k1 > 1 && h0.num_vertices().min(h1.num_vertices()) >= PAR_MIN_VERTICES {
+        // split the budget; the current thread takes branch 0
+        let t1 = threads / 2;
+        let t0 = threads - t1;
+        let (h1r, w1r, out1r, rng1r) = (&h1, &w1, &mut out1, &mut rng1);
+        std::thread::scope(|s| {
+            let worker = s.spawn(move || recurse(h1r, w1r, k1, cap, 0, out1r, cfg, rng1r, t1));
+            recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, t0);
+            worker.join().expect("partition worker panicked");
+        });
+    } else {
+        recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, threads);
+        recurse(&h1, &w1, k1, cap, 0, &mut out1, cfg, &mut rng1, threads);
+    }
     for (nv, &ov) in orig0.iter().enumerate() {
         out[ov as usize] = label_offset + out0[nv];
     }

@@ -25,20 +25,29 @@ else
     echo "WARNING: clippy not installed; skipping (install with: rustup component add clippy)"
 fi
 
+step "cargo doc --no-deps (deny rustdoc warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 step "cargo build --release"
 cargo build --release
 
 step "cargo test -q"
 cargo test -q
 
-step "kernel differential + model oracle suites (deep property sweep)"
-SPGEMM_HP_PROP_CASES=192 cargo test -q --test kernels --test models
+step "cargo test -q --doc (runnable doc-examples)"
+cargo test -q --doc
+
+step "kernel differential + model oracle + partition quality suites (deep property sweep)"
+SPGEMM_HP_PROP_CASES=192 cargo test -q --test kernels --test models --test partition_quality
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
 
 step "bench smoke (writes BENCH_spgemm.json)"
 cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
+
+step "bench smoke (writes BENCH_partition.json)"
+cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
 
 echo
 echo "CI gate passed."
