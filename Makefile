@@ -22,10 +22,14 @@ bench:
 	cargo bench
 
 # The fast bench path CI runs; writes BENCH_spgemm.json and
-# BENCH_partition.json.
+# BENCH_partition.json (with the coarsen/initial/refine phase fields,
+# whose presence is asserted like in CI).
 smoke:
 	cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
-	cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
+	cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json
+	@for field in coarsen_ns initial_ns refine_ns mem_imbalance; do \
+		grep -q "\"$$field\"" BENCH_partition.json || { echo "missing $$field"; exit 1; }; \
+	done
 
 # AOT-compile the JAX/Pallas kernels to HLO text artifacts for the
 # `pallas` runtime path. Requires python3 + jax (build time only; the

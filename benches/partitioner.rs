@@ -1,22 +1,26 @@
 //! Partitioner quality + speed harness (criterion is unavailable
 //! offline; this is a self-timed binary — run with `cargo bench`).
 //!
-//! Sweeps model × workload × p, recording both *quality* (cut nets,
-//! connectivity-(λ−1) volume, max boundary cost, imbalance) and *speed*
-//! (ns/op) — the partitioner is the planning stage whose cost must be
-//! amortizable, so it is tracked across commits exactly like the kernels
-//! in `BENCH_spgemm.json`. A final sweep times `PartitionerConfig::
-//! threads` on the largest workload and verifies the bit-determinism
-//! contract while doing so.
+//! Sweeps model × workload × p, recording *quality* (cut nets,
+//! connectivity-(λ−1) volume, max boundary cost, computation and memory
+//! imbalance) and *speed* (ns/op plus the coarsen / initial / refine
+//! phase breakdown of [`spgemm_hp::partition::PhaseBreakdown`]) — the
+//! partitioner is the planning stage whose cost must be amortizable, so
+//! both where time goes and how it scales are tracked across commits
+//! exactly like the kernels in `BENCH_spgemm.json`. A final sweep times
+//! `PartitionerConfig::threads` on the largest workload and verifies the
+//! bit-determinism contract while doing so; the per-phase fields are
+//! what shows the parallel-matching coarsening speedup.
 //!
 //! Flags (after `--`):
 //!
 //! * `--smoke` — small workloads and a single iteration (the CI gate).
 //! * `--json [path]` — write machine-readable records (model, workload,
-//!   parts, threads, cut, volume, comm_max, imbalance, ns_per_op) to
-//!   `path`, default `BENCH_partition.json`.
+//!   parts, threads, cut, volume, comm_max, imbalance, mem_imbalance,
+//!   ns_per_op, coarsen_ns, initial_ns, refine_ns) to `path`, default
+//!   `BENCH_partition.json`.
 //! * `--parts 4,16` — part counts for the sweep.
-//! * `--threads 1,2,4,8` — thread counts for the parallel-bisection sweep.
+//! * `--threads 1,2,4,8` — thread counts for the parallel planning sweep.
 //!
 //! ```bash
 //! cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
@@ -26,7 +30,7 @@ use spgemm_hp::cli::Args;
 use spgemm_hp::cost;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
-use spgemm_hp::partition::{partition, PartitionerConfig};
+use spgemm_hp::partition::{partition_timed, PartitionerConfig, PhaseBreakdown};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{Error, Result};
@@ -41,7 +45,9 @@ struct Record {
     volume: u64,
     comm_max: u64,
     imbalance: f64,
+    mem_imbalance: f64,
     ns_per_op: f64,
+    phases: PhaseBreakdown,
 }
 
 fn write_json(path: &str, records: &[Record]) -> Result<()> {
@@ -54,7 +60,8 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
             f,
             "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"threads\": {}, \
              \"cut\": {}, \"volume\": {}, \"comm_max\": {}, \"imbalance\": {:.4}, \
-             \"ns_per_op\": {:.1}}}{comma}",
+             \"mem_imbalance\": {:.4}, \"ns_per_op\": {:.1}, \"coarsen_ns\": {}, \
+             \"initial_ns\": {}, \"refine_ns\": {}}}{comma}",
             r.model,
             r.workload,
             r.parts,
@@ -63,7 +70,11 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
             r.volume,
             r.comm_max,
             r.imbalance,
-            r.ns_per_op
+            r.mem_imbalance,
+            r.ns_per_op,
+            r.phases.coarsen_ns,
+            r.phases.initial_ns,
+            r.phases.refine_ns
         )?;
     }
     writeln!(f, "]")?;
@@ -113,8 +124,18 @@ fn real_main() -> Result<()> {
 
     println!("== partitioner quality + speed (model x workload x p) ==");
     println!(
-        "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7} {:>12}",
-        "workload", "model", "p", "vertices", "cut", "volume", "comm_max", "imbal", "time"
+        "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7} {:>7} {:>12} {:>22}",
+        "workload",
+        "model",
+        "p",
+        "vertices",
+        "cut",
+        "volume",
+        "comm_max",
+        "imbal",
+        "mem_im",
+        "time",
+        "coarsen/initial/refine"
     );
     let models =
         [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoC, ModelKind::FineGrained];
@@ -125,11 +146,16 @@ fn real_main() -> Result<()> {
                 let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(p) };
                 // deterministic per cfg, so the last timed run IS the result
                 let mut part: Vec<u32> = Vec::new();
+                let mut phases = PhaseBreakdown::default();
                 let iters = iters_for(model.h.num_vertices());
-                let stats = bench(0, iters, || part = partition(&model.h, &cfg).unwrap());
+                let stats = bench(0, iters, || {
+                    let (pt, ph) = partition_timed(&model.h, &cfg).unwrap();
+                    part = pt;
+                    phases = ph;
+                });
                 let m = cost::evaluate(&model.h, &part, p)?;
                 println!(
-                    "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7.3} {:>12}",
+                    "{:<16} {:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>7.3} {:>7.3} {:>12} {:>22}",
                     name,
                     kind.name(),
                     p,
@@ -138,7 +164,9 @@ fn real_main() -> Result<()> {
                     m.connectivity_volume,
                     m.comm_max,
                     m.comp_imbalance(),
-                    BenchStats::fmt_time(stats.median)
+                    m.mem_imbalance(),
+                    BenchStats::fmt_time(stats.median),
+                    fmt_phases(&phases)
                 );
                 records.push(Record {
                     model: kind.name(),
@@ -149,13 +177,15 @@ fn real_main() -> Result<()> {
                     volume: m.connectivity_volume,
                     comm_max: m.comm_max,
                     imbalance: m.comp_imbalance(),
+                    mem_imbalance: m.mem_imbalance(),
                     ns_per_op: stats.median * 1e9,
+                    phases,
                 });
             }
         }
     }
 
-    println!("\n== threaded recursive bisection (largest workload, monochrome-C) ==");
+    println!("\n== threaded planning (largest workload, monochrome-C) ==");
     let (tname, ta, tb) = workloads.last().expect("workloads nonempty");
     let model = build_model(ta, tb, ModelKind::MonoC, false)?;
     let p = *parts_sweep.last().unwrap_or(&16);
@@ -163,13 +193,22 @@ fn real_main() -> Result<()> {
     for &t in &threads_sweep {
         let cfg = PartitionerConfig { epsilon: 0.05, threads: t, ..PartitionerConfig::new(p) };
         let mut part: Vec<u32> = Vec::new();
+        let mut phases = PhaseBreakdown::default();
         let iters = iters_for(model.h.num_vertices());
-        let stats = bench(0, iters, || part = partition(&model.h, &cfg).unwrap());
+        let stats = bench(0, iters, || {
+            let (pt, ph) = partition_timed(&model.h, &cfg).unwrap();
+            part = pt;
+            phases = ph;
+        });
         let m = cost::evaluate(&model.h, &part, p)?;
         match &baseline {
             None => {
-                println!("{tname:<16} threads={t:<3} {:>12}", BenchStats::fmt_time(stats.median));
-                baseline = Some((stats.median, part));
+                println!(
+                    "{tname:<16} threads={t:<3} {:>12} {:>22}",
+                    BenchStats::fmt_time(stats.median),
+                    fmt_phases(&phases)
+                );
+                baseline = Some((stats.median, part.clone()));
             }
             Some((t1, p1)) => {
                 // the determinism contract is part of the harness: any
@@ -180,8 +219,9 @@ fn real_main() -> Result<()> {
                     )));
                 }
                 println!(
-                    "{tname:<16} threads={t:<3} {:>12}  ({:.2}x vs first)",
+                    "{tname:<16} threads={t:<3} {:>12} {:>22}  ({:.2}x vs first)",
                     BenchStats::fmt_time(stats.median),
+                    fmt_phases(&phases),
                     t1 / stats.median
                 );
             }
@@ -195,7 +235,9 @@ fn real_main() -> Result<()> {
             volume: m.connectivity_volume,
             comm_max: m.comm_max,
             imbalance: m.comp_imbalance(),
+            mem_imbalance: m.mem_imbalance(),
             ns_per_op: stats.median * 1e9,
+            phases,
         });
     }
 
@@ -204,4 +246,14 @@ fn real_main() -> Result<()> {
         println!("\nwrote {} records to {path}", records.len());
     }
     Ok(())
+}
+
+/// Compact `coarsen/initial/refine` milliseconds column.
+fn fmt_phases(p: &PhaseBreakdown) -> String {
+    format!(
+        "{:.1}/{:.1}/{:.1} ms",
+        p.coarsen_ns as f64 / 1e6,
+        p.initial_ns as f64 / 1e6,
+        p.refine_ns as f64 / 1e6
+    )
 }

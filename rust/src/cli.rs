@@ -73,6 +73,16 @@ impl Args {
         Ok(self.get_u64(key, default as u64)? as u32)
     }
 
+    /// Like [`Args::get_usize`] but rejects values below `min` (thread
+    /// counts, chunk sizes, and similar must-be-positive knobs).
+    pub fn get_usize_min(&self, key: &str, default: usize, min: usize) -> Result<usize> {
+        let v = self.get_usize(key, default)?;
+        if v < min {
+            return Err(Error::Config(format!("--{key} must be >= {min}, got {v}")));
+        }
+        Ok(v)
+    }
+
     /// Parse a comma-separated `--key 1,2,4` list of positive integers,
     /// falling back to `default` when absent (the bench sweeps' shared
     /// `--threads`/`--parts` syntax).
@@ -133,6 +143,14 @@ mod tests {
         assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
         let bad = parse("x --n twelve");
         assert!(bad.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn bounded_getter() {
+        let a = parse("x --threads 4 --chunk 0");
+        assert_eq!(a.get_usize_min("threads", 1, 1).unwrap(), 4);
+        assert_eq!(a.get_usize_min("missing", 8, 1).unwrap(), 8);
+        assert!(a.get_usize_min("chunk", 1, 1).is_err());
     }
 
     #[test]

@@ -6,6 +6,23 @@
 //! Sec. 5.6.1 "single stored copy" rule); coalesced nets (identical pin
 //! sets) are combined with summed costs; singleton nets are dropped.
 //!
+//! Two implementations live here:
+//!
+//! * [`coarsen`] / [`coarsen_with`] — the production path: a two-pass
+//!   flat-CSR construction. Pass 1 projects every net through the map,
+//!   deduplicates pins with a stamp array, and sorts each net's slice in
+//!   place inside one shared pin buffer; pass 2 coalesces identical pin
+//!   sets through an open-addressing hash table keyed on the sorted
+//!   slices. All intermediate storage lives in a [`CoarsenScratch`] that
+//!   the multilevel driver carries across levels, so a full coarsening
+//!   hierarchy performs no per-net allocation at all — only the output
+//!   hypergraph's own arrays are allocated per level.
+//! * [`coarsen_reference`] — the original per-net `Vec` +
+//!   `HypergraphBuilder` path, kept as the executable specification.
+//!   `rust/tests/coarsening.rs` checks the flat-CSR path against it
+//!   structurally (same coalesced nets, costs, and weights; net *order*
+//!   may differ — first-occurrence here vs lexicographic there).
+//!
 //! The direct model builders in [`super::models`] are cross-validated
 //! against this machinery: coarsening the fine-grained hypergraph by
 //! slice/fiber must reproduce them exactly.
@@ -27,8 +44,204 @@ pub enum WeightRule {
     UnitBoth,
 }
 
-/// Coarsen `h` according to `map: vertex -> coarse vertex` (`0..n_coarse`).
+/// Reusable contraction workspace. One instance serves a whole
+/// coarsening hierarchy: every buffer is `clear()`ed and regrown in
+/// place per level, so capacity is paid once at the top (largest) level
+/// and reused as the levels shrink.
+#[derive(Debug, Default)]
+pub struct CoarsenScratch {
+    /// Per-coarse-vertex stamp (= net id) for in-net pin deduplication.
+    stamp: Vec<u32>,
+    /// Projected-net CSR offsets (`nets + 1` entries).
+    ptr: Vec<usize>,
+    /// Projected, deduplicated, per-net-sorted pins.
+    pins: Vec<u32>,
+    /// Representative projected-net index per output net.
+    kept: Vec<u32>,
+    /// Open-addressing table: output-net index + 1 (0 = empty).
+    slots: Vec<u32>,
+    /// Per-vertex fill cursor for the vertex-direction CSR.
+    next: Vec<usize>,
+}
+
+/// Hash of a sorted pin slice (FNV-1a over the ids, murmur-finalized so
+/// the low bits used by the table mask are well mixed).
+#[inline]
+fn hash_pins(pins: &[u32]) -> u64 {
+    let mut x = 0xcbf29ce484222325u64 ^ (pins.len() as u64);
+    for &p in pins {
+        x = (x ^ p as u64).wrapping_mul(0x100000001b3);
+    }
+    x = (x ^ (x >> 33)).wrapping_mul(0xff51afd7ed558ccd);
+    x ^ (x >> 33)
+}
+
+/// Coarsen `h` according to `map: vertex -> coarse vertex` (`0..n_coarse`)
+/// with a freshly allocated scratch. See [`coarsen_with`].
 pub fn coarsen(
+    h: &Hypergraph,
+    map: &[u32],
+    n_coarse: usize,
+    rule: WeightRule,
+    drop_singletons: bool,
+    coalesce: bool,
+) -> Result<Hypergraph> {
+    coarsen_with(h, map, n_coarse, rule, drop_singletons, coalesce, &mut CoarsenScratch::default())
+}
+
+/// Coarsen `h` according to `map`, reusing `scratch` for every
+/// intermediate buffer (the allocation-lean path the multilevel
+/// partitioner drives level after level).
+///
+/// Output nets appear in first-occurrence order of their (projected,
+/// coalesced) pin sets and each net's pins are sorted — structurally
+/// identical to [`coarsen_reference`] up to net order, which no cut
+/// metric observes.
+pub fn coarsen_with(
+    h: &Hypergraph,
+    map: &[u32],
+    n_coarse: usize,
+    rule: WeightRule,
+    drop_singletons: bool,
+    coalesce: bool,
+    scratch: &mut CoarsenScratch,
+) -> Result<Hypergraph> {
+    if map.len() != h.num_vertices() {
+        return Err(Error::invalid("coarsen: map length != num_vertices"));
+    }
+    if let Some(&m) = map.iter().max() {
+        if m as usize >= n_coarse {
+            return Err(Error::invalid("coarsen: map value out of range"));
+        }
+    }
+
+    // --- weights ---------------------------------------------------------
+    let mut w_comp = vec![0u64; n_coarse];
+    let mut w_mem = vec![0u64; n_coarse];
+    for v in 0..h.num_vertices() {
+        let cv = map[v] as usize;
+        match rule {
+            WeightRule::Sum => {
+                w_comp[cv] += h.w_comp[v];
+                w_mem[cv] += h.w_mem[v];
+            }
+            WeightRule::SumCompUnitMem => {
+                w_comp[cv] += h.w_comp[v];
+                if h.w_mem[v] > 0 {
+                    w_mem[cv] = 1;
+                }
+            }
+            WeightRule::UnitBoth => {
+                if h.w_comp[v] > 0 {
+                    w_comp[cv] = 1;
+                }
+                if h.w_mem[v] > 0 {
+                    w_mem[cv] = 1;
+                }
+            }
+        }
+    }
+
+    // --- pass 1: project pins through `map`, dedup, sort per net ---------
+    let nn = h.num_nets();
+    scratch.stamp.clear();
+    scratch.stamp.resize(n_coarse, u32::MAX);
+    scratch.ptr.clear();
+    scratch.ptr.push(0);
+    scratch.pins.clear();
+    for n in 0..nn {
+        let start = scratch.pins.len();
+        for &v in h.pins_of(n) {
+            let cv = map[v as usize] as usize;
+            if scratch.stamp[cv] != n as u32 {
+                scratch.stamp[cv] = n as u32;
+                scratch.pins.push(cv as u32);
+            }
+        }
+        scratch.pins[start..].sort_unstable();
+        scratch.ptr.push(scratch.pins.len());
+    }
+
+    // --- pass 2: coalesce identical pin sets, drop singletons ------------
+    scratch.kept.clear();
+    let mut net_cost: Vec<u64> = Vec::new();
+    let mut out_pins = 0usize;
+    if coalesce {
+        let cap = (2 * nn.max(1)).next_power_of_two().max(16);
+        scratch.slots.clear();
+        scratch.slots.resize(cap, 0);
+        let mask = cap - 1;
+        for n in 0..nn {
+            let pins = &scratch.pins[scratch.ptr[n]..scratch.ptr[n + 1]];
+            if drop_singletons && pins.len() <= 1 {
+                continue;
+            }
+            let mut pos = hash_pins(pins) as usize & mask;
+            loop {
+                let slot = scratch.slots[pos];
+                if slot == 0 {
+                    scratch.slots[pos] = scratch.kept.len() as u32 + 1;
+                    scratch.kept.push(n as u32);
+                    net_cost.push(h.net_cost[n]);
+                    out_pins += pins.len();
+                    break;
+                }
+                let at = (slot - 1) as usize;
+                let rep = scratch.kept[at] as usize;
+                if scratch.pins[scratch.ptr[rep]..scratch.ptr[rep + 1]] == *pins {
+                    net_cost[at] += h.net_cost[n];
+                    break;
+                }
+                pos = (pos + 1) & mask;
+            }
+        }
+    } else {
+        for n in 0..nn {
+            let len = scratch.ptr[n + 1] - scratch.ptr[n];
+            if drop_singletons && len <= 1 {
+                continue;
+            }
+            scratch.kept.push(n as u32);
+            net_cost.push(h.net_cost[n]);
+            out_pins += len;
+        }
+    }
+
+    // --- emit the coarse hypergraph (the only per-level allocations) -----
+    let nn_out = scratch.kept.len();
+    let mut net_ptr = Vec::with_capacity(nn_out + 1);
+    net_ptr.push(0usize);
+    let mut net_pins: Vec<u32> = Vec::with_capacity(out_pins);
+    for &n in &scratch.kept {
+        let n = n as usize;
+        net_pins.extend_from_slice(&scratch.pins[scratch.ptr[n]..scratch.ptr[n + 1]]);
+        net_ptr.push(net_pins.len());
+    }
+    let mut vtx_ptr = vec![0usize; n_coarse + 1];
+    for &p in &net_pins {
+        vtx_ptr[p as usize + 1] += 1;
+    }
+    for v in 0..n_coarse {
+        vtx_ptr[v + 1] += vtx_ptr[v];
+    }
+    scratch.next.clear();
+    scratch.next.extend_from_slice(&vtx_ptr[..n_coarse]);
+    let mut vtx_nets = vec![0u32; net_pins.len()];
+    for n in 0..nn_out {
+        for p in net_ptr[n]..net_ptr[n + 1] {
+            let v = net_pins[p] as usize;
+            vtx_nets[scratch.next[v]] = n as u32;
+            scratch.next[v] += 1;
+        }
+    }
+    Ok(Hypergraph { vtx_ptr, vtx_nets, net_ptr, net_pins, w_comp, w_mem, net_cost })
+}
+
+/// The original per-net `Vec` + [`HypergraphBuilder`] contraction, kept
+/// as the executable specification for differential tests (its output
+/// nets are sorted lexicographically by pin set when coalescing; the
+/// flat-CSR path emits first-occurrence order instead).
+pub fn coarsen_reference(
     h: &Hypergraph,
     map: &[u32],
     n_coarse: usize,
@@ -153,6 +366,7 @@ mod tests {
                 let direct = build_model(&a, &b, kind, false).unwrap();
                 let (map, nc) = slice_map(&a, &b, kind);
                 let coarse = coarsen(&fine.h, &map, nc, WeightRule::Sum, true, true).unwrap();
+                coarse.validate().unwrap();
                 assert_eq!(
                     coarse.canonical_nets(),
                     direct.h.canonical_nets(),
@@ -192,5 +406,36 @@ mod tests {
         let h = HypergraphBuilder::new(2).finalize(false, false);
         assert!(coarsen(&h, &[0], 1, WeightRule::Sum, true, true).is_err());
         assert!(coarsen(&h, &[0, 5], 2, WeightRule::Sum, true, true).is_err());
+        assert!(coarsen_reference(&h, &[0], 1, WeightRule::Sum, true, true).is_err());
+        assert!(coarsen_reference(&h, &[0, 5], 2, WeightRule::Sum, true, true).is_err());
+    }
+
+    #[test]
+    fn no_coalesce_path_matches_reference_exactly() {
+        // without coalescing both paths keep original net order, so the
+        // hypergraphs are equal field for field
+        let mut b = HypergraphBuilder::new(6);
+        b.set_weights(vec![1; 6], vec![1; 6]);
+        b.add_net(2, vec![0, 1, 2]);
+        b.add_net(1, vec![2, 3]);
+        b.add_net(3, vec![3, 4, 5]);
+        b.add_net(1, vec![5]);
+        let h = b.finalize(false, false);
+        let map = vec![0, 0, 1, 1, 2, 2];
+        for drop in [false, true] {
+            let flat = coarsen(&h, &map, 3, WeightRule::Sum, drop, false).unwrap();
+            let reference = coarsen_reference(&h, &map, 3, WeightRule::Sum, drop, false).unwrap();
+            flat.validate().unwrap();
+            assert_eq!(flat, reference, "drop_singletons={drop}");
+        }
+    }
+
+    #[test]
+    fn empty_hypergraph_and_empty_nets() {
+        let h = HypergraphBuilder::new(0).finalize(false, false);
+        let c = coarsen(&h, &[], 0, WeightRule::Sum, true, true).unwrap();
+        assert_eq!(c.num_vertices(), 0);
+        assert_eq!(c.num_nets(), 0);
+        c.validate().unwrap();
     }
 }

@@ -9,6 +9,10 @@
 //! * [`coarsen`] — the generic vertex-coarsening machinery of Sec. 5.1
 //!   (net-membership union, weight summation, coalesced-net combining,
 //!   singleton elimination), used to cross-validate the direct builders.
+//!   The production path is an allocation-lean two-pass flat-CSR
+//!   contraction over a reusable [`coarsen::CoarsenScratch`]; the
+//!   original builder path survives as `coarsen_reference`, the
+//!   differential-test oracle.
 //! * [`restricted`] — the Sec. 5.4 restricted *algorithms* (Exs. 5.1–5.4:
 //!   RrR, CRf, Frf, ffF) with absorbed data distributions and memory
 //!   weights.

@@ -4,7 +4,7 @@
 //! spgemm-hp info
 //! spgemm-hp gen <stencil27|rmat|roadnet|lp|er> [--n ..] [--out file.mtx]
 //! spgemm-hp partition --a A.mtx --b B.mtx --model row --parts 8 [--epsilon 0.03]
-//!           [--partition-threads N]
+//!           [--partition-threads N] [--match-chunk N]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
 //! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound> [--scale 1..3] [--seed N] [--csv dir]
@@ -110,7 +110,9 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let p = args.get_usize("parts", 8)?;
     let epsilon = args.get_f64("epsilon", 0.03)?;
     let seed = args.get_u64("seed", 0xC0FFEE)?;
-    let threads = args.get_usize("partition-threads", 1)?;
+    let threads = args.get_usize_min("partition-threads", 1, 1)?;
+    let match_chunk =
+        args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?;
     let t = Timer::start();
     let model = build_model(&a, &b, kind, false)?;
     let build_ms = t.elapsed_ms();
@@ -119,9 +121,10 @@ fn cmd_partition(args: &Args) -> Result<()> {
         epsilon,
         seed,
         threads,
+        match_chunk,
         ..partition::PartitionerConfig::new(p)
     };
-    let part = partition::partition(&model.h, &cfg)?;
+    let (part, phases) = partition::partition_timed(&model.h, &cfg)?;
     let part_ms = t.elapsed_ms();
     let m = cost::evaluate(&model.h, &part, p)?;
     println!(
@@ -132,11 +135,19 @@ fn cmd_partition(args: &Args) -> Result<()> {
         fmt_count(model.h.num_pins() as u64)
     );
     println!(
-        "p={p} comm_max={} volume={} imbalance={:.3} cut_nets={} (partitioned in {part_ms:.1} ms)",
+        "p={p} comm_max={} volume={} imbalance={:.3} mem_imbalance={:.3} cut_nets={} \
+         (partitioned in {part_ms:.1} ms)",
         fmt_count(m.comm_max),
         fmt_count(m.connectivity_volume),
         m.comp_imbalance(),
+        m.mem_imbalance(),
         fmt_count(m.cut_nets as u64)
+    );
+    println!(
+        "phases: coarsen {:.1} ms | initial {:.1} ms | refine {:.1} ms",
+        phases.coarsen_ns as f64 / 1e6,
+        phases.initial_ns as f64 / 1e6,
+        phases.refine_ns as f64 / 1e6
     );
     Ok(())
 }
@@ -144,7 +155,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 fn cmd_spgemm(args: &Args) -> Result<()> {
     let (a, b) = load_pair(args)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
-    let threads = args.get_usize("threads", 1)?;
+    let threads = args.get_usize_min("threads", 1, 1)?;
     let t = Timer::start();
     let c = if threads > 1 {
         sim::spgemm_parallel_with(&a, &b, threads, kernel)?
@@ -246,7 +257,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
-    let partition_threads = args.get_usize("partition-threads", 1)?;
+    let partition_threads = args.get_usize_min("partition-threads", 1, 1)?;
 
     let instances = repro::workloads::mcl_instances(scale, seed)?;
     let inst = instances

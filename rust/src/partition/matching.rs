@@ -5,72 +5,249 @@
 //! the candidate cluster weight (PaToH's "absorption" flavor). Pairs are
 //! contracted; a weight cap prevents monster clusters that would make
 //! balanced bisection infeasible.
+//!
+//! # Parallel matching (propose / commit)
+//!
+//! [`heavy_connectivity_matching_with`] parallelizes the scoring — the
+//! expensive part — without changing the answer. Each *round* takes the
+//! next `threads × chunk` vertices of the random visit order, splits
+//! them into contiguous per-thread chunks, and has scoped threads score
+//! candidates against the read-only incidence structure and the matched
+//! state frozen at round start. A serial *commit* pass then walks the
+//! round in visit order: a proposal whose target is still unmatched is
+//! committed directly, a conflicted proposal (its target was claimed by
+//! an earlier vertex) is re-resolved against the live state.
+//!
+//! **Bit-identity contract.** The output equals the serial algorithm's
+//! for *every* thread count and chunk size under a fixed seed. The
+//! argument: a vertex's candidate scores depend only on the hypergraph,
+//! never on other candidates' matched state, and candidates only ever
+//! *leave* the unmatched pool. A proposal is the first maximizer (in
+//! deterministic net-traversal order, under the strict `>` tie-break) of
+//! a *superset* of the commit-time unmatched candidates — so if it is
+//! still unmatched at commit time it is also the first maximizer of the
+//! subset, i.e. exactly the serial greedy's choice; if not, the serial
+//! recompute is used verbatim. `rust/tests/coarsening.rs` pins the
+//! equality across thread counts, chunk sizes, and seeds.
 
 use crate::hypergraph::Hypergraph;
 use crate::util::Rng;
 
+/// Skip very large nets when scoring (they carry almost no per-pin
+/// signal and would make scoring quadratic on hub nets).
+const MAX_NET: usize = 256;
+
+/// Default per-thread proposal chunk per round
+/// ([`crate::partition::PartitionerConfig::match_chunk`]).
+pub const DEFAULT_MATCH_CHUNK: usize = 4096;
+
+/// Below this many vertices the parallel path is not worth the spawns;
+/// the serial loop runs regardless of the thread budget (the result is
+/// identical either way).
+const PAR_MATCH_MIN: usize = 2048;
+
+/// Reusable matching workspace: one score lane per thread plus the
+/// shared proposal buffer, carried across coarsening levels by
+/// [`crate::partition::multilevel`] so the top (largest) levels pay the
+/// allocation once.
+#[derive(Debug, Default)]
+pub struct MatchScratch {
+    lanes: Vec<ScoreLane>,
+    proposal: Vec<u32>,
+}
+
+/// Per-thread scoring buffers. Invariant: `score` is all-zero between
+/// visits (each visit resets exactly the entries it touched).
+#[derive(Debug, Default)]
+struct ScoreLane {
+    score: Vec<f64>,
+    touched: Vec<u32>,
+}
+
+impl MatchScratch {
+    fn ensure(&mut self, threads: usize, chunk: usize, n: usize) {
+        if self.lanes.len() < threads {
+            self.lanes.resize_with(threads, ScoreLane::default);
+        }
+        for lane in &mut self.lanes[..threads] {
+            // growing fills with zeros; shrinking keeps the invariant
+            lane.score.resize(n, 0.0);
+        }
+        // a round never proposes for more than n vertices
+        let round = chunk.saturating_mul(threads).min(n);
+        if self.proposal.len() < round {
+            self.proposal.resize(round, u32::MAX);
+        }
+    }
+}
+
+/// Score `v`'s unmatched neighbors (per `map`) and return the best
+/// feasible candidate under the weight cap: accumulated connectivity
+/// score `Σ c(n)/(|n|−1)` over shared nets, normalized by the square
+/// root of the candidate's weight, first maximizer in net-traversal
+/// order. Leaves `lane.score` zeroed.
+fn best_candidate(
+    h: &Hypergraph,
+    weights: &[u64],
+    max_cluster_weight: u64,
+    map: &[u32],
+    v: usize,
+    lane: &mut ScoreLane,
+) -> Option<u32> {
+    lane.touched.clear();
+    for &nid in h.nets_of(v) {
+        let pins = h.pins_of(nid as usize);
+        if pins.len() > MAX_NET {
+            continue;
+        }
+        // connectivity score: cost / (|n| - 1) (spread the net's cost)
+        let s = h.net_cost[nid as usize] as f64 / (pins.len() as f64 - 1.0).max(1.0);
+        for &u in pins {
+            let u = u as usize;
+            if u == v || map[u] != u32::MAX {
+                continue;
+            }
+            if lane.score[u] == 0.0 {
+                lane.touched.push(u as u32);
+            }
+            lane.score[u] += s;
+        }
+    }
+    // best candidate under the weight cap, normalized by its weight
+    let mut best: Option<(f64, u32)> = None;
+    for &u in &lane.touched {
+        let ui = u as usize;
+        if weights[v].saturating_add(weights[ui]) > max_cluster_weight {
+            continue;
+        }
+        let norm = lane.score[ui] / (weights[ui].max(1) as f64).sqrt();
+        if best.map(|(b, _)| norm > b).unwrap_or(true) {
+            best = Some((norm, u));
+        }
+    }
+    for &u in &lane.touched {
+        lane.score[u as usize] = 0.0;
+    }
+    best.map(|(_, u)| u)
+}
+
 /// Compute a matching map `v -> coarse id` and the number of coarse
 /// vertices. `weights` are the balance weights; no cluster may exceed
-/// `max_cluster_weight`.
+/// `max_cluster_weight`. Serial convenience wrapper around
+/// [`heavy_connectivity_matching_with`].
 pub fn heavy_connectivity_matching(
     h: &Hypergraph,
     weights: &[u64],
     max_cluster_weight: u64,
     rng: &mut Rng,
 ) -> (Vec<u32>, usize) {
+    let mut scratch = MatchScratch::default();
+    heavy_connectivity_matching_with(
+        h,
+        weights,
+        max_cluster_weight,
+        rng,
+        1,
+        DEFAULT_MATCH_CHUNK,
+        &mut scratch,
+    )
+}
+
+/// Heavy-connectivity matching with a scoped-thread proposal phase (see
+/// the module docs for the propose/commit scheme and the bit-identity
+/// contract). `chunk` is the per-thread proposal chunk per round;
+/// `scratch` is reused across coarsening levels.
+pub fn heavy_connectivity_matching_with(
+    h: &Hypergraph,
+    weights: &[u64],
+    max_cluster_weight: u64,
+    rng: &mut Rng,
+    threads: usize,
+    chunk: usize,
+    scratch: &mut MatchScratch,
+) -> (Vec<u32>, usize) {
     let n = h.num_vertices();
+    let order = rng.permutation(n);
     let mut map = vec![u32::MAX; n];
     let mut next = 0u32;
-    let order = rng.permutation(n);
-    // scratch: candidate -> accumulated score
-    let mut score: Vec<f64> = vec![0.0; n];
-    let mut touched: Vec<u32> = Vec::with_capacity(64);
-    const MAX_NET: usize = 256; // skip very large nets when scoring
+    let threads = threads.max(1);
+    let chunk = chunk.max(1);
+    scratch.ensure(threads, chunk, n);
 
-    for &v in &order {
-        if map[v] != u32::MAX {
-            continue;
-        }
-        touched.clear();
-        for &nid in h.nets_of(v) {
-            let pins = h.pins_of(nid as usize);
-            if pins.len() > MAX_NET {
+    if threads == 1 || n < PAR_MATCH_MIN {
+        let lane = &mut scratch.lanes[0];
+        for &v in &order {
+            if map[v] != u32::MAX {
                 continue;
             }
-            // connectivity score: cost / (|n| - 1) (spread the net's cost)
-            let s = h.net_cost[nid as usize] as f64 / (pins.len() as f64 - 1.0).max(1.0);
-            for &u in pins {
-                let u = u as usize;
-                if u == v || map[u] != u32::MAX {
-                    continue;
+            let best = best_candidate(h, weights, max_cluster_weight, &map, v, lane);
+            let id = next;
+            next += 1;
+            map[v] = id;
+            if let Some(u) = best {
+                map[u as usize] = id;
+            }
+        }
+        return (map, next as usize);
+    }
+
+    let mut pos = 0usize;
+    while pos < n {
+        let round_end = pos.saturating_add(chunk.saturating_mul(threads)).min(n);
+        let round = &order[pos..round_end];
+        // --- proposal phase: scoped threads over contiguous chunks ---
+        let map_ref: &[u32] = &map;
+        let mut rest_prop: &mut [u32] = &mut scratch.proposal[..round.len()];
+        let mut rest_order = round;
+        std::thread::scope(|s| {
+            let mut workers = Vec::with_capacity(threads);
+            for lane in scratch.lanes[..threads].iter_mut() {
+                if rest_order.is_empty() {
+                    break;
                 }
-                if score[u] == 0.0 {
-                    touched.push(u as u32);
+                let take = chunk.min(rest_order.len());
+                let (chunk_order, tail_order) = rest_order.split_at(take);
+                let (chunk_prop, tail_prop) = std::mem::take(&mut rest_prop).split_at_mut(take);
+                rest_order = tail_order;
+                rest_prop = tail_prop;
+                workers.push(s.spawn(move || {
+                    for (slot, &v) in chunk_prop.iter_mut().zip(chunk_order) {
+                        *slot = if map_ref[v] != u32::MAX {
+                            u32::MAX // already matched at round start
+                        } else {
+                            best_candidate(h, weights, max_cluster_weight, map_ref, v, lane)
+                                .unwrap_or(u32::MAX)
+                        };
+                    }
+                }));
+            }
+            for w in workers {
+                w.join().expect("matching proposal worker panicked");
+            }
+        });
+        // --- commit phase: serial, visit-order priority --------------
+        for (i, &v) in round.iter().enumerate() {
+            if map[v] != u32::MAX {
+                continue; // claimed by an earlier commit (or earlier round)
+            }
+            let proposed = scratch.proposal[i];
+            let best = match proposed {
+                u32::MAX => None, // no feasible candidate existed at round start
+                u if map[u as usize] == u32::MAX => Some(u),
+                // conflict: the proposed partner was claimed first;
+                // re-resolve against the live state (the serial rule)
+                _ => {
+                    best_candidate(h, weights, max_cluster_weight, &map, v, &mut scratch.lanes[0])
                 }
-                score[u] += s;
+            };
+            let id = next;
+            next += 1;
+            map[v] = id;
+            if let Some(u) = best {
+                map[u as usize] = id;
             }
         }
-        // best candidate under the weight cap, normalized by its weight
-        let mut best: Option<(f64, usize)> = None;
-        for &u in &touched {
-            let u = u as usize;
-            if weights[v].saturating_add(weights[u]) > max_cluster_weight {
-                continue;
-            }
-            let norm = score[u] / (weights[u].max(1) as f64).sqrt();
-            if best.map(|(b, _)| norm > b).unwrap_or(true) {
-                best = Some((norm, u));
-            }
-        }
-        let id = next;
-        next += 1;
-        map[v] = id;
-        if let Some((_, u)) = best {
-            map[u] = id;
-        }
-        for &u in &touched {
-            score[u as usize] = 0.0;
-        }
+        pos = round_end;
     }
     (map, next as usize)
 }
@@ -138,5 +315,43 @@ mod tests {
         let hc = coarsen::coarsen(&h, &map, nc, coarsen::WeightRule::Sum, true, true).unwrap();
         assert_eq!(hc.total_comp(), h.total_comp());
         assert!(hc.num_vertices() < h.num_vertices());
+    }
+
+    #[test]
+    fn parallel_path_equals_serial_on_a_large_path() {
+        // 5000 vertices clears PAR_MATCH_MIN, so threads > 1 really runs
+        // the propose/commit rounds (the deeper sweep lives in
+        // rust/tests/coarsening.rs)
+        let n = 5000;
+        let h = path(n);
+        let w: Vec<u64> = (0..n).map(|v| 1 + (v % 3) as u64).collect();
+        let serial = {
+            let mut rng = Rng::new(12);
+            heavy_connectivity_matching(&h, &w, 4, &mut rng)
+        };
+        let mut scratch = MatchScratch::default();
+        for (threads, chunk) in [(2, 64), (4, 1024), (8, 4096)] {
+            let mut rng = Rng::new(12);
+            let got =
+                heavy_connectivity_matching_with(&h, &w, 4, &mut rng, threads, chunk, &mut scratch);
+            assert_eq!(got, serial, "threads={threads} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shrinking_levels_is_harmless() {
+        let mut scratch = MatchScratch::default();
+        for n in [4000usize, 2500, 600] {
+            let h = path(n);
+            let w = vec![1u64; n];
+            let want = {
+                let mut rng = Rng::new(77);
+                heavy_connectivity_matching(&h, &w, u64::MAX, &mut rng)
+            };
+            let mut rng = Rng::new(77);
+            let got =
+                heavy_connectivity_matching_with(&h, &w, u64::MAX, &mut rng, 4, 512, &mut scratch);
+            assert_eq!(got, want, "n={n}");
+        }
     }
 }

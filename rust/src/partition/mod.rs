@@ -5,7 +5,11 @@
 //! recursive-bisection family (Çatalyürek & Aykanat 1999):
 //!
 //! 1. **Coarsening** ([`matching`]) — agglomerative heavy-connectivity
-//!    matching until the hypergraph is small.
+//!    matching until the hypergraph is small, with a scoped-thread
+//!    propose/commit proposal phase that is bit-identical to the serial
+//!    greedy for any thread count, and an allocation-lean flat-CSR
+//!    contraction ([`crate::hypergraph::coarsen`]) whose scratch is
+//!    reused across levels.
 //! 2. **Initial partitioning** ([`initial`]) — greedy hypergraph growing
 //!    and random balanced starts.
 //! 3. **Refinement** ([`fm`]) — boundary Fiduccia–Mattheyses passes over
@@ -52,13 +56,21 @@ pub struct PartitionerConfig {
     pub n_starts: usize,
     /// Maximum FM passes per refinement invocation.
     pub fm_passes: usize,
-    /// Scoped-thread fan-out budget for recursive bisection (1 = fully
-    /// serial). After each bisection the two sub-hypergraphs are
-    /// independent, so they recurse on separate threads while a budget
-    /// remains. The result is **bit-identical for every value**: each
-    /// branch gets its own deterministically-forked RNG before any
-    /// spawn decision is made.
+    /// Scoped-thread budget for the planning stage (1 = fully serial).
+    /// After each bisection the two sub-hypergraphs are independent, so
+    /// they recurse on separate threads while a budget remains, and the
+    /// same budget drives the propose/commit proposal phase inside every
+    /// coarsening level's matching. The result is **bit-identical for
+    /// every value**: each branch gets its own deterministically-forked
+    /// RNG before any spawn decision is made, and parallel matching
+    /// commits in visit-order priority, which equals the serial greedy.
     pub threads: usize,
+    /// Per-thread proposal chunk per matching round (default
+    /// [`matching::DEFAULT_MATCH_CHUNK`]). Smaller chunks track the
+    /// matched state more closely (fewer conflict re-resolutions) at the
+    /// price of more rounds; the partition itself is identical for every
+    /// value.
+    pub match_chunk: usize,
 }
 
 impl PartitionerConfig {
@@ -83,7 +95,38 @@ impl PartitionerConfig {
             n_starts: 8,
             fm_passes: 4,
             threads: 1,
+            match_chunk: matching::DEFAULT_MATCH_CHUNK,
         }
+    }
+}
+
+/// Wall-clock nanoseconds per planning phase, accumulated along the
+/// calling thread's recursion path by
+/// [`multilevel::recursive_bisection_timed`] / [`partition_timed`].
+///
+/// With `threads == 1` the fields cover every bisection's three phases;
+/// with more threads they approximate the critical path (spawned
+/// branches run concurrently and their time is not double-counted), so
+/// the coarsening figure shrinks as the parallel matching scales.
+/// `refine_ns` includes both the per-level FM passes and the final
+/// direct k-way sweep. [`PhaseBreakdown::total_ns`] is slightly below
+/// the end-to-end planning wall time: sub-hypergraph induction and
+/// label write-back between recursion levels sit outside all three
+/// timers by design (they belong to no phase).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    /// Matching + contraction across all levels.
+    pub coarsen_ns: u64,
+    /// Initial partitioning at the coarsest level.
+    pub initial_ns: u64,
+    /// Uncoarsening FM refinement plus the k-way cleanup pass.
+    pub refine_ns: u64,
+}
+
+impl PhaseBreakdown {
+    /// Total accounted nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.coarsen_ns + self.initial_ns + self.refine_ns
     }
 }
 
@@ -112,6 +155,16 @@ pub(crate) fn balance_weights(h: &Hypergraph) -> Vec<u64> {
 /// balance — so this is always at least as good as recursive bisection
 /// alone under the same seed.
 pub fn partition(h: &Hypergraph, cfg: &PartitionerConfig) -> Result<Vec<u32>> {
+    Ok(partition_timed(h, cfg)?.0)
+}
+
+/// [`partition`] with the per-phase wall-time breakdown (see
+/// [`PhaseBreakdown`] for what the figures mean under `threads > 1`).
+/// The partition returned is identical to [`partition`]'s.
+pub fn partition_timed(
+    h: &Hypergraph,
+    cfg: &PartitionerConfig,
+) -> Result<(Vec<u32>, PhaseBreakdown)> {
     if cfg.parts == 0 {
         return Err(Error::Partition("parts must be >= 1".into()));
     }
@@ -119,14 +172,17 @@ pub fn partition(h: &Hypergraph, cfg: &PartitionerConfig) -> Result<Vec<u32>> {
         return Err(Error::Partition("epsilon must be >= 0".into()));
     }
     let mut rng = Rng::new(cfg.seed);
-    let mut part = multilevel::recursive_bisection(h, cfg, &mut rng);
+    let mut times = PhaseBreakdown::default();
+    let mut part = multilevel::recursive_bisection_timed(h, cfg, &mut rng, &mut times);
     if cfg.parts >= 2 && h.num_vertices() > 0 {
+        let t = std::time::Instant::now();
         let weights = balance_weights(h);
         let total: u64 = weights.iter().sum();
         let cap = part_cap(total, cfg.parts, cfg.epsilon);
         kway::refine(h, &weights, &mut part, cfg.parts, cap, cfg.fm_passes.max(1), &mut rng);
+        times.refine_ns += t.elapsed().as_nanos() as u64;
     }
-    Ok(part)
+    Ok((part, times))
 }
 
 /// Random balanced baseline: shuffle vertices, place each on the

@@ -4,26 +4,93 @@
 //! After a bisection the two induced sub-hypergraphs are completely
 //! independent, so [`recursive_bisection`] fans them out on scoped
 //! threads (the [`crate::sim::threads`] pattern) when
-//! [`PartitionerConfig::threads`] allows. Determinism is preserved by
-//! construction: every branch receives its own RNG forked from the
-//! parent *before* the spawn decision, so the random streams depend only
-//! on the recursion tree — never on the thread budget or scheduling.
+//! [`PartitionerConfig::threads`] allows; the same budget drives the
+//! propose/commit parallel matching *inside* every coarsening level
+//! ([`matching::heavy_connectivity_matching_with`]), so the top
+//! (largest) levels — where most planning time is spent — scale too.
+//! Determinism is preserved by construction: every branch receives its
+//! own RNG forked from the parent *before* the spawn decision, and
+//! parallel matching is bit-identical to the serial greedy for any
+//! thread count, so the partition depends only on (hypergraph, config).
+//!
+//! `coarsen_to_threshold` builds the coarsening hierarchy with one
+//! [`coarsen::CoarsenScratch`] + [`matching::MatchScratch`] pair reused
+//! across levels, so a full hierarchy performs no per-net allocation.
 
 use super::fm::Bisection;
-use super::{balance_weights, initial, matching, part_cap, PartitionerConfig};
+use super::{balance_weights, initial, matching, part_cap, PartitionerConfig, PhaseBreakdown};
 use crate::hypergraph::{coarsen, Hypergraph};
 use crate::util::Rng;
+use std::time::Instant;
 
-/// One coarsening level: the coarser hypergraph, the fine→coarse map, and
-/// the *finer* level's balance weights (needed when refining there).
+/// One coarsening level: the coarser hypergraph, the fine→coarse map,
+/// and the *coarse* level's balance weights (the finer level's weights
+/// live one entry up, or with the caller for level 0).
 struct Level {
     coarse: Hypergraph,
     map: Vec<u32>,
-    fine_weights: Vec<u64>,
+    coarse_weights: Vec<u64>,
+}
+
+/// Coarsen `h` until at most `cfg.coarse_to` vertices remain or matching
+/// stops contracting (diminishing returns). One scratch pair is carried
+/// across all levels, and each level's matching runs the propose/commit
+/// parallel path under `threads`.
+fn coarsen_to_threshold(
+    h: &Hypergraph,
+    weights: &[u64],
+    max_cluster: u64,
+    cfg: &PartitionerConfig,
+    threads: usize,
+    rng: &mut Rng,
+) -> Vec<Level> {
+    let mut levels: Vec<Level> = Vec::new();
+    let mut cscratch = coarsen::CoarsenScratch::default();
+    let mut mscratch = matching::MatchScratch::default();
+    loop {
+        let (cur_h, cur_w): (&Hypergraph, &[u64]) = match levels.last() {
+            None => (h, weights),
+            Some(l) => (&l.coarse, &l.coarse_weights),
+        };
+        if cur_h.num_vertices() <= cfg.coarse_to {
+            break;
+        }
+        let (map, nc) = matching::heavy_connectivity_matching_with(
+            cur_h,
+            cur_w,
+            max_cluster,
+            rng,
+            threads,
+            cfg.match_chunk,
+            &mut mscratch,
+        );
+        if nc as f64 > 0.92 * cur_h.num_vertices() as f64 {
+            break; // diminishing returns
+        }
+        let mut w = vec![0u64; nc];
+        for (v, &m) in map.iter().enumerate() {
+            w[m as usize] += cur_w[v];
+        }
+        let coarse = coarsen::coarsen_with(
+            cur_h,
+            &map,
+            nc,
+            coarsen::WeightRule::Sum,
+            true,
+            true,
+            &mut cscratch,
+        )
+        .expect("matching map is valid");
+        levels.push(Level { coarse, map, coarse_weights: w });
+    }
+    levels
 }
 
 /// Multilevel bisection of `h` with side targets `(target0, total−target0)`
-/// and hard caps `max`. Returns the side (0/1) of each vertex.
+/// and hard caps `max`. Returns the side (0/1) of each vertex. `threads`
+/// is the scoped-thread budget for this bisection's coarsening phase;
+/// phase wall times are accumulated into `times`.
+#[allow(clippy::too_many_arguments)]
 pub fn bisect_multilevel(
     h: &Hypergraph,
     weights: &[u64],
@@ -31,43 +98,30 @@ pub fn bisect_multilevel(
     max: [u64; 2],
     cfg: &PartitionerConfig,
     rng: &mut Rng,
+    threads: usize,
+    times: &mut PhaseBreakdown,
 ) -> Vec<u8> {
     if h.num_vertices() == 0 {
         return Vec::new();
     }
     // --- coarsening phase ------------------------------------------------
     let max_cluster = (max[0].min(max[1]) / 3).max(1);
-    let mut levels: Vec<Level> = Vec::new();
-    let mut cur_h = h.clone();
-    let mut cur_w = weights.to_vec();
-    while cur_h.num_vertices() > cfg.coarse_to {
-        let (map, nc) = matching::heavy_connectivity_matching(&cur_h, &cur_w, max_cluster, rng);
-        if nc as f64 > 0.92 * cur_h.num_vertices() as f64 {
-            break; // diminishing returns
-        }
-        let coarse = coarsen::coarsen(&cur_h, &map, nc, coarsen::WeightRule::Sum, true, true)
-            .expect("matching map is valid");
-        let mut w = vec![0u64; nc];
-        for (v, &m) in map.iter().enumerate() {
-            w[m as usize] += cur_w[v];
-        }
-        levels.push(Level { coarse: coarse.clone(), map, fine_weights: cur_w.clone() });
-        cur_h = coarse;
-        cur_w = w;
-    }
+    let t = Instant::now();
+    let levels = coarsen_to_threshold(h, weights, max_cluster, cfg, threads, rng);
+    times.coarsen_ns += t.elapsed().as_nanos() as u64;
 
     // --- initial partition at the coarsest level -------------------------
-    let mut side = initial::best_initial(
-        &cur_h,
-        &cur_w,
-        target0,
-        max,
-        cfg.n_starts,
-        cfg.fm_passes,
-        rng,
-    );
+    let (cur_h, cur_w): (&Hypergraph, &[u64]) = match levels.last() {
+        None => (h, weights),
+        Some(l) => (&l.coarse, &l.coarse_weights),
+    };
+    let t = Instant::now();
+    let mut side =
+        initial::best_initial(cur_h, cur_w, target0, max, cfg.n_starts, cfg.fm_passes, rng);
+    times.initial_ns += t.elapsed().as_nanos() as u64;
 
     // --- uncoarsening + refinement ---------------------------------------
+    let t = Instant::now();
     for idx in (0..levels.len()).rev() {
         let lvl = &levels[idx];
         // project: fine vertex takes its coarse vertex's side
@@ -77,8 +131,12 @@ pub fn bisect_multilevel(
             fine_side[v] = side[lvl.map[v] as usize];
         }
         // refine at the finer level
-        let finer_h: &Hypergraph = if idx == 0 { h } else { &levels[idx - 1].coarse };
-        let mut bi = Bisection::new(finer_h, &lvl.fine_weights, fine_side, max);
+        let (finer_h, finer_w): (&Hypergraph, &[u64]) = if idx == 0 {
+            (h, weights)
+        } else {
+            (&levels[idx - 1].coarse, &levels[idx - 1].coarse_weights)
+        };
+        let mut bi = Bisection::new(finer_h, finer_w, fine_side, max);
         bi.refine(cfg.fm_passes, rng);
         side = bi.side;
     }
@@ -88,6 +146,7 @@ pub fn bisect_multilevel(
         bi.refine(cfg.fm_passes, rng);
         side = bi.side;
     }
+    times.refine_ns += t.elapsed().as_nanos() as u64;
     side
 }
 
@@ -136,8 +195,10 @@ const PAR_MIN_VERTICES: usize = 512;
 
 /// Recursive-bisection k-way partitioning (the public entry point's
 /// engine). With `cfg.threads > 1` the two branches of each bisection
-/// run on scoped threads; the output is bit-identical for every thread
-/// count because branch RNGs are forked deterministically first.
+/// run on scoped threads and each level's matching proposes in
+/// parallel; the output is bit-identical for every thread count because
+/// branch RNGs are forked deterministically first and parallel matching
+/// equals the serial greedy.
 ///
 /// ```
 /// use spgemm_hp::hypergraph::HypergraphBuilder;
@@ -160,13 +221,30 @@ const PAR_MIN_VERTICES: usize = 512;
 /// assert_ne!(part[0], part[2], "the zero-cut split pairs the cliques");
 /// ```
 pub fn recursive_bisection(h: &Hypergraph, cfg: &PartitionerConfig, rng: &mut Rng) -> Vec<u32> {
+    let mut times = PhaseBreakdown::default();
+    recursive_bisection_timed(h, cfg, rng, &mut times)
+}
+
+/// [`recursive_bisection`] with a per-phase wall-time breakdown.
+/// `times` accumulates the coarsen / initial / refine nanoseconds spent
+/// on the *calling thread's* recursion path: with `threads == 1` that
+/// covers every bisection; with more threads it approximates the
+/// critical path (spawned branches run concurrently and are not
+/// double-counted). Sub-hypergraph induction between levels belongs to
+/// no phase and stays untimed (see [`PhaseBreakdown`]).
+pub fn recursive_bisection_timed(
+    h: &Hypergraph,
+    cfg: &PartitionerConfig,
+    rng: &mut Rng,
+    times: &mut PhaseBreakdown,
+) -> Vec<u32> {
     let weights = balance_weights(h);
     let total: u64 = weights.iter().sum();
     // fixed per-part cap derived once at the root (cascades through the
     // recursion; each leaf part ends ≤ cap, i.e. within ε)
     let cap = part_cap(total, cfg.parts, cfg.epsilon);
     let mut part = vec![0u32; h.num_vertices()];
-    recurse(h, &weights, cfg.parts, cap, 0, &mut part, cfg, rng, cfg.threads.max(1));
+    recurse(h, &weights, cfg.parts, cap, 0, &mut part, cfg, rng, cfg.threads.max(1), times);
     part
 }
 
@@ -181,6 +259,7 @@ fn recurse(
     cfg: &PartitionerConfig,
     rng: &mut Rng,
     threads: usize,
+    times: &mut PhaseBreakdown,
 ) {
     if k <= 1 || h.num_vertices() == 0 {
         for v in 0..h.num_vertices() {
@@ -193,7 +272,7 @@ fn recurse(
     let total: u64 = weights.iter().sum();
     let target0 = (total as u128 * k0 as u128 / k as u128) as u64;
     let max = [cap.saturating_mul(k0 as u64), cap.saturating_mul(k1 as u64)];
-    let side = bisect_multilevel(h, weights, target0, max, cfg, rng);
+    let side = bisect_multilevel(h, weights, target0, max, cfg, rng, threads, times);
 
     let (h0, w0, orig0) = induce(h, weights, &side, 0);
     let (h1, w1, orig1) = induce(h, weights, &side, 1);
@@ -207,18 +286,23 @@ fn recurse(
     let mut out0 = vec![0u32; h0.num_vertices()];
     let mut out1 = vec![0u32; h1.num_vertices()];
     if threads > 1 && k1 > 1 && h0.num_vertices().min(h1.num_vertices()) >= PAR_MIN_VERTICES {
-        // split the budget; the current thread takes branch 0
+        // split the budget; the current thread takes branch 0 (and keeps
+        // the phase accounting — the spawned branch's times are dropped,
+        // making `times` a critical-path figure)
         let t1 = threads / 2;
         let t0 = threads - t1;
         let (h1r, w1r, out1r, rng1r) = (&h1, &w1, &mut out1, &mut rng1);
         std::thread::scope(|s| {
-            let worker = s.spawn(move || recurse(h1r, w1r, k1, cap, 0, out1r, cfg, rng1r, t1));
-            recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, t0);
+            let worker = s.spawn(move || {
+                let mut dropped = PhaseBreakdown::default();
+                recurse(h1r, w1r, k1, cap, 0, out1r, cfg, rng1r, t1, &mut dropped);
+            });
+            recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, t0, times);
             worker.join().expect("partition worker panicked");
         });
     } else {
-        recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, threads);
-        recurse(&h1, &w1, k1, cap, 0, &mut out1, cfg, &mut rng1, threads);
+        recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, threads, times);
+        recurse(&h1, &w1, k1, cap, 0, &mut out1, cfg, &mut rng1, threads, times);
     }
     for (nv, &ov) in orig0.iter().enumerate() {
         out[ov as usize] = label_offset + out0[nv];
@@ -258,11 +342,14 @@ mod tests {
         let w = vec![1u64; 256];
         let mut rng = Rng::new(11);
         let cfg = PartitionerConfig::new(2);
-        let side = bisect_multilevel(&h, &w, 128, [134, 134], &cfg, &mut rng);
+        let mut times = PhaseBreakdown::default();
+        let side = bisect_multilevel(&h, &w, 128, [134, 134], &cfg, &mut rng, 1, &mut times);
         let bi = Bisection::new(&h, &w, side, [134, 134]);
         assert_eq!(bi.violation(), 0);
         // optimal straight cut = 16; accept ≤ 24 from a heuristic
         assert!(bi.cut <= 24, "cut={}", bi.cut);
+        // all three phases ran on this 256-vertex instance
+        assert!(times.coarsen_ns > 0 && times.initial_ns > 0 && times.refine_ns > 0);
     }
 
     #[test]

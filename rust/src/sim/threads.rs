@@ -17,7 +17,7 @@
 
 use super::parallel::{finish, push_unique, Algorithm, Gathered, SimReport};
 use crate::sparse::kernels::spgemm_rows_with;
-use crate::sparse::{choose_kernel, spgemm_structure, spgemm_with, Csr, KernelKind};
+use crate::sparse::{spgemm_structure, spgemm_with, Csr, KernelKind};
 use crate::{Error, Result};
 use std::collections::HashMap;
 use std::ops::Range;
@@ -100,15 +100,10 @@ pub fn spgemm_parallel_with(a: &Csr, b: &Csr, nthreads: usize, kind: KernelKind)
     let costs = row_mult_counts(a, b);
     let blocks = row_blocks(&costs, nthreads);
     // resolve Auto per block from the balance weights we already have
+    // (the same dispatch rule as the sequential driver, by construction)
     let kinds: Vec<KernelKind> = blocks
         .iter()
-        .map(|r| match kind {
-            KernelKind::Auto => {
-                let mults: u64 = costs[r.clone()].iter().sum();
-                choose_kernel(mults as f64 / r.len().max(1) as f64, b.ncols)
-            }
-            concrete => concrete,
-        })
+        .map(|r| kind.resolve_block(b.ncols, r.len(), || costs[r.clone()].iter().sum()))
         .collect();
     let results: Vec<(Vec<usize>, Vec<u32>, Vec<f64>)> = std::thread::scope(|s| {
         let handles: Vec<_> = blocks

@@ -80,6 +80,24 @@ impl KernelKind {
             _ => None,
         }
     }
+
+    /// Resolve `Auto` to a concrete kernel for a block of `rows` rows of
+    /// an `ncols`-wide output, using the block's total multiplication
+    /// count (computed lazily — concrete kinds pass through untouched).
+    /// The one shared definition of per-block dispatch, used by both the
+    /// sequential driver here and the row-block parallel multiply in
+    /// [`crate::sim::threads`].
+    pub fn resolve_block(
+        self,
+        ncols: usize,
+        rows: usize,
+        total_mults: impl FnOnce() -> u64,
+    ) -> KernelKind {
+        match self {
+            KernelKind::Auto => choose_kernel(total_mults() as f64 / rows.max(1) as f64, ncols),
+            concrete => concrete,
+        }
+    }
 }
 
 /// The `Auto` heuristic: pick a concrete kernel for a row block with
@@ -331,19 +349,16 @@ pub fn make_kernel(kind: KernelKind, ncols: usize) -> Box<dyn RowKernel> {
 
 /// Resolve `Auto` for a block of rows from its average multiplication
 /// count (the same per-row weights `sim::threads::row_mult_counts`
-/// computes for load balancing).
+/// computes for load balancing). Thin wrapper over
+/// [`KernelKind::resolve_block`] that derives the counts from the CSR
+/// structure.
 fn resolve_for_block(a: &Csr, b: &Csr, rows: &Range<usize>, kind: KernelKind) -> KernelKind {
-    match kind {
-        KernelKind::Auto => {
-            let mults: u64 = rows
-                .clone()
-                .flat_map(|i| a.row_cols(i).iter())
-                .map(|&k| (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64)
-                .sum();
-            choose_kernel(mults as f64 / rows.len().max(1) as f64, b.ncols)
-        }
-        concrete => concrete,
-    }
+    kind.resolve_block(b.ncols, rows.len(), || {
+        rows.clone()
+            .flat_map(|i| a.row_cols(i).iter())
+            .map(|&k| (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64)
+            .sum()
+    })
 }
 
 /// The numeric Gustavson kernel over a contiguous range of A-rows with a
@@ -453,6 +468,11 @@ mod tests {
         assert_eq!(choose_kernel(200.0, 1 << 20), KernelKind::SortMerge);
         // degenerate width
         assert_eq!(choose_kernel(0.0, 0), KernelKind::SortMerge);
+        // the shared per-block resolver: Auto dispatches on the lazy
+        // count, concrete kinds pass through without evaluating it
+        assert_eq!(KernelKind::Auto.resolve_block(100, 10, || 400), KernelKind::DenseSpa);
+        let k = KernelKind::HashAccum.resolve_block(100, 10, || panic!("must stay lazy"));
+        assert_eq!(k, KernelKind::HashAccum);
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Coarsening-phase suite: the flat-CSR contraction against its builder
+//! reference, and the propose/commit parallel matching against the
+//! serial greedy.
+//!
+//! Two families of guarantees are pinned here:
+//!
+//! 1. **Contraction isomorphism** — `coarsen_with` (the allocation-lean
+//!    two-pass flat-CSR path, scratch reused across cases) must produce
+//!    a hypergraph with exactly the same coalesced nets, costs, and
+//!    weights as `coarsen_reference` (the original builder path) for
+//!    every weight rule and flag combination. Net *order* is the one
+//!    permitted difference, so nets are compared canonically.
+//! 2. **Matching / partition thread determinism** — heavy-connectivity
+//!    matching is bit-identical to the serial greedy for every thread
+//!    count and proposal chunk size, and the full `partition()` pipeline
+//!    (which now parallelizes matching inside every coarsening level) is
+//!    bit-identical across threads {1, 2, 4, 8} and chunk sizes at
+//!    several seeds.
+
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::coarsen::{coarsen_reference, coarsen_with, CoarsenScratch, WeightRule};
+use spgemm_hp::hypergraph::models::{build_model, ModelKind};
+use spgemm_hp::hypergraph::{Hypergraph, HypergraphBuilder};
+use spgemm_hp::partition::matching::{
+    heavy_connectivity_matching, heavy_connectivity_matching_with, MatchScratch,
+};
+use spgemm_hp::partition::{partition, PartitionerConfig};
+use spgemm_hp::util::proptest::{check, default_cases, ensure};
+use spgemm_hp::util::Rng;
+
+/// Random hypergraph with `n` vertices, random weights, and `m` nets of
+/// random size (duplicate pin sets are likely at these sizes, so the
+/// coalescing path is exercised for real).
+fn random_hypergraph(rng: &mut Rng, n: usize, m: usize) -> Hypergraph {
+    let mut b = HypergraphBuilder::new(n);
+    let w_comp: Vec<u64> = (0..n).map(|_| rng.below(4) as u64).collect();
+    let w_mem: Vec<u64> = (0..n).map(|_| rng.below(3) as u64).collect();
+    b.set_weights(w_comp, w_mem);
+    for _ in 0..m {
+        let span = 1 + rng.below(5);
+        let pins: Vec<u32> = (0..span).map(|_| rng.below(n) as u32).collect();
+        b.add_net(1 + rng.below(4) as u64, pins);
+    }
+    b.finalize(false, false)
+}
+
+#[test]
+fn flat_csr_contraction_is_isomorphic_to_builder_reference() {
+    let mut scratch = CoarsenScratch::default();
+    check(
+        "coarsen_flat_vs_reference",
+        20260726,
+        default_cases(),
+        |rng| {
+            let n = 2 + rng.below(50);
+            let m = 1 + rng.below(60);
+            let h = random_hypergraph(rng, n, m);
+            let n_coarse = 1 + rng.below(n);
+            let map: Vec<u32> = (0..n).map(|_| rng.below(n_coarse) as u32).collect();
+            let rule = rng.below(3) as u8;
+            let drop_singletons = rng.chance(0.5);
+            let coalesce = rng.chance(0.5);
+            (h, map, n_coarse, rule, drop_singletons, coalesce)
+        },
+        |(h, map, n_coarse, rule, drop_singletons, coalesce)| {
+            let rule = match rule {
+                0 => WeightRule::Sum,
+                1 => WeightRule::SumCompUnitMem,
+                _ => WeightRule::UnitBoth,
+            };
+            let flat =
+                coarsen_with(h, map, *n_coarse, rule, *drop_singletons, *coalesce, &mut scratch)
+                    .map_err(|e| format!("flat path failed: {e}"))?;
+            let reference = coarsen_reference(h, map, *n_coarse, rule, *drop_singletons, *coalesce)
+                .map_err(|e| format!("reference path failed: {e}"))?;
+            flat.validate().map_err(|e| format!("flat output invalid: {e}"))?;
+            ensure(flat.num_vertices() == reference.num_vertices(), "vertex counts differ")?;
+            ensure(flat.w_comp == reference.w_comp, "w_comp differs")?;
+            ensure(flat.w_mem == reference.w_mem, "w_mem differs")?;
+            ensure(
+                flat.canonical_nets() == reference.canonical_nets(),
+                "coalesced nets or costs differ",
+            )?;
+            if !*coalesce {
+                // without coalescing both paths keep original net order:
+                // the hypergraphs must be equal field for field
+                ensure(flat == reference, "no-coalesce outputs not identical")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn grid(w: usize, h_: usize) -> Hypergraph {
+    let n = w * h_;
+    let mut b = HypergraphBuilder::new(n);
+    b.set_weights(vec![1; n], vec![0; n]);
+    let idx = |x: usize, y: usize| (y * w + x) as u32;
+    for y in 0..h_ {
+        for x in 0..w {
+            if x + 1 < w {
+                b.add_net(1, vec![idx(x, y), idx(x + 1, y)]);
+            }
+            if y + 1 < h_ {
+                b.add_net(1, vec![idx(x, y), idx(x, y + 1)]);
+            }
+        }
+    }
+    b.finalize(true, false)
+}
+
+/// A ring hypergraph with overlapping span nets (conflict-heavy for the
+/// proposal phase: neighbors frequently propose the same partner).
+fn ring_of_nets(rng: &mut Rng, n: usize) -> Hypergraph {
+    let mut b = HypergraphBuilder::new(n);
+    b.set_weights(vec![1; n], vec![0; n]);
+    for i in 0..n {
+        let span = 2 + rng.below(4);
+        let pins: Vec<u32> = (0..span).map(|d| ((i + d) % n) as u32).collect();
+        b.add_net(1 + rng.below(3) as u64, pins);
+    }
+    b.finalize(true, true)
+}
+
+#[test]
+fn parallel_matching_equals_serial_for_all_thread_counts() {
+    let mut fix_rng = Rng::new(404);
+    let fixtures: Vec<(&str, Hypergraph)> =
+        vec![("grid70", grid(70, 70)), ("ring3000", ring_of_nets(&mut fix_rng, 3000))];
+    for (name, h) in &fixtures {
+        let n = h.num_vertices();
+        let w: Vec<u64> = (0..n).map(|v| 1 + (v % 3) as u64).collect();
+        for seed in [1u64, 2, 3] {
+            for cap in [u64::MAX, 4] {
+                let serial = {
+                    let mut rng = Rng::new(seed);
+                    heavy_connectivity_matching(h, &w, cap, &mut rng)
+                };
+                let mut scratch = MatchScratch::default();
+                for threads in [2usize, 4, 8] {
+                    for chunk in [128usize, 4096] {
+                        let mut rng = Rng::new(seed);
+                        let got = heavy_connectivity_matching_with(
+                            h,
+                            &w,
+                            cap,
+                            &mut rng,
+                            threads,
+                            chunk,
+                            &mut scratch,
+                        );
+                        assert_eq!(
+                            got, serial,
+                            "{name}: seed={seed} cap={cap} threads={threads} chunk={chunk}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn full_partition_bit_identical_across_threads_and_chunks_at_several_seeds() {
+    // end to end through real SpGEMM models: coarsening-level parallel
+    // matching + threaded recursive bisection + k-way cleanup must all
+    // agree with the serial plan, for several seeds
+    for seed in [31u64, 99, 7] {
+        let mut rng = Rng::new(seed);
+        let a = gen::rmat(&gen::RmatParams::social(7, 8.0), &mut rng).unwrap();
+        let model = build_model(&a, &a, ModelKind::MonoC, false).unwrap();
+        let mut reference: Option<Vec<u32>> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let cfg =
+                PartitionerConfig { epsilon: 0.10, seed, threads, ..PartitionerConfig::new(8) };
+            let part = partition(&model.h, &cfg).unwrap();
+            match &reference {
+                None => reference = Some(part),
+                Some(r) => assert_eq!(*r, part, "seed={seed} threads={threads} diverged"),
+            }
+        }
+        // the proposal chunk size must not change the plan either
+        for match_chunk in [257usize, 1024] {
+            let cfg = PartitionerConfig {
+                epsilon: 0.10,
+                seed,
+                threads: 4,
+                match_chunk,
+                ..PartitionerConfig::new(8)
+            };
+            let part = partition(&model.h, &cfg).unwrap();
+            assert_eq!(
+                part,
+                *reference.as_ref().unwrap(),
+                "seed={seed} match_chunk={match_chunk} diverged"
+            );
+        }
+    }
+}

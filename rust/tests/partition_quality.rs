@@ -14,6 +14,11 @@
 //!    `cost::connectivity_volume` recomputed from scratch.
 //! 3. **Thread determinism** — `recursive_bisection` (and the full
 //!    `partition` driver) is bit-identical for threads ∈ {1, 2, 4, 8}.
+//!    Since the coarsening phase now runs the propose/commit parallel
+//!    matching under the same budget, these sweeps cover it too (the
+//!    4096-vertex grid clears the parallel-matching threshold); the
+//!    dedicated matching/contraction suite lives in
+//!    `rust/tests/coarsening.rs`.
 
 use spgemm_hp::cost;
 use spgemm_hp::gen;
@@ -274,7 +279,8 @@ fn full_partition_never_loses_to_recursive_bisection_alone() {
 #[test]
 fn recursive_bisection_bit_identical_across_thread_counts() {
     // large enough that both halves of the first bisection clear the
-    // spawn threshold, so the scoped-thread path actually runs
+    // spawn threshold AND the root level clears the parallel-matching
+    // threshold, so both scoped-thread paths actually run
     let h = grid(64, 64); // 4096 vertices
     for parts in [4usize, 6] {
         let mut reference: Option<Vec<u32>> = None;

@@ -37,8 +37,9 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition quality suites (deep property sweep)"
-SPGEMM_HP_PROP_CASES=192 cargo test -q --test kernels --test models --test partition_quality
+step "kernel differential + model oracle + partition/coarsening suites (deep property sweep)"
+SPGEMM_HP_PROP_CASES=192 \
+    cargo test -q --test kernels --test models --test partition_quality --test coarsening
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -46,8 +47,17 @@ cargo test -q --features pallas
 step "bench smoke (writes BENCH_spgemm.json)"
 cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 
-step "bench smoke (writes BENCH_partition.json)"
-cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
+step "bench smoke (writes BENCH_partition.json; threads sweep enforces bit-identity)"
+cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json
+
+step "BENCH_partition.json phase-timing + imbalance fields present"
+for field in coarsen_ns initial_ns refine_ns mem_imbalance; do
+    if ! grep -q "\"$field\"" BENCH_partition.json; then
+        echo "ERROR: BENCH_partition.json is missing the \"$field\" field"
+        exit 1
+    fi
+done
+echo "all fields present"
 
 echo
 echo "CI gate passed."
