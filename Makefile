@@ -22,12 +22,13 @@ bench:
 	cargo bench
 
 # The fast bench path CI runs; writes BENCH_spgemm.json and
-# BENCH_partition.json (with the coarsen/initial/refine phase fields,
-# whose presence is asserted like in CI).
+# BENCH_partition.json (with the coarsen/initial/refine phase fields and
+# the plan-cache cold/warm fields, whose presence is asserted like in CI).
 smoke:
 	cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
-	cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json
-	@for field in coarsen_ns initial_ns refine_ns mem_imbalance; do \
+	cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json \
+		--plan-cache "$$(mktemp -d)"
+	@for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit; do \
 		grep -q "\"$$field\"" BENCH_partition.json || { echo "missing $$field"; exit 1; }; \
 	done
 

@@ -12,15 +12,25 @@
 //! bit-determinism contract while doing so; the per-phase fields are
 //! what shows the parallel-matching coarsening speedup.
 //!
+//! A final plan-cache sweep times the inspector–executor planner cold
+//! vs warm on the LP/MCL reuse workloads (same structure, fresh values),
+//! enforcing `hit` + `plan_warm_ns < plan_cold_ns` in-harness and writing
+//! both timings into the JSON records.
+//!
 //! Flags (after `--`):
 //!
 //! * `--smoke` — small workloads and a single iteration (the CI gate).
 //! * `--json [path]` — write machine-readable records (model, workload,
 //!   parts, threads, cut, volume, comm_max, imbalance, mem_imbalance,
-//!   ns_per_op, coarsen_ns, initial_ns, refine_ns) to `path`, default
+//!   ns_per_op, coarsen_ns, initial_ns, refine_ns; plan-cache rows
+//!   instead carry model, workload, parts, volume, comm_max,
+//!   plan_cold_ns, plan_warm_ns, hit) to `path`, default
 //!   `BENCH_partition.json`.
 //! * `--parts 4,16` — part counts for the sweep.
 //! * `--threads 1,2,4,8` — thread counts for the parallel planning sweep.
+//! * `--plan-cache DIR` — exercise the planner's *disk* tier in the
+//!   plan-cache sweep (a `plansweep/` subdirectory is wiped first so the
+//!   cold leg is genuinely cold); without it the memory tier is timed.
 //!
 //! ```bash
 //! cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
@@ -31,9 +41,17 @@ use spgemm_hp::cost;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
 use spgemm_hp::partition::{partition_timed, PartitionerConfig, PhaseBreakdown};
+use spgemm_hp::planner::{PlanOutcome, Planner, PlannerConfig};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{Error, Result};
+
+/// Cold/warm planner timings for the plan-cache rows.
+struct PlanTiming {
+    cold_ns: u64,
+    warm_ns: u64,
+    hit: bool,
+}
 
 /// One measured point, serialized to `BENCH_partition.json`.
 struct Record {
@@ -48,6 +66,8 @@ struct Record {
     mem_imbalance: f64,
     ns_per_op: f64,
     phases: PhaseBreakdown,
+    /// Present on plan-cache sweep rows only.
+    planner: Option<PlanTiming>,
 }
 
 fn write_json(path: &str, records: &[Record]) -> Result<()> {
@@ -56,26 +76,38 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
     writeln!(f, "[")?;
     for (i, r) in records.iter().enumerate() {
         let comma = if i + 1 < records.len() { "," } else { "" };
-        writeln!(
-            f,
-            "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"threads\": {}, \
-             \"cut\": {}, \"volume\": {}, \"comm_max\": {}, \"imbalance\": {:.4}, \
-             \"mem_imbalance\": {:.4}, \"ns_per_op\": {:.1}, \"coarsen_ns\": {}, \
-             \"initial_ns\": {}, \"refine_ns\": {}}}{comma}",
-            r.model,
-            r.workload,
-            r.parts,
-            r.threads,
-            r.cut,
-            r.volume,
-            r.comm_max,
-            r.imbalance,
-            r.mem_imbalance,
-            r.ns_per_op,
-            r.phases.coarsen_ns,
-            r.phases.initial_ns,
-            r.phases.refine_ns
-        )?;
+        match &r.planner {
+            // plan-cache sweep rows carry only the fields that mean
+            // something for a cached plan — fabricating cut/imbalance
+            // values here would pollute cross-commit quality tracking
+            Some(t) => writeln!(
+                f,
+                "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"volume\": {}, \
+                 \"comm_max\": {}, \"plan_cold_ns\": {}, \"plan_warm_ns\": {}, \
+                 \"hit\": {}}}{comma}",
+                r.model, r.workload, r.parts, r.volume, r.comm_max, t.cold_ns, t.warm_ns, t.hit
+            )?,
+            None => writeln!(
+                f,
+                "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"threads\": {}, \
+                 \"cut\": {}, \"volume\": {}, \"comm_max\": {}, \"imbalance\": {:.4}, \
+                 \"mem_imbalance\": {:.4}, \"ns_per_op\": {:.1}, \"coarsen_ns\": {}, \
+                 \"initial_ns\": {}, \"refine_ns\": {}}}{comma}",
+                r.model,
+                r.workload,
+                r.parts,
+                r.threads,
+                r.cut,
+                r.volume,
+                r.comm_max,
+                r.imbalance,
+                r.mem_imbalance,
+                r.ns_per_op,
+                r.phases.coarsen_ns,
+                r.phases.initial_ns,
+                r.phases.refine_ns
+            )?,
+        }
     }
     writeln!(f, "]")?;
     f.flush()?;
@@ -180,6 +212,7 @@ fn real_main() -> Result<()> {
                     mem_imbalance: m.mem_imbalance(),
                     ns_per_op: stats.median * 1e9,
                     phases,
+                    planner: None,
                 });
             }
         }
@@ -238,6 +271,80 @@ fn real_main() -> Result<()> {
             mem_imbalance: m.mem_imbalance(),
             ns_per_op: stats.median * 1e9,
             phases,
+            planner: None,
+        });
+    }
+
+    // --- plan cache: cold vs warm on the reuse workloads -------------------
+    // LP rescales B's values per IPM iteration (same pattern -> must hit);
+    // MCL squares the same matrix every iteration. The warm leg goes
+    // through a FRESH planner when --plan-cache is given, so the disk
+    // tier (decode + verify + rebind) is what gets timed.
+    println!("\n== plan cache: cold vs warm (inspector-executor amortization) ==");
+    let plan_dir: Option<std::path::PathBuf> =
+        args.get("plan-cache").map(|d| std::path::Path::new(d).join("plansweep"));
+    if let Some(d) = &plan_dir {
+        let _ = std::fs::remove_dir_all(d); // guarantee the cold leg is cold
+    }
+    let mk_planner = || Planner::new(PlannerConfig { cache_dir: plan_dir.clone(), capacity: 8 });
+    let (_, lp_a, lp_b) = &workloads[1];
+    let lp_warm_b =
+        spgemm_hp::sparse::ops::scale_rows(lp_b, &gen::lp::ipm_scaling(lp_b.nrows, &mut rng))?;
+    let (_, mcl_a, mcl_b) = workloads.last().expect("workloads nonempty");
+    let cases = [
+        ("lp-reuse", ModelKind::OuterProduct, lp_a, lp_b, &lp_warm_b),
+        ("mcl-reuse", ModelKind::MonoC, mcl_a, mcl_b, mcl_b),
+    ];
+    println!(
+        "{:<12} {:<14} {:>12} {:>12} {:>9} {:>6}",
+        "workload", "model", "cold", "warm", "speedup", "hit"
+    );
+    for (label, kind, a, b_cold, b_warm) in cases {
+        let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(p) };
+        let mut cold_planner = mk_planner()?;
+        let cold = cold_planner.plan_or_build(a, b_cold, kind, &cfg, 8)?;
+        if cold.outcome == PlanOutcome::Hit {
+            return Err(Error::Runtime(format!("{label}: cold leg unexpectedly hit the cache")));
+        }
+        let warm = if plan_dir.is_some() {
+            mk_planner()?.plan_or_build(a, b_warm, kind, &cfg, 8)?
+        } else {
+            cold_planner.plan_or_build(a, b_warm, kind, &cfg, 8)?
+        };
+        // amortization is the harness contract, like bit-identity above:
+        // a warm plan that misses, or is no faster than replanning, is a
+        // planner bug rather than a data point
+        if warm.outcome != PlanOutcome::Hit {
+            return Err(Error::Runtime(format!("{label}: warm leg missed the plan cache")));
+        }
+        if warm.plan_ns >= cold.plan_ns {
+            return Err(Error::Runtime(format!(
+                "{label}: warm plan ({} ns) not faster than cold ({} ns)",
+                warm.plan_ns, cold.plan_ns
+            )));
+        }
+        println!(
+            "{:<12} {:<14} {:>12} {:>12} {:>8.1}x {:>6}",
+            label,
+            kind.name(),
+            BenchStats::fmt_time(cold.plan_ns as f64 / 1e9),
+            BenchStats::fmt_time(warm.plan_ns as f64 / 1e9),
+            cold.plan_ns as f64 / warm.plan_ns.max(1) as f64,
+            warm.outcome.name()
+        );
+        records.push(Record {
+            model: kind.name(),
+            workload: label.to_string(),
+            parts: p,
+            threads: 1,
+            cut: 0,
+            volume: warm.volume,
+            comm_max: warm.comm_max,
+            imbalance: 1.0,
+            mem_imbalance: 1.0,
+            ns_per_op: warm.plan_ns as f64,
+            phases: PhaseBreakdown::default(),
+            planner: Some(PlanTiming { cold_ns: cold.plan_ns, warm_ns: warm.plan_ns, hit: true }),
         });
     }
 

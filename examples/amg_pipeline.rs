@@ -9,7 +9,8 @@
 
 use spgemm_hp::gen::{smoothed_aggregation_prolongator, stencil27, Grid3};
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
-use spgemm_hp::partition::{partition, PartitionerConfig};
+use spgemm_hp::partition::{self, partition, PartitionerConfig};
+use spgemm_hp::planner::{PlanOutcome, Planner};
 use spgemm_hp::{cost, repro, sparse};
 
 fn main() -> spgemm_hp::Result<()> {
@@ -32,7 +33,11 @@ fn main() -> spgemm_hp::Result<()> {
         [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::ColWise]
     {
         let model = build_model(&a1, &p1, kind, false)?;
-        let cfg = PartitionerConfig { epsilon: 0.03, ..PartitionerConfig::new(p) };
+        let cfg = PartitionerConfig {
+            epsilon: 0.03,
+            threads: partition::default_threads(),
+            ..PartitionerConfig::new(p)
+        };
         let prt = partition(&model.h, &cfg)?;
         let m = cost::evaluate(&model.h, &prt, p)?;
         println!(
@@ -72,7 +77,11 @@ fn main() -> spgemm_hp::Result<()> {
         [ModelKind::FineGrained, ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA]
     {
         let model = build_model(&pt, &ap, kind, false)?;
-        let cfg = PartitionerConfig { epsilon: 0.03, ..PartitionerConfig::new(p) };
+        let cfg = PartitionerConfig {
+            epsilon: 0.03,
+            threads: partition::default_threads(),
+            ..PartitionerConfig::new(p)
+        };
         let prt = partition(&model.h, &cfg)?;
         let m = cost::evaluate(&model.h, &prt, p)?;
         println!(
@@ -101,6 +110,38 @@ fn main() -> spgemm_hp::Result<()> {
             row.volume,
             row.comp_imbalance
         );
+    }
+
+    // --- plan amortization across repeated setups ------------------------
+    // AMG setup recurs on the same mesh (time-dependent or parameterized
+    // problems rebuild the hierarchy with identical structure), so the
+    // inspector-executor planner caches both SpGEMMs' full execution
+    // plans and serves later setups warm.
+    println!("\n--- plan caching across 2 AMG setup rounds (the inspector-executor win) ---");
+    let mut planner = Planner::in_memory();
+    println!("{:<10} {:<18} {:>6} {:>10}", "round", "spgemm", "plan", "plan_ms");
+    for round in 0..2 {
+        for (label, x, y, kind) in [
+            ("A·P", &a1, &p1, ModelKind::RowWise),
+            ("Pᵀ·(AP)", &pt, &ap, ModelKind::OuterProduct),
+        ] {
+            let cfg = PartitionerConfig {
+                epsilon: 0.03,
+                threads: partition::default_threads(),
+                ..PartitionerConfig::new(p)
+            };
+            let planned = planner.plan_or_build(x, y, kind, &cfg, 8)?;
+            if round > 0 {
+                assert_eq!(planned.outcome, PlanOutcome::Hit, "{label} round 2 must hit");
+            }
+            println!(
+                "{:<10} {:<18} {:>6} {:>10.1}",
+                round + 1,
+                label,
+                planned.outcome.name(),
+                planned.plan_ns as f64 / 1e6
+            );
+        }
     }
 
     println!("\npaper's conclusion (Sec. 6.1): row-wise suffices for A·P; outer-product");

@@ -2,16 +2,20 @@
 //!
 //! Pipeline (the paper's system, deployed):
 //!   1. generate a scale-free MCL graph (Sec. 6.3 workload);
-//!   2. build the hypergraph models, partition with the multilevel
-//!      partitioner (the paper's contribution);
-//!   3. lower the partition to a concrete parallel algorithm;
-//!   4. execute it on the leader/worker coordinator — expand/fold message
-//!      routing over threads, tile batches dispatched to the AOT-compiled
-//!      JAX/Pallas kernel through PJRT (L1+L2), scalar fallback for open
-//!      tile groups;
-//!   5. validate numerics against the sequential reference SpGEMM and
+//!   2. plan through the inspector–executor `planner`: build the
+//!      hypergraph model, partition with the multilevel partitioner (the
+//!      paper's contribution), lower to a concrete algorithm, and cache
+//!      the fingerprinted execution plan;
+//!   3. execute the plan on the leader/worker coordinator — expand/fold
+//!      message routing over threads, tile batches dispatched to the
+//!      AOT-compiled JAX/Pallas kernel through PJRT (L1+L2), scalar
+//!      fallback for open tile groups;
+//!   4. validate numerics against the sequential reference SpGEMM and
 //!      validate the realized communication against the hypergraph bound
-//!      (Lem. 4.2) and the Lem. 4.3 simulator.
+//!      (Lem. 4.2) and the Lem. 4.3 simulator;
+//!   5. square the graph AGAIN (the MCL iteration pattern): every model's
+//!      plan is now a cache hit, demonstrating the planning amortization
+//!      the planner exists for.
 //!
 //! Results of this run are recorded in EXPERIMENTS.md §End-to-end.
 //!
@@ -21,10 +25,11 @@
 
 use spgemm_hp::coordinator::{self, CoordinatorConfig};
 use spgemm_hp::gen::{rmat, RmatParams};
-use spgemm_hp::hypergraph::models::{build_model, ModelKind};
-use spgemm_hp::partition::{partition, PartitionerConfig};
+use spgemm_hp::hypergraph::models::ModelKind;
+use spgemm_hp::partition::{self, PartitionerConfig};
+use spgemm_hp::planner::{PlanOutcome, Planner};
 use spgemm_hp::util::{Rng, Timer};
-use spgemm_hp::{cost, sim, sparse};
+use spgemm_hp::{sim, sparse};
 
 fn main() -> spgemm_hp::Result<()> {
     let mut rng = Rng::new(20160711);
@@ -48,67 +53,87 @@ fn main() -> spgemm_hp::Result<()> {
     if !have_artifacts {
         println!("NOTE: run `make artifacts` first for the PJRT path; using reference backend\n");
     }
-
-    println!(
-        "{:<16} {:>10} {:>10} {:>11} {:>10} {:>9} {:>9} {:>8} {:>8} {:>6}",
-        "model",
-        "bound_maxQ",
-        "sim_words",
-        "coord_words",
-        "tile_mult",
-        "scalar",
-        "batches",
-        "ms",
-        "pjrt",
-        "ok"
-    );
-    let mut all_ok = true;
-    for kind in [
+    let mut planner = Planner::in_memory();
+    let models = [
         ModelKind::RowWise,
         ModelKind::ColWise,
         ModelKind::OuterProduct,
         ModelKind::MonoA,
         ModelKind::MonoB,
         ModelKind::MonoC,
-    ] {
-        let model = build_model(&a, &b, kind, false)?;
-        let cfg = PartitionerConfig { epsilon: 0.10, seed: 3, ..PartitionerConfig::new(p) };
-        let part = partition(&model.h, &cfg)?;
-        let bound = cost::evaluate(&model.h, &part, p)?;
-        let alg = sim::lower(&model, &part, &a, &b, p)?;
-        let (sim_rep, c_sim) = sim::simulate(&a, &b, &alg)?;
-        let ccfg = CoordinatorConfig {
-            tile: 8,
-            artifacts_dir: have_artifacts.then(|| artifacts.clone()),
-            ..Default::default()
-        };
-        let t = Timer::start();
-        let (rep, c) = coordinator::run(&a, &b, &alg, &ccfg)?;
-        let ms = t.elapsed_ms();
-        // three-way validation
-        let numeric_ok = c.approx_eq(&c_ref, 1e-3) && c_sim.approx_eq(&c_ref, 1e-9);
-        let bracket_ok = sim_rep.max_send_recv() >= bound.comm_max
-            && sim_rep.max_send_recv() <= 3 * bound.comm_max.max(1);
-        let mults_ok = rep.tile_mults + rep.scalar_mults == flops;
-        let ok = numeric_ok && bracket_ok && mults_ok;
-        all_ok &= ok;
+    ];
+
+    let mut all_ok = true;
+    for round in 0..2 {
         println!(
-            "{:<16} {:>10} {:>10} {:>11} {:>10} {:>9} {:>9} {:>8.1} {:>8} {:>6}",
-            kind.name(),
-            bound.comm_max,
-            sim_rep.max_send_recv(),
-            rep.max_send_recv(),
-            rep.tile_mults,
-            rep.scalar_mults,
-            rep.kernel_dispatches,
-            ms,
-            rep.used_pjrt,
-            if ok { "PASS" } else { "FAIL" }
+            "--- iteration {} ({}) ---",
+            round + 1,
+            if round == 0 { "cold plans" } else { "warm plans: the MCL A² reuse pattern" }
         );
+        println!(
+            "{:<16} {:>5} {:>8} {:>10} {:>10} {:>11} {:>10} {:>9} {:>8} {:>8} {:>6}",
+            "model",
+            "plan",
+            "plan_ms",
+            "bound_maxQ",
+            "sim_words",
+            "coord_words",
+            "tile_mult",
+            "scalar",
+            "batches",
+            "ms",
+            "ok"
+        );
+        for kind in models {
+            let cfg = PartitionerConfig {
+                epsilon: 0.10,
+                seed: 3,
+                threads: partition::default_threads(),
+                ..PartitionerConfig::new(p)
+            };
+            let planned = planner.plan_or_build(&a, &b, kind, &cfg, 8)?;
+            // iteration 2 must be served entirely from the cache
+            if round > 0 {
+                assert_eq!(planned.outcome, PlanOutcome::Hit, "{kind:?} should hit");
+            }
+            let (sim_rep, c_sim) = sim::simulate(&a, &b, &planned.alg)?;
+            let ccfg = CoordinatorConfig {
+                tile: 8,
+                artifacts_dir: have_artifacts.then(|| artifacts.clone()),
+                plan: Some(std::sync::Arc::new(planned.prepared)),
+                ..Default::default()
+            };
+            let t = Timer::start();
+            let (rep, c) = coordinator::run(&a, &b, &planned.alg, &ccfg)?;
+            let ms = t.elapsed_ms();
+            // three-way validation
+            let numeric_ok = c.approx_eq(&c_ref, 1e-3) && c_sim.approx_eq(&c_ref, 1e-9);
+            let bracket_ok = sim_rep.max_send_recv() >= planned.comm_max
+                && sim_rep.max_send_recv() <= 3 * planned.comm_max.max(1);
+            let mults_ok = rep.tile_mults + rep.scalar_mults == flops;
+            let ok = numeric_ok && bracket_ok && mults_ok;
+            all_ok &= ok;
+            println!(
+                "{:<16} {:>5} {:>8.1} {:>10} {:>10} {:>11} {:>10} {:>9} {:>8} {:>8.1} {:>6}",
+                kind.name(),
+                planned.outcome.name(),
+                planned.plan_ns as f64 / 1e6,
+                planned.comm_max,
+                sim_rep.max_send_recv(),
+                rep.max_send_recv(),
+                rep.tile_mults,
+                rep.scalar_mults,
+                rep.kernel_dispatches,
+                ms,
+                if ok { "PASS" } else { "FAIL" }
+            );
+        }
+        println!();
     }
     assert!(all_ok, "end-to-end validation failed");
-    println!("\nE2E PASS: partitioner → algorithm lowering → threaded expand/fold →");
+    println!("E2E PASS: planner (fingerprinted plan cache) → threaded expand/fold →");
     println!("PJRT tile kernel (JAX/Pallas AOT) → numerics == reference; realized");
-    println!("communication within [1x, 3x] of the Lem. 4.2 hypergraph bound.");
+    println!("communication within [1x, 3x] of the Lem. 4.2 hypergraph bound; and");
+    println!("iteration 2's plans all served warm from the cache.");
     Ok(())
 }

@@ -58,7 +58,11 @@ fn main() -> spgemm_hp::Result<()> {
         ModelKind::MonoC,
     ] {
         let model = build_model(&m, &m, kind, false)?;
-        let cfg = PartitionerConfig { epsilon: 0.10, ..PartitionerConfig::new(p) };
+        let cfg = PartitionerConfig {
+            epsilon: 0.10,
+            threads: spgemm_hp::partition::default_threads(),
+            ..PartitionerConfig::new(p)
+        };
         let prt = partition(&model.h, &cfg)?;
         let metrics = cost::evaluate(&model.h, &prt, p)?;
         println!(

@@ -23,6 +23,13 @@
 //! (PJRT handles are not `Send`); it coalesces tile batches from all
 //! workers within a dispatch window — the same structure a serving router
 //! uses for dynamic batching.
+//!
+//! Planning (symbolic SpGEMM + [`plan::ExecutionPlan::build`]) is
+//! sparsity-dependent but value-independent, so it can be done once and
+//! reused: set [`CoordinatorConfig::plan`] to a
+//! [`plan::PreparedPlan`] — usually one served from
+//! [`crate::planner`]'s fingerprinted cache — and [`run`] executes it
+//! directly (the inspector–executor pattern).
 
 pub mod plan;
 
@@ -30,9 +37,10 @@ use crate::runtime::Engine;
 use crate::sim::Algorithm;
 use crate::sparse::{spgemm_structure, Csr, KernelKind};
 use crate::{Error, Result};
-use plan::{ExecutionPlan, TileGroup, WorkerPlan};
+use plan::{ExecutionPlan, PreparedPlan, TileGroup, WorkerPlan};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread;
 
 /// Coordinator configuration.
@@ -56,6 +64,14 @@ pub struct CoordinatorConfig {
     /// All strategies accumulate each C position in the same order, so
     /// the computed C is identical across settings.
     pub kernel: KernelKind,
+    /// Pre-lowered execution plan (the inspector–executor warm path,
+    /// typically produced by [`crate::planner::Planner::plan_or_build`]).
+    /// When set, [`run`] skips symbolic SpGEMM and
+    /// [`ExecutionPlan::build`] and executes this plan directly; the plan
+    /// must have been built (or value-rebound) against the operands
+    /// passed to [`run`] — cheap structural checks reject obvious
+    /// mismatches, value staleness is the caller's contract.
+    pub plan: Option<Arc<PreparedPlan>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -69,6 +85,7 @@ impl Default for CoordinatorConfig {
             min_tile_batch: 1,
             compute_threads: 1,
             kernel: KernelKind::Auto,
+            plan: None,
         }
     }
 }
@@ -130,8 +147,23 @@ pub fn run(
         return Err(Error::Config("compute_threads must be >= 1".into()));
     }
     let p = alg.p;
-    let c_struct = spgemm_structure(a, b)?;
-    let plan = ExecutionPlan::build(a, b, alg, &c_struct, cfg.tile)?;
+    // the planning step: reuse a prepared plan when the config carries
+    // one (the inspector-executor warm path), otherwise build it here.
+    // A prepared plan executes with the tile it was BUILT with — its
+    // groups are only closed/alias-free at that granularity.
+    let built;
+    let (c_struct, plan, tile): (&Csr, &ExecutionPlan, usize) = match &cfg.plan {
+        Some(prep) => {
+            check_prepared(prep, a, b, alg)?;
+            (&prep.c_struct, &prep.plan, prep.tile)
+        }
+        None => {
+            let cs = spgemm_structure(a, b)?;
+            let pl = ExecutionPlan::build(a, b, alg, &cs, cfg.tile)?;
+            built = PreparedPlan { c_struct: cs, plan: pl, tile: cfg.tile };
+            (&built.c_struct, &built.plan, built.tile)
+        }
+    };
 
     // kernel service -------------------------------------------------------
     let (job_tx, job_rx): (Sender<TileJob>, Receiver<TileJob>) = channel();
@@ -213,7 +245,7 @@ pub fn run(
         let my_result = result_tx.clone();
         let my_jobs = job_tx.clone();
         let knobs = ComputeKnobs {
-            tile: cfg.tile,
+            tile,
             min_batch: cfg.min_tile_batch,
             threads: cfg.compute_threads,
             kernel: cfg.kernel,
@@ -270,6 +302,35 @@ pub fn run(
         used_pjrt,
     };
     Ok((report, c))
+}
+
+/// Cheap structural validation of a prepared plan against the operands:
+/// worker count, C dimensions, and total nonzero ownership must line up.
+/// (Value freshness cannot be checked here — rebinding stale values is
+/// the planner's job.)
+fn check_prepared(prep: &PreparedPlan, a: &Csr, b: &Csr, alg: &Algorithm) -> Result<()> {
+    if prep.tile == 0 {
+        return Err(Error::Config("prepared plan has tile = 0".into()));
+    }
+    if prep.plan.workers.len() != alg.p {
+        return Err(Error::Config(format!(
+            "prepared plan has {} workers, algorithm expects {}",
+            prep.plan.workers.len(),
+            alg.p
+        )));
+    }
+    if prep.c_struct.nrows != a.nrows || prep.c_struct.ncols != b.ncols {
+        return Err(Error::Config("prepared plan C structure does not match the operands".into()));
+    }
+    let owned_a: usize = prep.plan.workers.iter().map(|w| w.owned_a.len()).sum();
+    let owned_b: usize = prep.plan.workers.iter().map(|w| w.owned_b.len()).sum();
+    let owned_c: usize = prep.plan.workers.iter().map(|w| w.owned_c.len()).sum();
+    if owned_a != a.nnz() || owned_b != b.nnz() || owned_c != prep.c_struct.nnz() {
+        return Err(Error::Config(
+            "prepared plan nonzero ownership does not match the operands".into(),
+        ));
+    }
+    Ok(())
 }
 
 struct WorkerStats {
@@ -750,6 +811,35 @@ mod tests {
             );
             assert!(c.approx_eq(&c_ref, 1e-4), "{}: numeric mismatch", kernel.name());
         }
+    }
+
+    #[test]
+    fn prebuilt_plan_matches_cold_run() {
+        let mut rng = Rng::new(31);
+        let (a, b) = random_instance(&mut rng, 18, 15, 17, 0.2);
+        let c_ref = spgemm(&a, &b).unwrap();
+        let model = build_model(&a, &b, ModelKind::MonoC, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(3) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, 3).unwrap();
+        let base = CoordinatorConfig::default();
+        let c_struct = spgemm_structure(&a, &b).unwrap();
+        let eplan = ExecutionPlan::build(&a, &b, &alg, &c_struct, base.tile).unwrap();
+        let prep = Arc::new(PreparedPlan { c_struct, plan: eplan, tile: base.tile });
+        // tile: 0 below shows the executed tile comes from the plan, not
+        // the config (a mismatched config tile would otherwise corrupt
+        // closed-group products)
+        let warm = CoordinatorConfig { plan: Some(prep), tile: 0, ..Default::default() };
+        let (rep_w, c_w) = run(&a, &b, &alg, &warm).unwrap();
+        let (rep_c, c_c) = run(&a, &b, &alg, &base).unwrap();
+        assert_eq!(rep_w.expand_volume, rep_c.expand_volume);
+        assert_eq!(rep_w.fold_volume, rep_c.fold_volume);
+        assert_eq!(rep_w.tile_mults + rep_w.scalar_mults, rep_c.tile_mults + rep_c.scalar_mults);
+        assert!(c_w.approx_eq(&c_ref, 1e-4) && c_c.approx_eq(&c_ref, 1e-4));
+        // a plan for a different worker count is rejected up front
+        let part2 = partition(&model.h, &PartitionerConfig::new(2)).unwrap();
+        let alg2 = sim::lower(&model, &part2, &a, &b, 2).unwrap();
+        assert!(run(&a, &b, &alg2, &warm).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::{Error, Result};
 use std::collections::HashMap;
 
 /// One multiplication localized to a worker.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LocalMult {
     pub i: u32,
     pub k: u32,
@@ -29,14 +29,14 @@ pub struct LocalMult {
 
 /// A tile group: the worker's multiplications falling in one `T³`
 /// sub-cube of the iteration space.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TileGroup {
     pub mults: Vec<LocalMult>,
     pub closed: bool,
 }
 
 /// Everything one worker needs to execute its share.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkerPlan {
     pub id: usize,
     pub owned_a: Vec<(u32, f64)>,
@@ -58,11 +58,29 @@ pub struct WorkerPlan {
 }
 
 /// The full plan plus modeled volumes (for cross-checking the simulator).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExecutionPlan {
     pub workers: Vec<WorkerPlan>,
     pub expand_volume: u64,
     pub fold_volume: u64,
+}
+
+/// A fully lowered plan bundled with the C structure it was built
+/// against — everything [`crate::coordinator::run`] needs to skip
+/// symbolic SpGEMM and [`ExecutionPlan::build`] entirely (the
+/// inspector–executor warm path; see [`crate::planner`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreparedPlan {
+    /// Structure of `C = A·B` (values are the symbolic 1.0 fill of
+    /// [`crate::sparse::spgemm_structure`]; never read numerically).
+    pub c_struct: Csr,
+    pub plan: ExecutionPlan,
+    /// The iteration-space tile edge the plan's groups were built with.
+    /// [`crate::coordinator::run`] executes a prepared plan with *this*
+    /// tile (never `CoordinatorConfig::tile`): computing a group built
+    /// for a larger tile with a smaller one would alias distinct
+    /// multiplications onto the same tile-buffer slots.
+    pub tile: usize,
 }
 
 impl ExecutionPlan {
@@ -151,9 +169,14 @@ impl ExecutionPlan {
                 }
             }
         }
-        // tile groups with closure detection
+        // tile groups with closure detection, in sorted tile-key order so
+        // the plan is a deterministic function of (A, B, alg, tile) — the
+        // property the planner's cache keys and bit-identity tests rely
+        // on (HashMap iteration order would reorder groups per run)
         for (q, map) in groups.into_iter().enumerate() {
-            for (_, mults) in map {
+            let mut entries: Vec<((u32, u32, u32), Vec<LocalMult>)> = map.into_iter().collect();
+            entries.sort_unstable_by_key(|(key, _)| *key);
+            for (_, mults) in entries {
                 let closed = is_closed(&mults);
                 workers[q].groups.push(TileGroup { mults, closed });
             }
@@ -275,6 +298,21 @@ mod tests {
         let expected: u64 = plan.workers.iter().map(|w| w.expect_a + w.expect_b).sum();
         assert_eq!(sent, expected);
         assert_eq!(sent, plan.expand_volume);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        // two builds in the same process must agree field-for-field,
+        // including tile-group order (the plan cache's bit-identity
+        // contract; a HashMap-iteration-ordered build would not)
+        let (a, b) = fig1();
+        let model = build_model(&a, &b, ModelKind::MonoC, false).unwrap();
+        let part = vec![0u32, 1, 2, 1];
+        let alg = sim::lower(&model, &part, &a, &b, 3).unwrap();
+        let c = crate::sparse::spgemm_structure(&a, &b).unwrap();
+        let p1 = ExecutionPlan::build(&a, &b, &alg, &c, 2).unwrap();
+        let p2 = ExecutionPlan::build(&a, &b, &alg, &c, 2).unwrap();
+        assert_eq!(p1, p2);
     }
 
     #[test]

@@ -19,6 +19,10 @@
 //! * a tile-product engine ([`runtime`]) with a pure-Rust reference
 //!   backend and, behind the `pallas` cargo feature, the PJRT path for
 //!   AOT-compiled JAX/Pallas kernels,
+//! * an inspector–executor planner ([`planner`]) that fingerprints the
+//!   operands' sparsity structure and serves whole execution plans from
+//!   a persistent two-tier cache, so iterated same-structure multiplies
+//!   (AMG setup, MCL's A², LP's AᵀD²A) amortize planning,
 //! * experiment drivers regenerating the paper's tables and figures
 //!   ([`repro`]), and a dependency-free CLI layer ([`cli`], [`util`]).
 //!
@@ -42,6 +46,7 @@
 //! | [`cost`] | Def. 4.1 boundary cost, Lem. 4.2 communication bound, eq. (1) and Thm. 4.10 lower bounds |
 //! | [`sim`] | Lem. 4.3 expand/fold execution (parallel), Sec. 4.2 two-level memory (sequential) |
 //! | [`coordinator`] | a deployment-shaped executor of the partitioned algorithm (expand → compute → fold) |
+//! | [`planner`] | inspector–executor plan caching: the persistent-structure amortization argument (cf. arXiv:1109.3739, 2002.11273) |
 //! | [`runtime`] | the batched tile-product engine behind the coordinator's compute phase |
 //! | [`repro`] | Sec. 6 experiment drivers (Table II, Figs. 7–9, bound comparisons) |
 //! | [`cli`], [`util`], [`error`] | dependency-free scaffolding (args, RNG, timing, errors) |
@@ -53,6 +58,7 @@ pub mod error;
 pub mod gen;
 pub mod hypergraph;
 pub mod partition;
+pub mod planner;
 pub mod repro;
 pub mod runtime;
 pub mod sim;

@@ -4,13 +4,24 @@
 //! spgemm-hp info
 //! spgemm-hp gen <stencil27|rmat|roadnet|lp|er> [--n ..] [--out file.mtx]
 //! spgemm-hp partition --a A.mtx --b B.mtx --model row --parts 8 [--epsilon 0.03]
-//!           [--partition-threads N] [--match-chunk N]
+//!           [--mem-epsilon D] [--partition-threads N] [--match-chunk N]
+//!           [--plan-cache DIR] [--plan-cache-cap N] [--tile 8]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
 //! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound> [--scale 1..3] [--seed N] [--csv dir]
-//! spgemm-hp e2e [--graph facebook] [--parts 4] [--tile 8] [--kernel auto]
-//!           [--artifacts artifacts] [--partition-threads N]
+//! spgemm-hp e2e [--graph facebook | --mtx-a A.mtx [--mtx-b B.mtx]] [--parts 4]
+//!           [--tile 8] [--kernel auto] [--artifacts artifacts]
+//!           [--partition-threads N] [--mem-epsilon D]
+//!           [--plan-cache DIR] [--plan-cache-cap N]
 //! ```
+//!
+//! `--mtx-a`/`--mtx-b` are accepted everywhere `--a`/`--b` are (and are
+//! the only way to feed real Matrix Market inputs to `e2e`, which
+//! otherwise squares a generated MCL graph). `--partition-threads`
+//! defaults to the machine's available parallelism (clamped to 8);
+//! `--partition-threads 1` restores fully serial planning —
+//! bit-identical output either way. `--plan-cache DIR` turns on the
+//! persistent inspector–executor plan cache (see `docs/PLANNER.md`).
 
 use spgemm_hp::cli::Args;
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
@@ -93,14 +104,35 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn load_pair(args: &Args) -> Result<(sparse::Csr, sparse::Csr)> {
+    // --mtx-a/--mtx-b are aliases of --a/--b (the e2e command only knows
+    // the former, so scripts can use one spelling everywhere)
     let a = read_matrix_market(
-        args.get("a").ok_or_else(|| Error::Config("--a <file.mtx> required".into()))?,
+        args.get("a")
+            .or_else(|| args.get("mtx-a"))
+            .ok_or_else(|| Error::Config("--a <file.mtx> (or --mtx-a) required".into()))?,
     )?;
-    let b = match args.get("b") {
+    let b = match args.get("b").or_else(|| args.get("mtx-b")) {
         Some(path) => read_matrix_market(path)?,
         None => a.clone(), // squaring by default
     };
     Ok((a, b))
+}
+
+/// Optional `--mem-epsilon D` (Def. 4.4's second constraint); absent =
+/// memory-oblivious planning.
+fn parse_mem_epsilon(args: &Args) -> Result<Option<f64>> {
+    match args.get("mem-epsilon") {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.get_f64("mem-epsilon", 0.0)?)),
+    }
+}
+
+/// Construct a planner from `--plan-cache` / `--plan-cache-cap` (memory
+/// only when the directory flag is absent).
+fn planner_from_args(args: &Args) -> Result<spgemm_hp::planner::Planner> {
+    let cache_dir = args.get("plan-cache").map(std::path::PathBuf::from);
+    let capacity = args.get_usize_min("plan-cache-cap", spgemm_hp::planner::DEFAULT_CAPACITY, 1)?;
+    spgemm_hp::planner::Planner::new(spgemm_hp::planner::PlannerConfig { cache_dir, capacity })
 }
 
 fn cmd_partition(args: &Args) -> Result<()> {
@@ -110,20 +142,46 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let p = args.get_usize("parts", 8)?;
     let epsilon = args.get_f64("epsilon", 0.03)?;
     let seed = args.get_u64("seed", 0xC0FFEE)?;
-    let threads = args.get_usize_min("partition-threads", 1, 1)?;
+    let threads = args.get_usize_min("partition-threads", partition::default_threads(), 1)?;
     let match_chunk =
         args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?;
-    let t = Timer::start();
-    let model = build_model(&a, &b, kind, false)?;
-    let build_ms = t.elapsed_ms();
-    let t = Timer::start();
     let cfg = partition::PartitionerConfig {
         epsilon,
         seed,
         threads,
         match_chunk,
+        mem_epsilon: parse_mem_epsilon(args)?,
         ..partition::PartitionerConfig::new(p)
     };
+    if args.get("plan-cache").is_some() {
+        // inspector mode: run the whole planning pipeline through the
+        // persistent cache. A later `e2e --plan-cache` starts warm only
+        // if EVERY fingerprinted knob matches — pass the same --model,
+        // --parts, --epsilon, --seed, and --tile explicitly (the two
+        // commands' defaults differ; see docs/PLANNER.md).
+        let tile = args.get_usize("tile", 8)?;
+        let mut planner = planner_from_args(args)?;
+        let planned = planner.plan_or_build(&a, &b, kind, &cfg, tile)?;
+        println!(
+            "plan {}: {} in {:.1} ms (fingerprint {}, tile {tile})",
+            kind.name(),
+            planned.outcome.name(),
+            planned.plan_ns as f64 / 1e6,
+            planned.fingerprint
+        );
+        println!(
+            "p={p} comm_max={} volume={} expand={} fold={}",
+            fmt_count(planned.comm_max),
+            fmt_count(planned.volume),
+            fmt_count(planned.prepared.plan.expand_volume),
+            fmt_count(planned.prepared.plan.fold_volume)
+        );
+        return Ok(());
+    }
+    let t = Timer::start();
+    let model = build_model(&a, &b, kind, false)?;
+    let build_ms = t.elapsed_ms();
+    let t = Timer::start();
     let (part, phases) = partition::partition_timed(&model.h, &cfg)?;
     let part_ms = t.elapsed_ms();
     let m = cost::evaluate(&model.h, &part, p)?;
@@ -250,33 +308,66 @@ fn cmd_repro(args: &Args) -> Result<()> {
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
-    let graph = args.get("graph").unwrap_or("facebook");
     let parts = args.get_usize("parts", 4)?;
     let tile = args.get_usize("tile", 8)?;
     let seed = args.get_u64("seed", 20160711)?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
-    let partition_threads = args.get_usize_min("partition-threads", 1, 1)?;
+    let partition_threads =
+        args.get_usize_min("partition-threads", partition::default_threads(), 1)?;
+    let match_chunk =
+        args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?;
+    let mem_epsilon = parse_mem_epsilon(args)?;
 
-    let instances = repro::workloads::mcl_instances(scale, seed)?;
-    let inst = instances
-        .into_iter()
-        .find(|i| i.name == graph)
-        .ok_or_else(|| Error::Config(format!("unknown graph {graph}")))?;
+    // workload: a real Matrix Market pair (--mtx-a/--mtx-b, or the
+    // --a/--b spelling the other subcommands use), or a generated MCL
+    // graph
+    let (name, a, b) = if let Some(path) = args.get("mtx-a").or_else(|| args.get("a")) {
+        let a = read_matrix_market(path)?;
+        let b = match args.get("mtx-b").or_else(|| args.get("b")) {
+            Some(pb) => read_matrix_market(pb)?,
+            None => a.clone(), // squaring by default
+        };
+        if a.ncols != b.nrows {
+            return Err(Error::dim(format!(
+                "e2e: A is {}x{}, B is {}x{}",
+                a.nrows, a.ncols, b.nrows, b.ncols
+            )));
+        }
+        (path.to_string(), a, b)
+    } else {
+        let graph = args.get("graph").unwrap_or("facebook");
+        let instances = repro::workloads::mcl_instances(scale, seed)?;
+        let inst = instances
+            .into_iter()
+            .find(|i| i.name == graph)
+            .ok_or_else(|| Error::Config(format!("unknown graph {graph}")))?;
+        (graph.to_string(), inst.a, inst.b)
+    };
     println!(
-        "e2e: squaring `{graph}` ({}x{}, {} nnz) on {parts} workers, tile={tile}",
-        inst.a.nrows,
-        inst.a.ncols,
-        fmt_count(inst.a.nnz() as u64)
+        "e2e: `{name}` ({}x{} · {}x{}, {} + {} nnz) on {parts} workers, tile={tile}, \
+         partition-threads={partition_threads}",
+        a.nrows,
+        a.ncols,
+        b.nrows,
+        b.ncols,
+        fmt_count(a.nnz() as u64),
+        fmt_count(b.nnz() as u64)
     );
     let t = Timer::start();
-    let c_ref = sparse::spgemm(&inst.a, &inst.b)?;
+    let c_ref = sparse::spgemm(&a, &b)?;
     println!("reference SpGEMM: {} nnz in {:.1} ms", fmt_count(c_ref.nnz() as u64), t.elapsed_ms());
+    if let Some(dir) = args.get("plan-cache") {
+        println!("plan cache: {dir} (rerun this exact command for warm hits)");
+    }
+    let mut planner = planner_from_args(args)?;
 
     println!(
-        "\n{:<14} {:>12} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8} {:>6}",
+        "\n{:<14} {:>5} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8} {:>6}",
         "model",
+        "plan",
+        "plan_ms",
         "bound_maxQ",
         "sim_words",
         "coord_words",
@@ -287,31 +378,36 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         "ok"
     );
     for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC] {
-        let model = build_model(&inst.a, &inst.b, kind, false)?;
         let cfg = partition::PartitionerConfig {
             epsilon: 0.1,
             seed,
             threads: partition_threads,
+            match_chunk,
+            mem_epsilon,
             ..partition::PartitionerConfig::new(parts)
         };
-        let part = partition::partition(&model.h, &cfg)?;
-        let bound = cost::evaluate(&model.h, &part, parts)?;
-        let alg = sim::lower(&model, &part, &inst.a, &inst.b, parts)?;
-        let (sim_rep, c_sim) = sim::simulate(&inst.a, &inst.b, &alg)?;
+        // inspector: serve the whole (model, partition, lowering,
+        // execution-plan) pipeline from the cache when the structure
+        // fingerprint matches
+        let planned = planner.plan_or_build(&a, &b, kind, &cfg, tile)?;
+        let (sim_rep, c_sim) = sim::simulate(&a, &b, &planned.alg)?;
         let ccfg = coordinator::CoordinatorConfig {
             tile,
             artifacts_dir: Some(artifacts.into()),
             kernel,
+            plan: Some(std::sync::Arc::new(planned.prepared)),
             ..Default::default()
         };
         let t = Timer::start();
-        let (rep, c) = coordinator::run(&inst.a, &inst.b, &alg, &ccfg)?;
+        let (rep, c) = coordinator::run(&a, &b, &planned.alg, &ccfg)?;
         let ms = t.elapsed_ms();
         let ok = c.approx_eq(&c_ref, 1e-3) && c_sim.approx_eq(&c_ref, 1e-10);
         println!(
-            "{:<14} {:>12} {:>12} {:>12} {:>10} {:>10} {:>8} {:>8.1} {:>6}",
+            "{:<14} {:>5} {:>8.1} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8.1} {:>6}",
             kind.name(),
-            bound.comm_max,
+            planned.outcome.name(),
+            planned.plan_ns as f64 / 1e6,
+            planned.comm_max,
             sim_rep.max_send_recv(),
             rep.max_send_recv(),
             rep.tile_mults,

@@ -10,6 +10,11 @@
 //! unchanged from the scanning implementation this replaces — see
 //! [`Bisection::refine`] for the contract. For a bisection the
 //! connectivity-(λ−1) objective equals the total cost of cut nets.
+//!
+//! [`Bisection::constrain_memory`] optionally attaches the second
+//! constraint of Def. 4.4 — a per-side cap on `w_mem` — as an extra
+//! feasibility predicate in [`Bisection::move_feasible`]; without it the
+//! refinement is bit-identical to the memory-oblivious behavior.
 
 use crate::hypergraph::Hypergraph;
 use crate::util::Rng;
@@ -168,6 +173,23 @@ impl GainBuckets {
     }
 }
 
+/// The optional second feasibility constraint of Def. 4.4: a per-side
+/// cap on the *memory* weight (δ), tracked next to the computation
+/// balance. Attached via [`Bisection::constrain_memory`]; absent, the
+/// bisection behaves exactly as before (the historical, bit-identical
+/// path).
+struct MemConstraint<'h> {
+    /// Per-vertex memory weights (`w_mem`).
+    weights: &'h [u64],
+    /// Memory weight currently on each side.
+    load: [u64; 2],
+    /// Maximum allowed memory weight per side.
+    max: [u64; 2],
+    /// Transient slack (one max memory weight), mirroring the
+    /// computation tolerance.
+    tol: u64,
+}
+
 /// Mutable bisection state over a hypergraph.
 pub struct Bisection<'h> {
     pub h: &'h Hypergraph,
@@ -190,6 +212,8 @@ pub struct Bisection<'h> {
     /// The classic FM gain bound `max_v Σ_{n ∋ v} c(n)`, computed once —
     /// it depends only on the hypergraph, not on the bisection state.
     gain_bound: u64,
+    /// Optional Def. 4.4 memory cap (None = computation balance only).
+    mem: Option<MemConstraint<'h>>,
 }
 
 impl<'h> Bisection<'h> {
@@ -216,7 +240,23 @@ impl<'h> Bisection<'h> {
             .map(|v| h.nets_of(v).iter().map(|&m| h.net_cost[m as usize]).sum::<u64>())
             .max()
             .unwrap_or(1);
-        Bisection { h, weights, side, pins, load, max, cut, tol, gain_bound }
+        Bisection { h, weights, side, pins, load, max, cut, tol, gain_bound, mem: None }
+    }
+
+    /// Attach the Def. 4.4 memory-weight cap as a second feasibility
+    /// predicate: moves must also keep each side's `w_mem` total at or
+    /// below `max` (with the same one-vertex transient slack and
+    /// strict-violation-reduction rescue the computation constraint
+    /// uses). Without this call the bisection is bit-identical to the
+    /// memory-oblivious behavior.
+    pub fn constrain_memory(&mut self, mem_weights: &'h [u64], max: [u64; 2]) {
+        assert_eq!(mem_weights.len(), self.h.num_vertices());
+        let mut load = [0u64; 2];
+        for (v, &s) in self.side.iter().enumerate() {
+            load[s as usize] += mem_weights[v];
+        }
+        let tol = mem_weights.iter().copied().max().unwrap_or(1).max(1);
+        self.mem = Some(MemConstraint { weights: mem_weights, load, max, tol });
     }
 
     /// Gain (cut reduction) of moving `v` to the other side.
@@ -248,25 +288,47 @@ impl<'h> Bisection<'h> {
         })
     }
 
-    /// Total balance violation (0 when feasible).
+    /// Total balance violation (0 when feasible). With a memory
+    /// constraint attached this is the *sum* of the computation and
+    /// memory violations, so the best-prefix rollback only settles for
+    /// states feasible under both caps when such states are reachable.
     #[inline]
     pub fn violation(&self) -> u64 {
-        self.load[0].saturating_sub(self.max[0]) + self.load[1].saturating_sub(self.max[1])
+        let comp =
+            self.load[0].saturating_sub(self.max[0]) + self.load[1].saturating_sub(self.max[1]);
+        let mem = match &self.mem {
+            Some(m) => {
+                m.load[0].saturating_sub(m.max[0]) + m.load[1].saturating_sub(m.max[1])
+            }
+            None => 0,
+        };
+        comp + mem
     }
 
-    /// Would moving `v` keep/improve balance?
+    /// Would moving `v` keep/improve balance (both the computation cap
+    /// and, when attached, the Def. 4.4 memory cap)?
     #[inline]
     pub fn move_feasible(&self, v: usize) -> bool {
         let from = self.side[v] as usize;
         let to = 1 - from;
         let w = self.weights[v];
-        if self.load[to] + w <= self.max[to] + self.tol {
+        let comp_ok = self.load[to] + w <= self.max[to] + self.tol;
+        let mem_ok = match &self.mem {
+            Some(m) => m.load[to] + m.weights[v] <= m.max[to] + m.tol,
+            None => true,
+        };
+        if comp_ok && mem_ok {
             return true;
         }
-        // allow strict violation reduction (rescues infeasible states)
+        // allow strict total-violation reduction (rescues infeasible states)
         let before = self.violation();
-        let after = (self.load[from] - w).saturating_sub(self.max[from])
+        let mut after = (self.load[from] - w).saturating_sub(self.max[from])
             + (self.load[to] + w).saturating_sub(self.max[to]);
+        if let Some(m) = &self.mem {
+            let mw = m.weights[v];
+            after += (m.load[from] - mw).saturating_sub(m.max[from])
+                + (m.load[to] + mw).saturating_sub(m.max[to]);
+        }
         after < before
     }
 
@@ -290,6 +352,10 @@ impl<'h> Bisection<'h> {
         }
         self.load[from] -= self.weights[v];
         self.load[to] += self.weights[v];
+        if let Some(m) = &mut self.mem {
+            m.load[from] -= m.weights[v];
+            m.load[to] += m.weights[v];
+        }
         self.side[v] = to as u8;
     }
 
@@ -554,6 +620,61 @@ mod tests {
         bi.refine(4, &mut rng);
         assert!(bi.load[0] <= 5 && bi.load[1] <= 5);
         assert_eq!(bi.cut, 1);
+    }
+
+    #[test]
+    fn memory_constraint_blocks_and_rescues_moves() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        // mem weight concentrated on the first clique
+        let mem: Vec<u64> = (0..8).map(|v| if v < 4 { 3 } else { 1 }).collect();
+        // clique-aligned split: comp feasible, mem loads [12, 4]
+        let side: Vec<u8> = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let mut bi = Bisection::new(&h, &w, side.clone(), [5, 5]);
+        assert_eq!(bi.violation(), 0);
+        bi.constrain_memory(&mem, [8, 8]);
+        // mem violation now counts: side 0 carries 12 > 8
+        assert_eq!(bi.violation(), 4);
+        // moving a heavy-mem vertex off the overloaded side is a rescue
+        assert!(bi.move_feasible(0));
+        // moving a light vertex ONTO the overloaded mem side is rejected
+        // even though computation would allow it
+        assert!(!bi.move_feasible(4));
+        bi.apply(0);
+        assert_eq!(bi.violation(), 1); // mem loads now [9, 7]
+        bi.apply(0); // undo
+        assert_eq!(bi.violation(), 4);
+        // refinement must strictly reduce the mem violation: light
+        // vertices cannot enter the overloaded side (rescue check blocks
+        // them), so the first applied move is a heavy-vertex rescue and
+        // the best-prefix rollback keeps total violation ≤ 1
+        let mut rng = Rng::new(3);
+        bi.refine(8, &mut rng);
+        assert!(bi.violation() <= 1, "violation {} after refine", bi.violation());
+        assert!(bi.load[0].max(bi.load[1]) <= 6, "comp within cap+tol");
+        // an unconstrained bisection from the same start keeps the
+        // mem-imbalanced optimum (cut 1), proving the knob changed things
+        let mut free = Bisection::new(&h, &w, side, [5, 5]);
+        let mut rng = Rng::new(3);
+        free.refine(8, &mut rng);
+        assert_eq!(free.cut, 1);
+    }
+
+    #[test]
+    fn zero_memory_weights_do_not_change_behavior() {
+        let h = clustered();
+        let w = vec![1u64; 8];
+        let side: Vec<u8> = (0..8).map(|v| (v % 2) as u8).collect();
+        let zeros = vec![0u64; 8];
+        let mut with = Bisection::new(&h, &w, side.clone(), [4, 4]);
+        with.constrain_memory(&zeros, [0, 0]);
+        let mut without = Bisection::new(&h, &w, side, [4, 4]);
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        with.refine(8, &mut r1);
+        without.refine(8, &mut r2);
+        assert_eq!(with.side, without.side, "all-zero w_mem must be a no-op");
+        assert_eq!(with.cut, without.cut);
     }
 
     #[test]

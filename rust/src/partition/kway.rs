@@ -28,6 +28,16 @@
 use crate::hypergraph::Hypergraph;
 use crate::util::Rng;
 
+/// The optional Def. 4.4 memory cap for the k-way sweep: per-part
+/// `w_mem` loads plus the cap every destination must respect (or strictly
+/// undercut the source's pre-move load, the same rescue rule the
+/// computation constraint uses).
+struct KwayMem<'h> {
+    weights: &'h [u64],
+    load: Vec<u64>,
+    cap: u64,
+}
+
 /// Mutable k-way partition state: per-net part-incidence counts, per-part
 /// loads, and the incrementally-maintained connectivity-(λ−1) volume.
 pub struct KwayState<'h> {
@@ -44,6 +54,8 @@ pub struct KwayState<'h> {
     pub load: Vec<u64>,
     /// Connectivity-(λ−1) volume of the current partition.
     pub volume: u64,
+    /// Optional Def. 4.4 memory constraint (None = computation only).
+    mem: Option<KwayMem<'h>>,
 }
 
 impl<'h> KwayState<'h> {
@@ -68,7 +80,22 @@ impl<'h> KwayState<'h> {
         for (v, &q) in part.iter().enumerate() {
             load[q as usize] += weights[v];
         }
-        KwayState { h, weights, part, parts, net_parts, load, volume }
+        KwayState { h, weights, part, parts, net_parts, load, volume, mem: None }
+    }
+
+    /// Attach the Def. 4.4 memory cap: every accepted move's destination
+    /// must end at or below `cap` in `w_mem` — or strictly below the
+    /// source part's pre-move memory load, so the global maximum memory
+    /// load never rises above `max(cap, its starting value)`. Without
+    /// this call the sweep is bit-identical to the memory-oblivious
+    /// behavior.
+    pub fn constrain_memory(&mut self, mem_weights: &'h [u64], cap: u64) {
+        assert_eq!(mem_weights.len(), self.h.num_vertices());
+        let mut load = vec![0u64; self.parts];
+        for (v, &q) in self.part.iter().enumerate() {
+            load[q as usize] += mem_weights[v];
+        }
+        self.mem = Some(KwayMem { weights: mem_weights, load, cap });
     }
 
     #[inline]
@@ -123,6 +150,10 @@ impl<'h> KwayState<'h> {
         }
         self.load[from as usize] -= self.weights[v];
         self.load[to as usize] += self.weights[v];
+        if let Some(m) = &mut self.mem {
+            m.load[from as usize] -= m.weights[v];
+            m.load[to as usize] += m.weights[v];
+        }
         self.part[v] = to;
     }
 
@@ -177,9 +208,21 @@ impl<'h> KwayState<'h> {
                 // to_load < la strictly shrinks Σ load² and keeps the
                 // destination below the (heavier) source, so the global
                 // max load never rises and feasible inputs stay ≤ cap
-                let accept = (g > 0 && (to_load <= cap || to_load < la))
+                let comp_accept = (g > 0 && (to_load <= cap || to_load < la))
                     || (g == 0 && to_load < la);
-                if accept {
+                // Def. 4.4 second constraint: the destination must also
+                // stay within the memory cap (or strictly undercut the
+                // source's memory load — the same rescue rule), so the
+                // gate only *restricts* moves and the lexicographic
+                // termination argument is untouched
+                let mem_accept = match &self.mem {
+                    Some(m) => {
+                        let mto = m.load[q as usize] + m.weights[v];
+                        mto <= m.cap || mto < m.load[from as usize]
+                    }
+                    None => true,
+                };
+                if comp_accept && mem_accept {
                     self.apply(v, q);
                     moved += 1;
                 }
@@ -205,7 +248,30 @@ pub fn refine(
     max_passes: usize,
     rng: &mut Rng,
 ) -> (u64, u64) {
+    refine_constrained(h, weights, part, parts, cap, None, max_passes, rng)
+}
+
+/// [`refine`] with the optional Def. 4.4 memory constraint: when
+/// `mem = Some((w_mem, mem_cap))` every accepted move must also leave its
+/// destination at or below `mem_cap` in memory weight (or strictly below
+/// the source's pre-move memory load), so the maximum per-part memory
+/// load never rises above `max(mem_cap, its starting value)`. With
+/// `mem = None` this is exactly [`refine`].
+#[allow(clippy::too_many_arguments)]
+pub fn refine_constrained(
+    h: &Hypergraph,
+    weights: &[u64],
+    part: &mut [u32],
+    parts: usize,
+    cap: u64,
+    mem: Option<(&[u64], u64)>,
+    max_passes: usize,
+    rng: &mut Rng,
+) -> (u64, u64) {
     let mut st = KwayState::new(h, weights, part.to_vec(), parts);
+    if let Some((mw, mcap)) = mem {
+        st.constrain_memory(mw, mcap);
+    }
     let before = st.volume;
     if parts >= 2 {
         for _ in 0..max_passes.max(1) {
@@ -305,6 +371,54 @@ mod tests {
         assert_eq!(after, 4, "optimum must be a fixpoint");
         let expected: Vec<u32> = (0..16u32).map(|v| v / 4).collect();
         assert_eq!(part, expected, "no zero-gain churn at the optimum");
+    }
+
+    #[test]
+    fn memory_cap_gates_moves_and_never_worsens() {
+        let h = clique_ring(4);
+        let w = vec![1u64; 16];
+        // memory weight 4 on one vertex per clique, 1 elsewhere
+        let mem: Vec<u64> = (0..16).map(|v| if v % 4 == 0 { 4 } else { 1 }).collect();
+        // scrambled start as in `refine_untangles_a_scrambled_ring`
+        let mut part: Vec<u32> = (0..16u32).map(|v| v % 4).collect();
+        let mut rng = Rng::new(7);
+        let start_mem_max = {
+            let mut loads = vec![0u64; 4];
+            for (v, &q) in part.iter().enumerate() {
+                loads[q as usize] += mem[v];
+            }
+            *loads.iter().max().unwrap()
+        };
+        let mem_cap = 8u64; // total mem 28, avg 7: one unit of slack
+        let (before, after) =
+            refine_constrained(&h, &w, &mut part, 4, 5, Some((&mem, mem_cap)), 8, &mut rng);
+        assert!(after <= before, "volume must not worsen: {before} -> {after}");
+        assert_eq!(after, cost::connectivity_volume(&h, &part));
+        let mut mem_load = vec![0u64; 4];
+        let mut comp_load = vec![0u64; 4];
+        for (v, &q) in part.iter().enumerate() {
+            mem_load[q as usize] += mem[v];
+            comp_load[q as usize] += 1;
+        }
+        // the monotone contract: max mem load never exceeds
+        // max(cap, its starting value); comp cap behaves as before
+        let max_mem = *mem_load.iter().max().unwrap();
+        assert!(max_mem <= mem_cap.max(start_mem_max), "{mem_load:?}");
+        assert!(comp_load.iter().all(|&l| l <= 5), "{comp_load:?}");
+    }
+
+    #[test]
+    fn zero_mem_weights_match_unconstrained() {
+        let h = clique_ring(4);
+        let w = vec![1u64; 16];
+        let zeros = vec![0u64; 16];
+        let mut a: Vec<u32> = (0..16u32).map(|v| v % 4).collect();
+        let mut b = a.clone();
+        let (_, va) = refine(&h, &w, &mut a, 4, 5, 8, &mut Rng::new(7));
+        let (_, vb) =
+            refine_constrained(&h, &w, &mut b, 4, 5, Some((&zeros, 0)), 8, &mut Rng::new(7));
+        assert_eq!(a, b, "all-zero w_mem must be bit-identical to None");
+        assert_eq!(va, vb);
     }
 
     #[test]

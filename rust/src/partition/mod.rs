@@ -27,7 +27,11 @@
 //! The objective is the connectivity-(λ−1) metric — exactly what PaToH
 //! minimizes — under the computation-weight balance constraint of
 //! Def. 4.4 (the paper's experiments use ε = 0.01, 0.03 here by default
-//! since our instances are smaller, and leave memory unconstrained).
+//! since our instances are smaller). Def. 4.4's *second* constraint —
+//! the memory-weight cap δ — is opt-in via
+//! [`PartitionerConfig::mem_epsilon`] and is enforced in FM refinement
+//! and the k-way acceptance rule; `None` keeps the historical
+//! memory-oblivious (and bit-identical) behavior.
 //! `docs/PARTITIONING.md` is the tuning guide for every knob below.
 
 pub mod fm;
@@ -71,6 +75,14 @@ pub struct PartitionerConfig {
     /// price of more rounds; the partition itself is identical for every
     /// value.
     pub match_chunk: usize,
+    /// Def. 4.4's *second* constraint: when `Some(δ)`, every part's
+    /// memory weight must also end at or below `(1+δ)·(M/p)` where `M`
+    /// is the total `w_mem`. Enforced as an extra feasibility predicate
+    /// in FM refinement ([`fm::Bisection::constrain_memory`]) and in the
+    /// k-way acceptance rule ([`kway::refine_constrained`]). `None`
+    /// (the default) is bit-identical to the historical
+    /// memory-oblivious behavior.
+    pub mem_epsilon: Option<f64>,
 }
 
 impl PartitionerConfig {
@@ -96,8 +108,20 @@ impl PartitionerConfig {
             fm_passes: 4,
             threads: 1,
             match_chunk: matching::DEFAULT_MATCH_CHUNK,
+            mem_epsilon: None,
         }
     }
+}
+
+/// Default planning-thread budget for CLI drivers, examples, and the
+/// repro harness: the machine's available parallelism clamped to
+/// `[1, 8]` (bisection fan-out saturates around `p/2` and the matching
+/// proposal phase past ~8 threads). Safe to adopt anywhere because the
+/// partition is bit-identical for every thread count; pass
+/// `--partition-threads 1` (or `threads: 1`) to restore fully serial
+/// planning.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 8)
 }
 
 /// Wall-clock nanoseconds per planning phase, accumulated along the
@@ -171,6 +195,11 @@ pub fn partition_timed(
     if cfg.epsilon < 0.0 {
         return Err(Error::Partition("epsilon must be >= 0".into()));
     }
+    if let Some(d) = cfg.mem_epsilon {
+        if d < 0.0 {
+            return Err(Error::Partition("mem_epsilon must be >= 0".into()));
+        }
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut times = PhaseBreakdown::default();
     let mut part = multilevel::recursive_bisection_timed(h, cfg, &mut rng, &mut times);
@@ -179,7 +208,17 @@ pub fn partition_timed(
         let weights = balance_weights(h);
         let total: u64 = weights.iter().sum();
         let cap = part_cap(total, cfg.parts, cfg.epsilon);
-        kway::refine(h, &weights, &mut part, cfg.parts, cap, cfg.fm_passes.max(1), &mut rng);
+        let mem_cap = cfg.mem_epsilon.map(|d| part_cap(h.total_mem(), cfg.parts, d));
+        kway::refine_constrained(
+            h,
+            &weights,
+            &mut part,
+            cfg.parts,
+            cap,
+            mem_cap.map(|c| (&h.w_mem[..], c)),
+            cfg.fm_passes.max(1),
+            &mut rng,
+        );
         times.refine_ns += t.elapsed().as_nanos() as u64;
     }
     Ok((part, times))
@@ -308,6 +347,67 @@ mod tests {
         let mut cfg = PartitionerConfig::new(2);
         cfg.epsilon = -0.5;
         assert!(partition(&h, &cfg).is_err());
+        let mut cfg = PartitionerConfig::new(2);
+        cfg.mem_epsilon = Some(-0.1);
+        assert!(partition(&h, &cfg).is_err());
+    }
+
+    #[test]
+    fn mem_epsilon_none_and_zero_weights_are_bit_identical() {
+        // with no memory weights in the hypergraph, enabling the
+        // constraint must not change the partition at all
+        let h = two_clusters(24);
+        let base = PartitionerConfig::new(4);
+        let constrained = PartitionerConfig { mem_epsilon: Some(0.05), ..base.clone() };
+        assert_eq!(partition(&h, &base).unwrap(), partition(&h, &constrained).unwrap());
+    }
+
+    #[test]
+    fn mem_epsilon_improves_memory_balance() {
+        // two cliques with skewed memory: the min-cut bisection puts all
+        // the heavy-mem vertices on one side unless the cap intervenes
+        let n_each = 24usize;
+        let n = 2 * n_each;
+        let mut b = HypergraphBuilder::new(n);
+        let mem: Vec<u64> = (0..n).map(|v| if v < n_each { 5 } else { 1 }).collect();
+        b.set_weights(vec![1; n], mem.clone());
+        for i in 0..n_each - 1 {
+            b.add_net(1, vec![i as u32, (i + 1) as u32]);
+            b.add_net(1, vec![(n_each + i) as u32, (n_each + i + 1) as u32]);
+        }
+        for i in 0..n_each - 2 {
+            b.add_net(1, vec![i as u32, (i + 2) as u32]);
+            b.add_net(1, vec![(n_each + i) as u32, (n_each + i + 2) as u32]);
+        }
+        b.add_net(1, vec![0, n_each as u32]);
+        let h = b.finalize(true, false);
+        let mem_imbal = |part: &[u32]| {
+            let mut load = [0u64; 2];
+            for (v, &q) in part.iter().enumerate() {
+                load[q as usize] += mem[v];
+            }
+            let avg = (load[0] + load[1]) as f64 / 2.0;
+            load[0].max(load[1]) as f64 / avg
+        };
+        let free = partition(&h, &PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(2) })
+            .unwrap();
+        let capped = partition(
+            &h,
+            &PartitionerConfig {
+                epsilon: 0.1,
+                mem_epsilon: Some(0.2),
+                ..PartitionerConfig::new(2)
+            },
+        )
+        .unwrap();
+        assert!(
+            mem_imbal(&capped) < mem_imbal(&free),
+            "capped {} !< free {}",
+            mem_imbal(&capped),
+            mem_imbal(&free)
+        );
+        // the capped partition stays computation-balanced too
+        assert!(is_balanced(&h, &capped, 2, 0.101));
     }
 
     #[test]

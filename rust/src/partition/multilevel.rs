@@ -89,13 +89,19 @@ fn coarsen_to_threshold(
 /// Multilevel bisection of `h` with side targets `(target0, total−target0)`
 /// and hard caps `max`. Returns the side (0/1) of each vertex. `threads`
 /// is the scoped-thread budget for this bisection's coarsening phase;
-/// phase wall times are accumulated into `times`.
+/// phase wall times are accumulated into `times`. When `mem_max` is set
+/// (the Def. 4.4 second constraint), every refinement level additionally
+/// caps each side's `w_mem` total — the coarse hypergraphs carry summed
+/// memory weights, so the constraint is enforced from the coarsest
+/// refinement down; the initial partition itself is unconstrained and
+/// relies on the refinement's violation-reduction rescue moves.
 #[allow(clippy::too_many_arguments)]
 pub fn bisect_multilevel(
     h: &Hypergraph,
     weights: &[u64],
     target0: u64,
     max: [u64; 2],
+    mem_max: Option<[u64; 2]>,
     cfg: &PartitionerConfig,
     rng: &mut Rng,
     threads: usize,
@@ -137,12 +143,18 @@ pub fn bisect_multilevel(
             (&levels[idx - 1].coarse, &levels[idx - 1].coarse_weights)
         };
         let mut bi = Bisection::new(finer_h, finer_w, fine_side, max);
+        if let Some(mm) = mem_max {
+            bi.constrain_memory(&finer_h.w_mem, mm);
+        }
         bi.refine(cfg.fm_passes, rng);
         side = bi.side;
     }
     if levels.is_empty() {
         // no coarsening happened: refine directly
         let mut bi = Bisection::new(h, weights, side, max);
+        if let Some(mm) = mem_max {
+            bi.constrain_memory(&h.w_mem, mm);
+        }
         bi.refine(cfg.fm_passes, rng);
         side = bi.side;
     }
@@ -243,8 +255,23 @@ pub fn recursive_bisection_timed(
     // fixed per-part cap derived once at the root (cascades through the
     // recursion; each leaf part ends ≤ cap, i.e. within ε)
     let cap = part_cap(total, cfg.parts, cfg.epsilon);
+    // Def. 4.4 second constraint: a fixed per-part memory cap, likewise
+    // derived once at the root from the total w_mem
+    let mem_cap = cfg.mem_epsilon.map(|e| part_cap(h.total_mem(), cfg.parts, e));
     let mut part = vec![0u32; h.num_vertices()];
-    recurse(h, &weights, cfg.parts, cap, 0, &mut part, cfg, rng, cfg.threads.max(1), times);
+    recurse(
+        h,
+        &weights,
+        cfg.parts,
+        cap,
+        mem_cap,
+        0,
+        &mut part,
+        cfg,
+        rng,
+        cfg.threads.max(1),
+        times,
+    );
     part
 }
 
@@ -254,6 +281,7 @@ fn recurse(
     weights: &[u64],
     k: usize,
     cap: u64,
+    mem_cap: Option<u64>,
     label_offset: u32,
     out: &mut [u32],
     cfg: &PartitionerConfig,
@@ -272,7 +300,8 @@ fn recurse(
     let total: u64 = weights.iter().sum();
     let target0 = (total as u128 * k0 as u128 / k as u128) as u64;
     let max = [cap.saturating_mul(k0 as u64), cap.saturating_mul(k1 as u64)];
-    let side = bisect_multilevel(h, weights, target0, max, cfg, rng, threads, times);
+    let mem_max = mem_cap.map(|c| [c.saturating_mul(k0 as u64), c.saturating_mul(k1 as u64)]);
+    let side = bisect_multilevel(h, weights, target0, max, mem_max, cfg, rng, threads, times);
 
     let (h0, w0, orig0) = induce(h, weights, &side, 0);
     let (h1, w1, orig1) = induce(h, weights, &side, 1);
@@ -295,14 +324,14 @@ fn recurse(
         std::thread::scope(|s| {
             let worker = s.spawn(move || {
                 let mut dropped = PhaseBreakdown::default();
-                recurse(h1r, w1r, k1, cap, 0, out1r, cfg, rng1r, t1, &mut dropped);
+                recurse(h1r, w1r, k1, cap, mem_cap, 0, out1r, cfg, rng1r, t1, &mut dropped);
             });
-            recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, t0, times);
+            recurse(&h0, &w0, k0, cap, mem_cap, 0, &mut out0, cfg, &mut rng0, t0, times);
             worker.join().expect("partition worker panicked");
         });
     } else {
-        recurse(&h0, &w0, k0, cap, 0, &mut out0, cfg, &mut rng0, threads, times);
-        recurse(&h1, &w1, k1, cap, 0, &mut out1, cfg, &mut rng1, threads, times);
+        recurse(&h0, &w0, k0, cap, mem_cap, 0, &mut out0, cfg, &mut rng0, threads, times);
+        recurse(&h1, &w1, k1, cap, mem_cap, 0, &mut out1, cfg, &mut rng1, threads, times);
     }
     for (nv, &ov) in orig0.iter().enumerate() {
         out[ov as usize] = label_offset + out0[nv];
@@ -343,7 +372,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let cfg = PartitionerConfig::new(2);
         let mut times = PhaseBreakdown::default();
-        let side = bisect_multilevel(&h, &w, 128, [134, 134], &cfg, &mut rng, 1, &mut times);
+        let side = bisect_multilevel(&h, &w, 128, [134, 134], None, &cfg, &mut rng, 1, &mut times);
         let bi = Bisection::new(&h, &w, side, [134, 134]);
         assert_eq!(bi.violation(), 0);
         // optimal straight cut = 16; accept ≤ 24 from a heuristic

@@ -1,0 +1,456 @@
+//! Hand-rolled versioned binary encoding for plan bundles.
+//!
+//! The crate is std-only (no serde), so the durable plan format is a
+//! fixed little-endian layout written and read by this module:
+//!
+//! * every integer is a little-endian `u64`/`u32`/`u8`; `f64` is its
+//!   IEEE-754 bit pattern as a little-endian `u64`;
+//! * every sequence is a `u64` length followed by its items;
+//! * [`WorkerPlan::owner_c_of`] is serialized as `(key, value)` pairs
+//!   sorted by key, so encoding is a *deterministic* function of the
+//!   plan (hash-map iteration order never leaks into the bytes) —
+//!   which is what lets tests assert byte-for-byte round trips;
+//! * the C structure is stored as a pattern only; decoding restores the
+//!   symbolic `1.0` fill of [`crate::sparse::spgemm_structure`], so a
+//!   decoded [`PreparedPlan`] is field-identical to a freshly built one.
+//!
+//! [`FORMAT_VERSION`] is bumped whenever this layout (or plan semantics)
+//! changes; the store rejects files from other versions and falls back
+//! to replanning. Decoding is fully checked — truncated or out-of-range
+//! input yields [`Error::Invalid`], never a panic.
+
+use crate::coordinator::plan::{ExecutionPlan, LocalMult, PreparedPlan, TileGroup, WorkerPlan};
+use crate::sim::Algorithm;
+use crate::sparse::Csr;
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Version of the on-disk plan layout. Bump on any change to this
+/// module's encoding or to the semantics of the encoded structures.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Little-endian byte writer.
+#[derive(Default)]
+pub struct Writer {
+    pub buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    pub fn len(&mut self, n: usize) {
+        self.u64(n as u64);
+    }
+    pub fn u32s(&mut self, xs: &[u32]) {
+        self.len(xs.len());
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+}
+
+/// Checked little-endian byte reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::invalid("plan codec: truncated input"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A sequence length, sanity-capped by the bytes actually remaining
+    /// (each item needs at least `min_item_bytes`) so corrupt lengths
+    /// fail fast instead of attempting enormous allocations.
+    pub fn len(&mut self, min_item_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if n.saturating_mul(min_item_bytes.max(1) as u64) > remaining {
+            return Err(Error::invalid("plan codec: sequence length exceeds input"));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    /// All input consumed?
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// --- composite encoders ---------------------------------------------------
+
+fn enc_csr_pattern(w: &mut Writer, m: &Csr) {
+    w.u64(m.nrows as u64);
+    w.u64(m.ncols as u64);
+    w.len(m.rowptr.len());
+    for &r in &m.rowptr {
+        w.u64(r as u64);
+    }
+    w.u32s(&m.colind);
+}
+
+fn dec_csr_pattern(r: &mut Reader) -> Result<Csr> {
+    let nrows = r.u64()? as usize;
+    let ncols = r.u64()? as usize;
+    let np = r.len(8)?;
+    if np != nrows + 1 {
+        return Err(Error::invalid("plan codec: rowptr length mismatch"));
+    }
+    let mut rowptr = Vec::with_capacity(np);
+    for _ in 0..np {
+        rowptr.push(r.u64()? as usize);
+    }
+    let colind = r.u32s()?;
+    let nnz = colind.len();
+    if rowptr.first() != Some(&0) || rowptr.last() != Some(&nnz) {
+        return Err(Error::invalid("plan codec: rowptr endpoints mismatch"));
+    }
+    // symbolic fill matching `spgemm_structure`
+    let m = Csr { nrows, ncols, rowptr, colind, values: vec![1.0; nnz] };
+    m.validate()?;
+    Ok(m)
+}
+
+fn enc_algorithm(w: &mut Writer, alg: &Algorithm) {
+    w.u64(alg.p as u64);
+    w.u32s(&alg.mult_part);
+    w.u32s(&alg.owner_a);
+    w.u32s(&alg.owner_b);
+    w.u32s(&alg.owner_c);
+}
+
+fn dec_algorithm(r: &mut Reader) -> Result<Algorithm> {
+    Ok(Algorithm {
+        p: r.u64()? as usize,
+        mult_part: r.u32s()?,
+        owner_a: r.u32s()?,
+        owner_b: r.u32s()?,
+        owner_c: r.u32s()?,
+    })
+}
+
+fn enc_owned(w: &mut Writer, xs: &[(u32, f64)]) {
+    w.len(xs.len());
+    for &(pos, val) in xs {
+        w.u32(pos);
+        w.f64(val);
+    }
+}
+
+fn dec_owned(r: &mut Reader) -> Result<Vec<(u32, f64)>> {
+    let n = r.len(12)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push((r.u32()?, r.f64()?));
+    }
+    Ok(out)
+}
+
+fn enc_sends(w: &mut Writer, xs: &[(u32, f64, Vec<u32>)]) {
+    w.len(xs.len());
+    for (pos, val, consumers) in xs {
+        w.u32(*pos);
+        w.f64(*val);
+        w.u32s(consumers);
+    }
+}
+
+fn dec_sends(r: &mut Reader) -> Result<Vec<(u32, f64, Vec<u32>)>> {
+    let n = r.len(20)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let pos = r.u32()?;
+        let val = r.f64()?;
+        out.push((pos, val, r.u32s()?));
+    }
+    Ok(out)
+}
+
+fn enc_groups(w: &mut Writer, gs: &[TileGroup]) {
+    w.len(gs.len());
+    for g in gs {
+        w.u8(g.closed as u8);
+        w.len(g.mults.len());
+        for m in &g.mults {
+            w.u32(m.i);
+            w.u32(m.k);
+            w.u32(m.j);
+            w.u32(m.pa);
+            w.u32(m.pb);
+            w.u32(m.pc);
+        }
+    }
+}
+
+fn dec_groups(r: &mut Reader) -> Result<Vec<TileGroup>> {
+    let n = r.len(9)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let closed = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(Error::invalid(format!("plan codec: bad bool {other}"))),
+        };
+        let nm = r.len(24)?;
+        let mut mults = Vec::with_capacity(nm);
+        for _ in 0..nm {
+            mults.push(LocalMult {
+                i: r.u32()?,
+                k: r.u32()?,
+                j: r.u32()?,
+                pa: r.u32()?,
+                pb: r.u32()?,
+                pc: r.u32()?,
+            });
+        }
+        out.push(TileGroup { mults, closed });
+    }
+    Ok(out)
+}
+
+fn enc_worker(w: &mut Writer, wp: &WorkerPlan) {
+    w.u64(wp.id as u64);
+    enc_owned(w, &wp.owned_a);
+    enc_owned(w, &wp.owned_b);
+    w.u32s(&wp.owned_c);
+    enc_sends(w, &wp.send_a);
+    enc_sends(w, &wp.send_b);
+    w.u64(wp.expect_a);
+    w.u64(wp.expect_b);
+    w.u64(wp.expect_partials);
+    enc_groups(w, &wp.groups);
+    // deterministic order: sorted by C position
+    let mut owners: Vec<(u32, u32)> = wp.owner_c_of.iter().map(|(&k, &v)| (k, v)).collect();
+    owners.sort_unstable();
+    w.len(owners.len());
+    for (pc, owner) in owners {
+        w.u32(pc);
+        w.u32(owner);
+    }
+}
+
+fn dec_worker(r: &mut Reader) -> Result<WorkerPlan> {
+    let id = r.u64()? as usize;
+    let owned_a = dec_owned(r)?;
+    let owned_b = dec_owned(r)?;
+    let owned_c = r.u32s()?;
+    let send_a = dec_sends(r)?;
+    let send_b = dec_sends(r)?;
+    let expect_a = r.u64()?;
+    let expect_b = r.u64()?;
+    let expect_partials = r.u64()?;
+    let groups = dec_groups(r)?;
+    let n = r.len(8)?;
+    let mut owner_c_of = HashMap::with_capacity(n);
+    for _ in 0..n {
+        let pc = r.u32()?;
+        let owner = r.u32()?;
+        owner_c_of.insert(pc, owner);
+    }
+    Ok(WorkerPlan {
+        id,
+        owned_a,
+        owned_b,
+        owned_c,
+        send_a,
+        send_b,
+        expect_a,
+        expect_b,
+        expect_partials,
+        groups,
+        owner_c_of,
+    })
+}
+
+/// Everything the cache stores per fingerprint: the partition, the
+/// lowered algorithm, the prepared execution plan (which carries the
+/// tile edge its groups were built with), and the modeled cost metadata
+/// reported on warm hits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanBundle {
+    pub part: Vec<u32>,
+    pub alg: Algorithm,
+    pub prepared: PreparedPlan,
+    /// `max_i |Q_i|` of the partition (Lem. 4.2 bound), from
+    /// `cost::evaluate` at build time.
+    pub comm_max: u64,
+    /// Connectivity-(λ−1) volume of the partition at build time.
+    pub volume: u64,
+}
+
+/// Encode a bundle to its canonical byte form.
+pub fn encode_bundle(b: &PlanBundle) -> Vec<u8> {
+    let mut w = Writer::default();
+    w.u64(b.prepared.tile as u64);
+    w.u32s(&b.part);
+    enc_algorithm(&mut w, &b.alg);
+    enc_csr_pattern(&mut w, &b.prepared.c_struct);
+    w.u64(b.prepared.plan.expand_volume);
+    w.u64(b.prepared.plan.fold_volume);
+    w.len(b.prepared.plan.workers.len());
+    for wp in &b.prepared.plan.workers {
+        enc_worker(&mut w, wp);
+    }
+    w.u64(b.comm_max);
+    w.u64(b.volume);
+    w.buf
+}
+
+/// Decode a bundle, rejecting malformed input (including trailing
+/// garbage) with [`Error::Invalid`].
+pub fn decode_bundle(bytes: &[u8]) -> Result<PlanBundle> {
+    let mut r = Reader::new(bytes);
+    let tile = r.u64()? as usize;
+    if tile == 0 {
+        return Err(Error::invalid("plan codec: tile must be positive"));
+    }
+    let part = r.u32s()?;
+    let alg = dec_algorithm(&mut r)?;
+    let c_struct = dec_csr_pattern(&mut r)?;
+    let expand_volume = r.u64()?;
+    let fold_volume = r.u64()?;
+    let nw = r.len(8)?;
+    let mut workers = Vec::with_capacity(nw);
+    for _ in 0..nw {
+        workers.push(dec_worker(&mut r)?);
+    }
+    let comm_max = r.u64()?;
+    let volume = r.u64()?;
+    if !r.done() {
+        return Err(Error::invalid("plan codec: trailing bytes"));
+    }
+    Ok(PlanBundle {
+        part,
+        alg,
+        prepared: PreparedPlan {
+            c_struct,
+            plan: ExecutionPlan { workers, expand_volume, fold_volume },
+            tile,
+        },
+        comm_max,
+        volume,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::models::{build_model, ModelKind};
+    use crate::partition::{partition, PartitionerConfig};
+    use crate::sim;
+    use crate::sparse::{spgemm_structure, Coo};
+
+    fn bundle() -> PlanBundle {
+        let a = Csr::from_coo(
+            &Coo::from_triplets(3, 4, [(0, 0, 1.), (0, 2, 1.), (1, 0, 1.), (1, 3, 1.), (2, 1, 1.)])
+                .unwrap(),
+        );
+        let b = Csr::from_coo(
+            &Coo::from_triplets(4, 2, [(0, 1, 1.), (1, 0, 1.), (2, 0, 1.), (2, 1, 1.), (3, 1, 1.)])
+                .unwrap(),
+        );
+        let model = build_model(&a, &b, ModelKind::FineGrained, false).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.5, ..PartitionerConfig::new(3) };
+        let part = partition(&model.h, &cfg).unwrap();
+        let alg = sim::lower(&model, &part, &a, &b, 3).unwrap();
+        let c = spgemm_structure(&a, &b).unwrap();
+        let plan = ExecutionPlan::build(&a, &b, &alg, &c, 2).unwrap();
+        PlanBundle {
+            part,
+            alg,
+            prepared: PreparedPlan { c_struct: c, plan, tile: 2 },
+            comm_max: 7,
+            volume: 11,
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let b = bundle();
+        let bytes = encode_bundle(&b);
+        let back = decode_bundle(&bytes).unwrap();
+        assert_eq!(back, b);
+        // canonical: re-encoding reproduces the bytes
+        assert_eq!(encode_bundle(&back), bytes);
+    }
+
+    #[test]
+    fn truncation_is_rejected_everywhere() {
+        let bytes = encode_bundle(&bundle());
+        for cut in 0..bytes.len() {
+            assert!(decode_bundle(&bytes[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // trailing garbage rejected too
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_bundle(&long).is_err());
+    }
+
+    #[test]
+    fn absurd_lengths_fail_fast() {
+        let mut w = Writer::default();
+        w.u64(8); // tile
+        w.u64(u64::MAX); // part "length"
+        assert!(decode_bundle(&w.buf).is_err());
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = Writer::default();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.f64(-0.125);
+        w.u32s(&[1, 2, 3]);
+        let mut r = Reader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.u32s().unwrap(), vec![1, 2, 3]);
+        assert!(r.done());
+        assert!(r.u8().is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Structural fingerprints for plan-cache keys.
+//!
+//! A fingerprint identifies everything the planning pipeline's output
+//! depends on — and *nothing else*:
+//!
+//! * the sparsity **patterns** of A and B (dimensions, `rowptr`,
+//!   `colind`) — values are excluded, which is the whole point: the
+//!   LP/MCL/AMG reuse pattern multiplies structurally identical operands
+//!   with fresh values every iteration, and the planner rebinds values
+//!   on every cache hit;
+//! * the [`ModelKind`] (via a hand-assigned stable id — *not* the enum
+//!   discriminant, so reordering the enum cannot silently change keys);
+//! * the plan-shaping [`PartitionerConfig`] knobs: `parts`, `epsilon`,
+//!   `seed`, `coarse_to`, `n_starts`, `fm_passes`, and `mem_epsilon`.
+//!   `threads` and `match_chunk` are deliberately **excluded**: the
+//!   partitioner is bit-identical for every value of either, so they
+//!   cannot change the plan;
+//! * the coordinator `tile` edge (it shapes the plan's tile groups).
+//!
+//! # Stability contract
+//!
+//! Two invocations in the same repo revision produce equal fingerprints
+//! iff all of the inputs above are equal: the hash is a fixed function
+//! (FNV-1a over 64-bit words with murmur finalization, two independently
+//! seeded lanes — the [`crate::hypergraph::coarsen`] hashing idiom) with
+//! domain-separation tags between sections, no randomness, and no
+//! platform dependence (everything is hashed as little-endian-agnostic
+//! `u64` arithmetic). Across repo revisions the fingerprint may change
+//! whenever planning semantics change; the on-disk store additionally
+//! records [`crate::planner::codec::FORMAT_VERSION`] and rejects entries
+//! from other versions, so a stale cache degrades to replanning, never
+//! to a wrong plan.
+
+use crate::hypergraph::ModelKind;
+use crate::partition::PartitionerConfig;
+use crate::sparse::Csr;
+use std::fmt;
+
+/// A 128-bit structural fingerprint (two independently seeded 64-bit
+/// hash lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub [u64; 2]);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}{:016x}", self.0[0], self.0[1])
+    }
+}
+
+/// One FNV-1a lane over `u64` words with a murmur-style finalizer
+/// (the same mixing used by `hypergraph::coarsen::hash_pins`).
+struct Lane {
+    x: u64,
+}
+
+impl Lane {
+    fn new(seed: u64) -> Lane {
+        Lane { x: 0xcbf29ce484222325 ^ seed }
+    }
+
+    #[inline]
+    fn write(&mut self, w: u64) {
+        self.x = (self.x ^ w).wrapping_mul(0x100000001b3);
+    }
+
+    fn finish(&self) -> u64 {
+        let mut x = self.x;
+        x = (x ^ (x >> 33)).wrapping_mul(0xff51afd7ed558ccd);
+        x = (x ^ (x >> 33)).wrapping_mul(0xc4ceb9fe1a85ec53);
+        x ^ (x >> 33)
+    }
+}
+
+/// Both lanes fed in lockstep.
+struct Hasher {
+    lanes: [Lane; 2],
+}
+
+impl Hasher {
+    fn new() -> Hasher {
+        // distinct lane seeds -> independent 64-bit hashes; a collision
+        // must happen in both lanes at once
+        Hasher { lanes: [Lane::new(0), Lane::new(0x9e3779b97f4a7c15)] }
+    }
+
+    #[inline]
+    fn write(&mut self, w: u64) {
+        self.lanes[0].write(w);
+        self.lanes[1].write(w);
+    }
+
+    /// Domain-separation tag between sections (prevents ambiguity
+    /// between adjacent variable-length sequences).
+    #[inline]
+    fn tag(&mut self, t: u64) {
+        self.write(0xD0AA_0000_0000_0000 ^ t);
+    }
+
+    fn csr_pattern(&mut self, m: &Csr) {
+        self.write(m.nrows as u64);
+        self.write(m.ncols as u64);
+        self.write(m.nnz() as u64);
+        for &r in &m.rowptr {
+            self.write(r as u64);
+        }
+        for &c in &m.colind {
+            self.write(c as u64);
+        }
+    }
+
+    fn finish(&self) -> Fingerprint {
+        Fingerprint([self.lanes[0].finish(), self.lanes[1].finish()])
+    }
+}
+
+/// FNV-1a + murmur finalizer over raw bytes — the store's
+/// payload-integrity hash, built on the same `Lane` mixing as the
+/// fingerprint itself (length-seeded so `[0]` and `[0, 0]` differ).
+pub(crate) fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut lane = Lane::new(bytes.len() as u64);
+    for &b in bytes {
+        lane.write(b as u64);
+    }
+    lane.finish()
+}
+
+/// Stable id of a model kind — a hand-maintained mapping so enum
+/// reordering can never silently re-key the cache.
+pub fn model_id(kind: ModelKind) -> u64 {
+    match kind {
+        ModelKind::FineGrained => 0,
+        ModelKind::RowWise => 1,
+        ModelKind::ColWise => 2,
+        ModelKind::OuterProduct => 3,
+        ModelKind::MonoA => 4,
+        ModelKind::MonoB => 5,
+        ModelKind::MonoC => 6,
+    }
+}
+
+/// Fingerprint of one planning problem. See the module docs for exactly
+/// what is (and is not) hashed.
+pub fn fingerprint(
+    a: &Csr,
+    b: &Csr,
+    kind: ModelKind,
+    cfg: &PartitionerConfig,
+    tile: usize,
+) -> Fingerprint {
+    let mut h = Hasher::new();
+    h.tag(1);
+    h.csr_pattern(a);
+    h.tag(2);
+    h.csr_pattern(b);
+    h.tag(3);
+    h.write(model_id(kind));
+    h.tag(4);
+    h.write(cfg.parts as u64);
+    h.write(cfg.epsilon.to_bits());
+    h.write(cfg.seed);
+    h.write(cfg.coarse_to as u64);
+    h.write(cfg.n_starts as u64);
+    h.write(cfg.fm_passes as u64);
+    match cfg.mem_epsilon {
+        None => h.write(0),
+        Some(d) => {
+            h.write(1);
+            h.write(d.to_bits());
+        }
+    }
+    // threads and match_chunk are intentionally NOT hashed: the
+    // partition is bit-identical for every value of either
+    h.tag(5);
+    h.write(tile as u64);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    fn mat(entries: &[(usize, usize, f64)]) -> Csr {
+        Csr::from_coo(&Coo::from_triplets(4, 4, entries.iter().copied()).unwrap())
+    }
+
+    #[test]
+    fn values_and_thread_knobs_do_not_perturb() {
+        let a1 = mat(&[(0, 0, 1.0), (1, 2, 2.0), (3, 1, 3.0)]);
+        let a2 = mat(&[(0, 0, 9.0), (1, 2, -4.5), (3, 1, 0.5)]); // same pattern
+        let b = mat(&[(0, 1, 1.0), (2, 3, 1.0)]);
+        let cfg = PartitionerConfig::new(4);
+        let threaded = PartitionerConfig { threads: 8, match_chunk: 7, ..cfg.clone() };
+        let f1 = fingerprint(&a1, &b, ModelKind::RowWise, &cfg, 8);
+        assert_eq!(f1, fingerprint(&a2, &b, ModelKind::RowWise, &cfg, 8), "values hashed");
+        assert_eq!(f1, fingerprint(&a1, &b, ModelKind::RowWise, &threaded, 8), "threads hashed");
+    }
+
+    #[test]
+    fn every_planning_input_perturbs() {
+        let a = mat(&[(0, 0, 1.0), (1, 2, 2.0), (3, 1, 3.0)]);
+        let b = mat(&[(0, 1, 1.0), (2, 3, 1.0)]);
+        let a_shift = mat(&[(0, 1, 1.0), (1, 2, 2.0), (3, 1, 3.0)]); // pattern differs
+        let cfg = PartitionerConfig::new(4);
+        let base = fingerprint(&a, &b, ModelKind::RowWise, &cfg, 8);
+        assert_ne!(base, fingerprint(&a_shift, &b, ModelKind::RowWise, &cfg, 8));
+        assert_ne!(base, fingerprint(&b, &a, ModelKind::RowWise, &cfg, 8));
+        assert_ne!(base, fingerprint(&a, &b, ModelKind::MonoC, &cfg, 8));
+        assert_ne!(base, fingerprint(&a, &b, ModelKind::RowWise, &cfg, 16));
+        for tweak in [
+            PartitionerConfig { parts: 5, ..cfg.clone() },
+            PartitionerConfig { epsilon: 0.5, ..cfg.clone() },
+            PartitionerConfig { seed: 1, ..cfg.clone() },
+            PartitionerConfig { coarse_to: 80, ..cfg.clone() },
+            PartitionerConfig { n_starts: 2, ..cfg.clone() },
+            PartitionerConfig { fm_passes: 1, ..cfg.clone() },
+            PartitionerConfig { mem_epsilon: Some(0.1), ..cfg.clone() },
+        ] {
+            assert_ne!(base, fingerprint(&a, &b, ModelKind::RowWise, &tweak, 8), "{tweak:?}");
+        }
+    }
+
+    #[test]
+    fn model_ids_are_stable_and_distinct() {
+        let ids: Vec<u64> = ModelKind::ALL.iter().map(|&k| model_id(k)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn display_is_32_hex_chars() {
+        let f = Fingerprint([0xDEAD_BEEF, 1]);
+        let s = f.to_string();
+        assert_eq!(s.len(), 32);
+        assert!(s.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(s, "00000000deadbeef0000000000000001");
+    }
+}

@@ -1,0 +1,284 @@
+//! Two-tier plan cache: an in-memory LRU map over an optional on-disk
+//! store.
+//!
+//! * **Memory tier** — a small most-recently-used list capped at
+//!   `capacity` bundles; hits refresh recency, inserts evict the least
+//!   recently used entry.
+//! * **Disk tier** (`--plan-cache DIR`) — one file per fingerprint,
+//!   named `<fingerprint>.plan`, written atomically (tmp sibling +
+//!   rename) so readers never observe a half-written plan. Every file
+//!   carries a header (magic, [`FORMAT_VERSION`], fingerprint, payload
+//!   length and hash); a file that fails *any* check — wrong magic or
+//!   version, fingerprint mismatch, corrupt payload, undecodable bytes —
+//!   is rejected as [`StoreLookup::Stale`] and the caller replans (and
+//!   overwrites the entry), so cache corruption can cost time but never
+//!   correctness.
+
+use super::codec::FORMAT_VERSION;
+use super::codec::{decode_bundle, encode_bundle, PlanBundle, Reader, Writer};
+use super::fingerprint::{hash_bytes, Fingerprint};
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// File magic: "SPHPPLAN".
+const MAGIC: [u8; 8] = *b"SPHPPLAN";
+
+/// Result of a cache probe.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreLookup {
+    /// Found in memory or decoded and verified from disk.
+    Hit(Box<PlanBundle>),
+    /// No entry anywhere.
+    Miss,
+    /// A disk entry existed but failed verification (version mismatch,
+    /// corruption, fingerprint mismatch) and was ignored.
+    Stale,
+}
+
+/// The two-tier store.
+pub struct PlanStore {
+    capacity: usize,
+    dir: Option<PathBuf>,
+    /// Most-recently-used at the back.
+    mru: Vec<(Fingerprint, PlanBundle)>,
+}
+
+impl PlanStore {
+    /// `capacity` bounds the memory tier (≥ 1); `dir`, when given, is
+    /// created eagerly and used as the disk tier.
+    pub fn new(capacity: usize, dir: Option<PathBuf>) -> Result<PlanStore> {
+        if capacity == 0 {
+            return Err(Error::Config("plan cache capacity must be >= 1".into()));
+        }
+        if let Some(d) = &dir {
+            std::fs::create_dir_all(d)?;
+        }
+        Ok(PlanStore { capacity, dir, mru: Vec::new() })
+    }
+
+    /// Fingerprints currently held in memory, least recently used first
+    /// (test/introspection hook for the eviction order).
+    pub fn mem_fingerprints(&self) -> Vec<Fingerprint> {
+        self.mru.iter().map(|(fp, _)| *fp).collect()
+    }
+
+    fn path_of(&self, fp: Fingerprint) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{fp}.plan")))
+    }
+
+    /// Probe both tiers. A verified disk hit is promoted into the
+    /// memory tier.
+    pub fn lookup(&mut self, fp: Fingerprint) -> StoreLookup {
+        if let Some(at) = self.mru.iter().position(|(f, _)| *f == fp) {
+            let entry = self.mru.remove(at);
+            self.mru.push(entry); // refresh recency
+            return StoreLookup::Hit(Box::new(self.mru.last().unwrap().1.clone()));
+        }
+        let Some(path) = self.path_of(fp) else { return StoreLookup::Miss };
+        match std::fs::read(&path) {
+            Err(_) => StoreLookup::Miss, // absent (or unreadable: nothing usable)
+            Ok(bytes) => match verify_and_decode(&bytes, fp) {
+                Ok(bundle) => {
+                    self.insert_mem(fp, bundle.clone());
+                    StoreLookup::Hit(Box::new(bundle))
+                }
+                Err(_) => StoreLookup::Stale,
+            },
+        }
+    }
+
+    /// Insert (or refresh) an entry in both tiers. Disk write failures
+    /// surface as errors — the caller asked for a durable cache.
+    pub fn insert(&mut self, fp: Fingerprint, bundle: &PlanBundle) -> Result<()> {
+        if let Some(path) = self.path_of(fp) {
+            write_atomic(&path, &encode_file(fp, bundle))?;
+        }
+        if let Some(at) = self.mru.iter().position(|(f, _)| *f == fp) {
+            self.mru.remove(at);
+        }
+        self.insert_mem(fp, bundle.clone());
+        Ok(())
+    }
+
+    fn insert_mem(&mut self, fp: Fingerprint, bundle: PlanBundle) {
+        if self.mru.len() >= self.capacity {
+            self.mru.remove(0); // evict the least recently used
+        }
+        self.mru.push((fp, bundle));
+    }
+}
+
+/// Full file image: header + payload.
+fn encode_file(fp: Fingerprint, bundle: &PlanBundle) -> Vec<u8> {
+    let payload = encode_bundle(bundle);
+    let mut w = Writer::default();
+    w.buf.extend_from_slice(&MAGIC);
+    w.u32(FORMAT_VERSION);
+    w.u64(fp.0[0]);
+    w.u64(fp.0[1]);
+    w.u64(payload.len() as u64);
+    w.u64(hash_bytes(&payload));
+    w.buf.extend_from_slice(&payload);
+    w.buf
+}
+
+/// Verify a file image against the expected fingerprint and decode it.
+fn verify_and_decode(bytes: &[u8], expect: Fingerprint) -> Result<PlanBundle> {
+    if bytes.len() < MAGIC.len() || bytes[..MAGIC.len()] != MAGIC {
+        return Err(Error::invalid("plan cache: bad magic"));
+    }
+    let mut r = Reader::new(&bytes[MAGIC.len()..]);
+    let version = r.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(Error::invalid(format!(
+            "plan cache: format version {version} != {FORMAT_VERSION}"
+        )));
+    }
+    let fp = Fingerprint([r.u64()?, r.u64()?]);
+    if fp != expect {
+        return Err(Error::invalid("plan cache: fingerprint mismatch"));
+    }
+    let plen = r.u64()? as usize;
+    let phash = r.u64()?;
+    let header = MAGIC.len() + 4 + 8 * 4;
+    let payload = &bytes[header..];
+    if payload.len() != plen || hash_bytes(payload) != phash {
+        return Err(Error::invalid("plan cache: corrupt payload"));
+    }
+    decode_bundle(payload)
+}
+
+/// Write `bytes` to `path` atomically: tmp sibling + rename, so a crash
+/// or concurrent reader never sees a partial file.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("plan.tmp");
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::{ExecutionPlan, PreparedPlan};
+    use crate::sim::Algorithm;
+    use crate::sparse::Csr;
+
+    /// A tiny synthetic bundle (1×1 identity-ish instance) — enough for
+    /// store mechanics; codec fidelity is covered in `codec::tests`.
+    fn tiny(tag: u32) -> PlanBundle {
+        let c = Csr::identity(1);
+        PlanBundle {
+            part: vec![tag],
+            alg: Algorithm {
+                p: 1,
+                mult_part: vec![0],
+                owner_a: vec![0],
+                owner_b: vec![0],
+                owner_c: vec![0],
+            },
+            prepared: PreparedPlan {
+                c_struct: c,
+                plan: ExecutionPlan { workers: Vec::new(), expand_volume: 0, fold_volume: 0 },
+                tile: 8,
+            },
+            comm_max: tag as u64,
+            volume: 0,
+        }
+    }
+
+    fn fp(n: u64) -> Fingerprint {
+        Fingerprint([n, !n])
+    }
+
+    fn tempdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spgemm_hp_store_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn lru_eviction_and_recency_order() {
+        let mut st = PlanStore::new(2, None).unwrap();
+        st.insert(fp(1), &tiny(1)).unwrap();
+        st.insert(fp(2), &tiny(2)).unwrap();
+        // touching 1 refreshes it; inserting 3 then evicts 2
+        assert!(matches!(st.lookup(fp(1)), StoreLookup::Hit(_)));
+        assert_eq!(st.mem_fingerprints(), vec![fp(2), fp(1)]);
+        st.insert(fp(3), &tiny(3)).unwrap();
+        assert_eq!(st.mem_fingerprints(), vec![fp(1), fp(3)]);
+        assert!(matches!(st.lookup(fp(2)), StoreLookup::Miss));
+        // hits return the right bundle
+        match st.lookup(fp(3)) {
+            StoreLookup::Hit(b) => assert_eq!(b.part, vec![3]),
+            other => panic!("expected hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disk_round_trip_and_corruption_fallback() {
+        let dir = tempdir("disk");
+        {
+            let mut st = PlanStore::new(2, Some(dir.clone())).unwrap();
+            st.insert(fp(7), &tiny(7)).unwrap();
+        }
+        // a fresh store (new process simulation) hits from disk
+        let mut st = PlanStore::new(2, Some(dir.clone())).unwrap();
+        match st.lookup(fp(7)) {
+            StoreLookup::Hit(b) => assert_eq!(b.comm_max, 7),
+            other => panic!("expected disk hit, got {other:?}"),
+        }
+        let path = dir.join(format!("{}.plan", fp(7)));
+        let good = std::fs::read(&path).unwrap();
+
+        // corrupt payload byte -> Stale
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert_eq!(PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)), StoreLookup::Stale);
+
+        // wrong version -> Stale
+        let mut bad = good.clone();
+        bad[8] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert_eq!(PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)), StoreLookup::Stale);
+
+        // truncation -> Stale
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert_eq!(PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)), StoreLookup::Stale);
+
+        // wrong magic -> Stale; absent -> Miss
+        std::fs::write(&path, b"garbage").unwrap();
+        assert_eq!(PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)), StoreLookup::Stale);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)), StoreLookup::Miss);
+
+        // re-insert repairs the entry
+        let mut st = PlanStore::new(2, Some(dir.clone())).unwrap();
+        st.insert(fp(7), &tiny(7)).unwrap();
+        assert!(matches!(
+            PlanStore::new(2, Some(dir.clone())).unwrap().lookup(fp(7)),
+            StoreLookup::Hit(_)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_in_header_is_stale() {
+        let dir = tempdir("fpmm");
+        let mut st = PlanStore::new(2, Some(dir.clone())).unwrap();
+        st.insert(fp(1), &tiny(1)).unwrap();
+        // copy the file under a different fingerprint's name
+        let from = dir.join(format!("{}.plan", fp(1)));
+        let to = dir.join(format!("{}.plan", fp(2)));
+        std::fs::copy(&from, &to).unwrap();
+        let mut fresh = PlanStore::new(2, Some(dir.clone())).unwrap();
+        assert_eq!(fresh.lookup(fp(2)), StoreLookup::Stale);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        assert!(PlanStore::new(0, None).is_err());
+    }
+}

@@ -189,7 +189,12 @@ pub fn bounds_comparison(seed: u64) -> Result<Vec<BoundRow>> {
         ("diagonal-4096".to_string(), diag.clone(), diag),
     ] {
         let model = build_model(&a, &b, ModelKind::FineGrained, false)?;
-        let cfg = PartitionerConfig { epsilon: 0.10, seed, ..PartitionerConfig::new(p) };
+        let cfg = PartitionerConfig {
+            epsilon: 0.10,
+            seed,
+            threads: partition::default_threads(),
+            ..PartitionerConfig::new(p)
+        };
         let part = partition::partition(&model.h, &cfg)?;
         let m = crate::cost::evaluate(&model.h, &part, p)?;
         let flops = spgemm_flops(&a, &b)?;
@@ -235,7 +240,12 @@ pub fn sequential_experiment(seed: u64) -> Result<Vec<SeqRow>> {
         // boundary ≤ O(M); pick h so each block's data footprint ≈ M
         let h = ((3 * flops as usize) / m).clamp(1, model.h.num_vertices().max(1)).max(1);
         let h = h.min(64);
-        let cfg = PartitionerConfig { epsilon: 0.5, seed, ..PartitionerConfig::new(h) };
+        let cfg = PartitionerConfig {
+            epsilon: 0.5,
+            seed,
+            threads: partition::default_threads(),
+            ..PartitionerConfig::new(h)
+        };
         let part = partition::partition(&model.h, &cfg)?;
         let block = block_schedule(&part, h);
         let rm = simulate_sequential(&a, &at, &row_sched, m)?;

@@ -70,7 +70,14 @@ pub fn measure_model(
 ) -> Result<ExperimentRow> {
     let model = build_model(a, b, kind, false)?;
     let t = Timer::start();
-    let cfg = PartitionerConfig { epsilon, seed, ..PartitionerConfig::new(p) };
+    // threaded planning by default: bit-identical to serial for every
+    // thread count, so only partition_ms moves
+    let cfg = PartitionerConfig {
+        epsilon,
+        seed,
+        threads: partition::default_threads(),
+        ..PartitionerConfig::new(p)
+    };
     let part = partition::partition(&model.h, &cfg)?;
     let partition_ms = t.elapsed_ms();
     let m = cost::evaluate(&model.h, &part, p)?;

@@ -8,7 +8,7 @@ use std::collections::HashMap;
 /// A concrete parallel SpGEMM algorithm: who multiplies what and who owns
 /// each nonzero. (A partition of the model's vertices lowers to this; see
 /// [`lower`].)
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Algorithm {
     pub p: usize,
     /// Processor of each multiplication, indexed by canonical mult index.

@@ -8,8 +8,10 @@ use spgemm_hp::gen;
 use spgemm_hp::hypergraph::classify::{classify, Parallelization};
 use spgemm_hp::hypergraph::models::{build_model, ModelKind, MultEnum};
 use spgemm_hp::partition::{is_balanced, partition, random_partition, PartitionerConfig};
+use spgemm_hp::planner::{PlanOutcome, Planner};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{cost, sim, sparse};
+use std::sync::Arc;
 
 /// The whole stack on the AMG application: generate the hierarchy,
 /// partition both SpGEMMs, execute them on the coordinator, validate.
@@ -62,6 +64,75 @@ fn lp_partition_reuse_across_iterations() {
     let alg = sim::lower(&model2, &part, &a, &b2, 4).unwrap();
     let (_, c) = sim::simulate(&a, &b2, &alg).unwrap();
     assert!(c.approx_eq(&sparse::spgemm(&a, &b2).unwrap(), 1e-9));
+}
+
+/// LP through the planner: the second interior-point iterate (same
+/// structure, new diagonal scaling) is served warm from the plan cache,
+/// and the warm plan drives the simulator and coordinator to exactly the
+/// results a cold plan produces.
+#[test]
+fn planner_amortizes_lp_iterations() {
+    let mut rng = Rng::new(33);
+    let a = gen::lp_constraints(&gen::LpParams::pds_like(200, 640), &mut rng).unwrap();
+    let d1 = gen::lp::ipm_scaling(a.ncols, &mut rng);
+    let b1 = sparse::ops::scale_rows(&a.transpose(), &d1).unwrap();
+    let d2 = gen::lp::ipm_scaling(a.ncols, &mut rng);
+    let b2 = sparse::ops::scale_rows(&a.transpose(), &d2).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(4) };
+
+    let mut planner = Planner::in_memory();
+    let cold = planner.plan_or_build(&a, &b1, ModelKind::OuterProduct, &cfg, 8).unwrap();
+    assert_eq!(cold.outcome, PlanOutcome::Miss);
+    let warm = planner.plan_or_build(&a, &b2, ModelKind::OuterProduct, &cfg, 8).unwrap();
+    assert_eq!(warm.outcome, PlanOutcome::Hit, "same structure, new values must hit");
+    // structural halves are identical
+    assert_eq!(warm.part, cold.part);
+    assert_eq!(warm.alg.mult_part, cold.alg.mult_part);
+    assert_eq!(warm.alg.owner_b, cold.alg.owner_b);
+
+    // the warm plan's simulated result is bit-identical to a from-scratch
+    // pipeline on (a, b2)...
+    let (warm_rep, warm_c) = sim::simulate(&a, &b2, &warm.alg).unwrap();
+    let model2 = build_model(&a, &b2, ModelKind::OuterProduct, false).unwrap();
+    let part2 = partition(&model2.h, &cfg).unwrap();
+    let alg2 = sim::lower(&model2, &part2, &a, &b2, 4).unwrap();
+    let (cold_rep, cold_c) = sim::simulate(&a, &b2, &alg2).unwrap();
+    assert_eq!(warm_rep, cold_rep);
+    assert_eq!(warm_c, cold_c, "warm plan must reproduce the cold pipeline exactly");
+    // ...its modeled volumes match the simulator...
+    assert_eq!(warm.prepared.plan.expand_volume, warm_rep.expand_volume);
+    assert_eq!(warm.prepared.plan.fold_volume, warm_rep.fold_volume);
+    // ...and executing it on the coordinator is numerically correct
+    let ccfg = CoordinatorConfig { plan: Some(Arc::new(warm.prepared)), ..Default::default() };
+    let (crep, c) = coordinator::run(&a, &b2, &warm.alg, &ccfg).unwrap();
+    assert!(c.approx_eq(&sparse::spgemm(&a, &b2).unwrap(), 1e-3));
+    assert_eq!(crep.expand_volume, warm_rep.expand_volume);
+}
+
+/// MCL's A² through the planner with an on-disk cache: a fresh planner
+/// (new-process simulation) hits from disk and the loaded plan executes
+/// bit-identically on the simulator.
+#[test]
+fn planner_disk_cache_serves_mcl_squaring() {
+    let mut rng = Rng::new(44);
+    let a = gen::rmat(&gen::RmatParams::protein(7, 5.0), &mut rng).unwrap();
+    let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(4) };
+    let dir = std::env::temp_dir().join(format!("spgemm_hp_planner_mcl_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let pcfg = || spgemm_hp::planner::PlannerConfig { cache_dir: Some(dir.clone()), capacity: 4 };
+    let cold =
+        Planner::new(pcfg()).unwrap().plan_or_build(&a, &a, ModelKind::MonoC, &cfg, 8).unwrap();
+    assert_eq!(cold.outcome, PlanOutcome::Miss);
+    let warm =
+        Planner::new(pcfg()).unwrap().plan_or_build(&a, &a, ModelKind::MonoC, &cfg, 8).unwrap();
+    assert_eq!(warm.outcome, PlanOutcome::Hit, "fresh planner must hit from disk");
+    assert_eq!(warm.prepared, cold.prepared, "disk round trip is bit-exact");
+    let (rep_w, c_w) = sim::simulate(&a, &a, &warm.alg).unwrap();
+    let (rep_c, c_c) = sim::simulate(&a, &a, &cold.alg).unwrap();
+    assert_eq!(rep_w, rep_c);
+    assert_eq!(c_w, c_c);
+    assert!(c_w.approx_eq(&sparse::spgemm(&a, &a).unwrap(), 1e-9));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// MCL: partitions from every model, executed and validated; 1D

@@ -1,0 +1,268 @@
+//! Planner subsystem suite: codec round trips over every model kind ×
+//! generator, randomized round-trip properties, disk-cache determinism,
+//! stale/corrupt-entry fallback, and LRU eviction order.
+
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::ModelKind;
+use spgemm_hp::partition::PartitionerConfig;
+use spgemm_hp::planner::codec::{decode_bundle, encode_bundle};
+use spgemm_hp::planner::{fingerprint, PlanOutcome, PlanStore, Planner, PlannerConfig, StoreLookup};
+use spgemm_hp::sparse::Csr;
+use spgemm_hp::util::{proptest, Rng};
+
+/// Small instances of all five workload generators.
+fn generator_instances(seed: u64) -> Vec<(&'static str, Csr, Csr)> {
+    let mut rng = Rng::new(seed);
+    let er_a = gen::erdos_renyi(24, 24, 3.0, &mut rng).unwrap();
+    let er_b = gen::erdos_renyi(24, 24, 3.0, &mut rng).unwrap();
+    let rmat = gen::rmat(&gen::RmatParams::protein(5, 4.0), &mut rng).unwrap();
+    let amg_a = gen::stencil27(3);
+    let amg_p = gen::smoothed_aggregation_prolongator(&amg_a, 3).unwrap();
+    let lp = gen::lp_constraints(&gen::LpParams::pds_like(30, 96), &mut rng).unwrap();
+    let lp_t = lp.transpose();
+    let road = gen::road_network(8, 7, 0.3, &mut rng).unwrap();
+    vec![
+        ("er", er_a, er_b),
+        ("rmat", rmat.clone(), rmat),
+        ("amg", amg_a, amg_p),
+        ("lp", lp, lp_t),
+        ("roadnet", road.clone(), road),
+    ]
+}
+
+fn tempdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("spgemm_hp_planner_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn disk_cfg(dir: &std::path::Path, capacity: usize) -> PlannerConfig {
+    PlannerConfig { cache_dir: Some(dir.to_path_buf()), capacity }
+}
+
+/// Codec round trips exactly for every model kind × generator: the
+/// decoded bundle is field-identical and re-encodes to the same bytes.
+#[test]
+fn codec_round_trips_every_model_kind_and_generator() {
+    let mut planner = Planner::in_memory();
+    for (name, a, b) in generator_instances(1) {
+        for kind in ModelKind::ALL {
+            let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(3) };
+            let planned = planner.plan_or_build(&a, &b, kind, &cfg, 8).unwrap();
+            // reconstruct the bundle shape the cache stores
+            let bundle = spgemm_hp::planner::PlanBundle {
+                part: planned.part.clone(),
+                alg: planned.alg.clone(),
+                prepared: planned.prepared.clone(),
+                comm_max: planned.comm_max,
+                volume: planned.volume,
+            };
+            let bytes = encode_bundle(&bundle);
+            let back = decode_bundle(&bytes).unwrap();
+            assert_eq!(back, bundle, "{name}/{kind:?} decode != original");
+            assert_eq!(encode_bundle(&back), bytes, "{name}/{kind:?} re-encode differs");
+        }
+    }
+}
+
+/// Randomized round-trip property over generated ER instances with
+/// random shapes, part counts, models, and tiles.
+#[test]
+fn codec_round_trip_proptest() {
+    let mut planner = Planner::in_memory();
+    proptest::check(
+        "planner codec round trip",
+        7,
+        proptest::default_cases().min(48),
+        |rng| {
+            let m = 8 + rng.below(20);
+            let k = 8 + rng.below(16);
+            let n = 8 + rng.below(20);
+            let a = gen::erdos_renyi(m, k, 1.5 + rng.uniform() * 2.0, rng).unwrap();
+            let b = gen::erdos_renyi(k, n, 1.5 + rng.uniform() * 2.0, rng).unwrap();
+            let kind = ModelKind::ALL[rng.below(7)];
+            let parts = 2 + rng.below(4);
+            let tile = [2usize, 4, 8, 16][rng.below(4)];
+            let seed = rng.next_u64();
+            (a, b, kind, parts, tile, seed)
+        },
+        |(a, b, kind, parts, tile, seed)| {
+            let cfg = PartitionerConfig {
+                epsilon: 0.4,
+                seed: *seed,
+                ..PartitionerConfig::new(*parts)
+            };
+            let planned =
+                planner.plan_or_build(a, b, *kind, &cfg, *tile).map_err(|e| e.to_string())?;
+            let bundle = spgemm_hp::planner::PlanBundle {
+                part: planned.part.clone(),
+                alg: planned.alg.clone(),
+                prepared: planned.prepared.clone(),
+                comm_max: planned.comm_max,
+                volume: planned.volume,
+            };
+            let bytes = encode_bundle(&bundle);
+            let back = decode_bundle(&bytes).map_err(|e| e.to_string())?;
+            proptest::ensure(back == bundle, "decode != original")?;
+            proptest::ensure(encode_bundle(&back) == bytes, "re-encode differs")
+        },
+    );
+}
+
+/// A plan loaded from disk is bit-identical to the freshly built plan:
+/// same bundle bytes, and the simulator (a deterministic executor)
+/// produces identical reports and values from both.
+#[test]
+fn disk_hit_is_bit_identical_to_cold_plan() {
+    let dir = tempdir("determinism");
+    let (_, a, b) = generator_instances(5).remove(3); // lp
+    let cfg = PartitionerConfig { epsilon: 0.15, ..PartitionerConfig::new(4) };
+
+    let cold = Planner::new(disk_cfg(&dir, 4))
+        .unwrap()
+        .plan_or_build(&a, &b, ModelKind::OuterProduct, &cfg, 8)
+        .unwrap();
+    assert_eq!(cold.outcome, PlanOutcome::Miss);
+    // fresh planner = fresh process: only the disk tier can serve this
+    let warm = Planner::new(disk_cfg(&dir, 4))
+        .unwrap()
+        .plan_or_build(&a, &b, ModelKind::OuterProduct, &cfg, 8)
+        .unwrap();
+    assert_eq!(warm.outcome, PlanOutcome::Hit);
+    assert_eq!(warm.fingerprint, cold.fingerprint);
+    assert_eq!(warm.part, cold.part);
+    assert_eq!(warm.prepared, cold.prepared, "loaded plan differs from built plan");
+    let (rep_w, c_w) = spgemm_hp::sim::simulate(&a, &b, &warm.alg).unwrap();
+    let (rep_c, c_c) = spgemm_hp::sim::simulate(&a, &b, &cold.alg).unwrap();
+    assert_eq!(rep_w, rep_c);
+    assert!(
+        c_w.values.iter().zip(&c_c.values).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "simulated values not bit-identical"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupt, truncated, or version-bumped cache files are rejected with a
+/// `Stale` outcome, replanned, and repaired in place.
+#[test]
+fn stale_and_corrupt_entries_fall_back_to_replanning() {
+    let dir = tempdir("corrupt");
+    let (_, a, b) = generator_instances(9).remove(0); // er
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(3) };
+    let cold = Planner::new(disk_cfg(&dir, 4))
+        .unwrap()
+        .plan_or_build(&a, &b, ModelKind::RowWise, &cfg, 8)
+        .unwrap();
+    let path = dir.join(format!("{}.plan", cold.fingerprint));
+    let good = std::fs::read(&path).unwrap();
+
+    fn flipped(src: &[u8], at: usize) -> Vec<u8> {
+        let mut v = src.to_vec();
+        v[at] ^= 0x55;
+        v
+    }
+    let corruptions: Vec<Vec<u8>> = vec![
+        b"not a plan at all".to_vec(),   // bad magic
+        flipped(&good, 9),               // bad version
+        good[..good.len() - 3].to_vec(), // truncated
+        flipped(&good, good.len() - 1),  // payload bit flip
+    ];
+    for (i, bad) in corruptions.into_iter().enumerate() {
+        std::fs::write(&path, &bad).unwrap();
+        let replanned = Planner::new(disk_cfg(&dir, 4))
+            .unwrap()
+            .plan_or_build(&a, &b, ModelKind::RowWise, &cfg, 8)
+            .unwrap();
+        assert_eq!(replanned.outcome, PlanOutcome::Stale, "corruption #{i}");
+        assert_eq!(replanned.prepared, cold.prepared, "corruption #{i} changed the plan");
+        // the entry was repaired: a fresh planner now hits
+        let again = Planner::new(disk_cfg(&dir, 4))
+            .unwrap()
+            .plan_or_build(&a, &b, ModelKind::RowWise, &cfg, 8)
+            .unwrap();
+        assert_eq!(again.outcome, PlanOutcome::Hit, "corruption #{i} not repaired");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The memory tier evicts in LRU order and hits refresh recency; with no
+/// disk tier an evicted entry is a miss (and a replan).
+#[test]
+fn lru_eviction_order_and_replan_on_eviction() {
+    let (_, a, b) = generator_instances(11).remove(0);
+    let cfg = PartitionerConfig { epsilon: 0.2, ..PartitionerConfig::new(2) };
+    let kinds = [ModelKind::RowWise, ModelKind::ColWise, ModelKind::OuterProduct];
+    let fps: Vec<_> = kinds.iter().map(|&k| fingerprint(&a, &b, k, &cfg, 8)).collect();
+
+    let mut planner = Planner::new(PlannerConfig { cache_dir: None, capacity: 2 }).unwrap();
+    let outcome_of =
+        |planner: &mut Planner, k| planner.plan_or_build(&a, &b, k, &cfg, 8).unwrap().outcome;
+    outcome_of(&mut planner, kinds[0]);
+    outcome_of(&mut planner, kinds[1]);
+    // touch kinds[0] so kinds[1] is now least recently used
+    assert_eq!(outcome_of(&mut planner, kinds[0]), PlanOutcome::Hit);
+    outcome_of(&mut planner, kinds[2]);
+    // kinds[1] was evicted; kinds[0] and kinds[2] survive
+    assert_eq!(outcome_of(&mut planner, kinds[0]), PlanOutcome::Hit);
+    assert_eq!(outcome_of(&mut planner, kinds[2]), PlanOutcome::Hit);
+    assert_eq!(outcome_of(&mut planner, kinds[1]), PlanOutcome::Miss, "evicted entry replans");
+
+    // the raw store exposes the same order
+    let mut store = PlanStore::new(2, None).unwrap();
+    let tiny = |tag: u32| spgemm_hp::planner::PlanBundle {
+        part: vec![tag],
+        alg: spgemm_hp::sim::Algorithm {
+            p: 1,
+            mult_part: vec![0],
+            owner_a: vec![0],
+            owner_b: vec![0],
+            owner_c: vec![0],
+        },
+        prepared: spgemm_hp::coordinator::plan::PreparedPlan {
+            c_struct: Csr::identity(1),
+            plan: spgemm_hp::coordinator::plan::ExecutionPlan {
+                workers: Vec::new(),
+                expand_volume: 0,
+                fold_volume: 0,
+            },
+            tile: 8,
+        },
+        comm_max: 0,
+        volume: 0,
+    };
+    store.insert(fps[0], &tiny(0)).unwrap();
+    store.insert(fps[1], &tiny(1)).unwrap();
+    assert!(matches!(store.lookup(fps[0]), StoreLookup::Hit(_)));
+    store.insert(fps[2], &tiny(2)).unwrap();
+    assert_eq!(store.mem_fingerprints(), vec![fps[0], fps[2]]);
+    assert_eq!(store.lookup(fps[1]), StoreLookup::Miss);
+}
+
+/// Fingerprints key on structure and plan-shaping knobs only: same
+/// pattern with different values collides (by design), different
+/// pattern, knobs, or tile never does across the generator set.
+#[test]
+fn fingerprints_separate_planning_problems() {
+    let cfg = PartitionerConfig::new(4);
+    let mut seen = std::collections::HashSet::new();
+    for (name, a, b) in generator_instances(13) {
+        for kind in ModelKind::ALL {
+            for tile in [8usize, 16] {
+                assert!(
+                    seen.insert(fingerprint(&a, &b, kind, &cfg, tile)),
+                    "collision at {name}/{kind:?}/tile{tile}"
+                );
+            }
+        }
+        // values don't matter: scaling every value leaves the key alone
+        let mut a2 = a.clone();
+        for v in &mut a2.values {
+            *v *= 7.5;
+        }
+        assert_eq!(
+            fingerprint(&a, &b, ModelKind::RowWise, &cfg, 8),
+            fingerprint(&a2, &b, ModelKind::RowWise, &cfg, 8),
+            "{name}: values leaked into the fingerprint"
+        );
+    }
+}

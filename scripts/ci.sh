@@ -37,9 +37,10 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition/coarsening suites (deep property sweep)"
+step "kernel differential + model oracle + partition/coarsening/planner suites (deep property sweep)"
 SPGEMM_HP_PROP_CASES=192 \
-    cargo test -q --test kernels --test models --test partition_quality --test coarsening
+    cargo test -q --test kernels --test models --test partition_quality --test coarsening \
+    --test planner
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -47,11 +48,14 @@ cargo test -q --features pallas
 step "bench smoke (writes BENCH_spgemm.json)"
 cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 
-step "bench smoke (writes BENCH_partition.json; threads sweep enforces bit-identity)"
-cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json
+step "bench smoke (writes BENCH_partition.json; threads sweep enforces bit-identity, plan sweep enforces warm < cold)"
+PLAN_CACHE_DIR="$(mktemp -d)"
+cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.json \
+    --plan-cache "$PLAN_CACHE_DIR"
+rm -rf "$PLAN_CACHE_DIR"
 
-step "BENCH_partition.json phase-timing + imbalance fields present"
-for field in coarsen_ns initial_ns refine_ns mem_imbalance; do
+step "BENCH_partition.json phase-timing + imbalance + plan-cache fields present"
+for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit; do
     if ! grep -q "\"$field\"" BENCH_partition.json; then
         echo "ERROR: BENCH_partition.json is missing the \"$field\" field"
         exit 1
