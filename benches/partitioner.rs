@@ -24,8 +24,9 @@
 //!   parts, threads, cut, volume, comm_max, imbalance, mem_imbalance,
 //!   ns_per_op, coarsen_ns, initial_ns, refine_ns; plan-cache rows
 //!   instead carry model, workload, parts, volume, comm_max,
-//!   plan_cold_ns, plan_warm_ns, hit) to `path`, default
-//!   `BENCH_partition.json`.
+//!   plan_cold_ns, plan_warm_ns, hit; strategy rows carry strategy,
+//!   workload, parts, expand, fold, volume, comm_max, ns_per_op) to
+//!   `path`, default `BENCH_partition.json`.
 //! * `--parts 4,16` — part counts for the sweep.
 //! * `--threads 1,2,4,8` — thread counts for the parallel planning sweep.
 //! * `--plan-cache DIR` — exercise the planner's *disk* tier in the
@@ -36,6 +37,7 @@
 //! cargo bench --bench partitioner -- --smoke --json BENCH_partition.json
 //! ```
 
+use spgemm_hp::algorithm::{self, AlgorithmStrategy};
 use spgemm_hp::cli::Args;
 use spgemm_hp::cost;
 use spgemm_hp::gen;
@@ -53,6 +55,13 @@ struct PlanTiming {
     hit: bool,
 }
 
+/// Communication profile of a lowered algorithm, for the strategy rows.
+struct StrategyProfile {
+    name: String,
+    expand: u64,
+    fold: u64,
+}
+
 /// One measured point, serialized to `BENCH_partition.json`.
 struct Record {
     model: &'static str,
@@ -68,6 +77,8 @@ struct Record {
     phases: PhaseBreakdown,
     /// Present on plan-cache sweep rows only.
     planner: Option<PlanTiming>,
+    /// Present on algorithm-strategy sweep rows only.
+    strategy: Option<StrategyProfile>,
 }
 
 fn write_json(path: &str, records: &[Record]) -> Result<()> {
@@ -76,6 +87,18 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
     writeln!(f, "[")?;
     for (i, r) in records.iter().enumerate() {
         let comma = if i + 1 < records.len() { "," } else { "" };
+        if let Some(s) = &r.strategy {
+            // strategy rows compare whole algorithms, not partitions of
+            // one model, so cut/imbalance have no meaning here either
+            writeln!(
+                f,
+                "  {{\"strategy\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \
+                 \"expand\": {}, \"fold\": {}, \"volume\": {}, \"comm_max\": {}, \
+                 \"ns_per_op\": {:.1}}}{comma}",
+                s.name, r.workload, r.parts, s.expand, s.fold, r.volume, r.comm_max, r.ns_per_op
+            )?;
+            continue;
+        }
         match &r.planner {
             // plan-cache sweep rows carry only the fields that mean
             // something for a cached plan — fabricating cut/imbalance
@@ -213,8 +236,76 @@ fn real_main() -> Result<()> {
                     ns_per_op: stats.median * 1e9,
                     phases,
                     planner: None,
+                    strategy: None,
                 });
             }
+        }
+    }
+
+    // --- algorithm strategies: model-aware vs sparsity-oblivious -----------
+    // The same workloads lowered end-to-end through each AlgorithmStrategy,
+    // timing the full planning path (model build + partition for the
+    // hypergraph rows, closed-form ownership for SUMMA/split-3D) and
+    // recording the simulator-measured expand/fold split. The modeled
+    // connectivity volume must equal what the simulator moves — any gap
+    // is an accounting bug, not a data point.
+    println!("\n== algorithm strategies: model-aware vs sparsity-oblivious ==");
+    let strategy_sweep = [
+        AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::FineGrained, with_nz: false },
+        AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false },
+        AlgorithmStrategy::SparseSumma { grid: (0, 0) },
+        AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 },
+    ];
+    let sp = *parts_sweep.first().unwrap_or(&4);
+    println!(
+        "{:<16} {:<16} {:>4} {:>9} {:>9} {:>9} {:>9} {:>12}",
+        "workload", "strategy", "p", "expand", "fold", "volume", "comm_max", "plan time"
+    );
+    for (name, a, b) in &workloads {
+        for strat in &strategy_sweep {
+            let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(sp) };
+            let label = strat.resolve(sp)?.name();
+            let mut alg = None;
+            let stats = bench(0, 1, || alg = Some(strat.lower(a, b, &cfg).unwrap()));
+            let alg = alg.expect("bench ran at least once");
+            let (comm_max, volume) = algorithm::connectivity_metrics(a, b, &alg)?;
+            let (rep, _) = spgemm_hp::sim::simulate(a, b, &alg)?;
+            if volume != rep.total_volume() {
+                return Err(Error::Runtime(format!(
+                    "{name}/{label}: modeled volume {volume} != simulated {}",
+                    rep.total_volume()
+                )));
+            }
+            println!(
+                "{:<16} {:<16} {:>4} {:>9} {:>9} {:>9} {:>9} {:>12}",
+                name,
+                label,
+                sp,
+                rep.expand_volume,
+                rep.fold_volume,
+                volume,
+                comm_max,
+                BenchStats::fmt_time(stats.median)
+            );
+            records.push(Record {
+                model: "strategy",
+                workload: name.clone(),
+                parts: sp,
+                threads: 1,
+                cut: 0,
+                volume,
+                comm_max,
+                imbalance: 1.0,
+                mem_imbalance: 1.0,
+                ns_per_op: stats.median * 1e9,
+                phases: PhaseBreakdown::default(),
+                planner: None,
+                strategy: Some(StrategyProfile {
+                    name: label,
+                    expand: rep.expand_volume,
+                    fold: rep.fold_volume,
+                }),
+            });
         }
     }
 
@@ -272,6 +363,7 @@ fn real_main() -> Result<()> {
             ns_per_op: stats.median * 1e9,
             phases,
             planner: None,
+            strategy: None,
         });
     }
 
@@ -345,6 +437,7 @@ fn real_main() -> Result<()> {
             ns_per_op: warm.plan_ns as f64,
             phases: PhaseBreakdown::default(),
             planner: Some(PlanTiming { cold_ns: cold.plan_ns, warm_ns: warm.plan_ns, hit: true }),
+            strategy: None,
         });
     }
 

@@ -15,11 +15,13 @@
 //! cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 //! ```
 
+use spgemm_hp::algorithm::AlgorithmStrategy;
 use spgemm_hp::cli::Args;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, fine_grained, ModelKind};
+use spgemm_hp::partition::PartitionerConfig;
 use spgemm_hp::runtime::Engine;
-use spgemm_hp::sim::{spgemm_parallel, spgemm_parallel_with};
+use spgemm_hp::sim::{simulate, spgemm_parallel, spgemm_parallel_with};
 use spgemm_hp::sparse::{self, KernelKind};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
@@ -154,6 +156,35 @@ fn real_main() -> Result<()> {
                 });
             }
         }
+    }
+
+    println!("\n== algorithm-strategy execution (simulate, expand+mult+fold) ==");
+    // the distributed-memory executor under each AlgorithmStrategy on a
+    // stencil workload: same C, different data movement, so ns/op tracks
+    // how much the schedule costs to execute rather than to plan. Sized
+    // below the main stencil — the fine-grained row plans one vertex per
+    // flop and its partition time would dwarf the execution being timed.
+    let sim_n = if smoke { 6 } else { 8 };
+    let sim_name = format!("stencil27-n{sim_n}");
+    let sim_a = &gen::stencil27(sim_n);
+    let sim_p = 4usize;
+    let sim_cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(sim_p) };
+    for strat in [
+        AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false },
+        AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::FineGrained, with_nz: false },
+        AlgorithmStrategy::SparseSumma { grid: (0, 0) },
+        AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 },
+    ] {
+        let label = strat.resolve(sim_p)?.name();
+        let alg = strat.lower(sim_a, sim_a, &sim_cfg)?;
+        let s = bench(1, iters, || simulate(sim_a, sim_a, &alg).unwrap());
+        println!("{label:<16} {sim_name:<22} {:>12}", BenchStats::fmt_time(s.median));
+        records.push(Record {
+            kernel: "simulate",
+            workload: format!("{sim_name}-{label}"),
+            threads: 1,
+            ns_per_op: s.median * 1e9,
+        });
     }
 
     println!("\n== hypergraph model construction ==");

@@ -1,0 +1,498 @@
+//! Pluggable algorithm strategies: one API seam from which every way of
+//! building a [`sim::Algorithm`](crate::sim::Algorithm) hangs.
+//!
+//! The paper's central experiment (Sec. 6) positions hypergraph-
+//! partitioned SpGEMM against communication-*oblivious* algorithms.
+//! This module makes both sides of that comparison first-class values
+//! of one enum:
+//!
+//! * [`AlgorithmStrategy::HypergraphPartitioned`] — the paper's
+//!   pipeline: build a [`Model`](crate::hypergraph::models::Model),
+//!   partition it, lower the partition (Lem. 4.8).
+//! * [`AlgorithmStrategy::SparseSumma`] — 2D Sparse SUMMA
+//!   (Buluç–Gilbert, arXiv 1006.2183): a `pr × pc` processor grid with
+//!   block-cyclic A/B/C ownership and stationary C. Every
+//!   multiplication `(i,k,j)` executes on the owner of `C(i,j)`; the
+//!   expand phase broadcasts A entries along grid rows and B entries
+//!   along grid columns (the k-stages of SUMMA), and the fold phase is
+//!   empty — C never moves.
+//! * [`AlgorithmStrategy::Split3d`] — split-3D SpGEMM (Azad et al.,
+//!   arXiv 1510.00844): `p = pr·pc·layers` processors arranged as
+//!   `layers` SUMMA grids, each owning a contiguous slab of the
+//!   k-dimension; partial C contributions are folded across layers
+//!   (the split-k reduction).
+//!
+//! Each strategy produces the *same* [`Algorithm`] struct — `mult_part`
+//! plus A/B/C owners — so the Lem. 4.3 simulator
+//! ([`crate::sim::simulate`]), its threaded driver, and the
+//! coordinator's [`ExecutionPlan`](crate::coordinator::plan::ExecutionPlan)
+//! execute all of them unchanged. The oblivious strategies never touch
+//! the partitioner; their modeled communication metrics come from
+//! [`connectivity_metrics`], which applies the same connectivity-(λ−1)
+//! accounting as [`crate::cost::evaluate`] directly to the lowered
+//! algorithm. See `docs/BASELINES.md` for the full semantics, closed
+//! forms, and bit-identity boundaries.
+
+use crate::hypergraph::models::{build_model, Model, ModelKind, MultEnum};
+use crate::partition::{partition, PartitionerConfig};
+use crate::sim::Algorithm;
+use crate::sparse::{spgemm_structure, Csr};
+use crate::{Error, Result};
+
+/// How to construct a parallel SpGEMM [`Algorithm`] for `p` processors.
+///
+/// `(0, 0)` grids (and `layers == 0`) mean "choose automatically from
+/// `p`" and are made concrete by [`AlgorithmStrategy::resolve`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmStrategy {
+    /// The paper's pipeline: model → partition → lowering.
+    HypergraphPartitioned { model: ModelKind, with_nz: bool },
+    /// 2D Sparse SUMMA on a `pr × pc` grid (arXiv 1006.2183).
+    SparseSumma { grid: (usize, usize) },
+    /// Split-3D SpGEMM: `layers` SUMMA grids over contiguous k-slabs
+    /// with a split-k fold (arXiv 1510.00844).
+    Split3d { grid: (usize, usize), layers: usize },
+}
+
+impl AlgorithmStrategy {
+    /// Every concrete strategy family with auto dimensions (the e2e
+    /// comparison's oblivious column).
+    pub const OBLIVIOUS: [AlgorithmStrategy; 2] = [
+        AlgorithmStrategy::SparseSumma { grid: (0, 0) },
+        AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 },
+    ];
+
+    /// Parse a CLI spelling. Accepted forms:
+    ///
+    /// * `summa` or `summa:PRxPC` (e.g. `summa:2x4`);
+    /// * `split3d` or `split3d:PRxPCxL` (e.g. `split3d:2x2x2`);
+    /// * `hypergraph` (fine-grained) or `hypergraph:<model>`;
+    /// * any bare [`ModelKind::parse`] name (`row`, `outer`, `monoC`, …).
+    pub fn parse(s: &str) -> Option<AlgorithmStrategy> {
+        if s == "summa" {
+            return Some(AlgorithmStrategy::SparseSumma { grid: (0, 0) });
+        }
+        if let Some(spec) = s.strip_prefix("summa:") {
+            let d = parse_dims(spec)?;
+            if d.len() != 2 {
+                return None;
+            }
+            return Some(AlgorithmStrategy::SparseSumma { grid: (d[0], d[1]) });
+        }
+        // ("3d" alone is NOT accepted here: ModelKind::parse already
+        // uses it as a fine-grained alias, and shadowing it would
+        // silently change meaning between --model and --algorithm.)
+        if s == "split3d" {
+            return Some(AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 });
+        }
+        if let Some(spec) = s.strip_prefix("split3d:") {
+            let d = parse_dims(spec)?;
+            if d.len() != 3 {
+                return None;
+            }
+            return Some(AlgorithmStrategy::Split3d { grid: (d[0], d[1]), layers: d[2] });
+        }
+        let model = match s {
+            "hypergraph" => Some(ModelKind::FineGrained),
+            _ => match s.strip_prefix("hypergraph:") {
+                Some(m) => ModelKind::parse(m),
+                None => ModelKind::parse(s),
+            },
+        }?;
+        Some(AlgorithmStrategy::HypergraphPartitioned { model, with_nz: false })
+    }
+
+    /// Display name (table/bench label). Resolved strategies embed their
+    /// concrete dimensions (`summa-2x4`, `split3d-2x2x2`); hypergraph
+    /// strategies show the model name.
+    pub fn name(&self) -> String {
+        match *self {
+            AlgorithmStrategy::HypergraphPartitioned { model, .. } => model.name().to_string(),
+            AlgorithmStrategy::SparseSumma { grid: (0, 0) } => "summa".to_string(),
+            AlgorithmStrategy::SparseSumma { grid: (pr, pc) } => format!("summa-{pr}x{pc}"),
+            AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 } => "split3d".to_string(),
+            AlgorithmStrategy::Split3d { grid: (pr, pc), layers } => {
+                format!("split3d-{pr}x{pc}x{layers}")
+            }
+        }
+    }
+
+    /// Make the strategy concrete for `p` processors: fill auto grid
+    /// dimensions and validate explicit ones against `p`.
+    ///
+    /// Auto rules: SUMMA picks the most-square factorization
+    /// (`pr` = largest divisor of `p` with `pr ≤ √p`); split-3D picks
+    /// `layers = 2` when `p` is even (1 otherwise — degenerating to
+    /// SUMMA ownership with a trivial fold) and factors the rest.
+    pub fn resolve(&self, p: usize) -> Result<AlgorithmStrategy> {
+        if p == 0 {
+            return Err(Error::invalid("algorithm: p must be >= 1"));
+        }
+        match *self {
+            AlgorithmStrategy::HypergraphPartitioned { .. } => Ok(*self),
+            AlgorithmStrategy::SparseSumma { grid } => {
+                let (pr, pc) = if grid == (0, 0) { auto_grid(p) } else { grid };
+                if pr == 0 || pc == 0 || pr * pc != p {
+                    return Err(Error::invalid(format!(
+                        "summa: grid {pr}x{pc} does not match p={p}"
+                    )));
+                }
+                Ok(AlgorithmStrategy::SparseSumma { grid: (pr, pc) })
+            }
+            AlgorithmStrategy::Split3d { grid, layers } => {
+                let layers = if layers == 0 {
+                    if p % 2 == 0 {
+                        2
+                    } else {
+                        1
+                    }
+                } else {
+                    layers
+                };
+                if layers == 0 || p % layers != 0 {
+                    return Err(Error::invalid(format!(
+                        "split3d: layers={layers} does not divide p={p}"
+                    )));
+                }
+                let (pr, pc) = if grid == (0, 0) { auto_grid(p / layers) } else { grid };
+                if pr == 0 || pc == 0 || pr * pc * layers != p {
+                    return Err(Error::invalid(format!(
+                        "split3d: grid {pr}x{pc}x{layers} does not match p={p}"
+                    )));
+                }
+                Ok(AlgorithmStrategy::Split3d { grid: (pr, pc), layers })
+            }
+        }
+    }
+
+    /// Lower the strategy to a concrete [`Algorithm`] for `pcfg.parts`
+    /// processors. The hypergraph path runs the full model → partition →
+    /// [`crate::sim::lower`] pipeline (build the model yourself and use
+    /// [`lower_with_model`] to amortize it); the oblivious paths are
+    /// pure index arithmetic and ignore every partitioner knob except
+    /// `parts`.
+    pub fn lower(&self, a: &Csr, b: &Csr, pcfg: &PartitionerConfig) -> Result<Algorithm> {
+        match self.resolve(pcfg.parts)? {
+            AlgorithmStrategy::HypergraphPartitioned { model, with_nz } => {
+                let model = build_model(a, b, model, with_nz)?;
+                lower_with_model(&model, a, b, pcfg)
+            }
+            AlgorithmStrategy::SparseSumma { grid: (pr, pc) } => summa_algorithm(a, b, pr, pc),
+            AlgorithmStrategy::Split3d { grid: (pr, pc), layers } => {
+                split3d_algorithm(a, b, pr, pc, layers)
+            }
+        }
+    }
+}
+
+/// Partition an already-built model and lower it (the hypergraph leg of
+/// [`AlgorithmStrategy::lower`], factored out so callers holding a
+/// cached [`Model`] skip the rebuild).
+pub fn lower_with_model(
+    model: &Model,
+    a: &Csr,
+    b: &Csr,
+    pcfg: &PartitionerConfig,
+) -> Result<Algorithm> {
+    let part = partition(&model.h, pcfg)?;
+    crate::sim::lower(model, &part, a, b, pcfg.parts)
+}
+
+/// `"PRxPC"` / `"PRxPCxL"` → dimension list (all ≥ 1).
+fn parse_dims(spec: &str) -> Option<Vec<usize>> {
+    let dims: Option<Vec<usize>> =
+        spec.split('x').map(|t| t.parse::<usize>().ok().filter(|&d| d >= 1)).collect();
+    dims.filter(|d| !d.is_empty())
+}
+
+/// Most-square factorization of `p`: the largest divisor ≤ √p paired
+/// with its cofactor (so `pr ≤ pc`).
+pub fn auto_grid(p: usize) -> (usize, usize) {
+    let mut pr = 1;
+    let mut d = 1;
+    while d * d <= p {
+        if p % d == 0 {
+            pr = d;
+        }
+        d += 1;
+    }
+    (pr, p / pr)
+}
+
+/// 2D Sparse SUMMA ownership (arXiv 1006.2183): processors form a
+/// `pr × pc` grid (`proc(r, c) = r·pc + c`), every matrix is distributed
+/// cyclically (`A(i,k) → (i mod pr, k mod pc)`, likewise B and C), and C
+/// is stationary: multiplication `(i,k,j)` executes on the owner of
+/// `C(i,j)`. The simulator's expand phase then reproduces SUMMA's
+/// k-stage broadcasts — each A entry multicasts along its grid row, each
+/// B entry along its grid column — and the fold phase is empty, because
+/// every `C(i,j)` has exactly one producer. That single-producer
+/// property also makes the numeric result **bit-identical** to the
+/// sequential reference: each output is accumulated by one processor in
+/// canonical k-order.
+pub fn summa_algorithm(a: &Csr, b: &Csr, pr: usize, pc: usize) -> Result<Algorithm> {
+    split3d_algorithm(a, b, pr, pc, 1)
+}
+
+/// Split-3D SpGEMM ownership (arXiv 1510.00844): `p = pr·pc·layers`
+/// processors as `layers` SUMMA grids
+/// (`proc(ℓ, r, c) = ℓ·pr·pc + r·pc + c`). Layer `ℓ(k) = ⌊k·layers/K⌋`
+/// owns a contiguous slab of the k-dimension: `A(i,k)` and `B(k,j)` live
+/// in their slab's layer (cyclic within the grid), and multiplication
+/// `(i,k,j)` executes at `proc(ℓ(k), i mod pr, j mod pc)`. Each layer
+/// therefore computes a partial C over its slab, and the simulator's
+/// fold phase performs the split-k reduction to the C owner at layer
+/// `(i + j) mod layers` — summing *per-layer partial sums* in layer
+/// order, which reassociates the k-sum whenever `layers > 1` (so the
+/// result agrees with the reference only to rounding; see
+/// `docs/BASELINES.md`).
+pub fn split3d_algorithm(
+    a: &Csr,
+    b: &Csr,
+    pr: usize,
+    pc: usize,
+    layers: usize,
+) -> Result<Algorithm> {
+    if a.ncols != b.nrows {
+        return Err(Error::dim(format!(
+            "algorithm: A is {}x{}, B is {}x{}",
+            a.nrows, a.ncols, b.nrows, b.ncols
+        )));
+    }
+    if pr == 0 || pc == 0 || layers == 0 {
+        return Err(Error::invalid("algorithm: grid dimensions must be >= 1"));
+    }
+    let p = pr * pc * layers;
+    if p > u32::MAX as usize {
+        return Err(Error::invalid(format!("algorithm: p={p} out of range")));
+    }
+    let kdim = a.ncols;
+    let layer_of = |k: usize| -> usize {
+        if layers == 1 || kdim == 0 {
+            0
+        } else {
+            k * layers / kdim
+        }
+    };
+    let proc3 = |l: usize, r: usize, c: usize| -> u32 { (l * pr * pc + r * pc + c) as u32 };
+
+    let mut owner_a = vec![0u32; a.nnz()];
+    for i in 0..a.nrows {
+        for pa in a.rowptr[i]..a.rowptr[i + 1] {
+            let k = a.colind[pa] as usize;
+            owner_a[pa] = proc3(layer_of(k), i % pr, k % pc);
+        }
+    }
+    let mut owner_b = vec![0u32; b.nnz()];
+    for k in 0..b.nrows {
+        for pb in b.rowptr[k]..b.rowptr[k + 1] {
+            let j = b.colind[pb] as usize;
+            owner_b[pb] = proc3(layer_of(k), k % pr, j % pc);
+        }
+    }
+    let c_struct = spgemm_structure(a, b)?;
+    let mut owner_c = vec![0u32; c_struct.nnz()];
+    for i in 0..c_struct.nrows {
+        for pos in c_struct.rowptr[i]..c_struct.rowptr[i + 1] {
+            let j = c_struct.colind[pos] as usize;
+            owner_c[pos] = proc3((i + j) % layers, i % pr, j % pc);
+        }
+    }
+    let me = MultEnum::new(a, b);
+    let mut mult_part = vec![0u32; me.count() as usize];
+    me.for_each(|m| {
+        mult_part[m.idx as usize] =
+            proc3(layer_of(m.k as usize), m.i as usize % pr, m.j as usize % pc);
+    });
+    Ok(Algorithm { p, mult_part, owner_a, owner_b, owner_c })
+}
+
+/// Modeled communication of an arbitrary [`Algorithm`], by the same
+/// connectivity-(λ−1) accounting [`crate::cost::evaluate`] applies to a
+/// hypergraph partition (Def. 4.1 / Lem. 4.2): every data element's
+/// participant set is its owner plus the processors that use it; an
+/// element with λ ≥ 2 participants contributes λ−1 to the volume and 1
+/// to each participant's boundary. Returns
+/// `(comm_max = max_i |Q_i|, volume)`. The volume equals the
+/// simulator's `expand + fold` exactly (both count λ−1 words per shared
+/// element), and per Lem. 4.3 the simulated per-processor words land in
+/// `[|Q_i|, 3|Q_i|]`.
+pub fn connectivity_metrics(a: &Csr, b: &Csr, alg: &Algorithm) -> Result<(u64, u64)> {
+    let c_struct = spgemm_structure(a, b)?;
+    if alg.owner_a.len() != a.nnz()
+        || alg.owner_b.len() != b.nnz()
+        || alg.owner_c.len() != c_struct.nnz()
+    {
+        return Err(Error::Partition("connectivity_metrics: owner length mismatch".into()));
+    }
+    let mut users_a: Vec<Vec<u32>> = vec![Vec::new(); a.nnz()];
+    let mut users_b: Vec<Vec<u32>> = vec![Vec::new(); b.nnz()];
+    let mut users_c: Vec<Vec<u32>> = vec![Vec::new(); c_struct.nnz()];
+    MultEnum::new(a, b).for_each(|m| {
+        let q = alg.mult_part[m.idx as usize];
+        push_unique(&mut users_a[m.pa as usize], q);
+        push_unique(&mut users_b[m.pb as usize], q);
+        let pos = c_struct.rowptr[m.i as usize]
+            + c_struct.row_cols(m.i as usize).binary_search(&m.j).expect("mult projects into S_C");
+        push_unique(&mut users_c[pos], q);
+    });
+    let mut boundary = vec![0u64; alg.p];
+    let mut volume = 0u64;
+    let mut account = |owner: u32, users: &mut Vec<u32>| {
+        push_unique(users, owner);
+        if users.len() >= 2 {
+            volume += users.len() as u64 - 1;
+            for &q in users.iter() {
+                boundary[q as usize] += 1;
+            }
+        }
+    };
+    for (pos, users) in users_a.iter_mut().enumerate() {
+        account(alg.owner_a[pos], users);
+    }
+    for (pos, users) in users_b.iter_mut().enumerate() {
+        account(alg.owner_b[pos], users);
+    }
+    for (pos, users) in users_c.iter_mut().enumerate() {
+        account(alg.owner_c[pos], users);
+    }
+    Ok((boundary.iter().copied().max().unwrap_or(0), volume))
+}
+
+#[inline]
+fn push_unique(v: &mut Vec<u32>, q: u32) {
+    if !v.contains(&q) {
+        v.push(q);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::simulate;
+    use crate::sparse::{spgemm, Coo};
+    use crate::util::Rng;
+
+    fn dense(n: usize, rng: &mut Rng) -> Csr {
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                coo.push(i, j, rng.range(-1.0, 1.0));
+            }
+        }
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn parse_accepts_every_spelling() {
+        assert_eq!(
+            AlgorithmStrategy::parse("summa"),
+            Some(AlgorithmStrategy::SparseSumma { grid: (0, 0) })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("summa:2x4"),
+            Some(AlgorithmStrategy::SparseSumma { grid: (2, 4) })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("split3d"),
+            Some(AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("split3d:2x2x2"),
+            Some(AlgorithmStrategy::Split3d { grid: (2, 2), layers: 2 })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("hypergraph"),
+            Some(AlgorithmStrategy::HypergraphPartitioned {
+                model: ModelKind::FineGrained,
+                with_nz: false
+            })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("hypergraph:row"),
+            Some(AlgorithmStrategy::HypergraphPartitioned {
+                model: ModelKind::RowWise,
+                with_nz: false
+            })
+        );
+        assert_eq!(
+            AlgorithmStrategy::parse("monoC"),
+            Some(AlgorithmStrategy::HypergraphPartitioned {
+                model: ModelKind::MonoC,
+                with_nz: false
+            })
+        );
+        for bad in ["summa:2", "summa:0x4", "summa:2x2x2", "split3d:2x2", "warp", "hypergraph:x"] {
+            assert_eq!(AlgorithmStrategy::parse(bad), None, "{bad} accepted");
+        }
+    }
+
+    #[test]
+    fn resolve_fills_and_validates_grids() {
+        let s = AlgorithmStrategy::SparseSumma { grid: (0, 0) };
+        assert_eq!(s.resolve(12).unwrap(), AlgorithmStrategy::SparseSumma { grid: (3, 4) });
+        assert_eq!(s.resolve(7).unwrap(), AlgorithmStrategy::SparseSumma { grid: (1, 7) });
+        assert_eq!(s.resolve(16).unwrap(), AlgorithmStrategy::SparseSumma { grid: (4, 4) });
+        assert!(AlgorithmStrategy::SparseSumma { grid: (2, 3) }.resolve(8).is_err());
+        let t = AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 };
+        assert_eq!(
+            t.resolve(8).unwrap(),
+            AlgorithmStrategy::Split3d { grid: (2, 2), layers: 2 }
+        );
+        assert_eq!(
+            t.resolve(9).unwrap(),
+            AlgorithmStrategy::Split3d { grid: (3, 3), layers: 1 }
+        );
+        assert!(AlgorithmStrategy::Split3d { grid: (2, 2), layers: 3 }.resolve(8).is_err());
+        assert!(s.resolve(0).is_err());
+    }
+
+    #[test]
+    fn auto_grid_is_most_square() {
+        assert_eq!(auto_grid(1), (1, 1));
+        assert_eq!(auto_grid(6), (2, 3));
+        assert_eq!(auto_grid(36), (6, 6));
+        assert_eq!(auto_grid(13), (1, 13));
+    }
+
+    #[test]
+    fn summa_is_bit_identical_and_foldless() {
+        let mut rng = Rng::new(11);
+        let a = dense(8, &mut rng);
+        let b = dense(8, &mut rng);
+        let alg = summa_algorithm(&a, &b, 2, 2).unwrap();
+        let (rep, c) = simulate(&a, &b, &alg).unwrap();
+        assert_eq!(rep.fold_volume, 0, "stationary C never moves");
+        let c_ref = spgemm(&a, &b).unwrap();
+        assert_eq!(c, c_ref, "single producer per C entry => bit-identical");
+    }
+
+    #[test]
+    fn split3d_folds_across_layers() {
+        let mut rng = Rng::new(13);
+        let a = dense(8, &mut rng);
+        let b = dense(8, &mut rng);
+        let alg = split3d_algorithm(&a, &b, 2, 2, 2).unwrap();
+        let (rep, c) = simulate(&a, &b, &alg).unwrap();
+        // dense: every C entry is produced by both layers
+        assert_eq!(rep.fold_volume, c.nnz() as u64);
+        assert!(c.approx_eq(&spgemm(&a, &b).unwrap(), 1e-10));
+    }
+
+    #[test]
+    fn metrics_match_simulated_volume() {
+        let mut rng = Rng::new(17);
+        let a = dense(6, &mut rng);
+        let b = dense(6, &mut rng);
+        for alg in [
+            summa_algorithm(&a, &b, 2, 2).unwrap(),
+            split3d_algorithm(&a, &b, 2, 1, 2).unwrap(),
+        ] {
+            let (rep, _) = simulate(&a, &b, &alg).unwrap();
+            let (comm_max, volume) = connectivity_metrics(&a, &b, &alg).unwrap();
+            assert_eq!(volume, rep.total_volume(), "λ−1 accounting equals expand+fold");
+            let max_words = rep.max_send_recv();
+            assert!(max_words >= comm_max && max_words <= 3 * comm_max.max(1));
+        }
+    }
+}

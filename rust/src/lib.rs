@@ -10,6 +10,9 @@
 //! * the fine-grained SpGEMM hypergraph model of Def. 3.1 and all of its
 //!   Sec. 5 coarsenings ([`hypergraph`]),
 //! * a PaToH-like multilevel hypergraph partitioner ([`partition`]),
+//! * a pluggable algorithm-strategy layer ([`algorithm`]) lowering both
+//!   hypergraph partitions and the communication-oblivious Sparse SUMMA
+//!   and split-3D baselines onto one [`Algorithm`](sim::Algorithm),
 //! * the communication-cost metrics and lower bounds of Sec. 4 ([`cost`]),
 //! * parallel and sequential SpGEMM simulators that *execute* a partition
 //!   and validate the modeled costs, plus a scoped-thread row-block
@@ -43,6 +46,7 @@
 //! | [`gen`] | the Sec. 6 applications: AMG (6.1), LP normal equations (6.2), MCL graphs (6.3) |
 //! | [`hypergraph`] | Def. 3.1 fine-grained model; Sec. 5.1 coarsening; Sec. 5.2 1D/2D models; Sec. 5.4 restricted algorithms; Sec. 5.5 SpMV; Sec. 5.6 extensions |
 //! | [`partition`] | the PaToH role: connectivity-(λ−1) minimization under the ε balance constraint of Def. 4.4 |
+//! | [`algorithm`] | the algorithms being compared: hypergraph-partitioned (the paper) vs. communication-oblivious Sparse SUMMA (arXiv:1006.2183) and split-3D (arXiv:1510.00844) baselines |
 //! | [`cost`] | Def. 4.1 boundary cost, Lem. 4.2 communication bound, eq. (1) and Thm. 4.10 lower bounds |
 //! | [`sim`] | Lem. 4.3 expand/fold execution (parallel), Sec. 4.2 two-level memory (sequential) |
 //! | [`coordinator`] | a deployment-shaped executor of the partitioned algorithm (expand → compute → fold) |
@@ -51,6 +55,7 @@
 //! | [`repro`] | Sec. 6 experiment drivers (Table II, Figs. 7–9, bound comparisons) |
 //! | [`cli`], [`util`], [`error`] | dependency-free scaffolding (args, RNG, timing, errors) |
 
+pub mod algorithm;
 pub mod cli;
 pub mod coordinator;
 pub mod cost;

@@ -8,10 +8,12 @@
 //!           [--plan-cache DIR] [--plan-cache-cap N] [--tile 8]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
-//! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound> [--scale 1..3] [--seed N] [--csv dir]
+//! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound|baselines>
+//!           [--scale 1..3] [--seed N] [--csv dir]
 //! spgemm-hp e2e [--graph facebook | --mtx-a A.mtx [--mtx-b B.mtx]] [--parts 4]
+//!           [--algorithm hypergraph:<model>|summa[:PRxPC]|split3d[:PRxPCxL]]
 //!           [--tile 8] [--kernel auto] [--artifacts artifacts]
-//!           [--partition-threads N] [--mem-epsilon D]
+//!           [--partition-threads N] [--epsilon E] [--mem-epsilon D]
 //!           [--plan-cache DIR] [--plan-cache-cap N]
 //! ```
 //!
@@ -22,9 +24,14 @@
 //! `--partition-threads 1` restores fully serial planning —
 //! bit-identical output either way. `--plan-cache DIR` turns on the
 //! persistent inspector–executor plan cache (see `docs/PLANNER.md`).
+//! Without `--algorithm`, `e2e` compares four hypergraph-partitioned
+//! models against the communication-oblivious Sparse SUMMA and split-3D
+//! baselines (see `docs/BASELINES.md`); with it, only the named
+//! strategy runs.
 
+use spgemm_hp::algorithm::AlgorithmStrategy;
 use spgemm_hp::cli::Args;
-use spgemm_hp::hypergraph::models::{build_model, ModelKind};
+use spgemm_hp::hypergraph::models::ModelKind;
 use spgemm_hp::sparse::io::{read_matrix_market, write_matrix_market};
 use spgemm_hp::util::{fmt_count, Rng, Timer};
 use spgemm_hp::{cost, coordinator, gen, partition, repro, sim, sparse, Error, Result};
@@ -61,8 +68,9 @@ fn info() -> Result<()> {
     println!("commands: info | gen | partition | spgemm | repro | e2e");
     println!("models:   fine-grained row-wise column-wise outer-product");
     println!("          monochrome-A monochrome-B monochrome-C");
+    println!("algos:    hypergraph[:<model>] summa[:PRxPC] split3d[:PRxPCxL] (--algorithm)");
     println!("kernels:  auto sortmerge densespa hashaccum (--kernel, see README)");
-    println!("repro:    table2 fig7 fig8 fig9 bounds seqbound all");
+    println!("repro:    table2 fig7 fig8 fig9 bounds seqbound baselines all");
     Ok(())
 }
 
@@ -135,24 +143,36 @@ fn planner_from_args(args: &Args) -> Result<spgemm_hp::planner::Planner> {
     spgemm_hp::planner::Planner::new(spgemm_hp::planner::PlannerConfig { cache_dir, capacity })
 }
 
+/// The one place CLI flags become a [`partition::PartitionerConfig`]:
+/// `--epsilon` (per-command default), `--partition-threads`,
+/// `--match-chunk`, and `--mem-epsilon`, around `parts` and `seed`.
+fn partitioner_config_from_args(
+    args: &Args,
+    parts: usize,
+    epsilon_default: f64,
+    seed: u64,
+) -> Result<partition::PartitionerConfig> {
+    Ok(partition::PartitionerConfig {
+        epsilon: args.get_f64("epsilon", epsilon_default)?,
+        seed,
+        threads: args.get_usize_min("partition-threads", partition::default_threads(), 1)?,
+        match_chunk: args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?,
+        mem_epsilon: parse_mem_epsilon(args)?,
+        ..partition::PartitionerConfig::new(parts)
+    })
+}
+
+/// `--algorithm`, when present; errors on unrecognized spellings.
+fn parse_algorithm(args: &Args) -> Result<Option<AlgorithmStrategy>> {
+    args.get_parsed("algorithm", None, |s| AlgorithmStrategy::parse(s).map(Some))
+}
+
 fn cmd_partition(args: &Args) -> Result<()> {
     let (a, b) = load_pair(args)?;
-    let kind = ModelKind::parse(args.get("model").unwrap_or("fine"))
-        .ok_or_else(|| Error::Config("unknown --model".into()))?;
+    let kind = args.get_parsed("model", ModelKind::FineGrained, ModelKind::parse)?;
     let p = args.get_usize("parts", 8)?;
-    let epsilon = args.get_f64("epsilon", 0.03)?;
     let seed = args.get_u64("seed", 0xC0FFEE)?;
-    let threads = args.get_usize_min("partition-threads", partition::default_threads(), 1)?;
-    let match_chunk =
-        args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?;
-    let cfg = partition::PartitionerConfig {
-        epsilon,
-        seed,
-        threads,
-        match_chunk,
-        mem_epsilon: parse_mem_epsilon(args)?,
-        ..partition::PartitionerConfig::new(p)
-    };
+    let cfg = partitioner_config_from_args(args, p, 0.03, seed)?;
     if args.get("plan-cache").is_some() {
         // inspector mode: run the whole planning pipeline through the
         // persistent cache. A later `e2e --plan-cache` starts warm only
@@ -178,8 +198,11 @@ fn cmd_partition(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+    // partition-only path: still go through the planner's model cache,
+    // so this and every library caller share one build-model entry point
+    let mut planner = planner_from_args(args)?;
     let t = Timer::start();
-    let model = build_model(&a, &b, kind, false)?;
+    let model = planner.model_or_build(&a, &b, kind, false)?;
     let build_ms = t.elapsed_ms();
     let t = Timer::start();
     let (part, phases) = partition::partition_timed(&model.h, &cfg)?;
@@ -282,6 +305,15 @@ fn cmd_repro(args: &Args) -> Result<()> {
                 );
             }
         }
+        "baselines" => {
+            let rows = repro::figures::baselines(scale, seed)?;
+            repro::figures::print_baselines(&rows);
+            if let Some(dir) = &csv_dir {
+                let path = dir.join("baselines.csv");
+                repro::figures::write_baselines_csv(&path, &rows)?;
+                println!("wrote {}", path.display());
+            }
+        }
         "seqbound" => {
             println!("\n=== sequential two-level memory (Thm. 4.10) ===");
             println!(
@@ -296,7 +328,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
             }
         }
         "all" => {
-            for w in ["table2", "fig7", "fig8", "fig9", "bounds", "seqbound"] {
+            for w in ["table2", "fig7", "fig8", "fig9", "bounds", "seqbound", "baselines"] {
                 let mut sub = args.clone();
                 sub.positional = vec!["repro".into(), w.into()];
                 cmd_repro(&sub)?;
@@ -314,11 +346,20 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
-    let partition_threads =
-        args.get_usize_min("partition-threads", partition::default_threads(), 1)?;
-    let match_chunk =
-        args.get_usize_min("match-chunk", partition::matching::DEFAULT_MATCH_CHUNK, 1)?;
-    let mem_epsilon = parse_mem_epsilon(args)?;
+    let cfg = partitioner_config_from_args(args, parts, 0.1, seed)?;
+    // one named strategy, or the full model-vs-oblivious comparison
+    let strategies: Vec<AlgorithmStrategy> = match parse_algorithm(args)? {
+        Some(s) => vec![s],
+        None => {
+            let mut all: Vec<AlgorithmStrategy> =
+                [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC]
+                    .into_iter()
+                    .map(|model| AlgorithmStrategy::HypergraphPartitioned { model, with_nz: false })
+                    .collect();
+            all.extend(AlgorithmStrategy::OBLIVIOUS);
+            all
+        }
+    };
 
     // workload: a real Matrix Market pair (--mtx-a/--mtx-b, or the
     // --a/--b spelling the other subcommands use), or a generated MCL
@@ -347,13 +388,14 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     };
     println!(
         "e2e: `{name}` ({}x{} · {}x{}, {} + {} nnz) on {parts} workers, tile={tile}, \
-         partition-threads={partition_threads}",
+         partition-threads={}",
         a.nrows,
         a.ncols,
         b.nrows,
         b.ncols,
         fmt_count(a.nnz() as u64),
-        fmt_count(b.nnz() as u64)
+        fmt_count(b.nnz() as u64),
+        cfg.threads
     );
     let t = Timer::start();
     let c_ref = sparse::spgemm(&a, &b)?;
@@ -364,8 +406,8 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let mut planner = planner_from_args(args)?;
 
     println!(
-        "\n{:<14} {:>5} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8} {:>6}",
-        "model",
+        "\n{:<16} {:>5} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8} {:>6}",
+        "algorithm",
         "plan",
         "plan_ms",
         "bound_maxQ",
@@ -377,19 +419,11 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         "ms",
         "ok"
     );
-    for kind in [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC] {
-        let cfg = partition::PartitionerConfig {
-            epsilon: 0.1,
-            seed,
-            threads: partition_threads,
-            match_chunk,
-            mem_epsilon,
-            ..partition::PartitionerConfig::new(parts)
-        };
+    for strategy in &strategies {
         // inspector: serve the whole (model, partition, lowering,
         // execution-plan) pipeline from the cache when the structure
         // fingerprint matches
-        let planned = planner.plan_or_build(&a, &b, kind, &cfg, tile)?;
+        let planned = planner.plan_strategy(&a, &b, strategy, &cfg, tile)?;
         let (sim_rep, c_sim) = sim::simulate(&a, &b, &planned.alg)?;
         let ccfg = coordinator::CoordinatorConfig {
             tile,
@@ -403,8 +437,8 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         let ms = t.elapsed_ms();
         let ok = c.approx_eq(&c_ref, 1e-3) && c_sim.approx_eq(&c_ref, 1e-10);
         println!(
-            "{:<14} {:>5} {:>8.1} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8.1} {:>6}",
-            kind.name(),
+            "{:<16} {:>5} {:>8.1} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8.1} {:>6}",
+            planned.strategy.name(),
             planned.outcome.name(),
             planned.plan_ns as f64 / 1e6,
             planned.comm_max,
@@ -423,6 +457,6 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             println!("  (note: PJRT artifacts unavailable; reference backend used)");
         }
     }
-    println!("\nall models validated against the reference SpGEMM ✓");
+    println!("\nall algorithms validated against the reference SpGEMM ✓");
     Ok(())
 }

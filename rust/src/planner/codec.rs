@@ -19,7 +19,9 @@
 //! to replanning. Decoding is fully checked — truncated or out-of-range
 //! input yields [`Error::Invalid`], never a panic.
 
+use crate::algorithm::AlgorithmStrategy;
 use crate::coordinator::plan::{ExecutionPlan, LocalMult, PreparedPlan, TileGroup, WorkerPlan};
+use crate::planner::fingerprint::{model_id, model_of_id};
 use crate::sim::Algorithm;
 use crate::sparse::Csr;
 use crate::{Error, Result};
@@ -27,7 +29,11 @@ use std::collections::HashMap;
 
 /// Version of the on-disk plan layout. Bump on any change to this
 /// module's encoding or to the semantics of the encoded structures.
-pub const FORMAT_VERSION: u32 = 1;
+///
+/// History: 1 — initial layout (hypergraph plans only); 2 — an
+/// [`AlgorithmStrategy`] header follows the tile edge, so bundles for
+/// SUMMA / split-3D / hypergraph strategies are distinguishable.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Little-endian byte writer.
 #[derive(Default)]
@@ -151,6 +157,52 @@ fn dec_csr_pattern(r: &mut Reader) -> Result<Csr> {
     let m = Csr { nrows, ncols, rowptr, colind, values: vec![1.0; nnz] };
     m.validate()?;
     Ok(m)
+}
+
+fn enc_strategy(w: &mut Writer, s: &AlgorithmStrategy) {
+    match *s {
+        AlgorithmStrategy::HypergraphPartitioned { model, with_nz } => {
+            w.u8(0);
+            w.u8(model_id(model) as u8);
+            w.u8(with_nz as u8);
+        }
+        AlgorithmStrategy::SparseSumma { grid: (pr, pc) } => {
+            w.u8(1);
+            w.u64(pr as u64);
+            w.u64(pc as u64);
+        }
+        AlgorithmStrategy::Split3d { grid: (pr, pc), layers } => {
+            w.u8(2);
+            w.u64(pr as u64);
+            w.u64(pc as u64);
+            w.u64(layers as u64);
+        }
+    }
+}
+
+fn dec_strategy(r: &mut Reader) -> Result<AlgorithmStrategy> {
+    let dim = |r: &mut Reader| -> Result<usize> {
+        let v = r.u64()?;
+        if v == 0 || v > u32::MAX as u64 {
+            return Err(Error::invalid(format!("plan codec: bad grid dimension {v}")));
+        }
+        Ok(v as usize)
+    };
+    match r.u8()? {
+        0 => {
+            let model = model_of_id(r.u8()? as u64)
+                .ok_or_else(|| Error::invalid("plan codec: unknown model id"))?;
+            let with_nz = match r.u8()? {
+                0 => false,
+                1 => true,
+                other => return Err(Error::invalid(format!("plan codec: bad bool {other}"))),
+            };
+            Ok(AlgorithmStrategy::HypergraphPartitioned { model, with_nz })
+        }
+        1 => Ok(AlgorithmStrategy::SparseSumma { grid: (dim(r)?, dim(r)?) }),
+        2 => Ok(AlgorithmStrategy::Split3d { grid: (dim(r)?, dim(r)?), layers: dim(r)? }),
+        other => Err(Error::invalid(format!("plan codec: unknown strategy tag {other}"))),
+    }
 }
 
 fn enc_algorithm(w: &mut Writer, alg: &Algorithm) {
@@ -310,13 +362,18 @@ fn dec_worker(r: &mut Reader) -> Result<WorkerPlan> {
 /// reported on warm hits.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanBundle {
+    /// The (resolved) strategy this plan was built for.
+    pub strategy: AlgorithmStrategy,
+    /// The model-vertex partition (empty for the oblivious strategies,
+    /// which never run the partitioner).
     pub part: Vec<u32>,
     pub alg: Algorithm,
     pub prepared: PreparedPlan,
-    /// `max_i |Q_i|` of the partition (Lem. 4.2 bound), from
-    /// `cost::evaluate` at build time.
+    /// `max_i |Q_i|` (Lem. 4.2 bound): from `cost::evaluate` for
+    /// hypergraph plans, from `algorithm::connectivity_metrics` for
+    /// oblivious ones — the same λ−1 accounting either way.
     pub comm_max: u64,
-    /// Connectivity-(λ−1) volume of the partition at build time.
+    /// Connectivity-(λ−1) volume at build time.
     pub volume: u64,
 }
 
@@ -324,6 +381,7 @@ pub struct PlanBundle {
 pub fn encode_bundle(b: &PlanBundle) -> Vec<u8> {
     let mut w = Writer::default();
     w.u64(b.prepared.tile as u64);
+    enc_strategy(&mut w, &b.strategy);
     w.u32s(&b.part);
     enc_algorithm(&mut w, &b.alg);
     enc_csr_pattern(&mut w, &b.prepared.c_struct);
@@ -346,6 +404,7 @@ pub fn decode_bundle(bytes: &[u8]) -> Result<PlanBundle> {
     if tile == 0 {
         return Err(Error::invalid("plan codec: tile must be positive"));
     }
+    let strategy = dec_strategy(&mut r)?;
     let part = r.u32s()?;
     let alg = dec_algorithm(&mut r)?;
     let c_struct = dec_csr_pattern(&mut r)?;
@@ -362,6 +421,7 @@ pub fn decode_bundle(bytes: &[u8]) -> Result<PlanBundle> {
         return Err(Error::invalid("plan codec: trailing bytes"));
     }
     Ok(PlanBundle {
+        strategy,
         part,
         alg,
         prepared: PreparedPlan {
@@ -398,6 +458,10 @@ mod tests {
         let c = spgemm_structure(&a, &b).unwrap();
         let plan = ExecutionPlan::build(&a, &b, &alg, &c, 2).unwrap();
         PlanBundle {
+            strategy: AlgorithmStrategy::HypergraphPartitioned {
+                model: ModelKind::FineGrained,
+                with_nz: false,
+            },
             part,
             alg,
             prepared: PreparedPlan { c_struct: c, plan, tile: 2 },
@@ -432,7 +496,48 @@ mod tests {
     fn absurd_lengths_fail_fast() {
         let mut w = Writer::default();
         w.u64(8); // tile
+        w.u8(1); // summa strategy tag
+        w.u64(2);
+        w.u64(2);
         w.u64(u64::MAX); // part "length"
+        assert!(decode_bundle(&w.buf).is_err());
+    }
+
+    #[test]
+    fn every_strategy_round_trips() {
+        let base = bundle();
+        for strategy in [
+            AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::MonoC, with_nz: true },
+            AlgorithmStrategy::SparseSumma { grid: (1, 3) },
+            AlgorithmStrategy::Split3d { grid: (3, 1), layers: 1 },
+        ] {
+            let b = PlanBundle { strategy, ..base.clone() };
+            let bytes = encode_bundle(&b);
+            let back = decode_bundle(&bytes).unwrap();
+            assert_eq!(back, b, "{strategy:?}");
+            assert_eq!(encode_bundle(&back), bytes);
+        }
+    }
+
+    #[test]
+    fn bad_strategy_headers_rejected() {
+        let good = encode_bundle(&bundle());
+        // byte 8 is the strategy tag (after the u64 tile)
+        let mut bad = good.clone();
+        bad[8] = 9; // unknown family tag
+        assert!(decode_bundle(&bad).is_err());
+        let mut bad = good.clone();
+        bad[9] = 200; // unknown model id
+        assert!(decode_bundle(&bad).is_err());
+        let mut bad = good;
+        bad[10] = 2; // non-bool with_nz
+        assert!(decode_bundle(&bad).is_err());
+        // a zero grid dimension is rejected
+        let mut w = Writer::default();
+        w.u64(8); // tile
+        w.u8(1); // summa
+        w.u64(0); // pr = 0
+        w.u64(4);
         assert!(decode_bundle(&w.buf).is_err());
     }
 

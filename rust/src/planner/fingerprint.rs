@@ -8,13 +8,16 @@
 //!   LP/MCL/AMG reuse pattern multiplies structurally identical operands
 //!   with fresh values every iteration, and the planner rebinds values
 //!   on every cache hit;
-//! * the [`ModelKind`] (via a hand-assigned stable id — *not* the enum
-//!   discriminant, so reordering the enum cannot silently change keys);
-//! * the plan-shaping [`PartitionerConfig`] knobs: `parts`, `epsilon`,
-//!   `seed`, `coarse_to`, `n_starts`, `fm_passes`, and `mem_epsilon`.
-//!   `threads` and `match_chunk` are deliberately **excluded**: the
-//!   partitioner is bit-identical for every value of either, so they
-//!   cannot change the plan;
+//! * the [`AlgorithmStrategy`] (via hand-assigned stable family and
+//!   model ids — *not* enum discriminants, so reordering an enum cannot
+//!   silently change keys), including its concrete grid dimensions;
+//! * the plan-shaping [`PartitionerConfig`] knobs: `parts` always, and
+//!   for the hypergraph strategy also `epsilon`, `seed`, `coarse_to`,
+//!   `n_starts`, `fm_passes`, and `mem_epsilon` (the oblivious
+//!   strategies ignore the partitioner, so its knobs are not hashed for
+//!   them). `threads` and `match_chunk` are deliberately **excluded**:
+//!   the partitioner is bit-identical for every value of either, so
+//!   they cannot change the plan;
 //! * the coordinator `tile` edge (it shapes the plan's tile groups).
 //!
 //! # Stability contract
@@ -31,6 +34,7 @@
 //! from other versions, so a stale cache degrades to replanning, never
 //! to a wrong plan.
 
+use crate::algorithm::AlgorithmStrategy;
 use crate::hypergraph::ModelKind;
 use crate::partition::PartitionerConfig;
 use crate::sparse::Csr;
@@ -138,12 +142,61 @@ pub fn model_id(kind: ModelKind) -> u64 {
     }
 }
 
-/// Fingerprint of one planning problem. See the module docs for exactly
-/// what is (and is not) hashed.
+/// Inverse of [`model_id`] (the codec's decode side).
+pub fn model_of_id(id: u64) -> Option<ModelKind> {
+    Some(match id {
+        0 => ModelKind::FineGrained,
+        1 => ModelKind::RowWise,
+        2 => ModelKind::ColWise,
+        3 => ModelKind::OuterProduct,
+        4 => ModelKind::MonoA,
+        5 => ModelKind::MonoB,
+        6 => ModelKind::MonoC,
+        _ => return None,
+    })
+}
+
+/// Stable id of a strategy family (hand-maintained, like [`model_id`]).
+pub fn strategy_id(strategy: &AlgorithmStrategy) -> u64 {
+    match strategy {
+        AlgorithmStrategy::HypergraphPartitioned { .. } => 0,
+        AlgorithmStrategy::SparseSumma { .. } => 1,
+        AlgorithmStrategy::Split3d { .. } => 2,
+    }
+}
+
+/// Fingerprint of one planning problem for the hypergraph-partitioned
+/// strategy (the historical entry point; a thin wrapper over
+/// [`fingerprint_strategy`]). See the module docs for exactly what is
+/// (and is not) hashed.
 pub fn fingerprint(
     a: &Csr,
     b: &Csr,
     kind: ModelKind,
+    cfg: &PartitionerConfig,
+    tile: usize,
+) -> Fingerprint {
+    let strategy = AlgorithmStrategy::HypergraphPartitioned { model: kind, with_nz: false };
+    fingerprint_strategy(a, b, &strategy, cfg, tile)
+}
+
+/// Fingerprint of one planning problem for any [`AlgorithmStrategy`].
+///
+/// The strategy section hashes the family's stable id plus its own
+/// parameters: model id and `with_nz` for the hypergraph strategy, the
+/// concrete grid (and layer count) for the oblivious ones. Callers
+/// should pass a [`resolve`](AlgorithmStrategy::resolve)d strategy so
+/// an auto grid and its explicit spelling share one cache key. The
+/// partitioner-shaping knobs (`epsilon`, `seed`, `coarse_to`,
+/// `n_starts`, `fm_passes`, `mem_epsilon`) are hashed **only** for the
+/// hypergraph strategy — SUMMA and split-3D ownership is pure index
+/// arithmetic in the grid, so no partitioner knob can change their
+/// plans, and hashing the knobs would only split identical cache
+/// entries.
+pub fn fingerprint_strategy(
+    a: &Csr,
+    b: &Csr,
+    strategy: &AlgorithmStrategy,
     cfg: &PartitionerConfig,
     tile: usize,
 ) -> Fingerprint {
@@ -153,25 +206,58 @@ pub fn fingerprint(
     h.tag(2);
     h.csr_pattern(b);
     h.tag(3);
-    h.write(model_id(kind));
+    h.write(strategy_id(strategy));
+    match *strategy {
+        AlgorithmStrategy::HypergraphPartitioned { model, with_nz } => {
+            h.write(model_id(model));
+            h.write(with_nz as u64);
+        }
+        AlgorithmStrategy::SparseSumma { grid: (pr, pc) } => {
+            h.write(pr as u64);
+            h.write(pc as u64);
+        }
+        AlgorithmStrategy::Split3d { grid: (pr, pc), layers } => {
+            h.write(pr as u64);
+            h.write(pc as u64);
+            h.write(layers as u64);
+        }
+    }
     h.tag(4);
     h.write(cfg.parts as u64);
-    h.write(cfg.epsilon.to_bits());
-    h.write(cfg.seed);
-    h.write(cfg.coarse_to as u64);
-    h.write(cfg.n_starts as u64);
-    h.write(cfg.fm_passes as u64);
-    match cfg.mem_epsilon {
-        None => h.write(0),
-        Some(d) => {
-            h.write(1);
-            h.write(d.to_bits());
+    if matches!(strategy, AlgorithmStrategy::HypergraphPartitioned { .. }) {
+        h.write(cfg.epsilon.to_bits());
+        h.write(cfg.seed);
+        h.write(cfg.coarse_to as u64);
+        h.write(cfg.n_starts as u64);
+        h.write(cfg.fm_passes as u64);
+        match cfg.mem_epsilon {
+            None => h.write(0),
+            Some(d) => {
+                h.write(1);
+                h.write(d.to_bits());
+            }
         }
     }
     // threads and match_chunk are intentionally NOT hashed: the
     // partition is bit-identical for every value of either
     h.tag(5);
     h.write(tile as u64);
+    h.finish()
+}
+
+/// Fingerprint of one *model build*: the key of the planner's in-memory
+/// model cache. Hashes only what [`crate::hypergraph::models::build_model`]
+/// depends on — the operand patterns, the model kind, and `with_nz` —
+/// so every `p`/ε/seed sweep over one instance shares a single build.
+pub fn model_fingerprint(a: &Csr, b: &Csr, kind: ModelKind, with_nz: bool) -> Fingerprint {
+    let mut h = Hasher::new();
+    h.tag(6);
+    h.csr_pattern(a);
+    h.tag(7);
+    h.csr_pattern(b);
+    h.tag(8);
+    h.write(model_id(kind));
+    h.write(with_nz as u64);
     h.finish()
 }
 
@@ -224,6 +310,46 @@ mod tests {
     fn model_ids_are_stable_and_distinct() {
         let ids: Vec<u64> = ModelKind::ALL.iter().map(|&k| model_id(k)).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn strategies_key_separately() {
+        let a = mat(&[(0, 0, 1.0), (1, 2, 2.0), (3, 1, 3.0)]);
+        let b = mat(&[(0, 1, 1.0), (2, 3, 1.0)]);
+        let cfg = PartitionerConfig::new(4);
+        let summa = AlgorithmStrategy::SparseSumma { grid: (2, 2) };
+        let wide = AlgorithmStrategy::SparseSumma { grid: (1, 4) };
+        let split = AlgorithmStrategy::Split3d { grid: (2, 1), layers: 2 };
+        let hyper =
+            AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false };
+        let fs = |s: &AlgorithmStrategy| fingerprint_strategy(&a, &b, s, &cfg, 8);
+        assert_ne!(fs(&summa), fs(&wide), "grid shape is part of the key");
+        assert_ne!(fs(&summa), fs(&split), "family is part of the key");
+        assert_ne!(fs(&summa), fs(&hyper));
+        // the hypergraph wrapper is exactly the strategy fingerprint
+        assert_eq!(fs(&hyper), fingerprint(&a, &b, ModelKind::RowWise, &cfg, 8));
+        // partitioner knobs perturb hypergraph keys but not oblivious ones
+        let tweak = PartitionerConfig { seed: 99, epsilon: 0.5, ..cfg.clone() };
+        assert_eq!(fs(&summa), fingerprint_strategy(&a, &b, &summa, &tweak, 8));
+        assert_ne!(fs(&hyper), fingerprint_strategy(&a, &b, &hyper, &tweak, 8));
+        // parts and tile always perturb
+        let more = PartitionerConfig::new(8);
+        assert_ne!(fs(&summa), fingerprint_strategy(&a, &b, &summa, &more, 8));
+        assert_ne!(fs(&summa), fingerprint_strategy(&a, &b, &summa, &cfg, 16));
+    }
+
+    #[test]
+    fn model_fingerprint_keys_on_build_inputs_only() {
+        let a = mat(&[(0, 0, 1.0), (1, 2, 2.0), (3, 1, 3.0)]);
+        let a2 = mat(&[(0, 0, 4.0), (1, 2, -1.0), (3, 1, 0.25)]); // same pattern
+        let b = mat(&[(0, 1, 1.0), (2, 3, 1.0)]);
+        let base = model_fingerprint(&a, &b, ModelKind::RowWise, false);
+        assert_eq!(base, model_fingerprint(&a2, &b, ModelKind::RowWise, false));
+        assert_ne!(base, model_fingerprint(&a, &b, ModelKind::MonoC, false));
+        assert_ne!(base, model_fingerprint(&a, &b, ModelKind::RowWise, true));
+        assert_ne!(base, model_fingerprint(&b, &a, ModelKind::RowWise, false));
+        // model keys never collide with plan keys (distinct domain tags)
+        assert_ne!(base, fingerprint(&a, &b, ModelKind::RowWise, &PartitionerConfig::new(4), 8));
     }
 
     #[test]

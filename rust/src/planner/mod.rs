@@ -18,10 +18,14 @@
 //! * [`store`] — the two-tier cache: in-memory LRU plus an optional
 //!   on-disk directory with atomic writes and verified, corruption-safe
 //!   loads.
-//! * [`Planner::plan_or_build`] — the facade: returns the plan with
-//!   values freshly bound to the current operands plus a
-//!   [`PlanOutcome`] and the planning wall time, so drivers can report
-//!   cold/warm amortization.
+//! * [`Planner::plan_strategy`] (and the historical
+//!   [`Planner::plan_or_build`] hypergraph wrapper) — the facade:
+//!   returns the plan for any [`AlgorithmStrategy`] with values freshly
+//!   bound to the current operands plus a [`PlanOutcome`] and the
+//!   planning wall time, so drivers can report cold/warm amortization.
+//! * [`ModelCache`] / [`Planner::model_or_build`] — an in-memory cache
+//!   of built model hypergraphs keyed by (pattern, kind, `with_nz`), so
+//!   partition-only callers and `p`-sweeps build each model once.
 //!
 //! A warm hit skips model build, partitioning, lowering, symbolic
 //! SpGEMM, and `ExecutionPlan::build` entirely; the only per-call work
@@ -35,17 +39,19 @@ pub mod store;
 
 pub use codec::FORMAT_VERSION;
 pub use codec::PlanBundle;
-pub use fingerprint::{fingerprint, Fingerprint};
+pub use fingerprint::{fingerprint, fingerprint_strategy, model_fingerprint, Fingerprint};
 pub use store::{PlanStore, StoreLookup};
 
+use crate::algorithm::{self, AlgorithmStrategy};
 use crate::coordinator::plan::{ExecutionPlan, PreparedPlan};
 use crate::cost;
-use crate::hypergraph::models::{build_model, ModelKind};
+use crate::hypergraph::models::{build_model, Model, ModelKind};
 use crate::partition::{partition, PartitionerConfig};
 use crate::sim::{self, Algorithm};
 use crate::sparse::{spgemm_structure, Csr};
 use crate::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Planner configuration.
@@ -89,7 +95,11 @@ impl PlanOutcome {
 pub struct Planned {
     /// Cache key of this problem.
     pub fingerprint: Fingerprint,
-    /// The model-vertex partition (for metrics or reuse).
+    /// The resolved strategy the plan was built for (auto grids made
+    /// concrete).
+    pub strategy: AlgorithmStrategy,
+    /// The model-vertex partition (for metrics or reuse; empty for the
+    /// oblivious strategies, which never run the partitioner).
     pub part: Vec<u32>,
     /// The lowered algorithm (feeds [`crate::sim::simulate`] and
     /// [`crate::coordinator::run`]).
@@ -108,15 +118,63 @@ pub struct Planned {
     pub plan_ns: u64,
 }
 
-/// The planner facade: a [`PlanStore`] plus the cold planning pipeline.
+/// In-memory MRU cache of built [`Model`]s, keyed by
+/// [`model_fingerprint`]. Model builds depend only on the operand
+/// patterns, the kind, and `with_nz`, so a `p`/ε/seed sweep over one
+/// instance (the repro figures' shape) or a partition-only caller
+/// shares one build per (instance, kind).
+pub struct ModelCache {
+    capacity: usize,
+    mru: Vec<(Fingerprint, Arc<Model>)>,
+    builds: u64,
+}
+
+impl ModelCache {
+    pub fn new(capacity: usize) -> ModelCache {
+        ModelCache { capacity: capacity.max(1), mru: Vec::new(), builds: 0 }
+    }
+
+    /// Number of cold [`build_model`] calls so far (reuse telemetry).
+    pub fn builds(&self) -> u64 {
+        self.builds
+    }
+
+    /// Return the cached model for `(a, b, kind, with_nz)` or build,
+    /// cache, and return it.
+    pub fn model_or_build(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        kind: ModelKind,
+        with_nz: bool,
+    ) -> Result<Arc<Model>> {
+        let fp = fingerprint::model_fingerprint(a, b, kind, with_nz);
+        if let Some(at) = self.mru.iter().position(|(f, _)| *f == fp) {
+            let entry = self.mru.remove(at);
+            self.mru.push(entry); // refresh recency
+            return Ok(Arc::clone(&self.mru.last().unwrap().1));
+        }
+        let model = Arc::new(build_model(a, b, kind, with_nz)?);
+        self.builds += 1;
+        if self.mru.len() >= self.capacity {
+            self.mru.remove(0);
+        }
+        self.mru.push((fp, Arc::clone(&model)));
+        Ok(model)
+    }
+}
+
+/// The planner facade: a [`PlanStore`] plus a [`ModelCache`] plus the
+/// cold planning pipeline.
 pub struct Planner {
     store: PlanStore,
+    models: ModelCache,
 }
 
 impl Planner {
     pub fn new(cfg: PlannerConfig) -> Result<Planner> {
         let cap = if cfg.capacity == 0 { DEFAULT_CAPACITY } else { cfg.capacity };
-        Ok(Planner { store: PlanStore::new(cap, cfg.cache_dir)? })
+        Ok(Planner { store: PlanStore::new(cap, cfg.cache_dir)?, models: ModelCache::new(cap) })
     }
 
     /// A memory-only planner with default capacity.
@@ -124,14 +182,27 @@ impl Planner {
         Planner::new(PlannerConfig::default()).expect("memory-only planner cannot fail")
     }
 
-    /// Return the plan for `C = A·B` under (`kind`, `pcfg`, `tile`),
-    /// serving from the cache when the structural fingerprint matches
-    /// and planning from scratch (then caching) otherwise.
-    ///
-    /// The returned plan always has its input values freshly bound to
-    /// `a`/`b`, so a hit against operands with *new values but the same
-    /// pattern* — the LP/MCL/AMG iteration pattern — executes
-    /// correctly: plans are structural, values are per-call.
+    /// The cached model for `(a, b, kind, with_nz)`, built at most once
+    /// per structure (the ROADMAP's partition-only reuse path —
+    /// `cmd_partition` and repro sweeps go through here).
+    pub fn model_or_build(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        kind: ModelKind,
+        with_nz: bool,
+    ) -> Result<Arc<Model>> {
+        self.models.model_or_build(a, b, kind, with_nz)
+    }
+
+    /// Cold model builds so far (tests assert sweep reuse with this).
+    pub fn model_builds(&self) -> u64 {
+        self.models.builds()
+    }
+
+    /// Return the plan for `C = A·B` under the hypergraph-partitioned
+    /// strategy (`kind`, `pcfg`, `tile`) — the historical entry point,
+    /// now a wrapper over [`Planner::plan_strategy`].
     pub fn plan_or_build(
         &mut self,
         a: &Csr,
@@ -140,12 +211,35 @@ impl Planner {
         pcfg: &PartitionerConfig,
         tile: usize,
     ) -> Result<Planned> {
+        let strategy = AlgorithmStrategy::HypergraphPartitioned { model: kind, with_nz: false };
+        self.plan_strategy(a, b, &strategy, pcfg, tile)
+    }
+
+    /// Return the plan for `C = A·B` under any [`AlgorithmStrategy`],
+    /// serving from the cache when the structural fingerprint matches
+    /// and planning from scratch (then caching) otherwise. The strategy
+    /// is [`resolve`](AlgorithmStrategy::resolve)d against `pcfg.parts`
+    /// first, so an auto grid and its explicit spelling share a key.
+    ///
+    /// The returned plan always has its input values freshly bound to
+    /// `a`/`b`, so a hit against operands with *new values but the same
+    /// pattern* — the LP/MCL/AMG iteration pattern — executes
+    /// correctly: plans are structural, values are per-call.
+    pub fn plan_strategy(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        strategy: &AlgorithmStrategy,
+        pcfg: &PartitionerConfig,
+        tile: usize,
+    ) -> Result<Planned> {
         let t = Instant::now();
-        let fp = fingerprint::fingerprint(a, b, kind, pcfg, tile);
+        let strategy = strategy.resolve(pcfg.parts)?;
+        let fp = fingerprint::fingerprint_strategy(a, b, &strategy, pcfg, tile);
         let (bundle, outcome) = match self.store.lookup(fp) {
             StoreLookup::Hit(bundle) => (*bundle, PlanOutcome::Hit),
             miss => {
-                let bundle = build_bundle(a, b, kind, pcfg, tile)?;
+                let bundle = self.build_bundle(a, b, &strategy, pcfg, tile)?;
                 self.store.insert(fp, &bundle)?;
                 let outcome = match miss {
                     StoreLookup::Stale => PlanOutcome::Stale,
@@ -154,10 +248,11 @@ impl Planner {
                 (bundle, outcome)
             }
         };
-        let PlanBundle { part, alg, mut prepared, comm_max, volume } = bundle;
+        let PlanBundle { strategy, part, alg, mut prepared, comm_max, volume } = bundle;
         bind_values(&mut prepared.plan, a, b);
         Ok(Planned {
             fingerprint: fp,
+            strategy,
             part,
             alg,
             prepared,
@@ -167,30 +262,52 @@ impl Planner {
             plan_ns: t.elapsed().as_nanos() as u64,
         })
     }
-}
 
-/// The cold planning pipeline: model → partition → metrics → lowering →
-/// symbolic SpGEMM → execution plan.
-fn build_bundle(
-    a: &Csr,
-    b: &Csr,
-    kind: ModelKind,
-    pcfg: &PartitionerConfig,
-    tile: usize,
-) -> Result<PlanBundle> {
-    let model = build_model(a, b, kind, false)?;
-    let part = partition(&model.h, pcfg)?;
-    let metrics = cost::evaluate(&model.h, &part, pcfg.parts)?;
-    let alg = sim::lower(&model, &part, a, b, pcfg.parts)?;
-    let c_struct = spgemm_structure(a, b)?;
-    let plan = ExecutionPlan::build(a, b, &alg, &c_struct, tile)?;
-    Ok(PlanBundle {
-        part,
-        alg,
-        prepared: PreparedPlan { c_struct, plan, tile },
-        comm_max: metrics.comm_max,
-        volume: metrics.connectivity_volume,
-    })
+    /// The cold planning pipeline. Hypergraph strategies run model →
+    /// partition → metrics → lowering (reusing the model cache and the
+    /// model's own C structure); oblivious strategies lower by index
+    /// arithmetic and take their metrics from the same λ−1 accounting
+    /// via [`algorithm::connectivity_metrics`]. Both feed one
+    /// [`ExecutionPlan::build`].
+    fn build_bundle(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        strategy: &AlgorithmStrategy,
+        pcfg: &PartitionerConfig,
+        tile: usize,
+    ) -> Result<PlanBundle> {
+        let (part, alg, c_struct, comm_max, volume) = match *strategy {
+            AlgorithmStrategy::HypergraphPartitioned { model: kind, with_nz } => {
+                let model = self.model_or_build(a, b, kind, with_nz)?;
+                let part = partition(&model.h, pcfg)?;
+                let metrics = cost::evaluate(&model.h, &part, pcfg.parts)?;
+                let alg = sim::lower(&model, &part, a, b, pcfg.parts)?;
+                // the model already carries S_C — no second symbolic pass
+                let c_struct = model.c_structure.clone();
+                (part, alg, c_struct, metrics.comm_max, metrics.connectivity_volume)
+            }
+            AlgorithmStrategy::SparseSumma { grid: (pr, pc) } => {
+                let alg = algorithm::summa_algorithm(a, b, pr, pc)?;
+                let (comm_max, volume) = algorithm::connectivity_metrics(a, b, &alg)?;
+                (Vec::new(), alg, spgemm_structure(a, b)?, comm_max, volume)
+            }
+            AlgorithmStrategy::Split3d { grid: (pr, pc), layers } => {
+                let alg = algorithm::split3d_algorithm(a, b, pr, pc, layers)?;
+                let (comm_max, volume) = algorithm::connectivity_metrics(a, b, &alg)?;
+                (Vec::new(), alg, spgemm_structure(a, b)?, comm_max, volume)
+            }
+        };
+        let plan = ExecutionPlan::build(a, b, &alg, &c_struct, tile)?;
+        Ok(PlanBundle {
+            strategy: *strategy,
+            part,
+            alg,
+            prepared: PreparedPlan { c_struct, plan, tile },
+            comm_max,
+            volume,
+        })
+    }
 }
 
 /// Rebind the plan's input values to the current operands. Plans are
@@ -274,6 +391,49 @@ mod tests {
         }
         // and the structural half is untouched
         assert_eq!(warm.part, cold.part);
+    }
+
+    #[test]
+    fn oblivious_strategies_plan_and_hit() {
+        let (a, b) = instance(11);
+        let mut planner = Planner::in_memory();
+        let cfg = PartitionerConfig::new(4);
+        for strategy in AlgorithmStrategy::OBLIVIOUS {
+            let cold = planner.plan_strategy(&a, &b, &strategy, &cfg, 8).unwrap();
+            assert_eq!(cold.outcome, PlanOutcome::Miss);
+            assert!(cold.part.is_empty(), "oblivious plans carry no partition");
+            assert_eq!(cold.alg.p, 4);
+            // the stored strategy is resolved (concrete grid)
+            assert_ne!(cold.strategy, strategy);
+            assert_eq!(cold.strategy, strategy.resolve(4).unwrap());
+            // the explicit spelling of the auto grid shares the key
+            let warm = planner.plan_strategy(&a, &b, &cold.strategy, &cfg, 8).unwrap();
+            assert_eq!(warm.outcome, PlanOutcome::Hit, "{strategy:?}");
+            assert_eq!(warm.alg, cold.alg);
+            assert_eq!(warm.prepared, cold.prepared);
+        }
+        // no model was ever built for the oblivious strategies
+        assert_eq!(planner.model_builds(), 0);
+    }
+
+    #[test]
+    fn model_cache_reuses_builds_across_p_sweep() {
+        let (a, b) = instance(13);
+        let mut planner = Planner::in_memory();
+        for p in [2usize, 3, 4] {
+            let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+            planner.plan_or_build(&a, &b, ModelKind::RowWise, &cfg, 8).unwrap();
+        }
+        assert_eq!(planner.model_builds(), 1, "one build serves the whole p sweep");
+        planner.plan_or_build(
+            &a,
+            &b,
+            ModelKind::MonoC,
+            &PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(2) },
+            8,
+        )
+        .unwrap();
+        assert_eq!(planner.model_builds(), 2, "a different kind is a different model");
     }
 
     #[test]

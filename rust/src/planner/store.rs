@@ -169,6 +169,7 @@ mod tests {
     fn tiny(tag: u32) -> PlanBundle {
         let c = Csr::identity(1);
         PlanBundle {
+            strategy: crate::algorithm::AlgorithmStrategy::SparseSumma { grid: (1, 1) },
             part: vec![tag],
             alg: Algorithm {
                 p: 1,

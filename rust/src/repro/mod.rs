@@ -6,7 +6,7 @@ pub mod figures;
 pub mod workloads;
 
 use crate::cost;
-use crate::hypergraph::models::{build_model, ModelKind};
+use crate::hypergraph::models::{build_model, Model, ModelKind};
 use crate::partition::{self, PartitionerConfig};
 use crate::sparse::Csr;
 use crate::util::Timer;
@@ -69,6 +69,22 @@ pub fn measure_model(
     seed: u64,
 ) -> Result<ExperimentRow> {
     let model = build_model(a, b, kind, false)?;
+    measure_model_built(app, instance, &model, kind, p, epsilon, seed)
+}
+
+/// Like [`measure_model`] but with the model already built, so `p`
+/// sweeps (Figs. 8/9) build each (instance, kind) model once instead of
+/// once per processor count.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_model_built(
+    app: &str,
+    instance: &str,
+    model: &Model,
+    kind: ModelKind,
+    p: usize,
+    epsilon: f64,
+    seed: u64,
+) -> Result<ExperimentRow> {
     let t = Timer::start();
     // threaded planning by default: bit-identical to serial for every
     // thread count, so only partition_ms moves

@@ -51,6 +51,7 @@ fn codec_round_trips_every_model_kind_and_generator() {
             let planned = planner.plan_or_build(&a, &b, kind, &cfg, 8).unwrap();
             // reconstruct the bundle shape the cache stores
             let bundle = spgemm_hp::planner::PlanBundle {
+                strategy: planned.strategy,
                 part: planned.part.clone(),
                 alg: planned.alg.clone(),
                 prepared: planned.prepared.clone(),
@@ -95,6 +96,7 @@ fn codec_round_trip_proptest() {
             let planned =
                 planner.plan_or_build(a, b, *kind, &cfg, *tile).map_err(|e| e.to_string())?;
             let bundle = spgemm_hp::planner::PlanBundle {
+                strategy: planned.strategy,
                 part: planned.part.clone(),
                 alg: planned.alg.clone(),
                 prepared: planned.prepared.clone(),
@@ -210,6 +212,7 @@ fn lru_eviction_order_and_replan_on_eviction() {
     // the raw store exposes the same order
     let mut store = PlanStore::new(2, None).unwrap();
     let tiny = |tag: u32| spgemm_hp::planner::PlanBundle {
+        strategy: spgemm_hp::algorithm::AlgorithmStrategy::SparseSumma { grid: (1, 1) },
         part: vec![tag],
         alg: spgemm_hp::sim::Algorithm {
             p: 1,

@@ -1,0 +1,205 @@
+//! Algorithm-strategy suite: every [`AlgorithmStrategy`] × workload ×
+//! simulator thread count against the seed sequential SpGEMM, measured
+//! SUMMA/split-3D volumes against their closed forms on structured
+//! inputs, and the versioned plan codec across every strategy family.
+
+use spgemm_hp::algorithm::{split3d_algorithm, summa_algorithm, AlgorithmStrategy};
+use spgemm_hp::gen;
+use spgemm_hp::hypergraph::models::ModelKind;
+use spgemm_hp::partition::PartitionerConfig;
+use spgemm_hp::planner::{PlanOutcome, Planner, PlannerConfig};
+use spgemm_hp::sim::{simulate, simulate_threaded};
+use spgemm_hp::sparse::{spgemm, Coo, Csr};
+use spgemm_hp::util::Rng;
+
+/// Small instances of the workload generators (the `planner.rs` set).
+fn workload_instances(seed: u64) -> Vec<(&'static str, Csr, Csr)> {
+    let mut rng = Rng::new(seed);
+    let er_a = gen::erdos_renyi(24, 24, 3.0, &mut rng).unwrap();
+    let er_b = gen::erdos_renyi(24, 24, 3.0, &mut rng).unwrap();
+    let amg_a = gen::stencil27(3);
+    let amg_p = gen::smoothed_aggregation_prolongator(&amg_a, 3).unwrap();
+    let lp = gen::lp_constraints(&gen::LpParams::pds_like(30, 96), &mut rng).unwrap();
+    let lp_t = lp.transpose();
+    let road = gen::road_network(8, 7, 0.3, &mut rng).unwrap();
+    vec![("er", er_a, er_b), ("amg", amg_a, amg_p), ("lp", lp, lp_t), ("roadnet", road.clone(), road)]
+}
+
+fn dense(n: usize, rng: &mut Rng) -> Csr {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            coo.push(i, j, rng.range(-1.0, 1.0));
+        }
+    }
+    Csr::from_coo(&coo)
+}
+
+fn bits_equal(x: &Csr, y: &Csr) -> bool {
+    x.nrows == y.nrows
+        && x.ncols == y.ncols
+        && x.rowptr == y.rowptr
+        && x.colind == y.colind
+        && x.values.iter().zip(&y.values).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+fn hyper(model: ModelKind) -> AlgorithmStrategy {
+    AlgorithmStrategy::HypergraphPartitioned { model, with_nz: false }
+}
+
+/// Differential: every strategy on every workload, simulated at 1/2/4/8
+/// threads, against the seed sequential SpGEMM.
+///
+/// The bit-identity boundary (see docs/BASELINES.md): strategies in
+/// which every C entry has a *single producer* accumulating in canonical
+/// k-order — SUMMA, row-wise, monochrome-C — reproduce the reference
+/// bit for bit. Multi-producer strategies (split-3D with layers > 1,
+/// fine-grained, outer-product, monochrome-A) reassociate the k-sum in
+/// the fold and agree to rounding (1e-10). The threaded simulator is
+/// bit-identical to the sequential simulator for *every* strategy and
+/// thread count.
+#[test]
+fn every_strategy_matches_reference_at_every_thread_count() {
+    let p = 4;
+    let exact = [AlgorithmStrategy::SparseSumma { grid: (0, 0) },
+        hyper(ModelKind::RowWise),
+        hyper(ModelKind::MonoC)];
+    let approx = [AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 },
+        hyper(ModelKind::FineGrained),
+        hyper(ModelKind::OuterProduct),
+        hyper(ModelKind::MonoA)];
+    for (name, a, b) in workload_instances(3) {
+        let c_ref = spgemm(&a, &b).unwrap();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(p) };
+        for (strategy, must_be_exact) in exact
+            .iter()
+            .map(|s| (s, true))
+            .chain(approx.iter().map(|s| (s, false)))
+        {
+            let label = format!("{name}/{}", strategy.resolve(p).unwrap().name());
+            let alg = strategy.lower(&a, &b, &cfg).unwrap();
+            assert_eq!(alg.p, p, "{label}");
+            let (rep, c) = simulate(&a, &b, &alg).unwrap();
+            if must_be_exact {
+                assert!(bits_equal(&c, &c_ref), "{label}: single-producer strategy drifted");
+            } else {
+                assert!(c.approx_eq(&c_ref, 1e-10), "{label}: beyond rounding tolerance");
+            }
+            for threads in [2usize, 4, 8] {
+                let (rep_t, c_t) = simulate_threaded(&a, &b, &alg, threads).unwrap();
+                assert_eq!(rep_t, rep, "{label}@{threads}t: report drifted");
+                assert!(bits_equal(&c_t, &c), "{label}@{threads}t: values drifted");
+            }
+        }
+    }
+}
+
+/// Closed forms on a dense n×n product (every processor/grid coordinate
+/// is fully populated, so the multicast sets are maximal and exactly
+/// countable):
+///
+/// * expand = nnz(A)·(pc−1) + nnz(B)·(pr−1), independent of the layer
+///   count (A/B entries only ever multicast within their own layer);
+/// * fold = nnz(C)·(layers−1) — the split-k reduction; zero for SUMMA.
+#[test]
+fn dense_volumes_match_closed_forms() {
+    let n = 6;
+    let mut rng = Rng::new(5);
+    let a = dense(n, &mut rng);
+    let b = dense(n, &mut rng);
+    let nnz = (n * n) as u64;
+    for (pr, pc, layers) in [(2, 3, 1), (3, 2, 1), (1, 6, 1), (2, 3, 2), (2, 3, 3), (1, 1, 2)] {
+        let alg = split3d_algorithm(&a, &b, pr, pc, layers).unwrap();
+        let (rep, _) = simulate(&a, &b, &alg).unwrap();
+        let expect_expand = nnz * (pc as u64 - 1) + nnz * (pr as u64 - 1);
+        let expect_fold = nnz * (layers as u64 - 1);
+        assert_eq!(rep.expand_volume, expect_expand, "expand at {pr}x{pc}x{layers}");
+        assert_eq!(rep.fold_volume, expect_fold, "fold at {pr}x{pc}x{layers}");
+        let (_, volume) = spgemm_hp::algorithm::connectivity_metrics(&a, &b, &alg).unwrap();
+        assert_eq!(volume, rep.total_volume(), "modeled volume at {pr}x{pc}x{layers}");
+    }
+}
+
+/// SUMMA on a 2×2 grid over a dense n×n product is perfectly balanced:
+/// every worker owns n²/4 entries of each operand and multicasts each to
+/// exactly one row/column neighbor, so sends = recvs = n²/2 per worker
+/// and max(send+recv) = n².
+#[test]
+fn summa_2x2_dense_is_perfectly_balanced()  {
+    let n = 8;
+    let mut rng = Rng::new(7);
+    let a = dense(n, &mut rng);
+    let b = dense(n, &mut rng);
+    let alg = summa_algorithm(&a, &b, 2, 2).unwrap();
+    let (rep, _) = simulate(&a, &b, &alg).unwrap();
+    let half = (n * n / 2) as u64;
+    for q in 0..4 {
+        assert_eq!(rep.sends[q], half, "worker {q} sends");
+        assert_eq!(rep.recvs[q], half, "worker {q} recvs");
+    }
+    assert_eq!(rep.max_send_recv(), 2 * half);
+    assert_eq!(rep.fold_volume, 0);
+}
+
+/// A dense × identity: every multiplication is already colocated with
+/// its A entry and its C entry, so the only traffic is the B diagonal
+/// multicast down each grid column — expand = n·(pr−1), fold = 0.
+#[test]
+fn dense_times_identity_moves_only_b() {
+    let n = 6;
+    let (pr, pc) = (2, 3);
+    let mut rng = Rng::new(9);
+    let a = dense(n, &mut rng);
+    let b = Csr::identity(n);
+    let alg = summa_algorithm(&a, &b, pr, pc).unwrap();
+    let (rep, c) = simulate(&a, &b, &alg).unwrap();
+    assert_eq!(rep.expand_volume, (n * (pr - 1)) as u64);
+    assert_eq!(rep.fold_volume, 0);
+    assert!(bits_equal(&c, &a), "A·I must be exactly A");
+}
+
+/// Every strategy family round-trips the versioned on-disk plan cache:
+/// a fresh planner (fresh-process simulation) hits from disk with a
+/// field-identical plan, and an entry re-labeled with the old
+/// FORMAT_VERSION is rejected as stale and replanned.
+#[test]
+fn every_strategy_round_trips_the_disk_cache() {
+    let dir = std::env::temp_dir()
+        .join(format!("spgemm_hp_strategies_codec_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let disk = || PlannerConfig { cache_dir: Some(dir.clone()), capacity: 4 };
+    let (_, a, b) = workload_instances(13).remove(0);
+    let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(4) };
+    let strategies = [hyper(ModelKind::FineGrained),
+        AlgorithmStrategy::SparseSumma { grid: (0, 0) },
+        AlgorithmStrategy::Split3d { grid: (0, 0), layers: 0 }];
+    for strategy in strategies {
+        let cold = Planner::new(disk())
+            .unwrap()
+            .plan_strategy(&a, &b, &strategy, &cfg, 8)
+            .unwrap();
+        assert_eq!(cold.outcome, PlanOutcome::Miss, "{strategy:?}");
+        let warm = Planner::new(disk())
+            .unwrap()
+            .plan_strategy(&a, &b, &strategy, &cfg, 8)
+            .unwrap();
+        assert_eq!(warm.outcome, PlanOutcome::Hit, "{strategy:?}");
+        assert_eq!(warm.strategy, cold.strategy, "{strategy:?}: strategy not persisted");
+        assert_eq!(warm.prepared, cold.prepared, "{strategy:?}: plan not persisted");
+        assert_eq!(warm.alg, cold.alg);
+
+        // rewrite the file's version header to the retired v1 layout:
+        // the store must reject it and replan rather than misdecode
+        let path = dir.join(format!("{}.plan", cold.fingerprint));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes()); // after the 8-byte magic
+        std::fs::write(&path, &bytes).unwrap();
+        let stale = Planner::new(disk())
+            .unwrap()
+            .plan_strategy(&a, &b, &strategy, &cfg, 8)
+            .unwrap();
+        assert_eq!(stale.outcome, PlanOutcome::Stale, "{strategy:?}: v1 entry accepted");
+        assert_eq!(stale.prepared, cold.prepared, "{strategy:?}: replanned plan differs");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -37,10 +37,10 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition/coarsening/planner suites (deep property sweep)"
+step "kernel differential + model oracle + partition/coarsening/planner/strategy suites (deep property sweep)"
 SPGEMM_HP_PROP_CASES=192 \
     cargo test -q --test kernels --test models --test partition_quality --test coarsening \
-    --test planner
+    --test planner --test strategies
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -54,14 +54,22 @@ cargo bench --bench partitioner -- --smoke --threads 1,4 --json BENCH_partition.
     --plan-cache "$PLAN_CACHE_DIR"
 rm -rf "$PLAN_CACHE_DIR"
 
-step "BENCH_partition.json phase-timing + imbalance + plan-cache fields present"
-for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit; do
+step "BENCH_partition.json phase-timing + imbalance + plan-cache + strategy fields present"
+for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit \
+    strategy expand fold; do
     if ! grep -q "\"$field\"" BENCH_partition.json; then
         echo "ERROR: BENCH_partition.json is missing the \"$field\" field"
         exit 1
     fi
 done
+if ! grep -q '"workload": ".*-summa-' BENCH_spgemm.json; then
+    echo "ERROR: BENCH_spgemm.json has no per-strategy simulate records"
+    exit 1
+fi
 echo "all fields present"
+
+step "e2e smoke on the sparsity-oblivious baseline (--algorithm summa)"
+./target/release/spgemm-hp e2e --parts 4 --algorithm summa
 
 echo
 echo "CI gate passed."
