@@ -31,6 +31,9 @@ smoke:
 	@for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit; do \
 		grep -q "\"$$field\"" BENCH_partition.json || { echo "missing $$field"; exit 1; }; \
 	done
+	@for field in traffic_bytes dataflow; do \
+		grep -q "\"$$field\"" BENCH_spgemm.json || { echo "missing $$field"; exit 1; }; \
+	done
 
 # AOT-compile the JAX/Pallas kernels to HLO text artifacts for the
 # `pallas` runtime path. Requires python3 + jax (build time only; the

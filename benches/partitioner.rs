@@ -146,6 +146,7 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    args.check_known(&["smoke", "json", "parts", "threads", "plan-cache"])?;
     let smoke = args.has_flag("smoke");
     let json_path: Option<String> = match args.get("json") {
         Some(p) => Some(p.to_string()),

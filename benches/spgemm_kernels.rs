@@ -11,6 +11,12 @@
 //! * `--kernel auto|sortmerge|densespa|hashaccum|all` — restrict the
 //!   RowKernel strategy sweep (default `all`).
 //!
+//! A dataflow sweep replays each kernel workload through the storage
+//! traffic simulator under the static tile and the adaptive
+//! (`Dataflow::Auto`) tile search, writing `traffic_bytes`/`dataflow`
+//! into the JSON rows and enforcing *adaptive never moves more bytes
+//! than static* in-harness.
+//!
 //! ```bash
 //! cargo bench --bench spgemm_kernels -- --kernel auto --smoke --json BENCH_spgemm.json
 //! ```
@@ -21,7 +27,7 @@ use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, fine_grained, ModelKind};
 use spgemm_hp::partition::PartitionerConfig;
 use spgemm_hp::runtime::Engine;
-use spgemm_hp::sim::{simulate, spgemm_parallel, spgemm_parallel_with};
+use spgemm_hp::sim::{self, simulate, spgemm_parallel, spgemm_parallel_with};
 use spgemm_hp::sparse::{self, KernelKind};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
@@ -33,6 +39,16 @@ struct Record {
     workload: String,
     threads: usize,
     ns_per_op: f64,
+    /// Simulated cache traffic; present on dataflow sweep rows only.
+    traffic_bytes: Option<u64>,
+    /// `"static"` or `"auto"`; present on dataflow sweep rows only.
+    dataflow: Option<&'static str>,
+}
+
+impl Record {
+    fn new(kernel: &'static str, workload: String, threads: usize, ns_per_op: f64) -> Record {
+        Record { kernel, workload, threads, ns_per_op, traffic_bytes: None, dataflow: None }
+    }
 }
 
 fn write_json(path: &str, records: &[Record]) -> Result<()> {
@@ -41,9 +57,16 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
     writeln!(f, "[")?;
     for (i, r) in records.iter().enumerate() {
         let comma = if i + 1 < records.len() { "," } else { "" };
+        let mut extra = String::new();
+        if let Some(tb) = r.traffic_bytes {
+            extra.push_str(&format!(", \"traffic_bytes\": {tb}"));
+        }
+        if let Some(df) = r.dataflow {
+            extra.push_str(&format!(", \"dataflow\": \"{df}\""));
+        }
         writeln!(
             f,
-            "  {{\"kernel\": \"{}\", \"workload\": \"{}\", \"threads\": {}, \"ns_per_op\": {:.1}}}{comma}",
+            "  {{\"kernel\": \"{}\", \"workload\": \"{}\", \"threads\": {}, \"ns_per_op\": {:.1}{extra}}}{comma}",
             r.kernel, r.workload, r.threads, r.ns_per_op
         )?;
     }
@@ -61,6 +84,7 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    args.check_known(&["smoke", "json", "threads", "kernel"])?;
     let smoke = args.has_flag("smoke");
     let json_path: Option<String> = match args.get("json") {
         Some(p) => Some(p.to_string()),
@@ -97,12 +121,7 @@ fn real_main() -> Result<()> {
             BenchStats::fmt_time(s.median),
             flops as f64 / s.median / 1e6
         );
-        records.push(Record {
-            kernel: "spgemm",
-            workload: name.clone(),
-            threads: 1,
-            ns_per_op: s.median * 1e9,
-        });
+        records.push(Record::new("spgemm", name.clone(), 1, s.median * 1e9));
         seq_stats.push(s);
     }
 
@@ -119,12 +138,7 @@ fn real_main() -> Result<()> {
             "{par_name:<22} threads={t:<3} {:>12}  ({speedup:.2}x vs sequential)",
             BenchStats::fmt_time(s.median)
         );
-        records.push(Record {
-            kernel: "spgemm_parallel",
-            workload: par_name.clone(),
-            threads: t,
-            ns_per_op: s.median * 1e9,
-        });
+        records.push(Record::new("spgemm_parallel", par_name.clone(), t, s.median * 1e9));
     }
     if threads.iter().any(|&t| t > 1) {
         println!("best speedup: {best_speedup:.2}x");
@@ -148,14 +162,49 @@ fn real_main() -> Result<()> {
                     kind.name(),
                     BenchStats::fmt_time(s.median)
                 );
-                records.push(Record {
-                    kernel: kind.name(),
-                    workload: name.clone(),
-                    threads: t,
-                    ns_per_op: s.median * 1e9,
-                });
+                records.push(Record::new(kind.name(), name.clone(), t, s.median * 1e9));
             }
         }
+    }
+
+    println!("\n== dataflow: static vs adaptive (simulated cache traffic) ==");
+    // The Dataflow::Auto planner contract, enforced where it is measured:
+    // the static tile is Auto's first candidate and ties keep it, so an
+    // adaptive plan that moves more bytes than static is a planner bug,
+    // not a data point. ns/op records what each leg costs to *plan*.
+    let cache = sim::CacheConfig::default();
+    let static_tile = 8usize;
+    for (name, a) in &kernel_workloads {
+        let sched = sim::tiled_schedule(a, a, static_tile, static_tile * 8);
+        let mut static_bytes = 0u64;
+        let s_static = bench(0, 1, || {
+            static_bytes = sim::simulate_traffic(a, a, &sched, &cache).unwrap().total();
+        });
+        let mut pick = (static_tile, 0u64);
+        let s_auto = bench(0, 1, || {
+            pick = sim::traffic::choose_plan_tile(a, a, &cache, static_tile).unwrap();
+        });
+        let (auto_tile, auto_bytes) = pick;
+        if auto_bytes > static_bytes {
+            return Err(Error::Runtime(format!(
+                "{name}: adaptive dataflow moved {auto_bytes} bytes > static {static_bytes}"
+            )));
+        }
+        println!(
+            "{name:<22} static(tile={static_tile}) {static_bytes:>12} B   \
+             auto(tile={auto_tile}) {auto_bytes:>12} B  ({:.2}x)",
+            static_bytes as f64 / auto_bytes.max(1) as f64
+        );
+        records.push(Record {
+            traffic_bytes: Some(static_bytes),
+            dataflow: Some("static"),
+            ..Record::new("traffic", name.clone(), 1, s_static.median * 1e9)
+        });
+        records.push(Record {
+            traffic_bytes: Some(auto_bytes),
+            dataflow: Some("auto"),
+            ..Record::new("traffic", name.clone(), 1, s_auto.median * 1e9)
+        });
     }
 
     println!("\n== algorithm-strategy execution (simulate, expand+mult+fold) ==");
@@ -179,12 +228,7 @@ fn real_main() -> Result<()> {
         let alg = strat.lower(sim_a, sim_a, &sim_cfg)?;
         let s = bench(1, iters, || simulate(sim_a, sim_a, &alg).unwrap());
         println!("{label:<16} {sim_name:<22} {:>12}", BenchStats::fmt_time(s.median));
-        records.push(Record {
-            kernel: "simulate",
-            workload: format!("{sim_name}-{label}"),
-            threads: 1,
-            ns_per_op: s.median * 1e9,
-        });
+        records.push(Record::new("simulate", format!("{sim_name}-{label}"), 1, s.median * 1e9));
     }
 
     println!("\n== hypergraph model construction ==");
@@ -201,12 +245,12 @@ fn real_main() -> Result<()> {
             m.h.num_pins(),
             BenchStats::fmt_time(s.median)
         );
-        records.push(Record {
-            kernel: "build_model",
-            workload: format!("amg-n{grid_n}-{}", kind.name()),
-            threads: 1,
-            ns_per_op: s.median * 1e9,
-        });
+        records.push(Record::new(
+            "build_model",
+            format!("amg-n{grid_n}-{}", kind.name()),
+            1,
+            s.median * 1e9,
+        ));
     }
     let s = bench(1, 3, || fine_grained(&a, &p, true).unwrap());
     println!(
@@ -230,12 +274,7 @@ fn real_main() -> Result<()> {
         BenchStats::fmt_time(s.median),
         flops / s.median / 1e9
     );
-    records.push(Record {
-        kernel: "tile_products_ref",
-        workload: format!("{n}xT{tile}"),
-        threads: 1,
-        ns_per_op: s.median * 1e9,
-    });
+    records.push(Record::new("tile_products_ref", format!("{n}xT{tile}"), 1, s.median * 1e9));
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         match Engine::load("artifacts") {
             Ok(mut engine) => {

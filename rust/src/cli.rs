@@ -99,6 +99,29 @@ impl Args {
         }
     }
 
+    /// Reject any `--option` or `--flag` not in `allowed`. Subcommands
+    /// call this with their full recognized-key list after binding every
+    /// knob, so a typo (`--dataflw auto`) fails loudly instead of being
+    /// silently ignored and leaving the default in force.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .map(|k| k.as_str())
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        Err(Error::Config(format!(
+            "unrecognized option(s): --{} (known: --{})",
+            unknown.join(", --"),
+            allowed.join(", --")
+        )))
+    }
+
     /// Parse `--key` through a domain parser (e.g. `KernelKind::parse`),
     /// falling back to `default` when absent and erroring on values the
     /// parser rejects.
@@ -177,6 +200,21 @@ mod tests {
         assert_eq!(a.get_parsed("missing", 7u8, parse_mode).unwrap(), 7);
         let bad = parse("x --mode warp");
         assert!(bad.get_parsed("mode", 0u8, parse_mode).is_err());
+    }
+
+    #[test]
+    fn unknown_options_are_rejected() {
+        let a = parse("e2e --parts 4 --verbose");
+        assert!(a.check_known(&["parts", "verbose"]).is_ok());
+        assert!(a.check_known(&["parts"]).is_err(), "unknown flag accepted");
+        let err = a.check_known(&["verbose"]).unwrap_err().to_string();
+        assert!(err.contains("--parts"), "{err}");
+        // a typo'd option is named in the error
+        let b = parse("e2e --dataflw auto");
+        let err = b.check_known(&["dataflow"]).unwrap_err().to_string();
+        assert!(err.contains("--dataflw"), "{err}");
+        // positionals are never options
+        assert!(parse("repro traffic").check_known(&[]).is_ok());
     }
 
     #[test]

@@ -8,11 +8,13 @@
 //!           [--plan-cache DIR] [--plan-cache-cap N] [--tile 8]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
-//! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound|baselines>
+//! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound|traffic|baselines>
 //!           [--scale 1..3] [--seed N] [--csv dir]
+//!           [--cache-kb 256] [--line-bytes 64] [--assoc 8]
 //! spgemm-hp e2e [--graph facebook | --mtx-a A.mtx [--mtx-b B.mtx]] [--parts 4]
 //!           [--algorithm hypergraph:<model>|summa[:PRxPC]|split3d[:PRxPCxL]]
-//!           [--tile 8] [--kernel auto] [--artifacts artifacts]
+//!           [--tile 8] [--kernel auto] [--dataflow static|auto] [--artifacts artifacts]
+//!           [--cache-kb 256] [--line-bytes 64] [--assoc 8]
 //!           [--partition-threads N] [--epsilon E] [--mem-epsilon D]
 //!           [--plan-cache DIR] [--plan-cache-cap N]
 //! ```
@@ -27,7 +29,11 @@
 //! Without `--algorithm`, `e2e` compares four hypergraph-partitioned
 //! models against the communication-oblivious Sparse SUMMA and split-3D
 //! baselines (see `docs/BASELINES.md`); with it, only the named
-//! strategy runs.
+//! strategy runs. `--dataflow auto` lets the storage-traffic simulator
+//! (see `docs/TRAFFIC.md`) pick the plan's tile for the cache described
+//! by `--cache-kb`/`--line-bytes`/`--assoc`; `repro traffic` correlates
+//! hypergraph cut against that simulator's predicted bytes. Unknown
+//! `--options` are rejected per subcommand.
 
 use spgemm_hp::algorithm::AlgorithmStrategy;
 use spgemm_hp::cli::Args;
@@ -52,7 +58,10 @@ fn main() {
 
 fn dispatch(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
-        Some("info") | None => info(),
+        Some("info") | None => {
+            args.check_known(&[])?;
+            info()
+        }
         Some("gen") => cmd_gen(args),
         Some("partition") => cmd_partition(args),
         Some("spgemm") => cmd_spgemm(args),
@@ -70,11 +79,15 @@ fn info() -> Result<()> {
     println!("          monochrome-A monochrome-B monochrome-C");
     println!("algos:    hypergraph[:<model>] summa[:PRxPC] split3d[:PRxPCxL] (--algorithm)");
     println!("kernels:  auto sortmerge densespa hashaccum (--kernel, see README)");
-    println!("repro:    table2 fig7 fig8 fig9 bounds seqbound baselines all");
+    println!("dataflow: static auto (--dataflow; auto = traffic-simulated tile choice)");
+    println!("repro:    table2 fig7 fig8 fig9 bounds seqbound traffic baselines all");
     Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "seed", "n", "out", "scale", "edge-factor", "side", "drop", "rows", "cols", "density",
+    ])?;
     let kind = args
         .positional
         .get(1)
@@ -167,7 +180,36 @@ fn parse_algorithm(args: &Args) -> Result<Option<AlgorithmStrategy>> {
     args.get_parsed("algorithm", None, |s| AlgorithmStrategy::parse(s).map(Some))
 }
 
+/// `--cache-kb` / `--line-bytes` / `--assoc` → the traffic simulator's
+/// cache model (defaults mirror [`sim::CacheConfig::default`]).
+fn cache_from_args(args: &Args) -> Result<sim::CacheConfig> {
+    let dflt = sim::CacheConfig::default();
+    let cache = sim::CacheConfig {
+        capacity_bytes: args.get_u64("cache-kb", dflt.capacity_bytes / 1024)?.saturating_mul(1024),
+        line_bytes: args.get_u64("line-bytes", dflt.line_bytes)?,
+        assoc: args.get_usize_min("assoc", dflt.assoc, 1)?,
+    };
+    cache.validate()?;
+    Ok(cache)
+}
+
 fn cmd_partition(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "a",
+        "b",
+        "mtx-a",
+        "mtx-b",
+        "model",
+        "parts",
+        "seed",
+        "epsilon",
+        "mem-epsilon",
+        "partition-threads",
+        "match-chunk",
+        "plan-cache",
+        "plan-cache-cap",
+        "tile",
+    ])?;
     let (a, b) = load_pair(args)?;
     let kind = args.get_parsed("model", ModelKind::FineGrained, ModelKind::parse)?;
     let p = args.get_usize("parts", 8)?;
@@ -234,6 +276,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_spgemm(args: &Args) -> Result<()> {
+    args.check_known(&["a", "b", "mtx-a", "mtx-b", "kernel", "threads", "out"])?;
     let (a, b) = load_pair(args)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
     let threads = args.get_usize_min("threads", 1, 1)?;
@@ -260,6 +303,7 @@ fn cmd_spgemm(args: &Args) -> Result<()> {
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
+    args.check_known(&["scale", "seed", "csv", "cache-kb", "line-bytes", "assoc"])?;
     let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let scale = args.get_u32("scale", 1)?;
     let seed = args.get_u64("seed", 20160711)?;
@@ -327,8 +371,21 @@ fn cmd_repro(args: &Args) -> Result<()> {
                 );
             }
         }
+        "traffic" => {
+            let cache = cache_from_args(args)?;
+            let rows = repro::figures::traffic_experiment(scale, seed, &cache)?;
+            repro::figures::print_traffic(&rows, &cache);
+            if let Some(dir) = &csv_dir {
+                let path = dir.join("traffic.csv");
+                repro::figures::write_traffic_csv(&path, &rows)?;
+                println!("wrote {}", path.display());
+            }
+        }
         "all" => {
-            for w in ["table2", "fig7", "fig8", "fig9", "bounds", "seqbound", "baselines"] {
+            let all = [
+                "table2", "fig7", "fig8", "fig9", "bounds", "seqbound", "traffic", "baselines",
+            ];
+            for w in all {
                 let mut sub = args.clone();
                 sub.positional = vec!["repro".into(), w.into()];
                 cmd_repro(&sub)?;
@@ -340,12 +397,38 @@ fn cmd_repro(args: &Args) -> Result<()> {
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "parts",
+        "tile",
+        "seed",
+        "artifacts",
+        "scale",
+        "kernel",
+        "dataflow",
+        "cache-kb",
+        "line-bytes",
+        "assoc",
+        "epsilon",
+        "mem-epsilon",
+        "partition-threads",
+        "match-chunk",
+        "algorithm",
+        "graph",
+        "a",
+        "b",
+        "mtx-a",
+        "mtx-b",
+        "plan-cache",
+        "plan-cache-cap",
+    ])?;
     let parts = args.get_usize("parts", 4)?;
     let tile = args.get_usize("tile", 8)?;
     let seed = args.get_u64("seed", 20160711)?;
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
+    let dataflow = args.get_parsed("dataflow", sim::Dataflow::Static, sim::Dataflow::parse)?;
+    let cache = cache_from_args(args)?;
     let cfg = partitioner_config_from_args(args, parts, 0.1, seed)?;
     // one named strategy, or the full model-vs-oblivious comparison
     let strategies: Vec<AlgorithmStrategy> = match parse_algorithm(args)? {
@@ -388,13 +471,14 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     };
     println!(
         "e2e: `{name}` ({}x{} · {}x{}, {} + {} nnz) on {parts} workers, tile={tile}, \
-         partition-threads={}",
+         dataflow={}, partition-threads={}",
         a.nrows,
         a.ncols,
         b.nrows,
         b.ncols,
         fmt_count(a.nnz() as u64),
         fmt_count(b.nnz() as u64),
+        dataflow.name(),
         cfg.threads
     );
     let t = Timer::start();
@@ -423,10 +507,10 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         // inspector: serve the whole (model, partition, lowering,
         // execution-plan) pipeline from the cache when the structure
         // fingerprint matches
-        let planned = planner.plan_strategy(&a, &b, strategy, &cfg, tile)?;
+        let planned = planner.plan_strategy_with(&a, &b, strategy, &cfg, tile, dataflow, &cache)?;
         let (sim_rep, c_sim) = sim::simulate(&a, &b, &planned.alg)?;
         let ccfg = coordinator::CoordinatorConfig {
-            tile,
+            tile: planned.prepared.tile,
             artifacts_dir: Some(artifacts.into()),
             kernel,
             plan: Some(std::sync::Arc::new(planned.prepared)),
@@ -452,6 +536,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         );
         if !ok {
             return Err(Error::Runtime("numeric validation failed".into()));
+        }
+        if planned.dataflow == sim::Dataflow::Auto && planned.prepared.tile != tile {
+            println!(
+                "  (auto dataflow chose tile {} over static {tile})",
+                planned.prepared.tile
+            );
         }
         if !rep.used_pjrt {
             println!("  (note: PJRT artifacts unavailable; reference backend used)");

@@ -1,6 +1,15 @@
 //! Initial bisections at the coarsest level: greedy hypergraph growing
 //! (GHG) and random balanced starts. Each candidate is FM-refined and the
 //! best (feasibility first, then cut) wins.
+//!
+//! Under the Def. 4.4 second constraint (`mem_max`) every stage here is
+//! memory-aware: the growing/filling loops refuse moves that would
+//! overflow side 0's memory cap, and candidate ranking scores the *sum*
+//! of computation and memory violations (the same
+//! [`Bisection::violation`] the refinement levels minimize), so the
+//! coarsest-level winner is already memory-feasible whenever one of the
+//! starts found a feasible bisection — refinement no longer has to
+//! rescue a memory-blind initial partition.
 
 use super::fm::Bisection;
 use crate::hypergraph::Hypergraph;
@@ -8,26 +17,37 @@ use crate::util::Rng;
 
 /// Greedy hypergraph growing: grow side 0 from a random seed, repeatedly
 /// absorbing the candidate with the highest move gain, until side 0
-/// reaches its target weight.
+/// reaches its target weight. With `mem_max` set, a candidate must also
+/// fit under side 0's memory cap (`h.w_mem` totals ≤ `mem_max[0]`).
 pub fn greedy_growing(
     h: &Hypergraph,
     weights: &[u64],
     target0: u64,
     max: [u64; 2],
+    mem_max: Option<[u64; 2]>,
     rng: &mut Rng,
 ) -> Vec<u8> {
     let n = h.num_vertices();
     if n == 0 {
         return Vec::new();
     }
+    let mem_fits = |mem0: u64, v: usize| match mem_max {
+        None => true,
+        Some(mm) => mem0.saturating_add(h.w_mem[v]) <= mm[0],
+    };
     let mut bi = Bisection::new(h, weights, vec![1; n], max);
     let seed = rng.below(n);
     bi.apply(seed);
+    let mut mem0 = h.w_mem[seed];
     while bi.load[0] < target0 {
         // candidate set: side-1 vertices sharing a net with side 0
         let mut best: Option<(i64, usize)> = None;
         for v in 0..n {
-            if bi.side[v] == 1 && bi.load[0] + weights[v] <= max[0] && bi.is_boundary(v) {
+            if bi.side[v] == 1
+                && bi.load[0] + weights[v] <= max[0]
+                && mem_fits(mem0, v)
+                && bi.is_boundary(v)
+            {
                 let g = bi.gain(v);
                 if best.map(|(bg, _)| g > bg).unwrap_or(true) {
                     best = Some((g, v));
@@ -39,7 +59,11 @@ pub fn greedy_growing(
             None => {
                 // disconnected: jump to a random side-1 vertex that fits
                 let candidates: Vec<usize> = (0..n)
-                    .filter(|&v| bi.side[v] == 1 && bi.load[0] + weights[v] <= max[0])
+                    .filter(|&v| {
+                        bi.side[v] == 1
+                            && bi.load[0] + weights[v] <= max[0]
+                            && mem_fits(mem0, v)
+                    })
                     .collect();
                 if candidates.is_empty() {
                     break;
@@ -48,37 +72,52 @@ pub fn greedy_growing(
             }
         };
         bi.apply(v);
+        mem0 += h.w_mem[v];
     }
     bi.side
 }
 
-/// Random balanced start: shuffle and fill side 0 up to `target0`.
+/// Random balanced start: shuffle and fill side 0 up to `target0` (and,
+/// with `mem_max` set, up to side 0's memory cap).
 pub fn random_balanced(
     h: &Hypergraph,
     weights: &[u64],
     target0: u64,
+    mem_max: Option<[u64; 2]>,
     rng: &mut Rng,
 ) -> Vec<u8> {
     let n = h.num_vertices();
     let mut side = vec![1u8; n];
     let order = rng.permutation(n);
     let mut w0 = 0u64;
+    let mut mem0 = 0u64;
     for v in order {
-        if w0 + weights[v] <= target0 {
+        let mem_ok = match mem_max {
+            None => true,
+            Some(mm) => mem0.saturating_add(h.w_mem[v]) <= mm[0],
+        };
+        if w0 + weights[v] <= target0 && mem_ok {
             side[v] = 0;
             w0 += weights[v];
+            mem0 += h.w_mem[v];
         }
     }
     side
 }
 
 /// Best-of-`n_starts` initial bisection, each candidate FM-refined.
-/// Ranking: feasibility violation first, then cut.
+/// Ranking: feasibility violation first (computation *plus* memory when
+/// `mem_max` is set — [`Bisection::violation`] after
+/// [`Bisection::constrain_memory`]), then cut. With `mem_max == None`
+/// the ranking and every RNG draw are identical to the unconstrained
+/// path, so `None` stays bit-identical.
+#[allow(clippy::too_many_arguments)]
 pub fn best_initial(
     h: &Hypergraph,
     weights: &[u64],
     target0: u64,
     max: [u64; 2],
+    mem_max: Option<[u64; 2]>,
     n_starts: usize,
     fm_passes: usize,
     rng: &mut Rng,
@@ -90,11 +129,14 @@ pub fn best_initial(
     let ghg_ok = h.num_vertices() <= 4096;
     for s in 0..n_starts.max(1) {
         let side = if s % 2 == 0 && ghg_ok {
-            greedy_growing(h, weights, target0, max, rng)
+            greedy_growing(h, weights, target0, max, mem_max, rng)
         } else {
-            random_balanced(h, weights, target0, rng)
+            random_balanced(h, weights, target0, mem_max, rng)
         };
         let mut bi = Bisection::new(h, weights, side, max);
+        if let Some(mm) = mem_max {
+            bi.constrain_memory(&h.w_mem, mm);
+        }
         bi.refine(fm_passes, rng);
         let key = (bi.violation(), bi.cut);
         if best.as_ref().map(|(v, c, _)| key < (*v, *c)).unwrap_or(true) {
@@ -110,8 +152,12 @@ mod tests {
     use crate::hypergraph::HypergraphBuilder;
 
     fn ring(n: usize) -> Hypergraph {
+        ring_with_mem(n, vec![0; n])
+    }
+
+    fn ring_with_mem(n: usize, mem: Vec<u64>) -> Hypergraph {
         let mut b = HypergraphBuilder::new(n);
-        b.set_weights(vec![1; n], vec![0; n]);
+        b.set_weights(vec![1; n], mem);
         for i in 0..n {
             b.add_net(1, vec![i as u32, ((i + 1) % n) as u32]);
         }
@@ -123,7 +169,7 @@ mod tests {
         let h = ring(20);
         let w = vec![1u64; 20];
         let mut rng = Rng::new(1);
-        let side = greedy_growing(&h, &w, 10, [11, 11], &mut rng);
+        let side = greedy_growing(&h, &w, 10, [11, 11], None, &mut rng);
         let w0 = side.iter().filter(|&&s| s == 0).count();
         assert!((9..=11).contains(&w0), "w0={w0}");
         // greedy growth on a ring yields a contiguous arc → cut 2
@@ -136,7 +182,7 @@ mod tests {
         let h = ring(30);
         let w = vec![1u64; 30];
         let mut rng = Rng::new(2);
-        let side = random_balanced(&h, &w, 15, &mut rng);
+        let side = random_balanced(&h, &w, 15, None, &mut rng);
         assert_eq!(side.iter().filter(|&&s| s == 0).count(), 15);
     }
 
@@ -145,16 +191,73 @@ mod tests {
         let h = ring(24);
         let w = vec![1u64; 24];
         let mut rng = Rng::new(3);
-        let side = best_initial(&h, &w, 12, [13, 13], 6, 4, &mut rng);
+        let side = best_initial(&h, &w, 12, [13, 13], None, 6, 4, &mut rng);
         let bi = Bisection::new(&h, &w, side, [13, 13]);
         assert_eq!(bi.violation(), 0);
         assert_eq!(bi.cut, 2, "ring optimal bisection cuts exactly 2 nets");
     }
 
     #[test]
+    fn growing_and_filling_respect_memory_caps() {
+        // half the ring is memory-heavy: side 0 may hold at most two
+        // heavy vertices under the cap
+        let n = 16;
+        let mem: Vec<u64> = (0..n).map(|v| if v < n / 2 { 5 } else { 1 }).collect();
+        let h = ring_with_mem(n, mem);
+        let w = vec![1u64; n];
+        let caps = Some([12u64, u64::MAX]);
+        let mem0 = |side: &[u8]| -> u64 {
+            side.iter().enumerate().filter(|(_, &s)| s == 0).map(|(v, _)| h.w_mem[v]).sum()
+        };
+        for trial in 0..4u64 {
+            let mut rng = Rng::new(10 + trial);
+            let g = mem0(&greedy_growing(&h, &w, 8, [9, 9], caps, &mut rng));
+            assert!(g <= 12, "greedy trial {trial}: mem0={g}");
+            let r = mem0(&random_balanced(&h, &w, 8, caps, &mut rng));
+            assert!(r <= 12, "random trial {trial}: mem0={r}");
+        }
+    }
+
+    #[test]
+    fn best_initial_ranks_on_memory_violation() {
+        // skewed memory: a memory-blind comp-balanced split can put all
+        // heavy vertices on one side (mem 40 vs cap 24); the mem-aware
+        // ranking must return a feasible bisection
+        let n = 16;
+        let mem: Vec<u64> = (0..n).map(|v| if v % 2 == 0 { 5 } else { 1 }).collect();
+        let h = ring_with_mem(n, mem);
+        let w = vec![1u64; n];
+        let caps = [24u64, 24];
+        let mut rng = Rng::new(5);
+        let side = best_initial(&h, &w, 8, [9, 9], Some(caps), 8, 4, &mut rng);
+        let mut mem_load = [0u64; 2];
+        for (v, &s) in side.iter().enumerate() {
+            mem_load[s as usize] += h.w_mem[v];
+        }
+        assert!(
+            mem_load[0] <= caps[0] && mem_load[1] <= caps[1],
+            "mem loads {mem_load:?} exceed caps {caps:?}"
+        );
+    }
+
+    #[test]
+    fn slack_mem_caps_match_unconstrained_bitwise() {
+        // caps that can never bind leave every RNG draw and every
+        // ranking decision unchanged → identical output
+        let n = 20;
+        let mem: Vec<u64> = (0..n as u64).map(|v| v % 3).collect();
+        let h = ring_with_mem(n, mem);
+        let w = vec![1u64; n];
+        let a = best_initial(&h, &w, 10, [11, 11], None, 6, 4, &mut Rng::new(9));
+        let b =
+            best_initial(&h, &w, 10, [11, 11], Some([u64::MAX, u64::MAX]), 6, 4, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn empty_hypergraph() {
         let h = HypergraphBuilder::new(0).finalize(true, true);
-        let side = best_initial(&h, &[], 0, [0, 0], 4, 2, &mut Rng::new(1));
+        let side = best_initial(&h, &[], 0, [0, 0], None, 4, 2, &mut Rng::new(1));
         assert!(side.is_empty());
     }
 }

@@ -90,11 +90,12 @@ fn coarsen_to_threshold(
 /// and hard caps `max`. Returns the side (0/1) of each vertex. `threads`
 /// is the scoped-thread budget for this bisection's coarsening phase;
 /// phase wall times are accumulated into `times`. When `mem_max` is set
-/// (the Def. 4.4 second constraint), every refinement level additionally
-/// caps each side's `w_mem` total — the coarse hypergraphs carry summed
-/// memory weights, so the constraint is enforced from the coarsest
-/// refinement down; the initial partition itself is unconstrained and
-/// relies on the refinement's violation-reduction rescue moves.
+/// (the Def. 4.4 second constraint), the cap is enforced at *every*
+/// stage: the coarse hypergraphs carry summed memory weights, the
+/// coarsest-level initial partition grows/ranks under the cap
+/// ([`initial::best_initial`]), and each refinement level caps each
+/// side's `w_mem` total — so no level has to rescue a memory-blind
+/// start, and violation-reduction moves remain only a fallback.
 #[allow(clippy::too_many_arguments)]
 pub fn bisect_multilevel(
     h: &Hypergraph,
@@ -122,8 +123,16 @@ pub fn bisect_multilevel(
         Some(l) => (&l.coarse, &l.coarse_weights),
     };
     let t = Instant::now();
-    let mut side =
-        initial::best_initial(cur_h, cur_w, target0, max, cfg.n_starts, cfg.fm_passes, rng);
+    let mut side = initial::best_initial(
+        cur_h,
+        cur_w,
+        target0,
+        max,
+        mem_max,
+        cfg.n_starts,
+        cfg.fm_passes,
+        rng,
+    );
     times.initial_ns += t.elapsed().as_nanos() as u64;
 
     // --- uncoarsening + refinement ---------------------------------------

@@ -22,7 +22,7 @@
 use crate::algorithm::AlgorithmStrategy;
 use crate::coordinator::plan::{ExecutionPlan, LocalMult, PreparedPlan, TileGroup, WorkerPlan};
 use crate::planner::fingerprint::{model_id, model_of_id};
-use crate::sim::Algorithm;
+use crate::sim::{Algorithm, Dataflow};
 use crate::sparse::Csr;
 use crate::{Error, Result};
 use std::collections::HashMap;
@@ -32,8 +32,10 @@ use std::collections::HashMap;
 ///
 /// History: 1 — initial layout (hypergraph plans only); 2 — an
 /// [`AlgorithmStrategy`] header follows the tile edge, so bundles for
-/// SUMMA / split-3D / hypergraph strategies are distinguishable.
-pub const FORMAT_VERSION: u32 = 2;
+/// SUMMA / split-3D / hypergraph strategies are distinguishable; 3 — a
+/// trailing [`Dataflow`] byte records whether the bundle's tile was
+/// caller-given (static) or chosen by the traffic simulator (auto).
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Little-endian byte writer.
 #[derive(Default)]
@@ -375,6 +377,9 @@ pub struct PlanBundle {
     pub comm_max: u64,
     /// Connectivity-(λ−1) volume at build time.
     pub volume: u64,
+    /// How the prepared plan's tile was chosen: [`Dataflow::Static`]
+    /// (caller-given) or [`Dataflow::Auto`] (traffic-simulator search).
+    pub dataflow: Dataflow,
 }
 
 /// Encode a bundle to its canonical byte form.
@@ -393,6 +398,7 @@ pub fn encode_bundle(b: &PlanBundle) -> Vec<u8> {
     }
     w.u64(b.comm_max);
     w.u64(b.volume);
+    w.u8(b.dataflow.id());
     w.buf
 }
 
@@ -417,6 +423,9 @@ pub fn decode_bundle(bytes: &[u8]) -> Result<PlanBundle> {
     }
     let comm_max = r.u64()?;
     let volume = r.u64()?;
+    let df = r.u8()?;
+    let dataflow = Dataflow::from_id(df)
+        .ok_or_else(|| Error::invalid(format!("plan codec: unknown dataflow id {df}")))?;
     if !r.done() {
         return Err(Error::invalid("plan codec: trailing bytes"));
     }
@@ -431,6 +440,7 @@ pub fn decode_bundle(bytes: &[u8]) -> Result<PlanBundle> {
         },
         comm_max,
         volume,
+        dataflow,
     })
 }
 
@@ -467,6 +477,7 @@ mod tests {
             prepared: PreparedPlan { c_struct: c, plan, tile: 2 },
             comm_max: 7,
             volume: 11,
+            dataflow: Dataflow::Static,
         }
     }
 
@@ -517,6 +528,22 @@ mod tests {
             assert_eq!(back, b, "{strategy:?}");
             assert_eq!(encode_bundle(&back), bytes);
         }
+    }
+
+    #[test]
+    fn dataflow_round_trips_and_bad_ids_rejected() {
+        let base = bundle();
+        for dataflow in [Dataflow::Static, Dataflow::Auto] {
+            let b = PlanBundle { dataflow, ..base.clone() };
+            let bytes = encode_bundle(&b);
+            let back = decode_bundle(&bytes).unwrap();
+            assert_eq!(back, b, "{dataflow:?}");
+            assert_eq!(encode_bundle(&back), bytes);
+        }
+        // the dataflow byte is the last one; an unknown id is rejected
+        let mut bad = encode_bundle(&base);
+        *bad.last_mut().unwrap() = 9;
+        assert!(decode_bundle(&bad).is_err());
     }
 
     #[test]

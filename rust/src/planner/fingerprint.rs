@@ -18,7 +18,11 @@
 //!   them). `threads` and `match_chunk` are deliberately **excluded**:
 //!   the partitioner is bit-identical for every value of either, so
 //!   they cannot change the plan;
-//! * the coordinator `tile` edge (it shapes the plan's tile groups).
+//! * the coordinator `tile` edge (it shapes the plan's tile groups);
+//! * the [`Dataflow`] mode, and — for [`Dataflow::Auto`] only — the
+//!   [`CacheConfig`] the traffic simulator searched under (Auto plans
+//!   depend on the modeled cache; static plans do not, so static keys
+//!   never split across cache knobs).
 //!
 //! # Stability contract
 //!
@@ -37,6 +41,7 @@
 use crate::algorithm::AlgorithmStrategy;
 use crate::hypergraph::ModelKind;
 use crate::partition::PartitionerConfig;
+use crate::sim::{CacheConfig, Dataflow};
 use crate::sparse::Csr;
 use std::fmt;
 
@@ -200,6 +205,26 @@ pub fn fingerprint_strategy(
     cfg: &PartitionerConfig,
     tile: usize,
 ) -> Fingerprint {
+    fingerprint_strategy_with(a, b, strategy, cfg, tile, Dataflow::Static, &CacheConfig::default())
+}
+
+/// Fingerprint of one planning problem including its [`Dataflow`] mode.
+///
+/// [`Dataflow::Static`] hashes only the mode id, so
+/// [`fingerprint_strategy`] (which fixes `Dataflow::Static`) is a strict
+/// restriction of this function. [`Dataflow::Auto`] additionally hashes
+/// the [`CacheConfig`] (capacity, line size, associativity): the
+/// traffic-guided tile search depends on the modeled cache, so two Auto
+/// plans under different caches must never share an entry.
+pub fn fingerprint_strategy_with(
+    a: &Csr,
+    b: &Csr,
+    strategy: &AlgorithmStrategy,
+    cfg: &PartitionerConfig,
+    tile: usize,
+    dataflow: Dataflow,
+    cache: &CacheConfig,
+) -> Fingerprint {
     let mut h = Hasher::new();
     h.tag(1);
     h.csr_pattern(a);
@@ -242,6 +267,13 @@ pub fn fingerprint_strategy(
     // partition is bit-identical for every value of either
     h.tag(5);
     h.write(tile as u64);
+    h.tag(9);
+    h.write(dataflow.id() as u64);
+    if matches!(dataflow, Dataflow::Auto) {
+        h.write(cache.capacity_bytes);
+        h.write(cache.line_bytes);
+        h.write(cache.assoc as u64);
+    }
     h.finish()
 }
 
@@ -336,6 +368,25 @@ mod tests {
         let more = PartitionerConfig::new(8);
         assert_ne!(fs(&summa), fingerprint_strategy(&a, &b, &summa, &more, 8));
         assert_ne!(fs(&summa), fingerprint_strategy(&a, &b, &summa, &cfg, 16));
+    }
+
+    #[test]
+    fn dataflow_keys_and_static_ignores_cache() {
+        let a = mat(&[(0, 0, 1.0), (1, 2, 2.0), (3, 1, 3.0)]);
+        let b = mat(&[(0, 1, 1.0), (2, 3, 1.0)]);
+        let cfg = PartitionerConfig::new(4);
+        let s = AlgorithmStrategy::SparseSumma { grid: (2, 2) };
+        let dflt = CacheConfig::default();
+        let small = CacheConfig { capacity_bytes: 32 * 1024, ..dflt };
+        let fw = |df, cache: &CacheConfig| {
+            fingerprint_strategy_with(&a, &b, &s, &cfg, 8, df, cache)
+        };
+        // the Static wrapper is exactly the Static/default-cache key
+        assert_eq!(fingerprint_strategy(&a, &b, &s, &cfg, 8), fw(Dataflow::Static, &dflt));
+        // the mode is part of the key; the cache only matters under Auto
+        assert_ne!(fw(Dataflow::Static, &dflt), fw(Dataflow::Auto, &dflt));
+        assert_eq!(fw(Dataflow::Static, &dflt), fw(Dataflow::Static, &small));
+        assert_ne!(fw(Dataflow::Auto, &dflt), fw(Dataflow::Auto, &small));
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //!   returns the plan for any [`AlgorithmStrategy`] with values freshly
 //!   bound to the current operands plus a [`PlanOutcome`] and the
 //!   planning wall time, so drivers can report cold/warm amortization.
+//!   [`Planner::plan_strategy_with`] additionally takes a
+//!   [`Dataflow`] mode: under [`Dataflow::Auto`] a cold plan's tile is
+//!   chosen by the [`crate::sim::traffic`] simulator for a concrete
+//!   [`CacheConfig`] instead of taken from the caller.
 //! * [`ModelCache`] / [`Planner::model_or_build`] — an in-memory cache
 //!   of built model hypergraphs keyed by (pattern, kind, `with_nz`), so
 //!   partition-only callers and `p`-sweeps build each model once.
@@ -39,7 +43,9 @@ pub mod store;
 
 pub use codec::FORMAT_VERSION;
 pub use codec::PlanBundle;
-pub use fingerprint::{fingerprint, fingerprint_strategy, model_fingerprint, Fingerprint};
+pub use fingerprint::{
+    fingerprint, fingerprint_strategy, fingerprint_strategy_with, model_fingerprint, Fingerprint,
+};
 pub use store::{PlanStore, StoreLookup};
 
 use crate::algorithm::{self, AlgorithmStrategy};
@@ -47,7 +53,7 @@ use crate::coordinator::plan::{ExecutionPlan, PreparedPlan};
 use crate::cost;
 use crate::hypergraph::models::{build_model, Model, ModelKind};
 use crate::partition::{partition, PartitionerConfig};
-use crate::sim::{self, Algorithm};
+use crate::sim::{self, Algorithm, CacheConfig, Dataflow};
 use crate::sparse::{spgemm_structure, Csr};
 use crate::Result;
 use std::path::PathBuf;
@@ -111,6 +117,9 @@ pub struct Planned {
     pub comm_max: u64,
     /// Connectivity-(λ−1) volume of the partition.
     pub volume: u64,
+    /// How the plan's tile was chosen: [`Dataflow::Static`]
+    /// (caller-given) or [`Dataflow::Auto`] (traffic-simulator search).
+    pub dataflow: Dataflow,
     /// How this call was served.
     pub outcome: PlanOutcome,
     /// Wall time of this `plan_or_build` call (cold ≫ warm is the
@@ -233,13 +242,44 @@ impl Planner {
         pcfg: &PartitionerConfig,
         tile: usize,
     ) -> Result<Planned> {
+        let cache = CacheConfig::default();
+        self.plan_strategy_with(a, b, strategy, pcfg, tile, Dataflow::Static, &cache)
+    }
+
+    /// [`Planner::plan_strategy`] with an explicit [`Dataflow`] mode.
+    ///
+    /// Under [`Dataflow::Static`] with the default cache this is exactly
+    /// `plan_strategy` (same fingerprint, same plan). Under
+    /// [`Dataflow::Auto`] a cache **miss** runs the traffic simulator's
+    /// tile search ([`sim::traffic::choose_plan_tile`]) over `cache` —
+    /// the caller's `tile` is the static candidate the search may only
+    /// improve on — and the winning tile shapes the built plan; a hit
+    /// replays the cached Auto plan without re-simulating. The cache
+    /// configuration is part of the Auto fingerprint, so plans tuned for
+    /// different memory hierarchies never collide.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_strategy_with(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        strategy: &AlgorithmStrategy,
+        pcfg: &PartitionerConfig,
+        tile: usize,
+        dataflow: Dataflow,
+        cache: &CacheConfig,
+    ) -> Result<Planned> {
         let t = Instant::now();
         let strategy = strategy.resolve(pcfg.parts)?;
-        let fp = fingerprint::fingerprint_strategy(a, b, &strategy, pcfg, tile);
+        let fp =
+            fingerprint::fingerprint_strategy_with(a, b, &strategy, pcfg, tile, dataflow, cache);
         let (bundle, outcome) = match self.store.lookup(fp) {
             StoreLookup::Hit(bundle) => (*bundle, PlanOutcome::Hit),
             miss => {
-                let bundle = self.build_bundle(a, b, &strategy, pcfg, tile)?;
+                let tile = match dataflow {
+                    Dataflow::Static => tile,
+                    Dataflow::Auto => sim::traffic::choose_plan_tile(a, b, cache, tile)?.0,
+                };
+                let bundle = self.build_bundle(a, b, &strategy, pcfg, tile, dataflow)?;
                 self.store.insert(fp, &bundle)?;
                 let outcome = match miss {
                     StoreLookup::Stale => PlanOutcome::Stale,
@@ -248,7 +288,7 @@ impl Planner {
                 (bundle, outcome)
             }
         };
-        let PlanBundle { strategy, part, alg, mut prepared, comm_max, volume } = bundle;
+        let PlanBundle { strategy, part, alg, mut prepared, comm_max, volume, dataflow } = bundle;
         bind_values(&mut prepared.plan, a, b);
         Ok(Planned {
             fingerprint: fp,
@@ -258,6 +298,7 @@ impl Planner {
             prepared,
             comm_max,
             volume,
+            dataflow,
             outcome,
             plan_ns: t.elapsed().as_nanos() as u64,
         })
@@ -276,6 +317,7 @@ impl Planner {
         strategy: &AlgorithmStrategy,
         pcfg: &PartitionerConfig,
         tile: usize,
+        dataflow: Dataflow,
     ) -> Result<PlanBundle> {
         let (part, alg, c_struct, comm_max, volume) = match *strategy {
             AlgorithmStrategy::HypergraphPartitioned { model: kind, with_nz } => {
@@ -306,6 +348,7 @@ impl Planner {
             prepared: PreparedPlan { c_struct, plan, tile },
             comm_max,
             volume,
+            dataflow,
         })
     }
 }
@@ -434,6 +477,31 @@ mod tests {
         )
         .unwrap();
         assert_eq!(planner.model_builds(), 2, "a different kind is a different model");
+    }
+
+    #[test]
+    fn auto_dataflow_keys_separately_and_hits() {
+        let (a, b) = instance(17);
+        let mut planner = Planner::in_memory();
+        let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(2) };
+        let strategy =
+            AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false };
+        let cache = CacheConfig::default();
+        let stat = planner.plan_strategy(&a, &b, &strategy, &cfg, 8).unwrap();
+        assert_eq!(stat.dataflow, Dataflow::Static);
+        let auto = planner
+            .plan_strategy_with(&a, &b, &strategy, &cfg, 8, Dataflow::Auto, &cache)
+            .unwrap();
+        assert_eq!(auto.outcome, PlanOutcome::Miss, "dataflow mode is part of the key");
+        assert_eq!(auto.dataflow, Dataflow::Auto);
+        assert_ne!(auto.fingerprint, stat.fingerprint);
+        // a warm Auto call replays the cached plan without re-simulating
+        let warm = planner
+            .plan_strategy_with(&a, &b, &strategy, &cfg, 8, Dataflow::Auto, &cache)
+            .unwrap();
+        assert_eq!(warm.outcome, PlanOutcome::Hit);
+        assert_eq!(warm.dataflow, Dataflow::Auto);
+        assert_eq!(warm.prepared, auto.prepared);
     }
 
     #[test]

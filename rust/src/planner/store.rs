@@ -185,6 +185,7 @@ mod tests {
             },
             comm_max: tag as u64,
             volume: 0,
+            dataflow: crate::sim::Dataflow::Static,
         }
     }
 

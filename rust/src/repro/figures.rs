@@ -10,6 +10,7 @@ use crate::gen::{self, Grid3};
 use crate::hypergraph::models::{build_model, ModelKind};
 use crate::partition::{self, PartitionerConfig};
 use crate::sim::sequential::{block_schedule, row_major_schedule, simulate_sequential};
+use crate::sim::{oracle_traffic, simulate_traffic, CacheConfig};
 use crate::sparse::{spgemm_flops, SpgemmStats};
 use crate::util::{Rng, Timer};
 use crate::Result;
@@ -271,6 +272,172 @@ pub fn sequential_experiment(seed: u64) -> Result<Vec<SeqRow>> {
     Ok(out)
 }
 
+/// One row of the cut-vs-traffic correlation experiment (`repro
+/// traffic`): one (instance, schedule) pair replayed through one cache.
+#[derive(Debug, Clone)]
+pub struct TrafficRow {
+    pub app: String,
+    pub instance: String,
+    /// `opt-sK` / `rand-K` partition-block schedules, or the `row-major`
+    /// Gustavson baseline.
+    pub schedule: String,
+    /// Connectivity-(λ−1) cut of the fine-grained partition behind the
+    /// schedule (0 for row-major, which has no partition).
+    pub cut: u64,
+    /// Set-associative LRU bytes moved for the schedule.
+    pub traffic: u64,
+    /// Belady-style MIN oracle bytes for the same schedule
+    /// (informational floor; the loads-domination contract is tested in
+    /// `sim::traffic`).
+    pub oracle: u64,
+}
+
+/// Blocks used for every traffic-experiment partition — fixed, so cut
+/// differences across rows come from partition quality alone.
+pub const TRAFFIC_BLOCKS: usize = 8;
+
+/// Measure one instance: three FM-optimized fine-grained partitions
+/// (different seeds) and three random ones (a deliberate quality
+/// spread), each replayed as a block schedule through `cache`, plus the
+/// row-major baseline. The spread is what lets `repro traffic`
+/// correlate cut against simulated bytes (the paper's Sec. 4.2 claim
+/// that the fine-grained cut is a proxy for memory traffic).
+pub fn traffic_rows_for(
+    app: &str,
+    inst: &Instance,
+    cache: &CacheConfig,
+    seed: u64,
+) -> Result<Vec<TrafficRow>> {
+    let model = build_model(&inst.a, &inst.b, ModelKind::FineGrained, false)?;
+    let nv = model.h.num_vertices();
+    let mut rows = Vec::new();
+    let mut measure = |schedule: String, cut: u64, order: &[u64]| -> Result<()> {
+        let lru = simulate_traffic(&inst.a, &inst.b, order, cache)?;
+        let min = oracle_traffic(&inst.a, &inst.b, order, cache)?;
+        rows.push(TrafficRow {
+            app: app.to_string(),
+            instance: inst.name.clone(),
+            schedule,
+            cut,
+            traffic: lru.total(),
+            oracle: min.total(),
+        });
+        Ok(())
+    };
+    measure("row-major".into(), 0, &row_major_schedule(&inst.a, &inst.b))?;
+    for s in 0..3u64 {
+        let cfg = PartitionerConfig {
+            epsilon: 0.5,
+            seed: seed.wrapping_add(s),
+            threads: partition::default_threads(),
+            ..PartitionerConfig::new(TRAFFIC_BLOCKS)
+        };
+        let part = partition::partition(&model.h, &cfg)?;
+        let cut = crate::cost::evaluate(&model.h, &part, TRAFFIC_BLOCKS)?.connectivity_volume;
+        measure(format!("opt-s{s}"), cut, &block_schedule(&part, TRAFFIC_BLOCKS))?;
+    }
+    let mut rng = Rng::new(seed ^ 0xA5A5_5A5A);
+    for s in 0..3 {
+        let part: Vec<u32> = (0..nv).map(|_| rng.below(TRAFFIC_BLOCKS) as u32).collect();
+        let cut = crate::cost::evaluate(&model.h, &part, TRAFFIC_BLOCKS)?.connectivity_volume;
+        measure(format!("rand-{s}"), cut, &block_schedule(&part, TRAFFIC_BLOCKS))?;
+    }
+    Ok(rows)
+}
+
+/// `repro traffic`: one representative instance per application (the
+/// AMG A·P model problem, the first LP instance, the MCL `facebook`
+/// analogue) through [`traffic_rows_for`].
+pub fn traffic_experiment(scale: u32, seed: u64, cache: &CacheConfig) -> Result<Vec<TrafficRow>> {
+    let n = workloads::amg_ladder(scale)[0].0.min(8);
+    let (ap, _ptap) = workloads::amg_model_problem(n)?;
+    let lp = workloads::lp_instances(scale, seed)?;
+    let mcl = workloads::mcl_instances(scale, seed)?;
+    let fb = mcl
+        .iter()
+        .find(|i| i.name == "facebook")
+        .expect("mcl_instances always includes facebook");
+    let mut rows = Vec::new();
+    rows.extend(traffic_rows_for("amg", &ap, cache, seed)?);
+    rows.extend(traffic_rows_for("lp", &lp[0], cache, seed)?);
+    rows.extend(traffic_rows_for("mcl", fb, cache, seed)?);
+    Ok(rows)
+}
+
+/// Pearson correlation of two equal-length samples; 0 when degenerate
+/// (mismatched/short inputs or vanishing variance).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Pretty-print the traffic rows plus the per-instance cut↔traffic
+/// Pearson correlation over the partitioned (non-row-major) schedules.
+pub fn print_traffic(rows: &[TrafficRow], cache: &CacheConfig) {
+    println!(
+        "\n=== storage traffic vs. fine-grained cut ({} KiB cache, {}B lines, {}-way) ===",
+        cache.capacity_bytes / 1024,
+        cache.line_bytes,
+        cache.assoc
+    );
+    println!(
+        "{:<6} {:<16} {:<10} {:>12} {:>14} {:>14}",
+        "app", "instance", "schedule", "cut", "lru_bytes", "oracle_bytes"
+    );
+    for r in rows {
+        println!(
+            "{:<6} {:<16} {:<10} {:>12} {:>14} {:>14}",
+            r.app, r.instance, r.schedule, r.cut, r.traffic, r.oracle
+        );
+    }
+    let mut instances: Vec<(&str, &str)> = Vec::new();
+    for r in rows {
+        if !instances.iter().any(|(a, i)| *a == r.app && *i == r.instance) {
+            instances.push((&r.app, &r.instance));
+        }
+    }
+    for (app, instance) in instances {
+        let (xs, ys): (Vec<f64>, Vec<f64>) = rows
+            .iter()
+            .filter(|r| r.app == app && r.instance == instance && r.schedule != "row-major")
+            .map(|r| (r.cut as f64, r.traffic as f64))
+            .unzip();
+        println!("{app}/{instance}: cut vs traffic Pearson r = {:.3}", pearson(&xs, &ys));
+    }
+}
+
+/// Write the traffic rows as CSV.
+pub fn write_traffic_csv(path: &std::path::Path, rows: &[TrafficRow]) -> Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "app,instance,schedule,cut,traffic_bytes,oracle_bytes")?;
+    for r in rows {
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            r.app, r.instance, r.schedule, r.cut, r.traffic, r.oracle
+        )?;
+    }
+    Ok(())
+}
+
 /// One row of the model-vs-oblivious comparison (`repro baselines`):
 /// a hypergraph-partitioned algorithm against the communication-oblivious
 /// Sparse SUMMA and split-3D baselines on the same instance, scored by
@@ -507,6 +674,53 @@ mod tests {
         // fine-grained model beats the oblivious grid algorithms
         assert!(fine.volume < summa.volume, "fine {} vs summa {}", fine.volume, summa.volume);
         assert!(fine.volume < split.volume, "fine {} vs split3d {}", fine.volume, split.volume);
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let up = [2.0, 4.0, 6.0, 8.0];
+        let down = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &up) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &down) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[5.0, 5.0, 5.0, 5.0]), 0.0, "zero variance");
+        assert_eq!(pearson(&xs, &xs[..2]), 0.0, "length mismatch");
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0, "too short");
+    }
+
+    /// Miniature `repro traffic`: on a stencil squaring with a cache far
+    /// smaller than the working set, optimized partitions move fewer
+    /// simulated bytes than random ones and cut correlates positively
+    /// with traffic — the Sec. 4.2 claim the full target reports.
+    #[test]
+    fn traffic_tracks_cut_quality_small() {
+        let a = gen::stencil27(5);
+        let inst = Instance { name: "stencil5".into(), a: a.clone(), b: a };
+        let cache = CacheConfig { capacity_bytes: 2048, line_bytes: 16, assoc: 2 };
+        let rows = traffic_rows_for("amg", &inst, &cache, 11).unwrap();
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            assert!(r.traffic > 0 && r.oracle > 0, "{}: empty simulation", r.schedule);
+        }
+        let mean = |tag: &str| {
+            let picked: Vec<u64> = rows
+                .iter()
+                .filter(|r| r.schedule.starts_with(tag))
+                .map(|r| r.traffic)
+                .collect();
+            assert_eq!(picked.len(), 3, "{tag}");
+            picked.iter().sum::<u64>() / 3
+        };
+        assert!(
+            mean("opt-") < mean("rand-"),
+            "optimized partitions should move fewer bytes than random ones"
+        );
+        let (xs, ys): (Vec<f64>, Vec<f64>) = rows
+            .iter()
+            .filter(|r| r.schedule != "row-major")
+            .map(|r| (r.cut as f64, r.traffic as f64))
+            .unzip();
+        assert!(pearson(&xs, &ys) > 0.0, "cut should predict traffic");
     }
 
     #[test]

@@ -15,11 +15,24 @@
 //!   multiplication schedule against an LRU fast memory of `M` words,
 //!   counting loads and stores (Lem. 4.9's blocked algorithm is one such
 //!   schedule).
+//! * [`traffic`] — the byte-accurate refinement of [`sequential`]: a
+//!   set-associative cache (configurable capacity / line / associativity)
+//!   replaying tiled or partition-reordered Gustavson schedules with
+//!   per-stream byte counters, a Belady-style MIN oracle lower bound,
+//!   and the predicted-traffic selectors ([`traffic::choose_plan_tile`],
+//!   [`traffic::choose_kernel_traffic`]) behind
+//!   [`traffic::Dataflow::Auto`].
 
 pub mod parallel;
 pub mod sequential;
 pub mod threads;
+pub mod traffic;
 
 pub use parallel::{lower, simulate, Algorithm, SimReport};
 pub use sequential::{simulate_sequential, SeqReport};
-pub use threads::{simulate_threaded, spgemm_parallel, spgemm_parallel_with};
+pub use threads::{
+    simulate_threaded, spgemm_parallel, spgemm_parallel_traffic, spgemm_parallel_with,
+};
+pub use traffic::{
+    oracle_traffic, simulate_traffic, tiled_schedule, CacheConfig, Dataflow, TrafficReport,
+};

@@ -16,6 +16,7 @@
 //! suite asserts exact equality across thread counts and workloads.
 
 use super::parallel::{finish, push_unique, Algorithm, Gathered, SimReport};
+use super::traffic::{choose_kernel_traffic, CacheConfig};
 use crate::sparse::kernels::spgemm_rows_with;
 use crate::sparse::{spgemm_structure, spgemm_with, Csr, KernelKind};
 use crate::{Error, Result};
@@ -105,6 +106,51 @@ pub fn spgemm_parallel_with(a: &Csr, b: &Csr, nthreads: usize, kind: KernelKind)
         .iter()
         .map(|r| kind.resolve_block(b.ncols, r.len(), || costs[r.clone()].iter().sum()))
         .collect();
+    run_row_blocks(a, b, &blocks, kinds)
+}
+
+/// Row-block parallel Gustavson SpGEMM whose per-block accumulator is
+/// chosen by the storage-traffic cost model
+/// ([`crate::sim::traffic::choose_kernel_traffic`]) instead of the fill
+/// heuristic of [`KernelKind::resolve_block`]. Output stays bit-identical
+/// to [`crate::sparse::spgemm`] for every cache configuration and thread
+/// count — the selector only changes *which* (bit-identical) accumulator
+/// runs on each block.
+pub fn spgemm_parallel_traffic(
+    a: &Csr,
+    b: &Csr,
+    nthreads: usize,
+    cache: &CacheConfig,
+) -> Result<Csr> {
+    if a.ncols != b.nrows {
+        return Err(Error::dim(format!(
+            "spgemm_parallel_traffic: A is {}x{}, B is {}x{}",
+            a.nrows, a.ncols, b.nrows, b.ncols
+        )));
+    }
+    if nthreads == 0 {
+        return Err(Error::invalid("spgemm_parallel_traffic: nthreads must be >= 1"));
+    }
+    let costs = row_mult_counts(a, b);
+    let blocks = row_blocks(&costs, nthreads);
+    let kinds: Vec<KernelKind> = blocks
+        .iter()
+        .map(|r| {
+            choose_kernel_traffic(cache, b.ncols, r.len(), costs[r.clone()].iter().sum::<u64>())
+        })
+        .collect();
+    run_row_blocks(a, b, &blocks, kinds)
+}
+
+/// Spawn one scoped thread per row block with its resolved concrete
+/// kernel and merge the per-block outputs in block (= canonical) order —
+/// the shared tail of both parallel entry points.
+fn run_row_blocks(
+    a: &Csr,
+    b: &Csr,
+    blocks: &[Range<usize>],
+    kinds: Vec<KernelKind>,
+) -> Result<Csr> {
     let results: Vec<(Vec<usize>, Vec<u32>, Vec<f64>)> = std::thread::scope(|s| {
         let handles: Vec<_> = blocks
             .iter()
@@ -351,6 +397,28 @@ mod tests {
                 assert_eq!(par, seq, "kernel {} threads {t}", kind.name());
             }
         }
+    }
+
+    #[test]
+    fn traffic_kernel_selection_stays_bit_identical() {
+        let mut rng = Rng::new(99);
+        let a = random_csr(&mut rng, 24, 20, 0.2);
+        let b = random_csr(&mut rng, 20, 30, 0.2);
+        let seq = spgemm(&a, &b).unwrap();
+        for cache in [
+            CacheConfig::default(),
+            CacheConfig { capacity_bytes: 1024, line_bytes: 16, assoc: 2 },
+        ] {
+            for t in [1usize, 2, 4, 7] {
+                let par = spgemm_parallel_traffic(&a, &b, t, &cache).unwrap();
+                par.validate().unwrap();
+                assert_eq!(par, seq, "cache={cache:?} threads={t}");
+            }
+        }
+        let bad = Csr::zero(2, 3);
+        let dflt = CacheConfig::default();
+        assert!(spgemm_parallel_traffic(&bad, &Csr::zero(4, 2), 2, &dflt).is_err());
+        assert!(spgemm_parallel_traffic(&bad, &Csr::zero(3, 2), 0, &dflt).is_err());
     }
 
     #[test]

@@ -1,0 +1,670 @@
+//! Memory-hierarchy storage-traffic simulator (the paper's sequential
+//! claim, Sec. 4.2, made byte-accurate).
+//!
+//! [`sequential`](super::sequential) counts *words* against a perfect
+//! LRU; this module counts *bytes moved through a set-associative cache*
+//! — configurable line size, capacity, and associativity — while
+//! replaying a (possibly tiled or partition-reordered) Gustavson
+//! schedule, in the style of Spada's `storage_traffic_model` (ASPLOS
+//! 2023). Each CSR entry is [`ENTRY_BYTES`] wide (an 8-byte value plus a
+//! 4-byte column index); the A, B, and C streams live in disjoint
+//! line-aligned address regions, so every cache line belongs to exactly
+//! one stream and the per-stream byte counters in [`TrafficReport`] are
+//! exact.
+//!
+//! Two replacement policies are provided: the set-associative LRU of
+//! [`simulate_traffic`] (the "real machine"), and the Belady-style MIN
+//! oracle of [`oracle_traffic`] (fully associative, evicts the resident
+//! line whose next use is farthest in the future), a lower bound on
+//! loads for any demand-paging policy — spada-sim's
+//! `oracle_storage_traffic_model` shape.
+//!
+//! On top of the simulator sit the adaptive-dataflow selectors:
+//! [`tiled_schedule`] builds row×k tiled Gustavson schedules,
+//! [`choose_plan_tile`] picks a tile edge by predicted traffic
+//! (always considering the caller's static tile, so it is never worse
+//! than the static choice by construction), and
+//! [`choose_kernel_traffic`] replaces the fill heuristic
+//! [`crate::sparse::kernels::choose_kernel`] with a per-accumulator
+//! byte-cost model parameterized by the cache.
+
+use crate::hypergraph::models::MultEnum;
+use crate::sparse::{spgemm_structure, Csr, KernelKind};
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Bytes per CSR entry: an 8-byte `f64` value plus a 4-byte column index.
+pub const ENTRY_BYTES: u64 = 12;
+
+/// A set-associative cache: `capacity_bytes / line_bytes` lines organized
+/// into `capacity_bytes / (line_bytes · assoc)` sets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    pub capacity_bytes: u64,
+    pub line_bytes: u64,
+    pub assoc: usize,
+}
+
+impl Default for CacheConfig {
+    /// A last-level-cache-per-core-ish default: 256 KiB, 64-byte lines,
+    /// 8-way.
+    fn default() -> Self {
+        CacheConfig { capacity_bytes: 256 * 1024, line_bytes: 64, assoc: 8 }
+    }
+}
+
+impl CacheConfig {
+    /// Total line slots.
+    pub fn lines(&self) -> usize {
+        (self.capacity_bytes / self.line_bytes.max(1)).max(1) as usize
+    }
+
+    /// A fully-associative variant with the same capacity and line size
+    /// (one set holding every line) — the fairest LRU to compare the MIN
+    /// oracle against.
+    pub fn fully_associative(&self) -> CacheConfig {
+        CacheConfig { assoc: self.lines(), ..*self }
+    }
+
+    fn num_sets(&self) -> usize {
+        (self.capacity_bytes / (self.line_bytes.max(1) * self.assoc.max(1) as u64)).max(1) as usize
+    }
+
+    /// Reject configurations the simulator cannot model (lines shorter
+    /// than one value+index entry, zero ways, capacity below one set).
+    pub fn validate(&self) -> Result<()> {
+        if self.line_bytes < 8 {
+            return Err(Error::invalid("cache line must be at least 8 bytes"));
+        }
+        if self.assoc == 0 {
+            return Err(Error::invalid("cache associativity must be at least 1"));
+        }
+        if self.capacity_bytes < self.line_bytes * self.assoc as u64 {
+            return Err(Error::invalid("cache capacity must hold at least one set"));
+        }
+        Ok(())
+    }
+}
+
+/// How the planner picks tile shape and per-block accumulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dataflow {
+    /// The pre-existing path: caller-given tile, fill-heuristic `Auto`
+    /// kernel dispatch ([`crate::sparse::kernels::choose_kernel`]).
+    #[default]
+    Static,
+    /// Predicted-traffic selection: tile edge via [`choose_plan_tile`],
+    /// per-block kernels via [`choose_kernel_traffic`].
+    Auto,
+}
+
+impl Dataflow {
+    /// Stable CLI / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::Static => "static",
+            Dataflow::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s {
+            "static" => Some(Dataflow::Static),
+            "auto" | "adaptive" | "traffic" => Some(Dataflow::Auto),
+            _ => None,
+        }
+    }
+
+    /// Stable codec tag.
+    pub fn id(&self) -> u8 {
+        match self {
+            Dataflow::Static => 0,
+            Dataflow::Auto => 1,
+        }
+    }
+
+    /// Inverse of [`Dataflow::id`].
+    pub fn from_id(id: u8) -> Option<Dataflow> {
+        match id {
+            0 => Some(Dataflow::Static),
+            1 => Some(Dataflow::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Bytes moved between the cache and slow memory, split by stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TrafficReport {
+    /// A-entry lines fetched.
+    pub a_bytes: u64,
+    /// B-entry lines fetched.
+    pub b_bytes: u64,
+    /// Final C write-backs at flush.
+    pub c_bytes: u64,
+    /// Evicted-then-revisited C partial lines fetched back in.
+    pub partial_in_bytes: u64,
+    /// Dirty C partial lines written back mid-run (before flush).
+    pub partial_out_bytes: u64,
+    /// Scheduled multiplications executed.
+    pub mults: u64,
+}
+
+impl TrafficReport {
+    /// Slow→fast bytes.
+    pub fn loads(&self) -> u64 {
+        self.a_bytes + self.b_bytes + self.partial_in_bytes
+    }
+
+    /// Fast→slow bytes.
+    pub fn stores(&self) -> u64 {
+        self.c_bytes + self.partial_out_bytes
+    }
+
+    /// Total bytes moved.
+    pub fn total(&self) -> u64 {
+        self.loads() + self.stores()
+    }
+}
+
+/// Which address region a line belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Stream {
+    A,
+    B,
+    C,
+}
+
+/// The unified line-address layout: A at line 0, B and C following in
+/// line-aligned regions (ceil-divided), so streams never share a line.
+struct Layout {
+    line_bytes: u64,
+    b_base: u64,
+    c_base: u64,
+}
+
+impl Layout {
+    fn new(a: &Csr, b: &Csr, line_bytes: u64) -> Layout {
+        let lines = |entries: usize| (entries as u64 * ENTRY_BYTES).div_ceil(line_bytes);
+        let b_base = lines(a.nnz());
+        let c_base = b_base + lines(b.nnz());
+        Layout { line_bytes, b_base, c_base }
+    }
+
+    fn a_line(&self, pa: u32) -> u64 {
+        pa as u64 * ENTRY_BYTES / self.line_bytes
+    }
+
+    fn b_line(&self, pb: u32) -> u64 {
+        self.b_base + pb as u64 * ENTRY_BYTES / self.line_bytes
+    }
+
+    fn c_line(&self, pc: u32) -> u64 {
+        self.c_base + pc as u64 * ENTRY_BYTES / self.line_bytes
+    }
+
+    fn stream(&self, line: u64) -> Stream {
+        if line >= self.c_base {
+            Stream::C
+        } else if line >= self.b_base {
+            Stream::B
+        } else {
+            Stream::A
+        }
+    }
+}
+
+/// One resident way of a set.
+#[derive(Debug, Clone, Copy)]
+struct Way {
+    line: u64,
+    last_use: u64,
+    dirty: bool,
+}
+
+struct SetAssocCache {
+    sets: Vec<Vec<Way>>,
+    assoc: usize,
+    line_bytes: u64,
+    clock: u64,
+    report: TrafficReport,
+}
+
+impl SetAssocCache {
+    fn new(cfg: &CacheConfig) -> SetAssocCache {
+        SetAssocCache {
+            sets: vec![Vec::new(); cfg.num_sets()],
+            assoc: cfg.assoc,
+            line_bytes: cfg.line_bytes,
+            clock: 0,
+            report: TrafficReport::default(),
+        }
+    }
+
+    /// Touch `line`; `dirty` marks it modified (C partials), and
+    /// `load_if_missing = false` is the write-allocate-no-fetch path for
+    /// a C line's first touch.
+    fn touch(&mut self, line: u64, stream: Stream, dirty: bool, load_if_missing: bool) {
+        self.clock += 1;
+        let set = (line % self.sets.len() as u64) as usize;
+        let ways = &mut self.sets[set];
+        if let Some(w) = ways.iter_mut().find(|w| w.line == line) {
+            w.last_use = self.clock;
+            w.dirty |= dirty;
+            return;
+        }
+        if ways.len() >= self.assoc {
+            let victim = ways
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.last_use)
+                .map(|(i, _)| i)
+                .expect("nonempty set");
+            if ways.swap_remove(victim).dirty {
+                self.report.partial_out_bytes += self.line_bytes;
+            }
+        }
+        if load_if_missing {
+            match stream {
+                Stream::A => self.report.a_bytes += self.line_bytes,
+                Stream::B => self.report.b_bytes += self.line_bytes,
+                Stream::C => self.report.partial_in_bytes += self.line_bytes,
+            }
+        }
+        ways.push(Way { line, last_use: self.clock, dirty });
+    }
+
+    fn flush(&mut self) {
+        for set in &self.sets {
+            for w in set {
+                if w.dirty {
+                    self.report.c_bytes += self.line_bytes;
+                }
+            }
+        }
+        self.sets.iter_mut().for_each(Vec::clear);
+    }
+}
+
+/// The canonical mult table `idx -> (pa, pb, pc)` plus the output
+/// structure — shared by both simulators.
+fn mult_table(a: &Csr, b: &Csr) -> Result<(Csr, Vec<(u32, u32, u32)>)> {
+    let c = spgemm_structure(a, b)?;
+    let flops = MultEnum::new(a, b).count() as usize;
+    let mut table: Vec<(u32, u32, u32)> = vec![(0, 0, 0); flops];
+    MultEnum::new(a, b).for_each(|m| {
+        let pc = c.rowptr[m.i as usize] + c.row_cols(m.i as usize).binary_search(&m.j).unwrap();
+        table[m.idx as usize] = (m.pa, m.pb, pc as u32);
+    });
+    Ok((c, table))
+}
+
+/// Replay `schedule` (a permutation of the canonical mult indices, or
+/// any subsequence) through a set-associative LRU cache, counting bytes
+/// per stream. A C line's *first* touch allocates without fetching
+/// (write-allocate-no-fetch); once the line has been started, a miss
+/// fetches it back as partial-sum traffic.
+pub fn simulate_traffic(
+    a: &Csr,
+    b: &Csr,
+    schedule: &[u64],
+    cache: &CacheConfig,
+) -> Result<TrafficReport> {
+    cache.validate()?;
+    let (c, table) = mult_table(a, b)?;
+    let layout = Layout::new(a, b, cache.line_bytes);
+    let c_lines = (c.nnz() as u64 * ENTRY_BYTES).div_ceil(cache.line_bytes) as usize;
+    let mut c_started = vec![false; c_lines];
+    let mut sim = SetAssocCache::new(cache);
+    for &idx in schedule {
+        let (pa, pb, pc) = table[idx as usize];
+        sim.touch(layout.a_line(pa), Stream::A, false, true);
+        sim.touch(layout.b_line(pb), Stream::B, false, true);
+        let cl = layout.c_line(pc);
+        let rel = (cl - layout.c_base) as usize;
+        sim.touch(cl, Stream::C, true, c_started[rel]);
+        c_started[rel] = true;
+        sim.report.mults += 1;
+    }
+    sim.flush();
+    Ok(sim.report)
+}
+
+/// Belady-style MIN oracle: fully associative at the same capacity,
+/// evicting the resident line whose next use is farthest in the future.
+/// A lower bound on loads for any demand-paging replacement policy at
+/// this capacity — compare against
+/// `simulate_traffic(.., &cache.fully_associative())`.
+pub fn oracle_traffic(
+    a: &Csr,
+    b: &Csr,
+    schedule: &[u64],
+    cache: &CacheConfig,
+) -> Result<TrafficReport> {
+    cache.validate()?;
+    let (_c, table) = mult_table(a, b)?;
+    let layout = Layout::new(a, b, cache.line_bytes);
+    // materialize the line trace (3 accesses per scheduled mult)
+    let mut trace: Vec<u64> = Vec::with_capacity(schedule.len() * 3);
+    for &idx in schedule {
+        let (pa, pb, pc) = table[idx as usize];
+        trace.push(layout.a_line(pa));
+        trace.push(layout.b_line(pb));
+        trace.push(layout.c_line(pc));
+    }
+    // next_use[t] = next position touching trace[t]'s line, else MAX
+    let mut next_use = vec![usize::MAX; trace.len()];
+    let mut last_seen: HashMap<u64, usize> = HashMap::new();
+    for (t, &line) in trace.iter().enumerate().rev() {
+        if let Some(&n) = last_seen.get(&line) {
+            next_use[t] = n;
+        }
+        last_seen.insert(line, t);
+    }
+    let capacity = cache.lines();
+    let mut resident: HashMap<u64, (usize, bool)> = HashMap::new();
+    let mut c_started: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let mut report = TrafficReport::default();
+    for (t, &line) in trace.iter().enumerate() {
+        let stream = layout.stream(line);
+        let dirty = stream == Stream::C;
+        if let Some(e) = resident.get_mut(&line) {
+            e.0 = next_use[t];
+            e.1 |= dirty;
+        } else {
+            if resident.len() >= capacity {
+                let (&victim, &(_, vdirty)) =
+                    resident.iter().max_by_key(|(_, &(n, _))| n).expect("nonempty cache");
+                if vdirty {
+                    report.partial_out_bytes += cache.line_bytes;
+                }
+                resident.remove(&victim);
+            }
+            let started = c_started.contains(&line);
+            match stream {
+                Stream::A => report.a_bytes += cache.line_bytes,
+                Stream::B => report.b_bytes += cache.line_bytes,
+                Stream::C if started => report.partial_in_bytes += cache.line_bytes,
+                Stream::C => {} // write-allocate-no-fetch
+            }
+            resident.insert(line, (next_use[t], dirty));
+        }
+        if dirty {
+            c_started.insert(line);
+        }
+    }
+    for &(_, dirty) in resident.values() {
+        if dirty {
+            report.c_bytes += cache.line_bytes;
+        }
+    }
+    report.mults = schedule.len() as u64;
+    Ok(report)
+}
+
+/// A row×k tiled Gustavson schedule: A-row blocks of `row_block` rows
+/// outermost, k-tiles of `k_block` columns of A within each block,
+/// canonical order inside a tile. `(nrows, ncols)` blocks reproduce the
+/// canonical row-major order; the result is always a permutation of the
+/// canonical mult indices.
+pub fn tiled_schedule(a: &Csr, b: &Csr, row_block: usize, k_block: usize) -> Vec<u64> {
+    let rb = row_block.max(1);
+    let kb = k_block.max(1);
+    // mult_start[pa] = canonical index of A-entry pa's first product
+    let mut mult_start = vec![0u64; a.nnz() + 1];
+    for (pa, &k) in a.colind.iter().enumerate() {
+        let blen = (b.rowptr[k as usize + 1] - b.rowptr[k as usize]) as u64;
+        mult_start[pa + 1] = mult_start[pa] + blen;
+    }
+    let mut sched = Vec::with_capacity(mult_start[a.nnz()] as usize);
+    for r0 in (0..a.nrows).step_by(rb) {
+        let r1 = (r0 + rb).min(a.nrows);
+        let mut k0 = 0usize;
+        while k0 < a.ncols {
+            let k1 = k0 + kb;
+            for i in r0..r1 {
+                let row = a.rowptr[i]..a.rowptr[i + 1];
+                let cols = &a.colind[row.clone()];
+                let lo = row.start + cols.partition_point(|&c| (c as usize) < k0);
+                let hi = row.start + cols.partition_point(|&c| (c as usize) < k1);
+                for pa in lo..hi {
+                    sched.extend(mult_start[pa]..mult_start[pa + 1]);
+                }
+            }
+            k0 = k1;
+        }
+    }
+    sched
+}
+
+/// Pick the tile edge for the execution plan by *predicted traffic*:
+/// simulate the row×k tiled schedule for each candidate edge (the static
+/// `static_tile` is always a candidate, so the adaptive choice is never
+/// worse than the static one under this model) and return
+/// `(best_tile, its_simulated_bytes)`. Ties keep the earliest candidate,
+/// and `static_tile` is tried first.
+pub fn choose_plan_tile(
+    a: &Csr,
+    b: &Csr,
+    cache: &CacheConfig,
+    static_tile: usize,
+) -> Result<(usize, u64)> {
+    let candidates: Vec<usize> = [static_tile.max(1), 4, 8, 16, 32].to_vec();
+    let mut seen: Vec<usize> = Vec::new();
+    let mut best: Option<(usize, u64)> = None;
+    for tile in candidates {
+        if seen.contains(&tile) {
+            continue;
+        }
+        seen.push(tile);
+        let sched = tiled_schedule(a, b, tile, tile.saturating_mul(8));
+        let bytes = simulate_traffic(a, b, &sched, cache)?.total();
+        match best {
+            Some((_, bb)) if bytes >= bb => {}
+            _ => best = Some((tile, bytes)),
+        }
+    }
+    best.ok_or_else(|| Error::invalid("choose_plan_tile: empty candidate set"))
+}
+
+/// Traffic-model replacement for the fill heuristic
+/// [`crate::sparse::kernels::choose_kernel`]: estimate the bytes each
+/// accumulator moves for a block of `rows` output rows with
+/// `total_mults` products into an `ncols`-wide output, and pick the
+/// cheapest. The estimates are cache-parameterized:
+///
+/// * **DenseSpa** streams products (`12·m`) plus a one-time accumulator
+///   init while its `12·ncols`-byte working set fits the cache; once it
+///   spills, every probe is a potential line miss (`line_bytes·m`).
+/// * **HashAccum** rebuilds a per-row table: `12·m·(1 + avg/24)` — the
+///   rebuild overhead grows with row size.
+/// * **SortMerge** streams the product list twice (expand + merge):
+///   `2·12·m`, line-friendly at any row size.
+///
+/// Degenerate blocks (`ncols == 0` or no products) fall back to
+/// `SortMerge`, matching `choose_kernel`.
+pub fn choose_kernel_traffic(
+    cache: &CacheConfig,
+    ncols: usize,
+    rows: usize,
+    total_mults: u64,
+) -> KernelKind {
+    if ncols == 0 || total_mults == 0 {
+        return KernelKind::SortMerge;
+    }
+    let m = total_mults as f64 * ENTRY_BYTES as f64;
+    let avg = total_mults as f64 / rows.max(1) as f64;
+    let spa_ws = ncols as u64 * ENTRY_BYTES;
+    let dense = if spa_ws <= cache.capacity_bytes {
+        m + spa_ws as f64
+    } else {
+        total_mults as f64 * cache.line_bytes as f64
+    };
+    let hash = m * (1.0 + avg / 24.0);
+    let sort = 2.0 * m;
+    let mut best = (KernelKind::DenseSpa, dense);
+    for cand in [(KernelKind::HashAccum, hash), (KernelKind::SortMerge, sort)] {
+        if cand.1 < best.1 {
+            best = cand;
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sequential::row_major_schedule;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn random_csr(rng: &mut Rng, nr: usize, nc: usize, d: f64) -> Csr {
+        let mut coo = Coo::new(nr, nc);
+        for i in 0..nr {
+            coo.push(i, rng.below(nc), 1.0);
+            for j in 0..nc {
+                if rng.chance(d) {
+                    coo.push(i, j, 1.0);
+                }
+            }
+        }
+        for j in 0..nc {
+            coo.push(rng.below(nr), j, 1.0);
+        }
+        let mut m = Csr::from_coo(&coo);
+        for v in &mut m.values {
+            *v = 1.0;
+        }
+        m
+    }
+
+    fn tiny_cache() -> CacheConfig {
+        CacheConfig { capacity_bytes: 256, line_bytes: 16, assoc: 2 }
+    }
+
+    fn huge_cache() -> CacheConfig {
+        CacheConfig { capacity_bytes: 1 << 26, line_bytes: 64, assoc: 8 }
+    }
+
+    #[test]
+    fn tiled_schedule_is_permutation() {
+        let mut rng = Rng::new(11);
+        let a = random_csr(&mut rng, 13, 9, 0.3);
+        let b = random_csr(&mut rng, 9, 11, 0.3);
+        let n = MultEnum::new(&a, &b).count();
+        for (rb, kb) in [(1, 1), (4, 3), (13, 9), (100, 100)] {
+            let mut s = tiled_schedule(&a, &b, rb, kb);
+            assert_eq!(s.len() as u64, n, "rb={rb} kb={kb}");
+            s.sort_unstable();
+            assert!(s.iter().enumerate().all(|(i, &x)| i as u64 == x), "rb={rb} kb={kb}");
+        }
+        // full-matrix tiles reproduce canonical row-major order
+        assert_eq!(tiled_schedule(&a, &b, a.nrows, a.ncols), row_major_schedule(&a, &b));
+    }
+
+    #[test]
+    fn huge_cache_sees_only_compulsory_traffic() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(&mut rng, 12, 10, 0.3);
+        let b = random_csr(&mut rng, 10, 8, 0.3);
+        let cache = huge_cache();
+        let rep = simulate_traffic(&a, &b, &row_major_schedule(&a, &b), &cache).unwrap();
+        assert_eq!(rep.partial_in_bytes, 0);
+        assert_eq!(rep.partial_out_bytes, 0);
+        // every C line is written exactly once at flush
+        let c = spgemm_structure(&a, &b).unwrap();
+        let c_lines = (c.nnz() as u64 * ENTRY_BYTES).div_ceil(cache.line_bytes);
+        assert_eq!(rep.c_bytes, c_lines * cache.line_bytes);
+        // loads are bounded by each input's full extent
+        let lb = cache.line_bytes;
+        let ext = |nnz: usize| (nnz as u64 * ENTRY_BYTES).div_ceil(lb) * lb;
+        assert!(rep.a_bytes <= ext(a.nnz()));
+        assert!(rep.b_bytes <= ext(b.nnz()));
+        assert_eq!(rep.mults, MultEnum::new(&a, &b).count());
+    }
+
+    #[test]
+    fn small_cache_moves_more_than_big() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(&mut rng, 16, 16, 0.3);
+        let b = random_csr(&mut rng, 16, 16, 0.3);
+        let sched = row_major_schedule(&a, &b);
+        let small = simulate_traffic(&a, &b, &sched, &tiny_cache()).unwrap();
+        let big = simulate_traffic(&a, &b, &sched, &huge_cache()).unwrap();
+        assert!(small.total() > big.total(), "small={} big={}", small.total(), big.total());
+    }
+
+    #[test]
+    fn oracle_never_loads_more_than_fully_associative_lru() {
+        let mut rng = Rng::new(7);
+        let a = random_csr(&mut rng, 14, 14, 0.3);
+        let b = random_csr(&mut rng, 14, 14, 0.3);
+        for cap in [256u64, 1024, 1 << 16] {
+            let cache = CacheConfig { capacity_bytes: cap, line_bytes: 16, assoc: 2 };
+            for sched in [row_major_schedule(&a, &b), tiled_schedule(&a, &b, 4, 32)] {
+                let lru = simulate_traffic(&a, &b, &sched, &cache.fully_associative()).unwrap();
+                let min = oracle_traffic(&a, &b, &sched, &cache).unwrap();
+                assert!(
+                    min.loads() <= lru.loads(),
+                    "cap={cap}: oracle {} > lru {}",
+                    min.loads(),
+                    lru.loads()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chosen_plan_tile_never_beats_static_candidate() {
+        let mut rng = Rng::new(9);
+        let a = random_csr(&mut rng, 20, 20, 0.25);
+        let b = random_csr(&mut rng, 20, 20, 0.25);
+        let cache = tiny_cache();
+        let static_tile = 8usize;
+        let (tile, bytes) = choose_plan_tile(&a, &b, &cache, static_tile).unwrap();
+        assert!(tile >= 1);
+        let static_sched = tiled_schedule(&a, &b, static_tile, static_tile * 8);
+        let static_bytes = simulate_traffic(&a, &b, &static_sched, &cache).unwrap().total();
+        assert!(bytes <= static_bytes, "adaptive {bytes} > static {static_bytes}");
+    }
+
+    #[test]
+    fn kernel_cost_model_matches_expected_regimes() {
+        let cache = CacheConfig::default();
+        // dense-ish rows with a cache-resident accumulator → SPA
+        assert_eq!(choose_kernel_traffic(&cache, 100, 10, 400), KernelKind::DenseSpa);
+        // hypersparse rows of a very wide output → hash
+        assert_eq!(choose_kernel_traffic(&cache, 1 << 20, 100, 500), KernelKind::HashAccum);
+        // long rows of a wide output: the spilling SPA and the per-row
+        // hash rebuild both lose to streaming sort/merge
+        assert_eq!(choose_kernel_traffic(&cache, 1 << 20, 10, 2000), KernelKind::SortMerge);
+        // degenerates match choose_kernel
+        assert_eq!(choose_kernel_traffic(&cache, 0, 4, 100), KernelKind::SortMerge);
+        assert_eq!(choose_kernel_traffic(&cache, 100, 4, 0), KernelKind::SortMerge);
+    }
+
+    #[test]
+    fn dataflow_names_round_trip() {
+        for d in [Dataflow::Static, Dataflow::Auto] {
+            assert_eq!(Dataflow::parse(d.name()), Some(d));
+            assert_eq!(Dataflow::from_id(d.id()), Some(d));
+        }
+        assert_eq!(Dataflow::parse("nope"), None);
+        assert_eq!(Dataflow::from_id(7), None);
+        assert_eq!(Dataflow::default(), Dataflow::Static);
+    }
+
+    #[test]
+    fn rejects_degenerate_cache() {
+        let a = Csr::identity(2);
+        for bad in [
+            CacheConfig { capacity_bytes: 64, line_bytes: 4, assoc: 1 },
+            CacheConfig { capacity_bytes: 64, line_bytes: 16, assoc: 0 },
+            CacheConfig { capacity_bytes: 16, line_bytes: 16, assoc: 2 },
+        ] {
+            assert!(simulate_traffic(&a, &a, &[0], &bad).is_err());
+            assert!(oracle_traffic(&a, &a, &[0], &bad).is_err());
+        }
+    }
+}

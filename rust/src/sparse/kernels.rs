@@ -110,7 +110,11 @@ impl KernelKind {
 ///   beats both the SPA's footprint and the sort's `O(m log m)`;
 /// * otherwise — sort/merge, the robust middle ground.
 pub fn choose_kernel(avg_mults_per_row: f64, ncols: usize) -> KernelKind {
-    if ncols == 0 {
+    // Degenerate blocks — zero-width output, no products at all, or a
+    // non-finite estimate — produce nothing, so pick the one kernel
+    // that allocates no `O(ncols)` state rather than falling through
+    // the ratio tests below (0/0 is NaN and fails every comparison).
+    if ncols == 0 || avg_mults_per_row <= 0.0 || !avg_mults_per_row.is_finite() {
         return KernelKind::SortMerge;
     }
     let fill = avg_mults_per_row / ncols as f64;
@@ -466,8 +470,14 @@ mod tests {
         assert_eq!(choose_kernel(5.0, 1 << 20), KernelKind::HashAccum);
         // mid-range → sort/merge
         assert_eq!(choose_kernel(200.0, 1 << 20), KernelKind::SortMerge);
-        // degenerate width
+        // degenerate width, empty blocks, and non-finite estimates all
+        // take the explicit guard instead of NaN-falling-through
         assert_eq!(choose_kernel(0.0, 0), KernelKind::SortMerge);
+        assert_eq!(choose_kernel(0.0, 100), KernelKind::SortMerge);
+        assert_eq!(choose_kernel(f64::NAN, 100), KernelKind::SortMerge);
+        assert_eq!(choose_kernel(f64::INFINITY, 100), KernelKind::SortMerge);
+        assert_eq!(KernelKind::Auto.resolve_block(100, 0, || 0), KernelKind::SortMerge);
+        assert_eq!(KernelKind::Auto.resolve_block(0, 10, || 40), KernelKind::SortMerge);
         // the shared per-block resolver: Auto dispatches on the lazy
         // count, concrete kinds pass through without evaluating it
         assert_eq!(KernelKind::Auto.resolve_block(100, 10, || 400), KernelKind::DenseSpa);

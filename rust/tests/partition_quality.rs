@@ -19,6 +19,11 @@
 //!    4096-vertex grid clears the parallel-matching threshold); the
 //!    dedicated matching/contraction suite lives in
 //!    `rust/tests/coarsening.rs`.
+//! 4. **Def. 4.4 memory feasibility** — with `mem_epsilon` set, the full
+//!    driver lands every part at or below the `(1+δ)·(M/p)` memory cap,
+//!    end to end on V^nz-bearing models of the paper's three application
+//!    classes and on a skewed-memory regression fixture that the
+//!    memory-blind initial partitioner used to lose.
 
 use spgemm_hp::cost;
 use spgemm_hp::gen;
@@ -273,6 +278,85 @@ fn full_partition_never_loses_to_recursive_bisection_alone() {
                 "{name} p={parts}: refined partition broke the ε cap: {load:?} cap={cap}"
             );
         }
+    }
+}
+
+/// Per-part memory loads of a partition.
+fn mem_loads(w_mem: &[u64], part: &[u32], parts: usize) -> Vec<u64> {
+    let mut m = vec![0u64; parts];
+    for (v, &q) in part.iter().enumerate() {
+        m[q as usize] += w_mem[v];
+    }
+    m
+}
+
+#[test]
+fn partition_respects_memory_caps_end_to_end() {
+    // one instance per application class, with V^nz present so the
+    // models carry real memory weights (Def. 4.4's second constraint)
+    let mut rng = Rng::new(47);
+    let amg_a = gen::stencil27(4);
+    let amg_p = gen::smoothed_aggregation_prolongator(&amg_a, 4).unwrap();
+    let lp = gen::lp_constraints(&gen::LpParams::pds_like(96, 288), &mut rng).unwrap();
+    let lpt = lp.transpose();
+    let mcl = gen::rmat(&gen::RmatParams::social(6, 8.0), &mut rng).unwrap();
+    let pairs: Vec<(&str, &spgemm_hp::sparse::Csr, &spgemm_hp::sparse::Csr)> =
+        vec![("amg", &amg_a, &amg_p), ("lp", &lp, &lpt), ("mcl", &mcl, &mcl)];
+    let delta = 0.3;
+    for (name, a, b) in pairs {
+        let model = build_model(a, b, ModelKind::RowWise, true).unwrap();
+        let total_mem = model.h.total_mem();
+        assert!(total_mem > 0, "{name}: model carries no memory weight");
+        for parts in [2usize, 4, 8] {
+            let cfg = PartitionerConfig {
+                epsilon: 0.25,
+                mem_epsilon: Some(delta),
+                ..PartitionerConfig::new(parts)
+            };
+            let part = partition(&model.h, &cfg).unwrap();
+            let cap = ((1.0 + delta) * total_mem as f64 / parts as f64).ceil() as u64;
+            let mem = mem_loads(&model.h.w_mem, &part, parts);
+            assert!(
+                mem.iter().all(|&m| m <= cap),
+                "{name} p={parts}: memory cap broken: {mem:?} cap={cap}"
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_caps_hold_on_skewed_mem_regression_fixture() {
+    // Two memory-heavy vertices inside one tight clique: the pure
+    // cut-minimizing bisection co-locates them (cutting only the light
+    // bridge), which breaks the δ cap — exactly the partition a
+    // memory-blind initial phase used to hand to refinement. The
+    // mem-aware initial ranking must split the heavies instead.
+    let mut b = HypergraphBuilder::new(10);
+    let mut mem = vec![1u64; 10];
+    mem[0] = 8;
+    mem[1] = 8;
+    b.set_weights(vec![1; 10], mem);
+    for i in 0..4u32 {
+        for j in (i + 1)..4 {
+            b.add_net(4, vec![i, j]);
+        }
+    }
+    for v in 4..10u32 {
+        b.add_net(1, vec![v, if v == 9 { 0 } else { v + 1 }]);
+    }
+    let h = b.finalize(true, false);
+    // total mem = 8 + 8 + 8·1 = 24; p = 2, δ = 0.25 → cap 15, so the
+    // heavies on one side (≥ 16) is infeasible no matter the cut
+    let cfg = PartitionerConfig {
+        epsilon: 1.0, // comp never binds: the memory cap is what's tested
+        mem_epsilon: Some(0.25),
+        ..PartitionerConfig::new(2)
+    };
+    for seed in 0..4u64 {
+        let part = partition(&h, &PartitionerConfig { seed, ..cfg.clone() }).unwrap();
+        let mem = mem_loads(&h.w_mem, &part, 2);
+        assert!(mem.iter().all(|&m| m <= 15), "seed {seed}: caps broken: {mem:?}");
+        assert_ne!(part[0], part[1], "seed {seed}: heavy vertices were co-located");
     }
 }
 

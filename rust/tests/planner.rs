@@ -57,6 +57,7 @@ fn codec_round_trips_every_model_kind_and_generator() {
                 prepared: planned.prepared.clone(),
                 comm_max: planned.comm_max,
                 volume: planned.volume,
+                dataflow: planned.dataflow,
             };
             let bytes = encode_bundle(&bundle);
             let back = decode_bundle(&bytes).unwrap();
@@ -102,6 +103,7 @@ fn codec_round_trip_proptest() {
                 prepared: planned.prepared.clone(),
                 comm_max: planned.comm_max,
                 volume: planned.volume,
+                dataflow: planned.dataflow,
             };
             let bytes = encode_bundle(&bundle);
             let back = decode_bundle(&bytes).map_err(|e| e.to_string())?;
@@ -232,6 +234,7 @@ fn lru_eviction_order_and_replan_on_eviction() {
         },
         comm_max: 0,
         volume: 0,
+        dataflow: spgemm_hp::sim::Dataflow::Static,
     };
     store.insert(fps[0], &tiny(0)).unwrap();
     store.insert(fps[1], &tiny(1)).unwrap();

@@ -1,0 +1,144 @@
+//! Integration suite for the storage-traffic simulator (`sim::traffic`)
+//! and the adaptive-dataflow selectors, on real generator workloads from
+//! the paper's three application classes rather than the module's unit
+//! fixtures.
+//!
+//! Pinned guarantees:
+//!
+//! 1. **Schedule validity** — every row×k tiled schedule is a
+//!    permutation of the canonical multiplication order.
+//! 2. **Stack inclusion + oracle bound** — a larger fully-associative
+//!    LRU never loads more bytes (LRU is a stack algorithm), and the
+//!    Belady MIN oracle never loads more than fully-associative LRU at
+//!    the same capacity.
+//! 3. **Write-back conservation** — every started C line reaches slow
+//!    memory exactly-or-more than once: stores ≥ the C extent.
+//! 4. **The `Dataflow::Auto` gate** — the adaptive tile choice never
+//!    predicts more traffic than the caller's static tile, for any
+//!    static tile and cache shape.
+//! 5. **Bit identity** — the traffic-instrumented parallel SpGEMM
+//!    returns bit-identical results to the sequential kernel at every
+//!    thread count (instrumentation must not perturb the computation).
+
+use spgemm_hp::gen;
+use spgemm_hp::sim::traffic::{self, ENTRY_BYTES};
+use spgemm_hp::sim::{
+    oracle_traffic, simulate_traffic, spgemm_parallel_traffic, tiled_schedule, CacheConfig,
+};
+use spgemm_hp::sparse::{self, Csr};
+use spgemm_hp::util::Rng;
+
+/// One small instance per application class: AMG (A·P), LP (A·Aᵀ), and
+/// MCL (A²) — the same shapes the repro experiments sweep, sized for a
+/// debug-mode test run.
+fn workload_pairs() -> Vec<(String, Csr, Csr)> {
+    let mut rng = Rng::new(41);
+    let mut v = Vec::new();
+    let a = gen::stencil27(4);
+    let p = gen::smoothed_aggregation_prolongator(&a, 4).unwrap();
+    v.push(("amg-AP".to_string(), a, p));
+    let lp = gen::lp_constraints(&gen::LpParams::pds_like(64, 192), &mut rng).unwrap();
+    let lpt = lp.transpose();
+    v.push(("lp-AAt".to_string(), lp, lpt));
+    let m = gen::rmat(&gen::RmatParams::social(6, 6.0), &mut rng).unwrap();
+    v.push(("mcl-A2".to_string(), m.clone(), m));
+    v
+}
+
+#[test]
+fn tiled_schedules_are_permutations_on_generator_workloads() {
+    for (name, a, b) in workload_pairs() {
+        let n = sparse::spgemm_flops(&a, &b).unwrap();
+        for (rb, kb) in [(1usize, 4usize), (8, 64), (16, 16)] {
+            let mut s = tiled_schedule(&a, &b, rb, kb);
+            assert_eq!(s.len() as u64, n, "{name} rb={rb} kb={kb}: length");
+            s.sort_unstable();
+            assert!(
+                s.iter().enumerate().all(|(i, &x)| i as u64 == x),
+                "{name} rb={rb} kb={kb}: not a permutation"
+            );
+        }
+    }
+}
+
+#[test]
+fn lru_inclusion_and_oracle_bound_on_generator_workloads() {
+    for (name, a, b) in workload_pairs() {
+        let sched = tiled_schedule(&a, &b, 8, 64);
+        let mut prev: Option<u64> = None;
+        for cap in [1u64 << 10, 1 << 12, 1 << 14, 1 << 18] {
+            let cache = CacheConfig { capacity_bytes: cap, line_bytes: 32, assoc: 4 };
+            let lru = simulate_traffic(&a, &b, &sched, &cache.fully_associative()).unwrap();
+            let min = oracle_traffic(&a, &b, &sched, &cache).unwrap();
+            assert!(
+                min.loads() <= lru.loads(),
+                "{name} cap={cap}: oracle loads {} > LRU loads {}",
+                min.loads(),
+                lru.loads()
+            );
+            if let Some(p) = prev {
+                assert!(lru.loads() <= p, "{name} cap={cap}: loads grew with capacity");
+            }
+            prev = Some(lru.loads());
+        }
+    }
+}
+
+#[test]
+fn every_started_c_line_reaches_memory() {
+    for (name, a, b) in workload_pairs() {
+        let c = sparse::spgemm_structure(&a, &b).unwrap();
+        let sched = tiled_schedule(&a, &b, 4, 32);
+        for cap in [1u64 << 10, 1 << 16] {
+            let cache = CacheConfig { capacity_bytes: cap, line_bytes: 64, assoc: 8 };
+            let rep = simulate_traffic(&a, &b, &sched, &cache).unwrap();
+            let c_lines = (c.nnz() as u64 * ENTRY_BYTES).div_ceil(cache.line_bytes);
+            let c_extent = c_lines * cache.line_bytes;
+            assert!(
+                rep.stores() >= c_extent,
+                "{name} cap={cap}: stores {} < C extent {c_extent}",
+                rep.stores()
+            );
+            assert_eq!(rep.mults, sched.len() as u64, "{name} cap={cap}: mult count");
+        }
+    }
+}
+
+#[test]
+fn adaptive_tile_never_predicts_more_traffic_than_static() {
+    for (name, a, b) in workload_pairs() {
+        let small = CacheConfig { capacity_bytes: 1 << 12, line_bytes: 32, assoc: 4 };
+        for cache in [small, CacheConfig::default()] {
+            for static_tile in [1usize, 8, 64] {
+                let (tile, bytes) = traffic::choose_plan_tile(&a, &b, &cache, static_tile).unwrap();
+                assert!(tile >= 1, "{name}: degenerate tile");
+                let st = static_tile.max(1);
+                let sched = tiled_schedule(&a, &b, st, st * 8);
+                let static_bytes = simulate_traffic(&a, &b, &sched, &cache).unwrap().total();
+                assert!(
+                    bytes <= static_bytes,
+                    "{name} static_tile={static_tile}: auto {bytes} > static {static_bytes}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn traffic_instrumented_parallel_spgemm_is_bit_identical() {
+    let cache = CacheConfig { capacity_bytes: 1 << 12, line_bytes: 32, assoc: 4 };
+    for (name, a, b) in workload_pairs() {
+        let want = sparse::spgemm(&a, &b).unwrap();
+        for t in [1usize, 2, 4, 8] {
+            let got = spgemm_parallel_traffic(&a, &b, t, &cache).unwrap();
+            assert_eq!(got.rowptr, want.rowptr, "{name} threads={t}: rowptr");
+            assert_eq!(got.colind, want.colind, "{name} threads={t}: colind");
+            for (pos, (x, y)) in got.values.iter().zip(&want.values).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{name} threads={t}: value {pos} not bit-identical ({x} vs {y})"
+                );
+            }
+        }
+    }
+}

@@ -37,10 +37,10 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition/coarsening/planner/strategy suites (deep property sweep)"
+step "kernel differential + model oracle + partition/coarsening/planner/traffic/strategy suites (deep property sweep)"
 SPGEMM_HP_PROP_CASES=192 \
     cargo test -q --test kernels --test models --test partition_quality --test coarsening \
-    --test planner --test strategies
+    --test planner --test traffic --test strategies
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -66,10 +66,22 @@ if ! grep -q '"workload": ".*-summa-' BENCH_spgemm.json; then
     echo "ERROR: BENCH_spgemm.json has no per-strategy simulate records"
     exit 1
 fi
+for field in traffic_bytes dataflow; do
+    if ! grep -q "\"$field\"" BENCH_spgemm.json; then
+        echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (dataflow sweep)"
+        exit 1
+    fi
+done
 echo "all fields present"
+
+step "repro smoke: cut-vs-traffic correlation (repro traffic)"
+./target/release/spgemm-hp repro traffic
 
 step "e2e smoke on the sparsity-oblivious baseline (--algorithm summa)"
 ./target/release/spgemm-hp e2e --parts 4 --algorithm summa
+
+step "e2e smoke with the adaptive dataflow (--dataflow auto)"
+./target/release/spgemm-hp e2e --parts 4 --algorithm summa --dataflow auto
 
 echo
 echo "CI gate passed."
