@@ -379,7 +379,13 @@ fn real_main() -> Result<()> {
     if let Some(d) = &plan_dir {
         let _ = std::fs::remove_dir_all(d); // guarantee the cold leg is cold
     }
-    let mk_planner = || Planner::new(PlannerConfig { cache_dir: plan_dir.clone(), capacity: 8 });
+    let mk_planner = || {
+        Planner::new(PlannerConfig {
+            cache_dir: plan_dir.clone(),
+            capacity: 8,
+            ..Default::default()
+        })
+    };
     let (_, lp_a, lp_b) = &workloads[1];
     let lp_warm_b =
         spgemm_hp::sparse::ops::scale_rows(lp_b, &gen::lp::ipm_scaling(lp_b.nrows, &mut rng))?;

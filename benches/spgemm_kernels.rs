@@ -43,11 +43,24 @@ struct Record {
     traffic_bytes: Option<u64>,
     /// `"static"` or `"auto"`; present on dataflow sweep rows only.
     dataflow: Option<&'static str>,
+    /// `"simulated"` or `"processes"`; present on executor rows only.
+    exec_mode: Option<&'static str>,
+    /// Total framed bytes on the worker pipes; process-executor rows only.
+    wire_bytes: Option<u64>,
 }
 
 impl Record {
     fn new(kernel: &'static str, workload: String, threads: usize, ns_per_op: f64) -> Record {
-        Record { kernel, workload, threads, ns_per_op, traffic_bytes: None, dataflow: None }
+        Record {
+            kernel,
+            workload,
+            threads,
+            ns_per_op,
+            traffic_bytes: None,
+            dataflow: None,
+            exec_mode: None,
+            wire_bytes: None,
+        }
     }
 }
 
@@ -63,6 +76,12 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
         }
         if let Some(df) = r.dataflow {
             extra.push_str(&format!(", \"dataflow\": \"{df}\""));
+        }
+        if let Some(em) = r.exec_mode {
+            extra.push_str(&format!(", \"exec_mode\": \"{em}\""));
+        }
+        if let Some(wb) = r.wire_bytes {
+            extra.push_str(&format!(", \"wire_bytes\": {wb}"));
         }
         writeln!(
             f,
@@ -229,6 +248,58 @@ fn real_main() -> Result<()> {
         let s = bench(1, iters, || simulate(sim_a, sim_a, &alg).unwrap());
         println!("{label:<16} {sim_name:<22} {:>12}", BenchStats::fmt_time(s.median));
         records.push(Record::new("simulate", format!("{sim_name}-{label}"), 1, s.median * 1e9));
+    }
+
+    println!("\n== process executor: measured wire traffic vs model ==");
+    // Real worker OS processes over pipes. run_processes cross-checks the
+    // measured per-worker payload entries against the plan's modeled
+    // volumes on every run and errors on any mismatch, so a green row
+    // here IS the measured == modeled property, enforced in-run.
+    {
+        use spgemm_hp::coordinator::{self, exec};
+        let pe_a = &gen::stencil27(if smoke { 5 } else { 6 });
+        let pe_p = 2usize;
+        let strat =
+            AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false };
+        let alg = strat.lower(pe_a, pe_a, &PartitionerConfig::new(pe_p))?;
+        let ccfg = coordinator::CoordinatorConfig {
+            exec: exec::ExecMode::Processes,
+            worker_exe: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_spgemm-hp"))),
+            ..Default::default()
+        };
+        let workload = format!("stencil27-row-p{pe_p}");
+        match exec::run_processes(pe_a, pe_a, &alg, &ccfg) {
+            Ok((rep, measured, _c)) => {
+                let s = bench(0, iters, || {
+                    exec::run_processes(pe_a, pe_a, &alg, &ccfg).unwrap();
+                });
+                println!(
+                    "row p={pe_p}: {} payload words, {} wire bytes, {:>12}/run",
+                    rep.total_volume(),
+                    measured.wire_bytes,
+                    BenchStats::fmt_time(s.median)
+                );
+                records.push(Record {
+                    exec_mode: Some("processes"),
+                    wire_bytes: Some(measured.wire_bytes),
+                    ..Record::new("exec_processes", workload, 1, s.median * 1e9)
+                });
+            }
+            Err(e) => {
+                // keep the JSON schema stable for the CI field gate even
+                // where the sandbox forbids spawning
+                println!("(process executor unavailable here: {e}; recording simulated fallback)");
+                let scfg = coordinator::CoordinatorConfig::default();
+                let s = bench(0, iters, || {
+                    coordinator::run(pe_a, pe_a, &alg, &scfg).unwrap();
+                });
+                records.push(Record {
+                    exec_mode: Some("simulated"),
+                    wire_bytes: Some(0),
+                    ..Record::new("exec_processes", workload, 1, s.median * 1e9)
+                });
+            }
+        }
     }
 
     println!("\n== hypergraph model construction ==");

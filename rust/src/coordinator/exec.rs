@@ -1,0 +1,1054 @@
+//! Multi-process executor: a leader that drives real worker OS processes.
+//!
+//! `run_processes` spawns one child process per partition part (the hidden
+//! `spgemm-hp worker` subcommand), ships each [`WorkerPlan`] over the child's
+//! stdin as a framed [`wire::WireMsg::Init`], and then drives the
+//! expand -> compute -> fold protocol by routing every `Send` frame a worker
+//! emits back out as a `Deliver` frame to its destination.  All traffic flows
+//! through the leader (a star topology), which lets the leader *measure* the
+//! payload entries each worker sends and receives per phase and cross-check
+//! them against the planner's modeled per-worker volumes.
+//!
+//! Fault tolerance is replay-based: worker output is a deterministic function
+//! of the `Init` frame plus the sequence of frames the leader delivered, so
+//! the leader logs every frame it writes to a slot.  When a worker dies (pipe
+//! EOF) or stops heartbeating (timeout), the leader respawns the slot and
+//! replays the log; the respawned worker re-derives its state and re-emits the
+//! frames the dead one already sent, which the leader suppresses by counting
+//! (`skip = accepted`).  The final C is bit-identical with or without faults.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::plan::{ExecutionPlan, PreparedPlan, WorkerPlan};
+use super::wire::{self, Stream, WireMsg, WirePhase, ENTRY_BYTES};
+use super::{CoordReport, CoordinatorConfig};
+use crate::sim::Algorithm;
+use crate::sparse::{spgemm_structure, Csr};
+use crate::{Error, Result};
+
+/// Default heartbeat timeout before a worker is declared dead.
+pub const DEFAULT_WORKER_TIMEOUT_MS: u64 = 5_000;
+
+/// Maximum times a single slot may be respawned before the run aborts.
+pub const MAX_RESPAWNS: u32 = 3;
+
+/// How the coordinator executes the partitioned algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// In-process simulation (threads inside the coordinator; the default).
+    Simulated,
+    /// Real worker OS processes wired over stdin/stdout pipes.
+    Processes,
+}
+
+impl ExecMode {
+    /// Parse a CLI spelling (`simulated` / `processes`).
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "simulated" => Some(ExecMode::Simulated),
+            "processes" => Some(ExecMode::Processes),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (inverse of [`ExecMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Simulated => "simulated",
+            ExecMode::Processes => "processes",
+        }
+    }
+}
+
+/// Test-only fault injection: kill (or hang) a worker after a phase completes.
+///
+/// The leader applies the fault after every worker has reported `PhaseDone`
+/// for `after_phase`, then waits for detection + recovery before proceeding,
+/// so the injected failure exercises the replay path deterministically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Which worker slot to fault.
+    pub kill_worker: usize,
+    /// Fault fires after all workers finish this phase.
+    pub after_phase: WirePhase,
+    /// How many consecutive kills to inject (each waits for recovery first).
+    pub kills: u32,
+    /// If true, freeze the worker (stop heartbeats) instead of killing it,
+    /// exercising the timeout detector rather than pipe EOF.
+    pub hang: bool,
+}
+
+impl FaultPlan {
+    /// A single clean kill of `worker` after `after` completes.
+    pub fn kill(worker: usize, after: WirePhase) -> FaultPlan {
+        FaultPlan { kill_worker: worker, after_phase: after, kills: 1, hang: false }
+    }
+
+    /// Validate against a worker count.
+    pub fn validate(&self, p: usize) -> Result<()> {
+        if self.kill_worker >= p {
+            return Err(Error::Config(format!(
+                "fault kill_worker {} out of range for p={p}",
+                self.kill_worker
+            )));
+        }
+        if self.kills == 0 {
+            return Err(Error::Config("fault kills must be >= 1".into()));
+        }
+        if self.after_phase == WirePhase::Fold {
+            return Err(Error::Config(
+                "fault after_phase Fold is unsupported: results are already final".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Measured payload traffic for one worker in one phase.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseTraffic {
+    /// Payload entries this worker sent (one entry = one (index, value) pair).
+    pub sent_entries: u64,
+    /// Payload entries delivered to this worker.
+    pub recv_entries: u64,
+    /// `sent_entries * ENTRY_BYTES`.
+    pub sent_bytes: u64,
+    /// `recv_entries * ENTRY_BYTES`.
+    pub recv_bytes: u64,
+}
+
+/// Bytes-on-the-wire accounting for a process-mode run, per worker per phase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MeasuredReport {
+    /// Worker count.
+    pub p: usize,
+    /// Expand-phase payload traffic, indexed by worker.
+    pub expand: Vec<PhaseTraffic>,
+    /// Fold-phase payload traffic, indexed by worker.
+    pub fold: Vec<PhaseTraffic>,
+    /// Total framed bytes written to or read from worker pipes (headers,
+    /// control frames, and heartbeats included).
+    pub wire_bytes: u64,
+    /// Number of worker respawns performed during the run.
+    pub respawns: u32,
+}
+
+impl MeasuredReport {
+    /// An all-zero report for `p` workers.
+    pub fn new(p: usize) -> MeasuredReport {
+        MeasuredReport {
+            p,
+            expand: vec![PhaseTraffic::default(); p],
+            fold: vec![PhaseTraffic::default(); p],
+            wire_bytes: 0,
+            respawns: 0,
+        }
+    }
+
+    /// Cross-check measured traffic against the plan's modeled volumes.
+    ///
+    /// Every comparison is exact equality: the executor sends precisely the
+    /// entries the plan's send lists name, and the scalar fold path produces
+    /// exactly one partial per (producer, owned-C column) pair, so measured
+    /// and modeled must agree entry-for-entry.
+    pub fn check_against(&self, plan: &ExecutionPlan) -> Result<()> {
+        if self.p != plan.workers.len() {
+            return Err(Error::Runtime(format!(
+                "measured report covers {} workers but plan has {}",
+                self.p,
+                plan.workers.len()
+            )));
+        }
+        let mut expand_total = 0u64;
+        let mut fold_total = 0u64;
+        for (w, wp) in plan.workers.iter().enumerate() {
+            let ex = &self.expand[w];
+            let fo = &self.fold[w];
+            let model_ex_send = wp.modeled_expand_send();
+            let model_ex_recv = wp.expect_a + wp.expect_b;
+            let model_fo_send = wp.modeled_fold_send();
+            let model_fo_recv = wp.expect_partials;
+            if ex.sent_entries != model_ex_send {
+                return Err(Error::Runtime(format!(
+                    "worker {w}: measured expand send {} != modeled {model_ex_send}",
+                    ex.sent_entries
+                )));
+            }
+            if ex.recv_entries != model_ex_recv {
+                return Err(Error::Runtime(format!(
+                    "worker {w}: measured expand recv {} != modeled {model_ex_recv}",
+                    ex.recv_entries
+                )));
+            }
+            if fo.sent_entries != model_fo_send {
+                return Err(Error::Runtime(format!(
+                    "worker {w}: measured fold send {} != modeled {model_fo_send}",
+                    fo.sent_entries
+                )));
+            }
+            if fo.recv_entries != model_fo_recv {
+                return Err(Error::Runtime(format!(
+                    "worker {w}: measured fold recv {} != modeled {model_fo_recv}",
+                    fo.recv_entries
+                )));
+            }
+            expand_total += ex.sent_entries;
+            fold_total += fo.sent_entries;
+        }
+        if expand_total != plan.expand_volume {
+            return Err(Error::Runtime(format!(
+                "measured expand total {expand_total} != plan volume {}",
+                plan.expand_volume
+            )));
+        }
+        if fold_total != plan.fold_volume {
+            return Err(Error::Runtime(format!(
+                "measured fold total {fold_total} != plan volume {}",
+                plan.fold_volume
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Run the partitioned multiplication on real worker processes.
+///
+/// Ignores `cfg.kernel`, `cfg.min_tile_batch`, and `cfg.compute_threads`
+/// (workers use the scalar path so results are bit-stable across respawns).
+/// Returns the coordinator report, the measured wire traffic, and C.
+pub fn run_processes(
+    a: &Csr,
+    b: &Csr,
+    alg: &Algorithm,
+    cfg: &CoordinatorConfig,
+) -> Result<(CoordReport, MeasuredReport, Csr)> {
+    if let Some(fault) = &cfg.fault {
+        fault.validate(alg.p)?;
+    }
+    if cfg.worker_timeout_ms == 0 {
+        return Err(Error::Config("workers-timeout-ms must be >= 1".into()));
+    }
+    // Plan resolution mirrors `coordinator::run`: reuse a prepared plan
+    // (executing with the tile it was built with) or build one here.
+    let built;
+    let (prep, tile): (&PreparedPlan, usize) = match &cfg.plan {
+        Some(p) => {
+            super::check_prepared(p, a, b, alg)?;
+            (p.as_ref(), p.tile)
+        }
+        None => {
+            let cs = spgemm_structure(a, b)?;
+            let pl = ExecutionPlan::build(a, b, alg, &cs, cfg.tile)?;
+            built = PreparedPlan { c_struct: cs, plan: pl, tile: cfg.tile };
+            (&built, cfg.tile)
+        }
+    };
+    let plan = &prep.plan;
+    let exe = match &cfg.worker_exe {
+        Some(path) => path.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| Error::Runtime(format!("cannot locate worker executable: {e}")))?,
+    };
+
+    let mut leader = Leader::new(plan, exe, cfg.worker_timeout_ms, tile, cfg.fault)?;
+    let outcome = leader.protocol();
+    leader.shutdown();
+    outcome?;
+    leader.measured.check_against(plan)?;
+
+    let p = plan.workers.len();
+    let mut c_values = vec![0.0f64; prep.c_struct.values.len()];
+    let mut sent_words = vec![0u64; p];
+    let mut recv_words = vec![0u64; p];
+    let mut scalar_mults = 0u64;
+    for w in 0..p {
+        let entries = leader.results[w]
+            .take()
+            .ok_or_else(|| Error::Runtime(format!("worker {w} produced no result")))?;
+        for (pc, v) in entries {
+            let slot = c_values
+                .get_mut(pc as usize)
+                .ok_or_else(|| Error::Runtime(format!("worker {w} result column {pc} OOB")))?;
+            *slot = v;
+        }
+        let (ex, fo) = (&leader.measured.expand[w], &leader.measured.fold[w]);
+        sent_words[w] = ex.sent_entries + fo.sent_entries;
+        recv_words[w] = ex.recv_entries + fo.recv_entries;
+        scalar_mults += leader.mults[w];
+    }
+    let mut c = prep.c_struct.clone();
+    c.values = c_values;
+    let report = CoordReport {
+        p,
+        sent_words,
+        recv_words,
+        expand_volume: plan.expand_volume,
+        fold_volume: plan.fold_volume,
+        tile_mults: 0,
+        scalar_mults,
+        kernel_dispatches: 0,
+        used_pjrt: false,
+    };
+    let measured = leader.measured.clone();
+    Ok((report, measured, c))
+}
+
+type Entries = Vec<(u32, f64)>;
+
+struct Slot {
+    child: Child,
+    stdin: ChildStdin,
+    gen: u32,
+    respawns: u32,
+    log: Vec<Vec<u8>>,
+    accepted: u64,
+    skip: u64,
+    last_heard: Instant,
+    exited: bool,
+}
+
+enum EventKind {
+    Msg(WireMsg, u64),
+    Eof(Option<String>),
+}
+
+struct Event {
+    slot: usize,
+    gen: u32,
+    kind: EventKind,
+}
+
+struct Leader<'a> {
+    plan: &'a ExecutionPlan,
+    p: usize,
+    exe: PathBuf,
+    timeout_ms: u64,
+    tile: usize,
+    fault: Option<FaultPlan>,
+    slots: Vec<Slot>,
+    events_rx: Receiver<Event>,
+    // Held so the channel never disconnects while slots come and go.
+    _events_tx: Sender<Event>,
+    ready: Vec<bool>,
+    phase_done: Vec<[bool; 3]>,
+    mults: Vec<u64>,
+    results: Vec<Option<Entries>>,
+    // (stream id, from, entries) queued for each destination during expand.
+    expand_inbox: Vec<Vec<(u8, u32, Entries)>>,
+    // (from, entries) queued for each destination during fold.
+    fold_inbox: Vec<Vec<(u32, Entries)>>,
+    measured: MeasuredReport,
+}
+
+impl<'a> Leader<'a> {
+    fn new(
+        plan: &'a ExecutionPlan,
+        exe: PathBuf,
+        timeout_ms: u64,
+        tile: usize,
+        fault: Option<FaultPlan>,
+    ) -> Result<Leader<'a>> {
+        let p = plan.workers.len();
+        let (tx, rx) = mpsc::channel();
+        let mut slots: Vec<Slot> = Vec::with_capacity(p);
+        for w in 0..p {
+            match spawn_child(&exe) {
+                Ok((child, stdin, stdout)) => {
+                    start_reader(w, 0, stdout, tx.clone());
+                    slots.push(Slot {
+                        child,
+                        stdin,
+                        gen: 0,
+                        respawns: 0,
+                        log: Vec::new(),
+                        accepted: 0,
+                        skip: 0,
+                        last_heard: Instant::now(),
+                        exited: false,
+                    });
+                }
+                Err(e) => {
+                    for slot in &mut slots {
+                        let _ = slot.child.kill();
+                        let _ = slot.child.wait();
+                    }
+                    return Err(Error::Runtime(format!("cannot spawn worker {w}: {e}")));
+                }
+            }
+        }
+        Ok(Leader {
+            plan,
+            p,
+            exe,
+            timeout_ms,
+            tile,
+            fault,
+            slots,
+            events_rx: rx,
+            _events_tx: tx,
+            ready: vec![false; p],
+            phase_done: vec![[false; 3]; p],
+            mults: vec![0; p],
+            results: vec![None; p],
+            expand_inbox: vec![Vec::new(); p],
+            fold_inbox: vec![Vec::new(); p],
+            measured: MeasuredReport::new(p),
+        })
+    }
+
+    fn protocol(&mut self) -> Result<()> {
+        let heartbeat_ms = (self.timeout_ms / 4).max(1);
+        for w in 0..self.p {
+            let init = WireMsg::Init {
+                worker: w as u32,
+                p: self.p as u32,
+                heartbeat_ms,
+                tile: self.tile as u64,
+                plan: Box::new(self.plan.workers[w].clone()),
+            };
+            self.send_logged(w, &init)?;
+        }
+        self.wait_until(|l| l.ready.iter().all(|&r| r))?;
+
+        for w in 0..self.p {
+            self.send_logged(w, &WireMsg::Start(WirePhase::Expand))?;
+        }
+        self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Expand.id() as usize]))?;
+        self.inject_fault(WirePhase::Expand)?;
+
+        for w in 0..self.p {
+            let mut inbox = std::mem::take(&mut self.expand_inbox[w]);
+            inbox.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+            for (stream_id, from, entries) in inbox {
+                let n = entries.len() as u64;
+                self.measured.expand[w].recv_entries += n;
+                self.measured.expand[w].recv_bytes += n * ENTRY_BYTES;
+                let msg = WireMsg::Deliver {
+                    phase: WirePhase::Expand,
+                    from,
+                    stream: Stream::from_id(stream_id)
+                        .ok_or_else(|| Error::Runtime("bad stream id in inbox".into()))?,
+                    entries,
+                };
+                self.send_logged(w, &msg)?;
+            }
+            self.send_logged(w, &WireMsg::Start(WirePhase::Compute))?;
+        }
+        self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Compute.id() as usize]))?;
+        self.inject_fault(WirePhase::Compute)?;
+        self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Fold.id() as usize]))?;
+
+        for w in 0..self.p {
+            let mut inbox = std::mem::take(&mut self.fold_inbox[w]);
+            inbox.sort_by_key(|x| x.0);
+            for (from, entries) in inbox {
+                let n = entries.len() as u64;
+                self.measured.fold[w].recv_entries += n;
+                self.measured.fold[w].recv_bytes += n * ENTRY_BYTES;
+                let msg = WireMsg::Deliver {
+                    phase: WirePhase::Fold,
+                    from,
+                    stream: Stream::Partial,
+                    entries,
+                };
+                self.send_logged(w, &msg)?;
+            }
+            self.send_logged(w, &WireMsg::Start(WirePhase::Fold))?;
+        }
+        self.wait_until(|l| l.results.iter().all(|r| r.is_some()))?;
+        Ok(())
+    }
+
+    fn wait_until(&mut self, cond: impl Fn(&Leader<'a>) -> bool) -> Result<()> {
+        while !cond(self) {
+            self.pump()?;
+        }
+        Ok(())
+    }
+
+    /// Drain all queued events, then check timeouts (safe: an empty queue
+    /// means `last_heard` is current), then block briefly for the next event.
+    fn pump(&mut self) -> Result<()> {
+        loop {
+            match self.events_rx.try_recv() {
+                Ok(ev) => self.handle_event(ev)?,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        self.check_timeouts()?;
+        match self.events_rx.recv_timeout(Duration::from_millis(25)) {
+            Ok(ev) => self.handle_event(ev)?,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(Error::Runtime("leader event channel disconnected".into()));
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_event(&mut self, ev: Event) -> Result<()> {
+        let w = ev.slot;
+        if ev.gen != self.slots[w].gen {
+            return Ok(()); // stale reader from a replaced process
+        }
+        self.slots[w].last_heard = Instant::now();
+        match ev.kind {
+            EventKind::Eof(err) => {
+                if self.slots[w].exited {
+                    return Ok(()); // clean exit after ResultC
+                }
+                let why = err.unwrap_or_else(|| "pipe closed".into());
+                self.fail_worker(w, &why)
+            }
+            EventKind::Msg(msg, bytes) => {
+                self.measured.wire_bytes += bytes;
+                if matches!(msg, WireMsg::Heartbeat { .. }) {
+                    return Ok(()); // liveness only; excluded from replay accounting
+                }
+                if self.slots[w].skip > 0 {
+                    self.slots[w].skip -= 1;
+                    return Ok(()); // duplicate re-emitted during replay
+                }
+                self.slots[w].accepted += 1;
+                self.accept(w, msg)
+            }
+        }
+    }
+
+    fn accept(&mut self, w: usize, msg: WireMsg) -> Result<()> {
+        match msg {
+            WireMsg::Ready { worker } => {
+                if worker as usize != w {
+                    return Err(Error::Runtime(format!(
+                        "slot {w} sent Ready for worker {worker}"
+                    )));
+                }
+                self.ready[w] = true;
+                Ok(())
+            }
+            WireMsg::Send { phase: WirePhase::Expand, to, stream, entries } => {
+                let to = to as usize;
+                if to >= self.p || to == w {
+                    return Err(Error::Runtime(format!("worker {w} expand send to bad dest {to}")));
+                }
+                let n = entries.len() as u64;
+                self.measured.expand[w].sent_entries += n;
+                self.measured.expand[w].sent_bytes += n * ENTRY_BYTES;
+                self.expand_inbox[to].push((stream.id(), w as u32, entries));
+                Ok(())
+            }
+            WireMsg::Send { phase: WirePhase::Fold, to, stream, entries } => {
+                let to = to as usize;
+                if to >= self.p || to == w {
+                    return Err(Error::Runtime(format!("worker {w} fold send to bad dest {to}")));
+                }
+                if stream != Stream::Partial {
+                    return Err(Error::Runtime(format!("worker {w} fold send on non-Partial")));
+                }
+                let n = entries.len() as u64;
+                self.measured.fold[w].sent_entries += n;
+                self.measured.fold[w].sent_bytes += n * ENTRY_BYTES;
+                self.fold_inbox[to].push((w as u32, entries));
+                Ok(())
+            }
+            WireMsg::Send { phase: WirePhase::Compute, .. } => {
+                Err(Error::Runtime(format!("worker {w} sent data during compute phase")))
+            }
+            WireMsg::PhaseDone { phase, mults } => {
+                self.phase_done[w][phase.id() as usize] = true;
+                if phase == WirePhase::Compute {
+                    self.mults[w] = mults;
+                }
+                Ok(())
+            }
+            WireMsg::ResultC { entries } => {
+                self.results[w] = Some(entries);
+                self.slots[w].exited = true;
+                Ok(())
+            }
+            WireMsg::Fail { message } => {
+                Err(Error::Runtime(format!("worker {w} failed: {message}")))
+            }
+            other => Err(Error::Runtime(format!(
+                "worker {w} sent leader-only message {:?}",
+                other.tag()
+            ))),
+        }
+    }
+
+    fn check_timeouts(&mut self) -> Result<()> {
+        let timeout = Duration::from_millis(self.timeout_ms);
+        for w in 0..self.p {
+            if !self.slots[w].exited && self.slots[w].last_heard.elapsed() > timeout {
+                self.fail_worker(w, "heartbeat timeout")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a frame to slot `w`, logging it first so recovery can replay it.
+    fn send_logged(&mut self, w: usize, msg: &WireMsg) -> Result<()> {
+        let frame = wire::encode_frame(msg);
+        self.slots[w].log.push(frame.clone());
+        self.measured.wire_bytes += frame.len() as u64;
+        let write = self.slots[w]
+            .stdin
+            .write_all(&frame)
+            .and_then(|_| self.slots[w].stdin.flush());
+        if let Err(e) = write {
+            // The frame is in the log, so replay will deliver it.
+            self.fail_worker(w, &format!("write failed: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Kill-and-respawn recovery for slot `w`: bump the generation (so stale
+    /// reader events are dropped), arrange to skip the frames the old process
+    /// already had accepted, and replay the full log into the new process.
+    fn fail_worker(&mut self, w: usize, why: &str) -> Result<()> {
+        if self.slots[w].exited {
+            return Ok(());
+        }
+        loop {
+            if self.slots[w].respawns >= MAX_RESPAWNS {
+                return Err(Error::Runtime(format!(
+                    "worker {w} failed ({why}) and respawn limit {MAX_RESPAWNS} exhausted"
+                )));
+            }
+            self.slots[w].respawns += 1;
+            self.measured.respawns += 1;
+            let _ = self.slots[w].child.kill();
+            let _ = self.slots[w].child.wait();
+            self.slots[w].gen += 1;
+            self.slots[w].skip = self.slots[w].accepted;
+            match self.spawn_into(w) {
+                Ok(()) => return Ok(()),
+                Err(_) => continue,
+            }
+        }
+    }
+
+    fn spawn_into(&mut self, w: usize) -> Result<()> {
+        let (child, stdin, stdout) = spawn_child(&self.exe)
+            .map_err(|e| Error::Runtime(format!("cannot respawn worker {w}: {e}")))?;
+        start_reader(w, self.slots[w].gen, stdout, self._events_tx.clone());
+        self.slots[w].child = child;
+        self.slots[w].stdin = stdin;
+        self.slots[w].last_heard = Instant::now();
+        let frames: Vec<Vec<u8>> = self.slots[w].log.clone();
+        for frame in &frames {
+            self.measured.wire_bytes += frame.len() as u64;
+            self.slots[w]
+                .stdin
+                .write_all(frame)
+                .and_then(|_| self.slots[w].stdin.flush())
+                .map_err(|e| Error::Runtime(format!("replay to worker {w} failed: {e}")))?;
+        }
+        Ok(())
+    }
+
+    fn inject_fault(&mut self, phase: WirePhase) -> Result<()> {
+        let fault = match self.fault {
+            Some(f) if f.after_phase == phase => f,
+            _ => return Ok(()),
+        };
+        let w = fault.kill_worker;
+        for _ in 0..fault.kills {
+            let target = self.slots[w].gen + 1;
+            if fault.hang {
+                // Freeze is deliberately unlogged: it is the fault, not part
+                // of the protocol, and must not be replayed after recovery.
+                let frame = wire::encode_frame(&WireMsg::Freeze);
+                let _ = self.slots[w].stdin.write_all(&frame);
+                let _ = self.slots[w].stdin.flush();
+            } else {
+                let _ = self.slots[w].child.kill();
+            }
+            self.wait_until(move |l| l.slots[w].gen >= target)?;
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        for slot in &mut self.slots {
+            let _ = slot.child.kill();
+            let _ = slot.child.wait();
+        }
+    }
+}
+
+type SpawnedChild = (Child, ChildStdin, std::process::ChildStdout);
+
+fn spawn_child(exe: &Path) -> std::io::Result<SpawnedChild> {
+    let mut child = Command::new(exe)
+        .arg("worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()?;
+    let stdin = child.stdin.take().ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "child stdin unavailable")
+    })?;
+    let stdout = child.stdout.take().ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "child stdout unavailable")
+    })?;
+    Ok((child, stdin, stdout))
+}
+
+fn start_reader(slot: usize, gen: u32, stdout: std::process::ChildStdout, tx: Sender<Event>) {
+    thread::spawn(move || {
+        let mut reader = BufReader::new(stdout);
+        loop {
+            match wire::read_frame(&mut reader) {
+                Ok(Some((msg, bytes))) => {
+                    if tx.send(Event { slot, gen, kind: EventKind::Msg(msg, bytes) }).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => {
+                    let _ = tx.send(Event { slot, gen, kind: EventKind::Eof(None) });
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send(Event { slot, gen, kind: EventKind::Eof(Some(e.to_string())) });
+                    return;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Entry point for the hidden `spgemm-hp worker` subcommand.
+///
+/// Speaks the wire protocol over stdin/stdout: waits for `Init`, runs the
+/// expand -> compute -> fold protocol deterministically (so replay after a
+/// leader-driven respawn reproduces the exact same frames), and finishes by
+/// sending `ResultC` with its owned C entries.
+pub fn worker_entry() -> Result<()> {
+    let stdin = std::io::stdin();
+    let mut input = BufReader::new(stdin.lock());
+    let out = Arc::new(Mutex::new(BufWriter::new(std::io::stdout())));
+
+    let first = wire::read_frame(&mut input)
+        .map_err(|e| Error::Runtime(format!("worker init read failed: {e}")))?;
+    let msg = match first {
+        Some((msg, _)) => msg,
+        None => return Ok(()), // leader went away before Init; nothing to do
+    };
+    let (worker, p, heartbeat_ms, plan) = match msg {
+        WireMsg::Init { worker, p, heartbeat_ms, tile: _, plan } => (worker, p, heartbeat_ms, plan),
+        _ => return Err(Error::Runtime("worker expected Init as first frame".into())),
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat = {
+        let out = Arc::clone(&out);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let interval = Duration::from_millis(heartbeat_ms.max(1));
+            let mut seq = 0u64;
+            'outer: loop {
+                let deadline = Instant::now() + interval;
+                while Instant::now() < deadline {
+                    if stop.load(Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                    thread::sleep(Duration::from_millis(10.min(heartbeat_ms.max(1))));
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if send_msg(&out, &WireMsg::Heartbeat { worker, seq }).is_err() {
+                    break;
+                }
+                seq += 1;
+            }
+        })
+    };
+
+    let run = worker_run(&mut input, &out, &stop, worker as usize, p as usize, &plan);
+    // Stop and join the heartbeat thread *before* ResultC so no heartbeat can
+    // be interleaved mid-frame or truncated by process exit.
+    stop.store(true, Ordering::Relaxed);
+    let _ = beat.join();
+    match run {
+        Ok(entries) => {
+            send_msg(&out, &WireMsg::ResultC { entries })?;
+            Ok(())
+        }
+        Err(e) => {
+            let _ = send_msg(&out, &WireMsg::Fail { message: e.to_string() });
+            Err(e)
+        }
+    }
+}
+
+fn send_msg(out: &Mutex<BufWriter<std::io::Stdout>>, msg: &WireMsg) -> Result<()> {
+    let mut g = out
+        .lock()
+        .map_err(|_| Error::Runtime("worker output mutex poisoned".into()))?;
+    wire::write_frame(&mut *g, msg)?;
+    g.flush()
+        .map_err(|e| Error::Runtime(format!("worker stdout flush failed: {e}")))?;
+    Ok(())
+}
+
+/// Read the next protocol frame; handles `Freeze` (fault injection) by
+/// silencing heartbeats and parking forever so the leader's timeout fires.
+fn next_msg(input: &mut impl Read, stop: &AtomicBool) -> Result<WireMsg> {
+    let frame = wire::read_frame(input)
+        .map_err(|e| Error::Runtime(format!("worker read failed: {e}")))?;
+    let msg = match frame {
+        Some((msg, _)) => msg,
+        None => return Err(Error::Runtime("leader closed the pipe".into())),
+    };
+    if matches!(msg, WireMsg::Freeze) {
+        stop.store(true, Ordering::Relaxed);
+        loop {
+            thread::park();
+        }
+    }
+    Ok(msg)
+}
+
+fn worker_run(
+    input: &mut impl Read,
+    out: &Mutex<BufWriter<std::io::Stdout>>,
+    stop: &AtomicBool,
+    me: usize,
+    p: usize,
+    plan: &WorkerPlan,
+) -> Result<Entries> {
+    if plan.id != me {
+        return Err(Error::Runtime(format!("plan id {} != worker {me}", plan.id)));
+    }
+    send_msg(out, &WireMsg::Ready { worker: me as u32 })?;
+
+    match next_msg(input, stop)? {
+        WireMsg::Start(WirePhase::Expand) => {}
+        other => {
+            return Err(Error::Runtime(format!("expected Start(Expand), got tag {}", other.tag())));
+        }
+    }
+
+    // Expand: bucket each shared entry per destination, then emit in
+    // deterministic (stream, destination) order so replay is byte-identical.
+    let mut bucket_a: Vec<Entries> = vec![Vec::new(); p];
+    let mut bucket_b: Vec<Entries> = vec![Vec::new(); p];
+    for (key, val, consumers) in &plan.send_a {
+        for &q in consumers {
+            bucket_a[q as usize].push((*key, *val));
+        }
+    }
+    for (key, val, consumers) in &plan.send_b {
+        for &q in consumers {
+            bucket_b[q as usize].push((*key, *val));
+        }
+    }
+    for (stream, buckets) in [(Stream::A, bucket_a), (Stream::B, bucket_b)] {
+        for (to, entries) in buckets.into_iter().enumerate() {
+            if entries.is_empty() {
+                continue;
+            }
+            send_msg(
+                out,
+                &WireMsg::Send { phase: WirePhase::Expand, to: to as u32, stream, entries },
+            )?;
+        }
+    }
+    send_msg(out, &WireMsg::PhaseDone { phase: WirePhase::Expand, mults: 0 })?;
+
+    // Receive remote tiles until the leader starts compute.
+    let mut a_vals: HashMap<u32, f64> = plan.owned_a.iter().copied().collect();
+    let mut b_vals: HashMap<u32, f64> = plan.owned_b.iter().copied().collect();
+    let mut got = 0u64;
+    loop {
+        match next_msg(input, stop)? {
+            WireMsg::Deliver { phase: WirePhase::Expand, stream, entries, .. } => {
+                got += entries.len() as u64;
+                let dest = match stream {
+                    Stream::A => &mut a_vals,
+                    Stream::B => &mut b_vals,
+                    Stream::Partial => {
+                        return Err(Error::Runtime("Partial stream during expand".into()));
+                    }
+                };
+                for (key, val) in entries {
+                    dest.insert(key, val);
+                }
+            }
+            WireMsg::Start(WirePhase::Compute) => break,
+            other => {
+                return Err(Error::Runtime(format!("unexpected tag {} in expand", other.tag())));
+            }
+        }
+    }
+    if got != plan.expect_a + plan.expect_b {
+        return Err(Error::Runtime(format!(
+            "expand delivered {got} entries, expected {}",
+            plan.expect_a + plan.expect_b
+        )));
+    }
+
+    // Compute: sweep the plan's tile groups in order; k-increasing accumulation
+    // matches the sequential kernel bit-for-bit for single-producer columns.
+    let mut partials: HashMap<u32, f64> = HashMap::new();
+    let mut mults = 0u64;
+    for group in &plan.groups {
+        for m in &group.mults {
+            let av = *a_vals
+                .get(&m.pa)
+                .ok_or_else(|| Error::Runtime(format!("missing A value {}", m.pa)))?;
+            let bv = *b_vals
+                .get(&m.pb)
+                .ok_or_else(|| Error::Runtime(format!("missing B value {}", m.pb)))?;
+            *partials.entry(m.pc).or_insert(0.0) += av * bv;
+            mults += 1;
+        }
+    }
+    send_msg(out, &WireMsg::PhaseDone { phase: WirePhase::Compute, mults })?;
+
+    // Fold: route each partial to its C owner in sorted-pc order (HashMap
+    // iteration order would differ across processes and break replay).
+    let mut sorted: Vec<(u32, f64)> = partials.into_iter().collect();
+    sorted.sort_by_key(|e| e.0);
+    let mut mine: Entries = Vec::new();
+    let mut fold_out: Vec<Entries> = vec![Vec::new(); p];
+    for (pc, v) in sorted {
+        let owner = *plan
+            .owner_c_of
+            .get(&pc)
+            .ok_or_else(|| Error::Runtime(format!("no C owner for column {pc}")))?;
+        if owner as usize == me {
+            mine.push((pc, v));
+        } else {
+            fold_out[owner as usize].push((pc, v));
+        }
+    }
+    for (to, entries) in fold_out.into_iter().enumerate() {
+        if entries.is_empty() {
+            continue;
+        }
+        send_msg(
+            out,
+            &WireMsg::Send {
+                phase: WirePhase::Fold,
+                to: to as u32,
+                stream: Stream::Partial,
+                entries,
+            },
+        )?;
+    }
+    send_msg(out, &WireMsg::PhaseDone { phase: WirePhase::Fold, mults: 0 })?;
+
+    // Receive remote partials until the leader starts fold.
+    let mut cvals: HashMap<u32, f64> = mine.iter().copied().collect();
+    let mut got = 0u64;
+    loop {
+        match next_msg(input, stop)? {
+            WireMsg::Deliver { phase: WirePhase::Fold, stream: Stream::Partial, entries, .. } => {
+                got += entries.len() as u64;
+                for (pc, v) in entries {
+                    *cvals.entry(pc).or_insert(0.0) += v;
+                }
+            }
+            WireMsg::Start(WirePhase::Fold) => break,
+            other => {
+                return Err(Error::Runtime(format!("unexpected tag {} in fold", other.tag())));
+            }
+        }
+    }
+    if got != plan.expect_partials {
+        return Err(Error::Runtime(format!(
+            "fold delivered {got} partials, expected {}",
+            plan.expect_partials
+        )));
+    }
+
+    Ok(plan
+        .owned_c
+        .iter()
+        .map(|&pc| (pc, cvals.get(&pc).copied().unwrap_or(0.0)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithm::AlgorithmStrategy;
+    use crate::partition::PartitionerConfig;
+    use crate::sparse::Coo;
+
+    fn tiny_plan() -> ExecutionPlan {
+        let mut ca = Coo::new(6, 6);
+        for i in 0..6 {
+            ca.push(i, i, 1.0 + i as f64);
+            ca.push(i, (i + 1) % 6, 0.5);
+        }
+        let a = Csr::from_coo(&ca);
+        let b = a.clone();
+        let strat = AlgorithmStrategy::parse("row").unwrap();
+        let alg = strat.lower(&a, &b, &PartitionerConfig::new(2)).unwrap();
+        let cs = spgemm_structure(&a, &b).unwrap();
+        ExecutionPlan::build(&a, &b, &alg, &cs, 4).unwrap()
+    }
+
+    #[test]
+    fn modeled_sends_sum_to_plan_volumes() {
+        let plan = tiny_plan();
+        let expand: u64 = plan.workers.iter().map(|w| w.modeled_expand_send()).sum();
+        let fold: u64 = plan.workers.iter().map(|w| w.modeled_fold_send()).sum();
+        assert_eq!(expand, plan.expand_volume);
+        assert_eq!(fold, plan.fold_volume);
+        // Send totals equal receive totals through the leader.
+        let expect: u64 = plan.workers.iter().map(|w| w.expect_a + w.expect_b).sum();
+        assert_eq!(expand, expect);
+        let partials: u64 = plan.workers.iter().map(|w| w.expect_partials).sum();
+        assert_eq!(fold, partials);
+    }
+
+    #[test]
+    fn check_against_accepts_model_and_rejects_perturbation() {
+        let plan = tiny_plan();
+        let mut m = MeasuredReport::new(plan.workers.len());
+        for (w, wp) in plan.workers.iter().enumerate() {
+            m.expand[w].sent_entries = wp.modeled_expand_send();
+            m.expand[w].recv_entries = wp.expect_a + wp.expect_b;
+            m.fold[w].sent_entries = wp.modeled_fold_send();
+            m.fold[w].recv_entries = wp.expect_partials;
+        }
+        m.check_against(&plan).unwrap();
+        m.expand[0].sent_entries += 1;
+        assert!(m.check_against(&plan).is_err());
+    }
+
+    #[test]
+    fn exec_mode_parses_both_spellings_and_rejects_junk() {
+        assert_eq!(ExecMode::parse("simulated"), Some(ExecMode::Simulated));
+        assert_eq!(ExecMode::parse("processes"), Some(ExecMode::Processes));
+        assert_eq!(ExecMode::parse("threads"), None);
+        assert_eq!(ExecMode::parse(ExecMode::Processes.name()), Some(ExecMode::Processes));
+    }
+
+    #[test]
+    fn fault_plan_validation() {
+        assert!(FaultPlan::kill(0, WirePhase::Expand).validate(2).is_ok());
+        assert!(FaultPlan::kill(2, WirePhase::Expand).validate(2).is_err());
+        assert!(FaultPlan::kill(0, WirePhase::Fold).validate(2).is_err());
+        let zero = FaultPlan { kills: 0, ..FaultPlan::kill(0, WirePhase::Expand) };
+        assert!(zero.validate(2).is_err());
+    }
+}

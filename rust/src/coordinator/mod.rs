@@ -30,8 +30,15 @@
 //! [`plan::PreparedPlan`] — usually one served from
 //! [`crate::planner`]'s fingerprinted cache — and [`run`] executes it
 //! directly (the inspector–executor pattern).
+//!
+//! With [`CoordinatorConfig::exec`] set to [`exec::ExecMode::Processes`]
+//! the same plan runs on real worker OS processes connected by pipes
+//! speaking the [`wire`] protocol, with heartbeat-based failure detection
+//! and replay-based recovery — see `docs/DISTRIBUTED.md`.
 
+pub mod exec;
 pub mod plan;
+pub mod wire;
 
 use crate::runtime::Engine;
 use crate::sim::Algorithm;
@@ -72,6 +79,20 @@ pub struct CoordinatorConfig {
     /// passed to [`run`] — cheap structural checks reject obvious
     /// mismatches, value staleness is the caller's contract.
     pub plan: Option<Arc<PreparedPlan>>,
+    /// How to execute: in-process simulation (default) or real worker
+    /// OS processes over pipes ([`exec::run_processes`]). Process mode
+    /// always takes the scalar compute path, so `kernel`,
+    /// `min_tile_batch`, and `compute_threads` are ignored there.
+    pub exec: exec::ExecMode,
+    /// Heartbeat timeout before a worker process is declared dead and
+    /// respawned (process mode only).
+    pub worker_timeout_ms: u64,
+    /// Worker executable override (process mode only); `None` uses
+    /// `std::env::current_exe()` — correct for the `spgemm-hp` binary,
+    /// set explicitly from test harnesses.
+    pub worker_exe: Option<std::path::PathBuf>,
+    /// Test-only fault injection for process mode.
+    pub fault: Option<exec::FaultPlan>,
 }
 
 impl Default for CoordinatorConfig {
@@ -86,6 +107,10 @@ impl Default for CoordinatorConfig {
             compute_threads: 1,
             kernel: KernelKind::Auto,
             plan: None,
+            exec: exec::ExecMode::Simulated,
+            worker_timeout_ms: exec::DEFAULT_WORKER_TIMEOUT_MS,
+            worker_exe: None,
+            fault: None,
         }
     }
 }
@@ -143,6 +168,9 @@ pub fn run(
     alg: &Algorithm,
     cfg: &CoordinatorConfig,
 ) -> Result<(CoordReport, Csr)> {
+    if cfg.exec == exec::ExecMode::Processes {
+        return exec::run_processes(a, b, alg, cfg).map(|(rep, _measured, c)| (rep, c));
+    }
     if cfg.compute_threads == 0 {
         return Err(Error::Config("compute_threads must be >= 1".into()));
     }

@@ -185,6 +185,28 @@ impl ExecutionPlan {
     }
 }
 
+impl WorkerPlan {
+    /// Modeled expand-phase payload entries this worker sends: one per
+    /// (owned input entry, remote consumer) pair. Sums to
+    /// [`ExecutionPlan::expand_volume`] across workers, and equals what
+    /// the process executor measures on the wire.
+    pub fn modeled_expand_send(&self) -> u64 {
+        self.send_a
+            .iter()
+            .chain(self.send_b.iter())
+            .map(|(_, _, consumers)| consumers.len() as u64)
+            .sum()
+    }
+
+    /// Modeled fold-phase payload entries this worker sends: one partial
+    /// per produced C position whose owner is another worker (the scalar
+    /// compute path merges all local contributions to a position into a
+    /// single partial). Sums to [`ExecutionPlan::fold_volume`].
+    pub fn modeled_fold_send(&self) -> u64 {
+        self.owner_c_of.values().filter(|&&owner| owner as usize != self.id).count() as u64
+    }
+}
+
 #[inline]
 fn push_unique(v: &mut Vec<u32>, q: u32) {
     if !v.contains(&q) {

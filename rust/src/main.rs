@@ -5,7 +5,7 @@
 //! spgemm-hp gen <stencil27|rmat|roadnet|lp|er> [--n ..] [--out file.mtx]
 //! spgemm-hp partition --a A.mtx --b B.mtx --model row --parts 8 [--epsilon 0.03]
 //!           [--mem-epsilon D] [--partition-threads N] [--match-chunk N]
-//!           [--plan-cache DIR] [--plan-cache-cap N] [--tile 8]
+//!           [--plan-cache DIR] [--plan-cache-cap N] [--plan-cache-bytes N] [--tile 8]
 //! spgemm-hp spgemm --a A.mtx --b B.mtx [--kernel auto|sortmerge|densespa|hashaccum]
 //!           [--threads N] [--out C.mtx]
 //! spgemm-hp repro <table2|fig7|fig8|fig9|bounds|seqbound|traffic|baselines>
@@ -16,7 +16,8 @@
 //!           [--tile 8] [--kernel auto] [--dataflow static|auto] [--artifacts artifacts]
 //!           [--cache-kb 256] [--line-bytes 64] [--assoc 8]
 //!           [--partition-threads N] [--epsilon E] [--mem-epsilon D]
-//!           [--plan-cache DIR] [--plan-cache-cap N]
+//!           [--plan-cache DIR] [--plan-cache-cap N] [--plan-cache-bytes N]
+//!           [--exec simulated|processes] [--workers-timeout-ms 5000]
 //! ```
 //!
 //! `--mtx-a`/`--mtx-b` are accepted everywhere `--a`/`--b` are (and are
@@ -32,8 +33,14 @@
 //! strategy runs. `--dataflow auto` lets the storage-traffic simulator
 //! (see `docs/TRAFFIC.md`) pick the plan's tile for the cache described
 //! by `--cache-kb`/`--line-bytes`/`--assoc`; `repro traffic` correlates
-//! hypergraph cut against that simulator's predicted bytes. Unknown
-//! `--options` are rejected per subcommand.
+//! hypergraph cut against that simulator's predicted bytes.
+//! `e2e --exec processes` executes each algorithm on real worker OS
+//! processes speaking the framed wire protocol (`docs/DISTRIBUTED.md`)
+//! and cross-checks measured per-worker payloads against the modeled
+//! volumes; `--workers-timeout-ms` tunes its failure detector.
+//! `--plan-cache-bytes` puts a byte budget on the on-disk plan cache
+//! (oldest plans are evicted first). Unknown `--options` are rejected
+//! per subcommand.
 
 use spgemm_hp::algorithm::AlgorithmStrategy;
 use spgemm_hp::cli::Args;
@@ -67,6 +74,13 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("spgemm") => cmd_spgemm(args),
         Some("repro") => cmd_repro(args),
         Some("e2e") => cmd_e2e(args),
+        // Hidden: the process-mode worker entry point. Spawned by the
+        // leader (coordinator::exec) with the wire protocol on
+        // stdin/stdout; never invoked by hand.
+        Some("worker") => {
+            args.check_known(&[])?;
+            coordinator::exec::worker_entry()
+        }
         Some(other) => Err(Error::Config(format!("unknown command: {other} (try `info`)"))),
     }
 }
@@ -148,12 +162,20 @@ fn parse_mem_epsilon(args: &Args) -> Result<Option<f64>> {
     }
 }
 
-/// Construct a planner from `--plan-cache` / `--plan-cache-cap` (memory
-/// only when the directory flag is absent).
+/// Construct a planner from `--plan-cache` / `--plan-cache-cap` /
+/// `--plan-cache-bytes` (memory only when the directory flag is absent).
 fn planner_from_args(args: &Args) -> Result<spgemm_hp::planner::Planner> {
     let cache_dir = args.get("plan-cache").map(std::path::PathBuf::from);
     let capacity = args.get_usize_min("plan-cache-cap", spgemm_hp::planner::DEFAULT_CAPACITY, 1)?;
-    spgemm_hp::planner::Planner::new(spgemm_hp::planner::PlannerConfig { cache_dir, capacity })
+    let max_store_bytes = match args.get("plan-cache-bytes") {
+        None => None,
+        Some(_) => Some(args.get_u64("plan-cache-bytes", 0)?),
+    };
+    spgemm_hp::planner::Planner::new(spgemm_hp::planner::PlannerConfig {
+        cache_dir,
+        capacity,
+        max_store_bytes,
+    })
 }
 
 /// The one place CLI flags become a [`partition::PartitionerConfig`]:
@@ -208,6 +230,7 @@ fn cmd_partition(args: &Args) -> Result<()> {
         "match-chunk",
         "plan-cache",
         "plan-cache-cap",
+        "plan-cache-bytes",
         "tile",
     ])?;
     let (a, b) = load_pair(args)?;
@@ -420,6 +443,9 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         "mtx-b",
         "plan-cache",
         "plan-cache-cap",
+        "plan-cache-bytes",
+        "exec",
+        "workers-timeout-ms",
     ])?;
     let parts = args.get_usize("parts", 4)?;
     let tile = args.get_usize("tile", 8)?;
@@ -428,6 +454,13 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let scale = args.get_u32("scale", 1)?;
     let kernel = args.get_parsed("kernel", sparse::KernelKind::Auto, sparse::KernelKind::parse)?;
     let dataflow = args.get_parsed("dataflow", sim::Dataflow::Static, sim::Dataflow::parse)?;
+    let exec_mode = args.get_parsed(
+        "exec",
+        coordinator::exec::ExecMode::Simulated,
+        coordinator::exec::ExecMode::parse,
+    )?;
+    let workers_timeout_ms =
+        args.get_u64("workers-timeout-ms", coordinator::exec::DEFAULT_WORKER_TIMEOUT_MS)?;
     let cache = cache_from_args(args)?;
     let cfg = partitioner_config_from_args(args, parts, 0.1, seed)?;
     // one named strategy, or the full model-vs-oblivious comparison
@@ -509,15 +542,27 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         // fingerprint matches
         let planned = planner.plan_strategy_with(&a, &b, strategy, &cfg, tile, dataflow, &cache)?;
         let (sim_rep, c_sim) = sim::simulate(&a, &b, &planned.alg)?;
+        let plan_tile = planned.prepared.tile;
         let ccfg = coordinator::CoordinatorConfig {
-            tile: planned.prepared.tile,
+            tile: plan_tile,
             artifacts_dir: Some(artifacts.into()),
             kernel,
-            plan: Some(std::sync::Arc::new(planned.prepared)),
+            plan: Some(std::sync::Arc::new(planned.prepared.clone())),
+            exec: exec_mode,
+            worker_timeout_ms: workers_timeout_ms,
             ..Default::default()
         };
         let t = Timer::start();
-        let (rep, c) = coordinator::run(&a, &b, &planned.alg, &ccfg)?;
+        let (rep, measured, c) = match exec_mode {
+            coordinator::exec::ExecMode::Processes => {
+                let (rep, m, c) = coordinator::exec::run_processes(&a, &b, &planned.alg, &ccfg)?;
+                (rep, Some(m), c)
+            }
+            coordinator::exec::ExecMode::Simulated => {
+                let (rep, c) = coordinator::run(&a, &b, &planned.alg, &ccfg)?;
+                (rep, None, c)
+            }
+        };
         let ms = t.elapsed_ms();
         let ok = c.approx_eq(&c_ref, 1e-3) && c_sim.approx_eq(&c_ref, 1e-10);
         println!(
@@ -537,11 +582,17 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         if !ok {
             return Err(Error::Runtime("numeric validation failed".into()));
         }
-        if planned.dataflow == sim::Dataflow::Auto && planned.prepared.tile != tile {
+        if let Some(m) = &measured {
+            // run_processes already cross-checked measured payloads
+            // against the plan's modeled per-worker volumes
             println!(
-                "  (auto dataflow chose tile {} over static {tile})",
-                planned.prepared.tile
+                "  measured wire: {} framed bytes, {} respawns (payload == modeled ✓)",
+                fmt_count(m.wire_bytes),
+                m.respawns
             );
+        }
+        if planned.dataflow == sim::Dataflow::Auto && plan_tile != tile {
+            println!("  (auto dataflow chose tile {plan_tile} over static {tile})");
         }
         if !rep.used_pjrt {
             println!("  (note: PJRT artifacts unavailable; reference backend used)");

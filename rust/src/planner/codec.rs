@@ -304,7 +304,9 @@ fn dec_groups(r: &mut Reader) -> Result<Vec<TileGroup>> {
     Ok(out)
 }
 
-fn enc_worker(w: &mut Writer, wp: &WorkerPlan) {
+/// Encode one [`WorkerPlan`] (also the `Init` payload body of
+/// [`crate::coordinator::wire`] — the plan travels in its cache form).
+pub(crate) fn enc_worker(w: &mut Writer, wp: &WorkerPlan) {
     w.u64(wp.id as u64);
     enc_owned(w, &wp.owned_a);
     enc_owned(w, &wp.owned_b);
@@ -325,7 +327,8 @@ fn enc_worker(w: &mut Writer, wp: &WorkerPlan) {
     }
 }
 
-fn dec_worker(r: &mut Reader) -> Result<WorkerPlan> {
+/// Checked inverse of [`enc_worker`].
+pub(crate) fn dec_worker(r: &mut Reader) -> Result<WorkerPlan> {
     let id = r.u64()? as usize;
     let owned_a = dec_owned(r)?;
     let owned_b = dec_owned(r)?;

@@ -68,6 +68,10 @@ pub struct PlannerConfig {
     pub cache_dir: Option<PathBuf>,
     /// In-memory LRU capacity (`--plan-cache-cap`); 0 picks the default.
     pub capacity: usize,
+    /// Disk-tier byte budget (`--plan-cache-bytes`): after each insert
+    /// the oldest-mtime plan files are collected until the directory
+    /// fits. `None` (the default) never evicts from disk.
+    pub max_store_bytes: Option<u64>,
 }
 
 /// Default in-memory capacity when none is configured.
@@ -183,7 +187,10 @@ pub struct Planner {
 impl Planner {
     pub fn new(cfg: PlannerConfig) -> Result<Planner> {
         let cap = if cfg.capacity == 0 { DEFAULT_CAPACITY } else { cfg.capacity };
-        Ok(Planner { store: PlanStore::new(cap, cfg.cache_dir)?, models: ModelCache::new(cap) })
+        Ok(Planner {
+            store: PlanStore::with_budget(cap, cfg.cache_dir, cfg.max_store_bytes)?,
+            models: ModelCache::new(cap),
+        })
     }
 
     /// A memory-only planner with default capacity.

@@ -12,7 +12,11 @@
 //!   version, fingerprint mismatch, corrupt payload, undecodable bytes —
 //!   is rejected as [`StoreLookup::Stale`] and the caller replans (and
 //!   overwrites the entry), so cache corruption can cost time but never
-//!   correctness.
+//!   correctness. An optional byte budget ([`PlanStore::with_budget`],
+//!   `--plan-cache-bytes`) garbage-collects the oldest-mtime `.plan`
+//!   files after each write until the tier fits; the entry just written
+//!   is always kept, and `None` preserves today's unbounded behavior
+//!   exactly.
 
 use super::codec::FORMAT_VERSION;
 use super::codec::{decode_bundle, encode_bundle, PlanBundle, Reader, Writer};
@@ -39,21 +43,39 @@ pub enum StoreLookup {
 pub struct PlanStore {
     capacity: usize,
     dir: Option<PathBuf>,
+    /// Disk-tier byte budget; `None` never evicts (the pre-budget
+    /// behavior, bit-for-bit).
+    max_bytes: Option<u64>,
     /// Most-recently-used at the back.
     mru: Vec<(Fingerprint, PlanBundle)>,
 }
 
 impl PlanStore {
     /// `capacity` bounds the memory tier (≥ 1); `dir`, when given, is
-    /// created eagerly and used as the disk tier.
+    /// created eagerly and used as the disk tier (unbounded).
     pub fn new(capacity: usize, dir: Option<PathBuf>) -> Result<PlanStore> {
+        PlanStore::with_budget(capacity, dir, None)
+    }
+
+    /// [`PlanStore::new`] with a disk-tier byte budget: after every
+    /// insert, the oldest-mtime `.plan` files are removed until the tier
+    /// (including the entry just written, which is never evicted) fits
+    /// in `max_bytes`.
+    pub fn with_budget(
+        capacity: usize,
+        dir: Option<PathBuf>,
+        max_bytes: Option<u64>,
+    ) -> Result<PlanStore> {
         if capacity == 0 {
             return Err(Error::Config("plan cache capacity must be >= 1".into()));
+        }
+        if max_bytes == Some(0) {
+            return Err(Error::Config("plan cache byte budget must be >= 1".into()));
         }
         if let Some(d) = &dir {
             std::fs::create_dir_all(d)?;
         }
-        Ok(PlanStore { capacity, dir, mru: Vec::new() })
+        Ok(PlanStore { capacity, dir, max_bytes, mru: Vec::new() })
     }
 
     /// Fingerprints currently held in memory, least recently used first
@@ -88,10 +110,14 @@ impl PlanStore {
     }
 
     /// Insert (or refresh) an entry in both tiers. Disk write failures
-    /// surface as errors — the caller asked for a durable cache.
+    /// surface as errors — the caller asked for a durable cache. With a
+    /// byte budget, the write is followed by an oldest-mtime GC sweep.
     pub fn insert(&mut self, fp: Fingerprint, bundle: &PlanBundle) -> Result<()> {
         if let Some(path) = self.path_of(fp) {
             write_atomic(&path, &encode_file(fp, bundle))?;
+            if let Some(budget) = self.max_bytes {
+                gc_disk(self.dir.as_ref().unwrap(), budget, &path)?;
+            }
         }
         if let Some(at) = self.mru.iter().position(|(f, _)| *f == fp) {
             self.mru.remove(at);
@@ -106,6 +132,64 @@ impl PlanStore {
         }
         self.mru.push((fp, bundle));
     }
+
+    /// Total size of the disk tier's `.plan` files (0 without a disk
+    /// tier) — the quantity the byte budget bounds.
+    pub fn disk_bytes(&self) -> Result<u64> {
+        let Some(dir) = &self.dir else { return Ok(0) };
+        Ok(plan_files(dir)?.iter().map(|f| f.bytes).sum())
+    }
+}
+
+/// One disk-tier entry, as seen by the GC sweep.
+struct PlanFile {
+    path: PathBuf,
+    bytes: u64,
+    mtime: std::time::SystemTime,
+}
+
+/// The directory's `.plan` files (tmp siblings and foreign files are
+/// ignored).
+fn plan_files(dir: &Path) -> Result<Vec<PlanFile>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("plan") {
+            continue;
+        }
+        let meta = entry.metadata()?;
+        if !meta.is_file() {
+            continue;
+        }
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        out.push(PlanFile { path, bytes: meta.len(), mtime });
+    }
+    Ok(out)
+}
+
+/// Remove oldest-mtime `.plan` files until the tier fits in `budget`
+/// bytes. `keep` (the entry just written) is never removed — a single
+/// over-budget plan stays usable rather than evicting itself. Ties on
+/// mtime break by file name so the sweep is deterministic.
+fn gc_disk(dir: &Path, budget: u64, keep: &Path) -> Result<()> {
+    let mut files = plan_files(dir)?;
+    let mut total: u64 = files.iter().map(|f| f.bytes).sum();
+    if total <= budget {
+        return Ok(());
+    }
+    files.sort_by(|x, y| x.mtime.cmp(&y.mtime).then_with(|| x.path.cmp(&y.path)));
+    for f in &files {
+        if total <= budget {
+            break;
+        }
+        if f.path == keep {
+            continue;
+        }
+        std::fs::remove_file(&f.path)?;
+        total -= f.bytes;
+    }
+    Ok(())
 }
 
 /// Full file image: header + payload.
@@ -282,5 +366,60 @@ mod tests {
     #[test]
     fn zero_capacity_rejected() {
         assert!(PlanStore::new(0, None).is_err());
+    }
+
+    #[test]
+    fn byte_budget_gc_evicts_oldest_first() {
+        let dir = tempdir("budget");
+        let one = encode_file(fp(0), &tiny(0)).len() as u64;
+        let budget = 2 * one + one / 2; // room for two files, not three
+        let mut st = PlanStore::with_budget(8, Some(dir.clone()), Some(budget)).unwrap();
+        for n in 1..=4u64 {
+            st.insert(fp(n), &tiny(n as u32)).unwrap();
+            // distinct mtimes on coarse-granularity filesystems are not
+            // guaranteed; the GC's name tie-break covers that case, and
+            // the sleep gives fine-granularity ones real mtime ordering
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        assert!(st.disk_bytes().unwrap() <= budget, "disk tier shrank to the budget");
+        // the two newest entries survive; the two oldest were collected
+        let mut fresh = PlanStore::with_budget(8, Some(dir.clone()), Some(budget)).unwrap();
+        assert!(matches!(fresh.lookup(fp(4)), StoreLookup::Hit(_)));
+        assert!(matches!(fresh.lookup(fp(3)), StoreLookup::Hit(_)));
+        assert_eq!(fresh.lookup(fp(2)), StoreLookup::Miss);
+        assert_eq!(fresh.lookup(fp(1)), StoreLookup::Miss);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn just_written_entry_survives_even_over_budget() {
+        let dir = tempdir("keep");
+        let one = encode_file(fp(0), &tiny(0)).len() as u64;
+        // budget smaller than a single file: every insert is over budget,
+        // but the entry just written is never its own victim
+        let mut st = PlanStore::with_budget(8, Some(dir.clone()), Some(one / 2)).unwrap();
+        st.insert(fp(1), &tiny(1)).unwrap();
+        st.insert(fp(2), &tiny(2)).unwrap();
+        let mut fresh = PlanStore::with_budget(8, Some(dir.clone()), Some(one / 2)).unwrap();
+        assert!(matches!(fresh.lookup(fp(2)), StoreLookup::Hit(_)));
+        assert_eq!(fresh.lookup(fp(1)), StoreLookup::Miss);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_budget_is_unbounded_and_zero_budget_rejected() {
+        assert!(PlanStore::with_budget(1, None, Some(0)).is_err());
+        let dir = tempdir("nobudget");
+        let mut st = PlanStore::new(2, Some(dir.clone())).unwrap();
+        for n in 1..=5u64 {
+            st.insert(fp(n), &tiny(n as u32)).unwrap();
+        }
+        // all five files remain on disk without a budget (memory tier
+        // eviction never touches the disk tier)
+        let mut fresh = PlanStore::new(2, Some(dir.clone())).unwrap();
+        for n in 1..=5u64 {
+            assert!(matches!(fresh.lookup(fp(n)), StoreLookup::Hit(_)), "fp({n})");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -118,6 +118,27 @@ pub fn mcl_pvalues(scale: u32) -> Vec<usize> {
     }
 }
 
+/// Small four-family instance set for the distributed wire-conformance
+/// suite (`rust/tests/distributed.rs`): one instance each of the ER,
+/// R-MAT, AMG, and LP families, sized so every strategy × p sweep
+/// finishes in seconds even when each case spawns real worker processes.
+pub fn conformance_instances(seed: u64) -> Result<Vec<Instance>> {
+    let mut rng = Rng::new(seed);
+    let er_a = gen::erdos_renyi(24, 24, 3.0, &mut rng)?;
+    let er_b = gen::erdos_renyi(24, 24, 3.0, &mut rng)?;
+    let rm = gen::rmat(&RmatParams::social(5, 4.0), &mut rng)?;
+    let amg_a = gen::stencil27(3);
+    let amg_p = gen::smoothed_aggregation_prolongator(&amg_a, 3)?;
+    let lp = gen::lp_constraints(&LpParams::pds_like(20, 64), &mut rng)?;
+    let lp_t = lp.transpose();
+    Ok(vec![
+        Instance { name: "er".into(), a: er_a, b: er_b },
+        Instance { name: "rmat".into(), a: rm.clone(), b: rm },
+        Instance { name: "amg".into(), a: amg_a, b: amg_p },
+        Instance { name: "lp".into(), a: lp, b: lp_t },
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,5 +192,17 @@ mod tests {
         assert_eq!(amg_ladder(3).len(), 3);
         assert!(lp_pvalues(3).len() > lp_pvalues(1).len());
         assert!(mcl_pvalues(2).contains(&64));
+    }
+
+    #[test]
+    fn conformance_set_covers_four_families_and_multiplies() {
+        let inst = conformance_instances(7).unwrap();
+        let names: Vec<&str> = inst.iter().map(|i| i.name.as_str()).collect();
+        assert_eq!(names, ["er", "rmat", "amg", "lp"]);
+        for i in &inst {
+            assert_eq!(i.a.ncols, i.b.nrows, "{}: shapes incompatible", i.name);
+            let c = crate::sparse::spgemm(&i.a, &i.b).unwrap();
+            assert!(c.nnz() > 0, "{}: empty product", i.name);
+        }
     }
 }

@@ -1,0 +1,344 @@
+//! Distributed process-mode suite: wire conformance (measured bytes on
+//! the wire == the model's per-worker volumes), fault injection against
+//! the leader's respawn+replay recovery, and wire-format fuzz.
+//!
+//! Every conformance case spawns real worker OS processes (the hidden
+//! `spgemm-hp worker` subcommand), so the suite guards itself: if the
+//! sandbox cannot spawn processes it skips with a message instead of
+//! failing.
+
+use std::sync::Arc;
+
+use spgemm_hp::algorithm::AlgorithmStrategy;
+use spgemm_hp::coordinator::exec::{run_processes, ExecMode, FaultPlan, MeasuredReport};
+use spgemm_hp::coordinator::plan::{ExecutionPlan, PreparedPlan};
+use spgemm_hp::coordinator::wire::{self, Stream, WireMsg, WirePhase};
+use spgemm_hp::coordinator::{self, CoordReport, CoordinatorConfig};
+use spgemm_hp::hypergraph::models::ModelKind;
+use spgemm_hp::partition::PartitionerConfig;
+use spgemm_hp::repro::workloads::conformance_instances;
+use spgemm_hp::sim;
+use spgemm_hp::sparse::{spgemm, spgemm_structure, Csr};
+use spgemm_hp::util::proptest::{check, default_cases, ensure};
+use spgemm_hp::util::Rng;
+
+fn exe() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_BIN_EXE_spgemm-hp"))
+}
+
+/// Probe once whether this sandbox can spawn the worker binary at all.
+fn processes_available() -> bool {
+    std::process::Command::new(exe())
+        .arg("info")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .status()
+        .map(|s| s.success())
+        .unwrap_or(false)
+}
+
+/// Every strategy family the e2e comparison runs: the four hypergraph
+/// models plus the communication-oblivious baselines.
+fn strategies() -> Vec<AlgorithmStrategy> {
+    let mut all: Vec<AlgorithmStrategy> =
+        [ModelKind::RowWise, ModelKind::OuterProduct, ModelKind::MonoA, ModelKind::MonoC]
+            .into_iter()
+            .map(|model| AlgorithmStrategy::HypergraphPartitioned { model, with_nz: false })
+            .collect();
+    all.extend(AlgorithmStrategy::OBLIVIOUS);
+    all
+}
+
+/// Strategies whose C entries each have a single producer accumulating
+/// in canonical k-order: bit-identical to the sequential SpGEMM through
+/// the scalar process path (the docs/BASELINES.md boundary).
+fn single_producer(strat: &AlgorithmStrategy) -> bool {
+    matches!(
+        strat,
+        AlgorithmStrategy::SparseSumma { .. }
+            | AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, .. }
+            | AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::MonoC, .. }
+    )
+}
+
+fn bits_equal(x: &Csr, y: &Csr) -> bool {
+    x.nrows == y.nrows
+        && x.ncols == y.ncols
+        && x.rowptr == y.rowptr
+        && x.colind == y.colind
+        && x.values.iter().zip(&y.values).all(|(a, b)| a.to_bits() == b.to_bits())
+}
+
+struct ProcRun {
+    report: CoordReport,
+    measured: MeasuredReport,
+    c: Csr,
+    prepared: PreparedPlan,
+    alg: sim::Algorithm,
+}
+
+/// Lower `strat`, build the plan in-test, and run it on real worker
+/// processes, so assertions can compare measured traffic against the
+/// exact plan the leader executed.
+fn run_proc(
+    a: &Csr,
+    b: &Csr,
+    strat: &AlgorithmStrategy,
+    p: usize,
+    fault: Option<FaultPlan>,
+    timeout_ms: u64,
+) -> ProcRun {
+    let alg = strat.lower(a, b, &PartitionerConfig::new(p)).unwrap();
+    let cs = spgemm_structure(a, b).unwrap();
+    let plan = ExecutionPlan::build(a, b, &alg, &cs, 8).unwrap();
+    let prepared = PreparedPlan { c_struct: cs, plan, tile: 8 };
+    let cfg = CoordinatorConfig {
+        exec: ExecMode::Processes,
+        worker_exe: Some(exe()),
+        worker_timeout_ms: timeout_ms,
+        fault,
+        plan: Some(Arc::new(prepared.clone())),
+        ..Default::default()
+    };
+    let (report, measured, c) = run_processes(a, b, &alg, &cfg).unwrap();
+    ProcRun { report, measured, c, prepared, alg }
+}
+
+/// Tentpole conformance sweep: every strategy × {er, rmat, amg, lp} ×
+/// p ∈ {2, 4}. Measured per-worker payload entries must equal the
+/// plan's modeled volumes AND the in-process simulated executor's
+/// per-worker words; totals must equal the Lem. 4.3 simulator's
+/// volumes; C must match the sequential SpGEMM (bit-identical on the
+/// single-producer side of the boundary).
+#[test]
+fn wire_conformance_every_strategy_workload_and_p() {
+    if !processes_available() {
+        eprintln!("skipping wire_conformance: process spawning unavailable in this sandbox");
+        return;
+    }
+    for inst in conformance_instances(42).unwrap() {
+        let c_ref = spgemm(&inst.a, &inst.b).unwrap();
+        for p in [2usize, 4] {
+            for strat in strategies() {
+                let ctx = format!("{} p={p} {}", inst.name, strat.name());
+                let run = run_proc(&inst.a, &inst.b, &strat, p, None, 5_000);
+                assert_eq!(run.measured.respawns, 0, "{ctx}: unexpected respawn");
+                // measured == modeled, per worker per phase
+                run.measured.check_against(&run.prepared.plan).unwrap();
+                // measured == the simulated executor, per worker
+                let sim_cfg = CoordinatorConfig {
+                    plan: Some(Arc::new(run.prepared.clone())),
+                    tile: run.prepared.tile,
+                    ..Default::default()
+                };
+                let (sim_exec_rep, _) =
+                    coordinator::run(&inst.a, &inst.b, &run.alg, &sim_cfg).unwrap();
+                assert_eq!(run.report.sent_words, sim_exec_rep.sent_words, "{ctx}: sent");
+                assert_eq!(run.report.recv_words, sim_exec_rep.recv_words, "{ctx}: recv");
+                // totals == the Lem. 4.3 simulator's volumes
+                let (sim_rep, _) = sim::simulate(&inst.a, &inst.b, &run.alg).unwrap();
+                assert_eq!(run.report.expand_volume, sim_rep.expand_volume, "{ctx}: expand");
+                assert_eq!(run.report.fold_volume, sim_rep.fold_volume, "{ctx}: fold");
+                // C correctness against the sequential pipeline
+                if single_producer(&strat) {
+                    assert!(bits_equal(&run.c, &c_ref), "{ctx}: C not bit-identical");
+                } else {
+                    assert!(run.c.approx_eq(&c_ref, 1e-10), "{ctx}: C mismatch");
+                }
+            }
+        }
+    }
+}
+
+/// A worker killed after the expand phase is detected, respawned, and
+/// replayed; C is bit-identical to the unfaulted process run.
+#[test]
+fn kill_after_expand_recovers_bit_identical() {
+    if !processes_available() {
+        eprintln!("skipping kill_after_expand: process spawning unavailable in this sandbox");
+        return;
+    }
+    let inst = &conformance_instances(42).unwrap()[0];
+    for strat in strategies() {
+        let base = run_proc(&inst.a, &inst.b, &strat, 2, None, 5_000);
+        let fault = FaultPlan::kill(1, WirePhase::Expand);
+        let faulted = run_proc(&inst.a, &inst.b, &strat, 2, Some(fault), 5_000);
+        assert_eq!(faulted.measured.respawns, 1, "{}: one respawn", strat.name());
+        assert!(
+            bits_equal(&base.c, &faulted.c),
+            "{}: fault changed the result",
+            strat.name()
+        );
+        // recovery must not distort the traffic accounting
+        faulted.measured.check_against(&faulted.prepared.plan).unwrap();
+    }
+}
+
+/// Same, for a kill after the compute phase (the replay then spans the
+/// whole expand phase and the compute inputs).
+#[test]
+fn kill_after_compute_recovers_bit_identical() {
+    if !processes_available() {
+        eprintln!("skipping kill_after_compute: process spawning unavailable in this sandbox");
+        return;
+    }
+    let inst = &conformance_instances(42).unwrap()[3];
+    let kinds =
+        [AlgorithmStrategy::parse("row").unwrap(), AlgorithmStrategy::parse("outer").unwrap()];
+    for strat in kinds {
+        let base = run_proc(&inst.a, &inst.b, &strat, 4, None, 5_000);
+        let fault = FaultPlan::kill(2, WirePhase::Compute);
+        let faulted = run_proc(&inst.a, &inst.b, &strat, 4, Some(fault), 5_000);
+        assert_eq!(faulted.measured.respawns, 1, "{}: one respawn", strat.name());
+        assert!(bits_equal(&base.c, &faulted.c), "{}: fault changed C", strat.name());
+    }
+}
+
+/// Double failure of the same slot: the second respawned process is
+/// killed too, and the third one finishes the run.
+#[test]
+fn double_failure_of_same_slot_recovers() {
+    if !processes_available() {
+        eprintln!("skipping double_failure: process spawning unavailable in this sandbox");
+        return;
+    }
+    let inst = &conformance_instances(42).unwrap()[0];
+    let strat = AlgorithmStrategy::parse("row").unwrap();
+    let base = run_proc(&inst.a, &inst.b, &strat, 2, None, 5_000);
+    let fault = FaultPlan { kills: 2, ..FaultPlan::kill(0, WirePhase::Expand) };
+    let faulted = run_proc(&inst.a, &inst.b, &strat, 2, Some(fault), 5_000);
+    assert_eq!(faulted.measured.respawns, 2);
+    assert!(bits_equal(&base.c, &faulted.c));
+}
+
+/// A hung worker (frozen, heartbeats stopped) is detected by the
+/// heartbeat timeout rather than pipe EOF, then recovered the same way.
+#[test]
+fn hung_worker_detected_within_timeout_and_recovered() {
+    if !processes_available() {
+        eprintln!("skipping hung_worker: process spawning unavailable in this sandbox");
+        return;
+    }
+    let inst = &conformance_instances(42).unwrap()[0];
+    let strat = AlgorithmStrategy::parse("summa").unwrap();
+    let base = run_proc(&inst.a, &inst.b, &strat, 2, None, 5_000);
+    let fault = FaultPlan { hang: true, ..FaultPlan::kill(1, WirePhase::Expand) };
+    let started = std::time::Instant::now();
+    let faulted = run_proc(&inst.a, &inst.b, &strat, 2, Some(fault), 400);
+    assert!(faulted.measured.respawns >= 1, "hang not detected");
+    assert!(bits_equal(&base.c, &faulted.c));
+    // generous bound: detection is driven by the 400 ms timeout, so the
+    // whole faulted run should still finish in a few seconds
+    assert!(started.elapsed() < std::time::Duration::from_secs(30));
+}
+
+// ---------------------------------------------------------------------------
+// Wire-format fuzz (no process spawning; mirrors the planner::codec
+// test contract: corrupt input decodes to an error, never a panic or a
+// wrong payload)
+// ---------------------------------------------------------------------------
+
+fn rand_entries(rng: &mut Rng, max: usize) -> Vec<(u32, f64)> {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| (rng.next_u64() as u32, rng.range(-8.0, 8.0))).collect()
+}
+
+fn rand_phase(rng: &mut Rng) -> WirePhase {
+    [WirePhase::Expand, WirePhase::Compute, WirePhase::Fold][rng.below(3)]
+}
+
+fn rand_stream(rng: &mut Rng) -> Stream {
+    [Stream::A, Stream::B, Stream::Partial][rng.below(3)]
+}
+
+fn rand_msg(rng: &mut Rng) -> WireMsg {
+    match rng.below(8) {
+        0 => WireMsg::Start(rand_phase(rng)),
+        1 => WireMsg::Deliver {
+            phase: rand_phase(rng),
+            from: rng.below(16) as u32,
+            stream: rand_stream(rng),
+            entries: rand_entries(rng, 12),
+        },
+        2 => WireMsg::Ready { worker: rng.below(64) as u32 },
+        3 => WireMsg::Heartbeat { worker: rng.below(64) as u32, seq: rng.next_u64() },
+        4 => WireMsg::Send {
+            phase: rand_phase(rng),
+            to: rng.below(16) as u32,
+            stream: rand_stream(rng),
+            entries: rand_entries(rng, 12),
+        },
+        5 => WireMsg::PhaseDone { phase: rand_phase(rng), mults: rng.next_u64() },
+        6 => WireMsg::ResultC { entries: rand_entries(rng, 12) },
+        _ => WireMsg::Fail { message: format!("err-{}", rng.below(1000)) },
+    }
+}
+
+#[test]
+fn fuzz_wire_round_trips() {
+    check("wire-roundtrip", 0xD15C0, default_cases(), rand_msg, |msg| {
+        let frame = wire::encode_frame(msg);
+        let (back, used) = wire::decode_frame(&frame).map_err(|e| e.to_string())?;
+        ensure(used == frame.len(), "frame length not fully consumed")?;
+        ensure(&back == msg, "decoded message differs")
+    });
+}
+
+#[test]
+fn fuzz_wire_truncation_always_errors() {
+    check(
+        "wire-truncation",
+        0x740C8,
+        default_cases(),
+        |rng| (rand_msg(rng), rng.next_u64()),
+        |(msg, r)| {
+            let frame = wire::encode_frame(msg);
+            let cut = (*r as usize) % frame.len(); // strictly shorter
+            ensure(
+                wire::decode_frame(&frame[..cut]).is_err(),
+                format!("truncation at {cut} of {} accepted", frame.len()),
+            )
+        },
+    );
+}
+
+#[test]
+fn fuzz_wire_flipped_byte_always_errors() {
+    check(
+        "wire-byteflip",
+        0xF11B,
+        default_cases(),
+        |rng| (rand_msg(rng), rng.next_u64(), 1 + rng.below(255) as u8),
+        |(msg, pos, xor)| {
+            let mut frame = wire::encode_frame(msg);
+            let at = (*pos as usize) % frame.len();
+            frame[at] ^= *xor;
+            match wire::decode_frame(&frame) {
+                Err(_) => Ok(()),
+                Ok((back, _)) => Err(format!(
+                    "flip at {at} (xor {xor:#x}) accepted as tag {}",
+                    back.tag()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn fuzz_wire_absurd_length_and_wrong_version_error() {
+    check("wire-header", 0xAB5D, default_cases(), rand_msg, |msg| {
+        let frame = wire::encode_frame(msg);
+        // absurd declared payload length
+        let mut huge = frame.clone();
+        huge[9..17].copy_from_slice(&u64::MAX.to_le_bytes());
+        ensure(wire::decode_frame(&huge).is_err(), "absurd length accepted")?;
+        // future format version
+        let mut vers = frame.clone();
+        vers[4..8].copy_from_slice(&99u32.to_le_bytes());
+        ensure(wire::decode_frame(&vers).is_err(), "wrong version accepted")?;
+        // bad magic
+        let mut magic = frame;
+        magic[0] = b'X';
+        ensure(wire::decode_frame(&magic).is_err(), "bad magic accepted")
+    });
+}

@@ -119,7 +119,11 @@ fn planner_disk_cache_serves_mcl_squaring() {
     let cfg = PartitionerConfig { epsilon: 0.1, ..PartitionerConfig::new(4) };
     let dir = std::env::temp_dir().join(format!("spgemm_hp_planner_mcl_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let pcfg = || spgemm_hp::planner::PlannerConfig { cache_dir: Some(dir.clone()), capacity: 4 };
+    let pcfg = || spgemm_hp::planner::PlannerConfig {
+        cache_dir: Some(dir.clone()),
+        capacity: 4,
+        ..Default::default()
+    };
     let cold =
         Planner::new(pcfg()).unwrap().plan_or_build(&a, &a, ModelKind::MonoC, &cfg, 8).unwrap();
     assert_eq!(cold.outcome, PlanOutcome::Miss);

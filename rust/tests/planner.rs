@@ -37,7 +37,7 @@ fn tempdir(name: &str) -> std::path::PathBuf {
 }
 
 fn disk_cfg(dir: &std::path::Path, capacity: usize) -> PlannerConfig {
-    PlannerConfig { cache_dir: Some(dir.to_path_buf()), capacity }
+    PlannerConfig { cache_dir: Some(dir.to_path_buf()), capacity, ..Default::default() }
 }
 
 /// Codec round trips exactly for every model kind × generator: the
@@ -198,7 +198,9 @@ fn lru_eviction_order_and_replan_on_eviction() {
     let kinds = [ModelKind::RowWise, ModelKind::ColWise, ModelKind::OuterProduct];
     let fps: Vec<_> = kinds.iter().map(|&k| fingerprint(&a, &b, k, &cfg, 8)).collect();
 
-    let mut planner = Planner::new(PlannerConfig { cache_dir: None, capacity: 2 }).unwrap();
+    let mut planner =
+        Planner::new(PlannerConfig { cache_dir: None, capacity: 2, ..Default::default() })
+            .unwrap();
     let outcome_of =
         |planner: &mut Planner, k| planner.plan_or_build(&a, &b, k, &cfg, 8).unwrap().outcome;
     outcome_of(&mut planner, kinds[0]);

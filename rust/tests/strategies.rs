@@ -167,7 +167,8 @@ fn every_strategy_round_trips_the_disk_cache() {
     let dir = std::env::temp_dir()
         .join(format!("spgemm_hp_strategies_codec_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let disk = || PlannerConfig { cache_dir: Some(dir.clone()), capacity: 4 };
+    let disk =
+        || PlannerConfig { cache_dir: Some(dir.clone()), capacity: 4, ..Default::default() };
     let (_, a, b) = workload_instances(13).remove(0);
     let cfg = PartitionerConfig { epsilon: 0.3, ..PartitionerConfig::new(4) };
     let strategies = [hyper(ModelKind::FineGrained),

@@ -37,10 +37,10 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition/coarsening/planner/traffic/strategy suites (deep property sweep)"
+step "kernel differential + model oracle + partition/coarsening/planner/traffic/strategy/distributed suites (deep property sweep)"
 SPGEMM_HP_PROP_CASES=192 \
     cargo test -q --test kernels --test models --test partition_quality --test coarsening \
-    --test planner --test traffic --test strategies
+    --test planner --test traffic --test strategies --test distributed
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -66,9 +66,9 @@ if ! grep -q '"workload": ".*-summa-' BENCH_spgemm.json; then
     echo "ERROR: BENCH_spgemm.json has no per-strategy simulate records"
     exit 1
 fi
-for field in traffic_bytes dataflow; do
+for field in traffic_bytes dataflow exec_mode wire_bytes; do
     if ! grep -q "\"$field\"" BENCH_spgemm.json; then
-        echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (dataflow sweep)"
+        echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (dataflow/executor sweep)"
         exit 1
     fi
 done
@@ -82,6 +82,9 @@ step "e2e smoke on the sparsity-oblivious baseline (--algorithm summa)"
 
 step "e2e smoke with the adaptive dataflow (--dataflow auto)"
 ./target/release/spgemm-hp e2e --parts 4 --algorithm summa --dataflow auto
+
+step "e2e smoke with real worker processes (--exec processes; measured wire == modeled volumes)"
+./target/release/spgemm-hp e2e --parts 4 --algorithm summa --exec processes
 
 echo
 echo "CI gate passed."
