@@ -31,7 +31,7 @@ smoke:
 	@for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit; do \
 		grep -q "\"$$field\"" BENCH_partition.json || { echo "missing $$field"; exit 1; }; \
 	done
-	@for field in traffic_bytes dataflow exec_mode wire_bytes; do \
+	@for field in traffic_bytes dataflow exec_mode wire_bytes replans degraded final_workers; do \
 		grep -q "\"$$field\"" BENCH_spgemm.json || { echo "missing $$field"; exit 1; }; \
 	done
 

@@ -47,6 +47,12 @@ struct Record {
     exec_mode: Option<&'static str>,
     /// Total framed bytes on the worker pipes; process-executor rows only.
     wire_bytes: Option<u64>,
+    /// Plans built from scratch; elastic-executor rows only.
+    replans: Option<u64>,
+    /// Mid-epoch degradations to p−1; elastic-executor rows only.
+    degraded: Option<u64>,
+    /// Worker count when the run finished; elastic-executor rows only.
+    final_workers: Option<usize>,
 }
 
 impl Record {
@@ -60,6 +66,9 @@ impl Record {
             dataflow: None,
             exec_mode: None,
             wire_bytes: None,
+            replans: None,
+            degraded: None,
+            final_workers: None,
         }
     }
 }
@@ -82,6 +91,15 @@ fn write_json(path: &str, records: &[Record]) -> Result<()> {
         }
         if let Some(wb) = r.wire_bytes {
             extra.push_str(&format!(", \"wire_bytes\": {wb}"));
+        }
+        if let Some(rp) = r.replans {
+            extra.push_str(&format!(", \"replans\": {rp}"));
+        }
+        if let Some(dg) = r.degraded {
+            extra.push_str(&format!(", \"degraded\": {dg}"));
+        }
+        if let Some(fw) = r.final_workers {
+            extra.push_str(&format!(", \"final_workers\": {fw}"));
         }
         writeln!(
             f,
@@ -297,6 +315,82 @@ fn real_main() -> Result<()> {
                     exec_mode: Some("simulated"),
                     wire_bytes: Some(0),
                     ..Record::new("exec_processes", workload, 1, s.median * 1e9)
+                });
+            }
+        }
+    }
+
+    println!("\n== elastic process executor: shrink re-plan + degraded retries ==");
+    // MCL-style repeated A² with a scheduled leave between iterations:
+    // the driver re-plans at every membership and run_elastic checks
+    // measured == modeled traffic per epoch in-run, so a green row here
+    // carries the elastic degradation contract too.
+    {
+        use spgemm_hp::coordinator::{self, exec};
+        use spgemm_hp::planner::Planner;
+        let el_a = &gen::stencil27(5);
+        let el_p = 3usize;
+        let strat =
+            AlgorithmStrategy::HypergraphPartitioned { model: ModelKind::RowWise, with_nz: false };
+        let opts = exec::ElasticOpts {
+            strategy: strat,
+            pcfg: PartitionerConfig::new(el_p),
+            tile: 8,
+            min_workers: 2,
+            iters: 2,
+            schedule: vec![exec::MembershipEvent {
+                before_iter: 1,
+                change: exec::MemberChange::Leave(1),
+            }],
+        };
+        let ccfg = coordinator::CoordinatorConfig {
+            exec: exec::ExecMode::Processes,
+            worker_exe: Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_spgemm-hp"))),
+            ..Default::default()
+        };
+        let workload = format!("stencil27-row-elastic-p{el_p}");
+        let mut probe = Planner::in_memory();
+        match exec::run_elastic(el_a, el_a, &mut probe, &opts, &ccfg) {
+            Ok((rep, _cs)) => {
+                let s = bench(0, iters, || {
+                    let mut planner = Planner::in_memory();
+                    exec::run_elastic(el_a, el_a, &mut planner, &opts, &ccfg).unwrap();
+                });
+                println!(
+                    "row p={el_p}->{}: {} epochs, {} replans, {} degraded, {} wire bytes, \
+                     {:>12}/run",
+                    rep.final_workers,
+                    rep.epochs,
+                    rep.replans,
+                    rep.degraded,
+                    rep.wire_bytes,
+                    BenchStats::fmt_time(s.median)
+                );
+                records.push(Record {
+                    exec_mode: Some("processes"),
+                    wire_bytes: Some(rep.wire_bytes),
+                    replans: Some(rep.replans),
+                    degraded: Some(rep.degraded),
+                    final_workers: Some(rep.final_workers),
+                    ..Record::new("exec_elastic", workload, 1, s.median * 1e9)
+                });
+            }
+            Err(e) => {
+                // keep the JSON schema stable for the CI field gate even
+                // where the sandbox forbids spawning
+                println!("(elastic executor unavailable here: {e}; recording simulated fallback)");
+                let alg = strat.lower(el_a, el_a, &PartitionerConfig::new(el_p))?;
+                let scfg = coordinator::CoordinatorConfig::default();
+                let s = bench(0, iters, || {
+                    coordinator::run(el_a, el_a, &alg, &scfg).unwrap();
+                });
+                records.push(Record {
+                    exec_mode: Some("simulated"),
+                    wire_bytes: Some(0),
+                    replans: Some(0),
+                    degraded: Some(0),
+                    final_workers: Some(0),
+                    ..Record::new("exec_elastic", workload, 1, s.median * 1e9)
                 });
             }
         }

@@ -83,6 +83,16 @@ impl Args {
         Ok(v)
     }
 
+    /// Like [`Args::get_usize_min`] but with no default: `None` when the
+    /// key is absent (optional knobs such as `--run-deadline-ms` whose
+    /// absence means "off", not a fallback value).
+    pub fn get_opt_usize_min(&self, key: &str, min: usize) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(_) => self.get_usize_min(key, min, min).map(Some),
+        }
+    }
+
     /// Parse a comma-separated `--key 1,2,4` list of positive integers,
     /// falling back to `default` when absent (the bench sweeps' shared
     /// `--threads`/`--parts` syntax).
@@ -174,6 +184,14 @@ mod tests {
         assert_eq!(a.get_usize_min("threads", 1, 1).unwrap(), 4);
         assert_eq!(a.get_usize_min("missing", 8, 1).unwrap(), 8);
         assert!(a.get_usize_min("chunk", 1, 1).is_err());
+    }
+
+    #[test]
+    fn optional_bounded_getter() {
+        let a = parse("x --heartbeat-ms 250 --deadline-ms 0");
+        assert_eq!(a.get_opt_usize_min("heartbeat-ms", 1).unwrap(), Some(250));
+        assert_eq!(a.get_opt_usize_min("missing", 1).unwrap(), None);
+        assert!(a.get_opt_usize_min("deadline-ms", 1).is_err(), "zero rejected");
     }
 
     #[test]

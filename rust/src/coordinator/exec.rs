@@ -12,10 +12,23 @@
 //! Fault tolerance is replay-based: worker output is a deterministic function
 //! of the `Init` frame plus the sequence of frames the leader delivered, so
 //! the leader logs every frame it writes to a slot.  When a worker dies (pipe
-//! EOF) or stops heartbeating (timeout), the leader respawns the slot and
-//! replays the log; the respawned worker re-derives its state and re-emits the
-//! frames the dead one already sent, which the leader suppresses by counting
+//! EOF) or stops heartbeating (timeout), the leader respawns the slot — after
+//! a deterministic exponential backoff ([`BackoffPolicy`]) — and replays the
+//! log; the respawned worker re-derives its state and re-emits the frames the
+//! dead one already sent, which the leader suppresses by counting
 //! (`skip = accepted`).  The final C is bit-identical with or without faults.
+//!
+//! Membership is elastic ([`run_elastic`]): plans are sparsity-dependent
+//! functions of the worker count, so a join or leave is a *plan invalidation*.
+//! Between iterations, scheduled [`MembershipEvent`]s grow or shrink the slot
+//! set; mid-epoch, a slot that exhausts its respawn budget (or an epoch that
+//! outlives its deadline) *degrades* the run to p−1 instead of aborting, as
+//! long as the survivor count stays at or above a `min_workers` floor.  Every
+//! new membership re-plans through the planner (new fingerprint → miss;
+//! previously-seen p → warm hit), fences survivor processes with
+//! `Reconfigure`/`EpochAck` so no stale-epoch frame leaks into the new plan,
+//! and restarts the protocol from `Init` — which keeps C bit-identical to a
+//! failure-free run at the final membership.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -30,6 +43,9 @@ use std::time::{Duration, Instant};
 use super::plan::{ExecutionPlan, PreparedPlan, WorkerPlan};
 use super::wire::{self, Stream, WireMsg, WirePhase, ENTRY_BYTES};
 use super::{CoordReport, CoordinatorConfig};
+use crate::algorithm::AlgorithmStrategy;
+use crate::partition::PartitionerConfig;
+use crate::planner::{PlanOutcome, Planner};
 use crate::sim::Algorithm;
 use crate::sparse::{spgemm_structure, Csr};
 use crate::{Error, Result};
@@ -37,8 +53,73 @@ use crate::{Error, Result};
 /// Default heartbeat timeout before a worker is declared dead.
 pub const DEFAULT_WORKER_TIMEOUT_MS: u64 = 5_000;
 
-/// Maximum times a single slot may be respawned before the run aborts.
+/// Default maximum respawns per slot per epoch before the leader gives up
+/// on the slot (degrading to p−1 in elastic runs, aborting otherwise).
 pub const MAX_RESPAWNS: u32 = 3;
+
+/// Default base of the exponential respawn backoff schedule.
+pub const DEFAULT_RESPAWN_BASE_MS: u64 = 25;
+
+/// Default cap on any single respawn backoff delay.
+pub const DEFAULT_RESPAWN_CAP_MS: u64 = 2_000;
+
+/// Injectable time source for respawn backoff, so tests can assert the
+/// schedule without actually sleeping.
+pub trait Clock: std::fmt::Debug + Send + Sync {
+    /// Sleep for `ms` milliseconds (or just record the request, in tests).
+    fn sleep_ms(&self, ms: u64);
+}
+
+/// The real clock: `thread::sleep`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SystemClock;
+
+impl Clock for SystemClock {
+    fn sleep_ms(&self, ms: u64) {
+        if ms > 0 {
+            thread::sleep(Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Test clock: records every requested sleep and returns immediately.
+#[derive(Debug, Default)]
+pub struct FakeClock {
+    /// Every `sleep_ms` request, in call order.
+    pub slept: Mutex<Vec<u64>>,
+}
+
+impl Clock for FakeClock {
+    fn sleep_ms(&self, ms: u64) {
+        if let Ok(mut slept) = self.slept.lock() {
+            slept.push(ms);
+        }
+    }
+}
+
+/// Deterministic exponential respawn backoff: `base_ms << attempt`,
+/// saturating at `u64::MAX`, capped at `cap_ms`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackoffPolicy {
+    /// Delay before the first respawn (attempt 0).
+    pub base_ms: u64,
+    /// Upper bound on any single delay.
+    pub cap_ms: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> BackoffPolicy {
+        BackoffPolicy { base_ms: DEFAULT_RESPAWN_BASE_MS, cap_ms: DEFAULT_RESPAWN_CAP_MS }
+    }
+}
+
+impl BackoffPolicy {
+    /// Delay before respawn number `attempt` (0-based).
+    pub fn delay_for(&self, attempt: u32) -> u64 {
+        let factor = 1u64.checked_shl(attempt).unwrap_or(u64::MAX);
+        self.base_ms.saturating_mul(factor).min(self.cap_ms)
+    }
+}
 
 /// How the coordinator executes the partitioned algorithm.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -252,18 +333,54 @@ pub fn run_processes(
         }
     };
     let plan = &prep.plan;
-    let exe = match &cfg.worker_exe {
-        Some(path) => path.clone(),
-        None => std::env::current_exe()
-            .map_err(|e| Error::Runtime(format!("cannot locate worker executable: {e}")))?,
-    };
+    let exe = worker_exe(cfg)?;
 
-    let mut leader = Leader::new(plan, exe, cfg.worker_timeout_ms, tile, cfg.fault)?;
-    let outcome = leader.protocol();
+    let mut leader = Leader::new(exe, plan.workers.len(), knobs(cfg, tile))?;
+    let outcome = leader.run_epoch(plan);
     leader.shutdown();
     outcome?;
     leader.measured.check_against(plan)?;
+    let (report, c) = collect_results(&mut leader, prep)?;
+    let measured = leader.measured.clone();
+    Ok((report, measured, c))
+}
 
+fn worker_exe(cfg: &CoordinatorConfig) -> Result<PathBuf> {
+    match &cfg.worker_exe {
+        Some(path) => Ok(path.clone()),
+        None => std::env::current_exe()
+            .map_err(|e| Error::Runtime(format!("cannot locate worker executable: {e}"))),
+    }
+}
+
+/// Leader tuning derived from the coordinator config.
+struct LeaderKnobs {
+    timeout_ms: u64,
+    heartbeat_ms: u64,
+    tile: usize,
+    fault: Option<FaultPlan>,
+    max_respawns: u32,
+    backoff: BackoffPolicy,
+    clock: Arc<dyn Clock>,
+    deadline_ms: Option<u64>,
+}
+
+fn knobs(cfg: &CoordinatorConfig, tile: usize) -> LeaderKnobs {
+    LeaderKnobs {
+        timeout_ms: cfg.worker_timeout_ms,
+        heartbeat_ms: cfg.heartbeat_ms.unwrap_or((cfg.worker_timeout_ms / 4).max(1)).max(1),
+        tile,
+        fault: cfg.fault,
+        max_respawns: cfg.max_respawns,
+        backoff: BackoffPolicy { base_ms: cfg.respawn_base_ms, cap_ms: cfg.respawn_cap_ms },
+        clock: cfg.clock.clone().unwrap_or_else(|| Arc::new(SystemClock)),
+        deadline_ms: cfg.run_deadline_ms,
+    }
+}
+
+/// Drain one finished epoch's results into a coordinator report and C.
+fn collect_results(leader: &mut Leader, prep: &PreparedPlan) -> Result<(CoordReport, Csr)> {
+    let plan = &prep.plan;
     let p = plan.workers.len();
     let mut c_values = vec![0.0f64; prep.c_struct.values.len()];
     let mut sent_words = vec![0u64; p];
@@ -297,8 +414,219 @@ pub fn run_processes(
         kernel_dispatches: 0,
         used_pjrt: false,
     };
-    let measured = leader.measured.clone();
-    Ok((report, measured, c))
+    Ok((report, c))
+}
+
+// ---------------------------------------------------------------------------
+// Elastic membership
+// ---------------------------------------------------------------------------
+
+/// A scheduled membership change for [`run_elastic`], applied between
+/// iterations — the elastic sibling of [`FaultPlan`], which injects
+/// *failures* mid-epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberChange {
+    /// `n` workers leave cleanly (the highest-numbered slots retire).
+    Leave(usize),
+    /// `n` fresh workers join.
+    Join(usize),
+}
+
+/// When a [`MemberChange`] fires: before iteration `before_iter` starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipEvent {
+    /// The change applies before this (0-based) iteration; must be in
+    /// `1..iters` — the initial membership is `pcfg.parts`.
+    pub before_iter: usize,
+    /// What happens to the membership.
+    pub change: MemberChange,
+}
+
+/// Options for an elastic multi-iteration run ([`run_elastic`]).
+#[derive(Debug, Clone)]
+pub struct ElasticOpts {
+    /// Algorithm strategy to plan with (re-resolved at every membership).
+    pub strategy: AlgorithmStrategy,
+    /// Partitioner config; `parts` is the *initial* worker count.
+    pub pcfg: PartitionerConfig,
+    /// Tile width for every plan.
+    pub tile: usize,
+    /// Degradation floor: the run aborts rather than shrink below this.
+    pub min_workers: usize,
+    /// How many times the multiply is executed (an MCL-style expansion
+    /// repeatedly applies the same A² step; values are rebound per plan).
+    pub iters: usize,
+    /// Scheduled joins/leaves between iterations.
+    pub schedule: Vec<MembershipEvent>,
+}
+
+/// Telemetry from an elastic run: how membership evolved and what it cost.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ElasticReport {
+    /// Iterations completed.
+    pub iters: usize,
+    /// Protocol epochs attempted (iterations plus degraded retries).
+    pub epochs: u64,
+    /// Plans built from scratch (planner misses — every new membership).
+    pub replans: u64,
+    /// Plans served warm from the planner cache (previously-seen p).
+    pub plan_hits: u64,
+    /// Mid-epoch degradations: a slot exhausted its respawn budget (or
+    /// the epoch outlived its deadline) and the run continued at p−1.
+    pub degraded: u64,
+    /// Scheduled joins applied.
+    pub joins: u64,
+    /// Scheduled leaves applied.
+    pub leaves: u64,
+    /// Worker count when the run finished.
+    pub final_workers: usize,
+    /// Worker respawns across all epochs.
+    pub respawns: u32,
+    /// Framed bytes over all pipes across all epochs.
+    pub wire_bytes: u64,
+    /// Backoff delay requested before each respawn, in order.
+    pub respawn_delays_ms: Vec<u64>,
+    /// Worker count at the start of each attempted epoch.
+    pub p_history: Vec<usize>,
+}
+
+/// Run `opts.iters` iterations of `C = A·B` on real worker processes with
+/// elastic membership.
+///
+/// Scheduled joins/leaves apply between iterations; a slot that exhausts
+/// its respawn budget mid-epoch (or an epoch that outlives
+/// `cfg.run_deadline_ms`) *degrades* the run to p−1 instead of aborting,
+/// as long as the survivor count stays at or above `opts.min_workers` —
+/// only breaching the floor aborts.  Every membership change invalidates
+/// the plan: the planner fingerprint keys on `parts`, so a new p is a miss
+/// (replan) and a previously-seen p is a warm hit with freshly-rebound
+/// values.  Each epoch fences survivor processes with
+/// `Reconfigure`/`EpochAck` and restarts the protocol from `Init` at the
+/// new membership; worker output is a deterministic function of the plan,
+/// so every iteration's C is bit-identical to a failure-free run at that
+/// iteration's final membership.  Measured per-worker traffic is checked
+/// against the re-planned modeled volumes at every successful epoch.
+///
+/// Returns the membership telemetry and one C per iteration.
+pub fn run_elastic(
+    a: &Csr,
+    b: &Csr,
+    planner: &mut Planner,
+    opts: &ElasticOpts,
+    cfg: &CoordinatorConfig,
+) -> Result<(ElasticReport, Vec<Csr>)> {
+    let p0 = opts.pcfg.parts;
+    if opts.min_workers == 0 {
+        return Err(Error::Config("min-workers must be >= 1".into()));
+    }
+    if opts.min_workers > p0 {
+        return Err(Error::Config(format!(
+            "min-workers {} exceeds the initial worker count {p0}",
+            opts.min_workers
+        )));
+    }
+    if opts.iters == 0 {
+        return Err(Error::Config("elastic iters must be >= 1".into()));
+    }
+    if cfg.worker_timeout_ms == 0 {
+        return Err(Error::Config("workers-timeout-ms must be >= 1".into()));
+    }
+    for ev in &opts.schedule {
+        if ev.before_iter == 0 || ev.before_iter >= opts.iters {
+            return Err(Error::Config(format!(
+                "membership event before iteration {} is outside 1..{}",
+                ev.before_iter, opts.iters
+            )));
+        }
+        if matches!(ev.change, MemberChange::Leave(0) | MemberChange::Join(0)) {
+            return Err(Error::Config("membership change count must be >= 1".into()));
+        }
+    }
+    if let Some(fault) = &cfg.fault {
+        fault.validate(p0)?;
+    }
+    let exe = worker_exe(cfg)?;
+    let mut leader = Leader::new(exe, p0, knobs(cfg, opts.tile))?;
+    let mut report = ElasticReport::default();
+    let mut out = Vec::with_capacity(opts.iters);
+    let run = elastic_loop(a, b, planner, opts, &mut leader, &mut report, &mut out);
+    leader.shutdown();
+    report.iters = out.len();
+    report.final_workers = leader.p();
+    report.respawns = leader.total_respawns;
+    report.wire_bytes = leader.total_wire_bytes;
+    report.respawn_delays_ms = leader.respawn_delays_ms.clone();
+    run?;
+    Ok((report, out))
+}
+
+fn elastic_loop(
+    a: &Csr,
+    b: &Csr,
+    planner: &mut Planner,
+    opts: &ElasticOpts,
+    leader: &mut Leader,
+    report: &mut ElasticReport,
+    out: &mut Vec<Csr>,
+) -> Result<()> {
+    for iter in 0..opts.iters {
+        for ev in opts.schedule.iter().filter(|e| e.before_iter == iter) {
+            match ev.change {
+                MemberChange::Leave(n) => {
+                    let p = leader.p();
+                    if p.saturating_sub(n) < opts.min_workers {
+                        return Err(Error::Runtime(format!(
+                            "scheduled leave of {n} would drop {p} workers below the \
+                             min-workers floor {}",
+                            opts.min_workers
+                        )));
+                    }
+                    leader.shrink(n);
+                    report.leaves += n as u64;
+                }
+                MemberChange::Join(n) => {
+                    leader.grow(n)?;
+                    report.joins += n as u64;
+                }
+            }
+        }
+        // Plan at the current membership and run the epoch; a degradable
+        // failure shrinks to p−1 and retries the same iteration.
+        loop {
+            let p = leader.p();
+            let mut pcfg = opts.pcfg.clone();
+            pcfg.parts = p;
+            let planned = planner.plan_strategy(a, b, &opts.strategy, &pcfg, opts.tile)?;
+            match planned.outcome {
+                PlanOutcome::Hit => report.plan_hits += 1,
+                PlanOutcome::Miss | PlanOutcome::Stale => report.replans += 1,
+            }
+            report.epochs += 1;
+            report.p_history.push(p);
+            match leader.run_epoch(&planned.prepared.plan) {
+                Ok(()) => {
+                    leader.measured.check_against(&planned.prepared.plan)?;
+                    let (_, c) = collect_results(leader, &planned.prepared)?;
+                    out.push(c);
+                    break;
+                }
+                Err(e) => match leader.doomed.take() {
+                    Some(victim) if leader.p() > opts.min_workers => {
+                        leader.remove_slot(victim);
+                        report.degraded += 1;
+                    }
+                    Some(_) => {
+                        return Err(Error::Runtime(format!(
+                            "cannot degrade below the min-workers floor {}: {e}",
+                            opts.min_workers
+                        )));
+                    }
+                    None => return Err(e),
+                },
+            }
+        }
+    }
+    Ok(())
 }
 
 type Entries = Vec<(u32, f64)>;
@@ -306,6 +634,9 @@ type Entries = Vec<(u32, f64)>;
 struct Slot {
     child: Child,
     stdin: ChildStdin,
+    /// Stable reader identity: never reused, so events from slots that
+    /// have left the membership are dropped cleanly.
+    id: u64,
     gen: u32,
     respawns: u32,
     log: Vec<Vec<u8>>,
@@ -313,6 +644,12 @@ struct Slot {
     skip: u64,
     last_heard: Instant,
     exited: bool,
+    /// This OS process has consumed an `Init` and must be fenced with
+    /// `Reconfigure` before it can join a new epoch.
+    initialized: bool,
+    /// Epoch fence: every frame from this slot is discarded until an
+    /// `EpochAck` for this epoch arrives.
+    fence: Option<u64>,
 }
 
 enum EventKind {
@@ -321,18 +658,33 @@ enum EventKind {
 }
 
 struct Event {
-    slot: usize,
+    slot_id: u64,
     gen: u32,
     kind: EventKind,
 }
 
-struct Leader<'a> {
-    plan: &'a ExecutionPlan,
-    p: usize,
+struct Leader {
     exe: PathBuf,
     timeout_ms: u64,
+    heartbeat_ms: u64,
     tile: usize,
     fault: Option<FaultPlan>,
+    /// Fault-injection kills still owed; persists across epochs so a
+    /// degrade-and-retry consumes the budget one kill per epoch.
+    kills_left: u32,
+    max_respawns: u32,
+    backoff: BackoffPolicy,
+    clock: Arc<dyn Clock>,
+    deadline_ms: Option<u64>,
+    deadline: Option<Instant>,
+    next_slot_id: u64,
+    epoch: u64,
+    /// Worker index that exhausted its respawn budget (or was declared
+    /// the deadline laggard); consumed by `run_elastic` to degrade.
+    doomed: Option<usize>,
+    total_respawns: u32,
+    total_wire_bytes: u64,
+    respawn_delays_ms: Vec<u64>,
     slots: Vec<Slot>,
     events_rx: Receiver<Event>,
     // Held so the channel never disconnects while slots come and go.
@@ -348,83 +700,192 @@ struct Leader<'a> {
     measured: MeasuredReport,
 }
 
-impl<'a> Leader<'a> {
-    fn new(
-        plan: &'a ExecutionPlan,
-        exe: PathBuf,
-        timeout_ms: u64,
-        tile: usize,
-        fault: Option<FaultPlan>,
-    ) -> Result<Leader<'a>> {
-        let p = plan.workers.len();
+impl Leader {
+    fn new(exe: PathBuf, p: usize, knobs: LeaderKnobs) -> Result<Leader> {
         let (tx, rx) = mpsc::channel();
-        let mut slots: Vec<Slot> = Vec::with_capacity(p);
-        for w in 0..p {
-            match spawn_child(&exe) {
-                Ok((child, stdin, stdout)) => {
-                    start_reader(w, 0, stdout, tx.clone());
-                    slots.push(Slot {
-                        child,
-                        stdin,
-                        gen: 0,
-                        respawns: 0,
-                        log: Vec::new(),
-                        accepted: 0,
-                        skip: 0,
-                        last_heard: Instant::now(),
-                        exited: false,
-                    });
-                }
-                Err(e) => {
-                    for slot in &mut slots {
-                        let _ = slot.child.kill();
-                        let _ = slot.child.wait();
-                    }
-                    return Err(Error::Runtime(format!("cannot spawn worker {w}: {e}")));
-                }
-            }
-        }
-        Ok(Leader {
-            plan,
-            p,
+        let mut leader = Leader {
             exe,
-            timeout_ms,
-            tile,
-            fault,
-            slots,
+            timeout_ms: knobs.timeout_ms,
+            heartbeat_ms: knobs.heartbeat_ms,
+            tile: knobs.tile,
+            fault: knobs.fault,
+            kills_left: knobs.fault.map_or(0, |f| f.kills),
+            max_respawns: knobs.max_respawns,
+            backoff: knobs.backoff,
+            clock: knobs.clock,
+            deadline_ms: knobs.deadline_ms,
+            deadline: None,
+            next_slot_id: 0,
+            epoch: 0,
+            doomed: None,
+            total_respawns: 0,
+            total_wire_bytes: 0,
+            respawn_delays_ms: Vec::new(),
+            slots: Vec::new(),
             events_rx: rx,
             _events_tx: tx,
-            ready: vec![false; p],
-            phase_done: vec![[false; 3]; p],
-            mults: vec![0; p],
-            results: vec![None; p],
-            expand_inbox: vec![Vec::new(); p],
-            fold_inbox: vec![Vec::new(); p],
-            measured: MeasuredReport::new(p),
-        })
+            ready: Vec::new(),
+            phase_done: Vec::new(),
+            mults: Vec::new(),
+            results: Vec::new(),
+            expand_inbox: Vec::new(),
+            fold_inbox: Vec::new(),
+            measured: MeasuredReport::new(0),
+        };
+        if let Err(e) = leader.grow(p) {
+            leader.shutdown();
+            return Err(e);
+        }
+        Ok(leader)
     }
 
-    fn protocol(&mut self) -> Result<()> {
-        let heartbeat_ms = (self.timeout_ms / 4).max(1);
-        for w in 0..self.p {
+    fn p(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn count_wire(&mut self, n: u64) {
+        self.measured.wire_bytes += n;
+        self.total_wire_bytes += n;
+    }
+
+    /// Spawn `n` fresh slots (the grow path of a membership change).
+    fn grow(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            let id = self.next_slot_id;
+            self.next_slot_id += 1;
+            let (child, stdin, stdout) = spawn_child(&self.exe)
+                .map_err(|e| Error::Runtime(format!("cannot spawn worker slot {id}: {e}")))?;
+            start_reader(id, 0, stdout, self._events_tx.clone());
+            self.slots.push(Slot {
+                child,
+                stdin,
+                id,
+                gen: 0,
+                respawns: 0,
+                log: Vec::new(),
+                accepted: 0,
+                skip: 0,
+                last_heard: Instant::now(),
+                exited: false,
+                initialized: false,
+                fence: None,
+            });
+        }
+        Ok(())
+    }
+
+    /// Retire the `n` highest-numbered slots (the shrink path).
+    fn shrink(&mut self, n: usize) {
+        for _ in 0..n {
+            if self.slots.is_empty() {
+                return;
+            }
+            let last = self.slots.len() - 1;
+            self.remove_slot(last);
+        }
+    }
+
+    /// Kill and drop the slot at worker index `w`.  Survivors keep their
+    /// relative order, so the remap to ids `0..p-1` is deterministic.
+    fn remove_slot(&mut self, w: usize) {
+        let mut slot = self.slots.remove(w);
+        let _ = slot.child.kill();
+        let _ = slot.child.wait();
+    }
+
+    /// Run one full expand → compute → fold protocol at the current
+    /// membership.  Survivor processes from a previous epoch are fenced
+    /// with `Reconfigure` and re-shipped `Init`; fresh processes start at
+    /// `Init` directly.  On a degradable failure (respawn budget or epoch
+    /// deadline), `self.doomed` names the slot to drop.
+    fn run_epoch(&mut self, plan: &ExecutionPlan) -> Result<()> {
+        let p = self.p();
+        if plan.workers.len() != p {
+            return Err(Error::Runtime(format!(
+                "plan is for {} workers but membership is {p}",
+                plan.workers.len()
+            )));
+        }
+        self.epoch += 1;
+        self.doomed = None;
+        self.deadline = self.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        self.measured = MeasuredReport::new(p);
+        self.ready = vec![false; p];
+        self.phase_done = vec![[false; 3]; p];
+        self.mults = vec![0; p];
+        self.results = vec![None; p];
+        self.expand_inbox = vec![Vec::new(); p];
+        self.fold_inbox = vec![Vec::new(); p];
+        for slot in &mut self.slots {
+            slot.log.clear();
+            slot.accepted = 0;
+            slot.skip = 0;
+            slot.respawns = 0;
+            slot.exited = false;
+            slot.last_heard = Instant::now();
+        }
+        self.fence_survivors()?;
+        self.protocol(plan)
+    }
+
+    /// Fence every process still holding an older epoch's state: send
+    /// `Reconfigure` and discard all of its frames until the matching
+    /// `EpochAck`, so no stale-epoch traffic leaks into the new plan.
+    fn fence_survivors(&mut self) -> Result<()> {
+        let epoch = self.epoch;
+        let mut any = false;
+        for w in 0..self.p() {
+            if !self.slots[w].initialized {
+                continue;
+            }
+            any = true;
+            self.slots[w].fence = Some(epoch);
+            // Control traffic, deliberately unlogged: the new epoch's
+            // replay log starts at its own Init.
+            let frame = wire::encode_frame(&WireMsg::Reconfigure { epoch });
+            self.count_wire(frame.len() as u64);
+            let write = self.slots[w]
+                .stdin
+                .write_all(&frame)
+                .and_then(|_| self.slots[w].stdin.flush());
+            if let Err(e) = write {
+                // A dead survivor is respawned fresh; its cleared epoch
+                // log means the replacement needs no fence.
+                self.fail_worker(w, &format!("reconfigure write failed: {e}"))?;
+            }
+        }
+        if any {
+            self.wait_until(|l| l.slots.iter().all(|s| s.fence.is_none()))?;
+        }
+        for slot in &mut self.slots {
+            slot.initialized = false;
+            slot.last_heard = Instant::now();
+        }
+        Ok(())
+    }
+
+    fn protocol(&mut self, plan: &ExecutionPlan) -> Result<()> {
+        let p = self.p();
+        for w in 0..p {
             let init = WireMsg::Init {
                 worker: w as u32,
-                p: self.p as u32,
-                heartbeat_ms,
+                p: p as u32,
+                heartbeat_ms: self.heartbeat_ms,
                 tile: self.tile as u64,
-                plan: Box::new(self.plan.workers[w].clone()),
+                plan: Box::new(plan.workers[w].clone()),
             };
+            self.slots[w].initialized = true;
             self.send_logged(w, &init)?;
         }
         self.wait_until(|l| l.ready.iter().all(|&r| r))?;
 
-        for w in 0..self.p {
+        for w in 0..p {
             self.send_logged(w, &WireMsg::Start(WirePhase::Expand))?;
         }
         self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Expand.id() as usize]))?;
         self.inject_fault(WirePhase::Expand)?;
 
-        for w in 0..self.p {
+        for w in 0..p {
             let mut inbox = std::mem::take(&mut self.expand_inbox[w]);
             inbox.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
             for (stream_id, from, entries) in inbox {
@@ -446,7 +907,7 @@ impl<'a> Leader<'a> {
         self.inject_fault(WirePhase::Compute)?;
         self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Fold.id() as usize]))?;
 
-        for w in 0..self.p {
+        for w in 0..p {
             let mut inbox = std::mem::take(&mut self.fold_inbox[w]);
             inbox.sort_by_key(|x| x.0);
             for (from, entries) in inbox {
@@ -467,16 +928,18 @@ impl<'a> Leader<'a> {
         Ok(())
     }
 
-    fn wait_until(&mut self, cond: impl Fn(&Leader<'a>) -> bool) -> Result<()> {
+    fn wait_until(&mut self, cond: impl Fn(&Leader) -> bool) -> Result<()> {
         while !cond(self) {
             self.pump()?;
         }
         Ok(())
     }
 
-    /// Drain all queued events, then check timeouts (safe: an empty queue
-    /// means `last_heard` is current), then block briefly for the next event.
+    /// Drain all queued events, then check the epoch deadline and the
+    /// heartbeat timeouts (safe: an empty queue means `last_heard` is
+    /// current), then block briefly for the next event.
     fn pump(&mut self) -> Result<()> {
+        self.check_deadline()?;
         loop {
             match self.events_rx.try_recv() {
                 Ok(ev) => self.handle_event(ev)?,
@@ -495,8 +958,33 @@ impl<'a> Leader<'a> {
         Ok(())
     }
 
+    /// Degrade (or abort) when the epoch outlives its wall-clock budget:
+    /// the least-recently-heard live slot is declared the laggard.
+    fn check_deadline(&mut self) -> Result<()> {
+        let deadline = match self.deadline {
+            Some(d) => d,
+            None => return Ok(()),
+        };
+        if Instant::now() < deadline {
+            return Ok(());
+        }
+        let victim = (0..self.p())
+            .filter(|&w| !self.slots[w].exited)
+            .min_by_key(|&w| self.slots[w].last_heard)
+            .unwrap_or(0);
+        self.doomed = Some(victim);
+        Err(Error::Runtime(format!(
+            "epoch {} exceeded the run deadline of {} ms",
+            self.epoch,
+            self.deadline_ms.unwrap_or(0)
+        )))
+    }
+
     fn handle_event(&mut self, ev: Event) -> Result<()> {
-        let w = ev.slot;
+        let w = match self.slots.iter().position(|s| s.id == ev.slot_id) {
+            Some(w) => w,
+            None => return Ok(()), // the slot has left the membership
+        };
         if ev.gen != self.slots[w].gen {
             return Ok(()); // stale reader from a replaced process
         }
@@ -510,9 +998,15 @@ impl<'a> Leader<'a> {
                 self.fail_worker(w, &why)
             }
             EventKind::Msg(msg, bytes) => {
-                self.measured.wire_bytes += bytes;
+                self.count_wire(bytes);
                 if matches!(msg, WireMsg::Heartbeat { .. }) {
                     return Ok(()); // liveness only; excluded from replay accounting
+                }
+                if let Some(epoch) = self.slots[w].fence {
+                    if matches!(msg, WireMsg::EpochAck { epoch: e, .. } if e == epoch) {
+                        self.slots[w].fence = None;
+                    }
+                    return Ok(()); // fenced-off old-epoch traffic
                 }
                 if self.slots[w].skip > 0 {
                     self.slots[w].skip -= 1;
@@ -537,7 +1031,7 @@ impl<'a> Leader<'a> {
             }
             WireMsg::Send { phase: WirePhase::Expand, to, stream, entries } => {
                 let to = to as usize;
-                if to >= self.p || to == w {
+                if to >= self.p() || to == w {
                     return Err(Error::Runtime(format!("worker {w} expand send to bad dest {to}")));
                 }
                 let n = entries.len() as u64;
@@ -548,7 +1042,7 @@ impl<'a> Leader<'a> {
             }
             WireMsg::Send { phase: WirePhase::Fold, to, stream, entries } => {
                 let to = to as usize;
-                if to >= self.p || to == w {
+                if to >= self.p() || to == w {
                     return Err(Error::Runtime(format!("worker {w} fold send to bad dest {to}")));
                 }
                 if stream != Stream::Partial {
@@ -578,6 +1072,9 @@ impl<'a> Leader<'a> {
             WireMsg::Fail { message } => {
                 Err(Error::Runtime(format!("worker {w} failed: {message}")))
             }
+            WireMsg::EpochAck { .. } => Err(Error::Runtime(format!(
+                "worker {w} sent EpochAck outside a reconfiguration"
+            ))),
             other => Err(Error::Runtime(format!(
                 "worker {w} sent leader-only message {:?}",
                 other.tag()
@@ -587,7 +1084,7 @@ impl<'a> Leader<'a> {
 
     fn check_timeouts(&mut self) -> Result<()> {
         let timeout = Duration::from_millis(self.timeout_ms);
-        for w in 0..self.p {
+        for w in 0..self.p() {
             if !self.slots[w].exited && self.slots[w].last_heard.elapsed() > timeout {
                 self.fail_worker(w, "heartbeat timeout")?;
             }
@@ -599,7 +1096,7 @@ impl<'a> Leader<'a> {
     fn send_logged(&mut self, w: usize, msg: &WireMsg) -> Result<()> {
         let frame = wire::encode_frame(msg);
         self.slots[w].log.push(frame.clone());
-        self.measured.wire_bytes += frame.len() as u64;
+        self.count_wire(frame.len() as u64);
         let write = self.slots[w]
             .stdin
             .write_all(&frame)
@@ -611,21 +1108,30 @@ impl<'a> Leader<'a> {
         Ok(())
     }
 
-    /// Kill-and-respawn recovery for slot `w`: bump the generation (so stale
-    /// reader events are dropped), arrange to skip the frames the old process
-    /// already had accepted, and replay the full log into the new process.
+    /// Kill-and-respawn recovery for slot `w`: wait out the deterministic
+    /// backoff delay, bump the generation (so stale reader events are
+    /// dropped), arrange to skip the frames the old process already had
+    /// accepted, and replay the full log into the new process.  When the
+    /// respawn budget is exhausted the slot is marked doomed instead, so
+    /// an elastic caller can degrade to p−1.
     fn fail_worker(&mut self, w: usize, why: &str) -> Result<()> {
         if self.slots[w].exited {
             return Ok(());
         }
         loop {
-            if self.slots[w].respawns >= MAX_RESPAWNS {
+            if self.slots[w].respawns >= self.max_respawns {
+                self.doomed = Some(w);
                 return Err(Error::Runtime(format!(
-                    "worker {w} failed ({why}) and respawn limit {MAX_RESPAWNS} exhausted"
+                    "worker {w} failed ({why}) and respawn limit {} exhausted",
+                    self.max_respawns
                 )));
             }
+            let delay = self.backoff.delay_for(self.slots[w].respawns);
+            self.respawn_delays_ms.push(delay);
+            self.clock.sleep_ms(delay);
             self.slots[w].respawns += 1;
             self.measured.respawns += 1;
+            self.total_respawns += 1;
             let _ = self.slots[w].child.kill();
             let _ = self.slots[w].child.wait();
             self.slots[w].gen += 1;
@@ -640,13 +1146,18 @@ impl<'a> Leader<'a> {
     fn spawn_into(&mut self, w: usize) -> Result<()> {
         let (child, stdin, stdout) = spawn_child(&self.exe)
             .map_err(|e| Error::Runtime(format!("cannot respawn worker {w}: {e}")))?;
-        start_reader(w, self.slots[w].gen, stdout, self._events_tx.clone());
+        start_reader(self.slots[w].id, self.slots[w].gen, stdout, self._events_tx.clone());
         self.slots[w].child = child;
         self.slots[w].stdin = stdin;
         self.slots[w].last_heard = Instant::now();
+        // A replacement process starts from the replayed epoch log: it is
+        // never mid-old-epoch, so it needs no fence, and it only needs a
+        // future Reconfigure if the log hands it an Init.
+        self.slots[w].fence = None;
+        self.slots[w].initialized = !self.slots[w].log.is_empty();
         let frames: Vec<Vec<u8>> = self.slots[w].log.clone();
         for frame in &frames {
-            self.measured.wire_bytes += frame.len() as u64;
+            self.count_wire(frame.len() as u64);
             self.slots[w]
                 .stdin
                 .write_all(frame)
@@ -661,8 +1172,11 @@ impl<'a> Leader<'a> {
             Some(f) if f.after_phase == phase => f,
             _ => return Ok(()),
         };
-        let w = fault.kill_worker;
-        for _ in 0..fault.kills {
+        // Modulo keeps the target valid after elastic shrinks; for a fixed
+        // membership it is the identity (validated at run start).
+        let w = fault.kill_worker % self.p();
+        while self.kills_left > 0 {
+            self.kills_left -= 1;
             let target = self.slots[w].gen + 1;
             if fault.hang {
                 // Freeze is deliberately unlogged: it is the fault, not part
@@ -704,22 +1218,23 @@ fn spawn_child(exe: &Path) -> std::io::Result<SpawnedChild> {
     Ok((child, stdin, stdout))
 }
 
-fn start_reader(slot: usize, gen: u32, stdout: std::process::ChildStdout, tx: Sender<Event>) {
+fn start_reader(slot_id: u64, gen: u32, stdout: std::process::ChildStdout, tx: Sender<Event>) {
     thread::spawn(move || {
         let mut reader = BufReader::new(stdout);
         loop {
             match wire::read_frame(&mut reader) {
                 Ok(Some((msg, bytes))) => {
-                    if tx.send(Event { slot, gen, kind: EventKind::Msg(msg, bytes) }).is_err() {
+                    if tx.send(Event { slot_id, gen, kind: EventKind::Msg(msg, bytes) }).is_err() {
                         return;
                     }
                 }
                 Ok(None) => {
-                    let _ = tx.send(Event { slot, gen, kind: EventKind::Eof(None) });
+                    let _ = tx.send(Event { slot_id, gen, kind: EventKind::Eof(None) });
                     return;
                 }
                 Err(e) => {
-                    let _ = tx.send(Event { slot, gen, kind: EventKind::Eof(Some(e.to_string())) });
+                    let _ =
+                        tx.send(Event { slot_id, gen, kind: EventKind::Eof(Some(e.to_string())) });
                     return;
                 }
             }
@@ -733,29 +1248,60 @@ fn start_reader(slot: usize, gen: u32, stdout: std::process::ChildStdout, tx: Se
 
 /// Entry point for the hidden `spgemm-hp worker` subcommand.
 ///
-/// Speaks the wire protocol over stdin/stdout: waits for `Init`, runs the
-/// expand -> compute -> fold protocol deterministically (so replay after a
-/// leader-driven respawn reproduces the exact same frames), and finishes by
-/// sending `ResultC` with its owned C entries.
+/// Speaks the wire protocol over stdin/stdout in an epoch loop: each `Init`
+/// runs one expand -> compute -> fold protocol deterministically (so replay
+/// after a leader-driven respawn reproduces the exact same frames) and ends
+/// with `ResultC`; a `Reconfigure` — idle or mid-epoch — abandons the
+/// current epoch's state and is acknowledged with `EpochAck`, after which
+/// the worker waits for the next epoch's `Init`.  The process retires on
+/// clean EOF (the leader closed the pipe).
 pub fn worker_entry() -> Result<()> {
     let stdin = std::io::stdin();
     let mut input = BufReader::new(stdin.lock());
     let out = Arc::new(Mutex::new(BufWriter::new(std::io::stdout())));
+    let mut last_worker = 0u32;
+    loop {
+        let frame = wire::read_frame(&mut input)
+            .map_err(|e| Error::Runtime(format!("worker control read failed: {e}")))?;
+        let msg = match frame {
+            Some((msg, _)) => msg,
+            None => return Ok(()), // leader closed the pipe: retire cleanly
+        };
+        match msg {
+            WireMsg::Init { worker, p, heartbeat_ms, tile: _, plan } => {
+                last_worker = worker;
+                worker_epoch(&mut input, &out, worker, p, heartbeat_ms, &plan)?;
+            }
+            WireMsg::Reconfigure { epoch } => {
+                // Idle between epochs: nothing to abandon, ack directly.
+                send_msg(&out, &WireMsg::EpochAck { worker: last_worker, epoch })?;
+            }
+            WireMsg::Freeze => loop {
+                thread::park();
+            },
+            other => {
+                return Err(Error::Runtime(format!(
+                    "worker expected Init, got tag {}",
+                    other.tag()
+                )));
+            }
+        }
+    }
+}
 
-    let first = wire::read_frame(&mut input)
-        .map_err(|e| Error::Runtime(format!("worker init read failed: {e}")))?;
-    let msg = match first {
-        Some((msg, _)) => msg,
-        None => return Ok(()), // leader went away before Init; nothing to do
-    };
-    let (worker, p, heartbeat_ms, plan) = match msg {
-        WireMsg::Init { worker, p, heartbeat_ms, tile: _, plan } => (worker, p, heartbeat_ms, plan),
-        _ => return Err(Error::Runtime("worker expected Init as first frame".into())),
-    };
-
+/// Run one epoch: heartbeat thread up, protocol to completion (or to a
+/// mid-epoch `Reconfigure`), heartbeat thread down, final frame out.
+fn worker_epoch(
+    input: &mut impl Read,
+    out: &Arc<Mutex<BufWriter<std::io::Stdout>>>,
+    worker: u32,
+    p: u32,
+    heartbeat_ms: u64,
+    plan: &WorkerPlan,
+) -> Result<()> {
     let stop = Arc::new(AtomicBool::new(false));
     let beat = {
-        let out = Arc::clone(&out);
+        let out = Arc::clone(out);
         let stop = Arc::clone(&stop);
         thread::spawn(move || {
             let interval = Duration::from_millis(heartbeat_ms.max(1));
@@ -779,21 +1325,40 @@ pub fn worker_entry() -> Result<()> {
         })
     };
 
-    let run = worker_run(&mut input, &out, &stop, worker as usize, p as usize, &plan);
-    // Stop and join the heartbeat thread *before* ResultC so no heartbeat can
-    // be interleaved mid-frame or truncated by process exit.
+    let run = worker_run(input, out, &stop, worker as usize, p as usize, plan);
+    // Stop and join the heartbeat thread *before* the final frame so no
+    // heartbeat can be interleaved mid-frame or follow the epoch's last
+    // word to the leader.
     stop.store(true, Ordering::Relaxed);
     let _ = beat.join();
     match run {
-        Ok(entries) => {
-            send_msg(&out, &WireMsg::ResultC { entries })?;
+        Ok(RunOutcome::Done(entries)) => {
+            send_msg(out, &WireMsg::ResultC { entries })?;
+            Ok(())
+        }
+        Ok(RunOutcome::Reconf(epoch)) => {
+            send_msg(out, &WireMsg::EpochAck { worker, epoch })?;
             Ok(())
         }
         Err(e) => {
-            let _ = send_msg(&out, &WireMsg::Fail { message: e.to_string() });
+            let _ = send_msg(out, &WireMsg::Fail { message: e.to_string() });
             Err(e)
         }
     }
+}
+
+/// How one worker epoch ended: a full protocol run producing owned C
+/// entries, or a mid-epoch `Reconfigure` abandoning the plan.
+enum RunOutcome {
+    Done(Entries),
+    Reconf(u64),
+}
+
+/// A control-plane view of one inbound frame: a protocol message, or a
+/// `Reconfigure` that preempts whatever the protocol was doing.
+enum Ctl {
+    Msg(WireMsg),
+    Reconf(u64),
 }
 
 fn send_msg(out: &Mutex<BufWriter<std::io::Stdout>>, msg: &WireMsg) -> Result<()> {
@@ -807,8 +1372,9 @@ fn send_msg(out: &Mutex<BufWriter<std::io::Stdout>>, msg: &WireMsg) -> Result<()
 }
 
 /// Read the next protocol frame; handles `Freeze` (fault injection) by
-/// silencing heartbeats and parking forever so the leader's timeout fires.
-fn next_msg(input: &mut impl Read, stop: &AtomicBool) -> Result<WireMsg> {
+/// silencing heartbeats and parking forever so the leader's timeout fires,
+/// and surfaces `Reconfigure` as [`Ctl::Reconf`] so the epoch can unwind.
+fn next_msg(input: &mut impl Read, stop: &AtomicBool) -> Result<Ctl> {
     let frame = wire::read_frame(input)
         .map_err(|e| Error::Runtime(format!("worker read failed: {e}")))?;
     let msg = match frame {
@@ -821,7 +1387,10 @@ fn next_msg(input: &mut impl Read, stop: &AtomicBool) -> Result<WireMsg> {
             thread::park();
         }
     }
-    Ok(msg)
+    if let WireMsg::Reconfigure { epoch } = msg {
+        return Ok(Ctl::Reconf(epoch));
+    }
+    Ok(Ctl::Msg(msg))
 }
 
 fn worker_run(
@@ -831,15 +1400,16 @@ fn worker_run(
     me: usize,
     p: usize,
     plan: &WorkerPlan,
-) -> Result<Entries> {
+) -> Result<RunOutcome> {
     if plan.id != me {
         return Err(Error::Runtime(format!("plan id {} != worker {me}", plan.id)));
     }
     send_msg(out, &WireMsg::Ready { worker: me as u32 })?;
 
     match next_msg(input, stop)? {
-        WireMsg::Start(WirePhase::Expand) => {}
-        other => {
+        Ctl::Reconf(epoch) => return Ok(RunOutcome::Reconf(epoch)),
+        Ctl::Msg(WireMsg::Start(WirePhase::Expand)) => {}
+        Ctl::Msg(other) => {
             return Err(Error::Runtime(format!("expected Start(Expand), got tag {}", other.tag())));
         }
     }
@@ -877,7 +1447,8 @@ fn worker_run(
     let mut got = 0u64;
     loop {
         match next_msg(input, stop)? {
-            WireMsg::Deliver { phase: WirePhase::Expand, stream, entries, .. } => {
+            Ctl::Reconf(epoch) => return Ok(RunOutcome::Reconf(epoch)),
+            Ctl::Msg(WireMsg::Deliver { phase: WirePhase::Expand, stream, entries, .. }) => {
                 got += entries.len() as u64;
                 let dest = match stream {
                     Stream::A => &mut a_vals,
@@ -890,8 +1461,8 @@ fn worker_run(
                     dest.insert(key, val);
                 }
             }
-            WireMsg::Start(WirePhase::Compute) => break,
-            other => {
+            Ctl::Msg(WireMsg::Start(WirePhase::Compute)) => break,
+            Ctl::Msg(other) => {
                 return Err(Error::Runtime(format!("unexpected tag {} in expand", other.tag())));
             }
         }
@@ -959,14 +1530,20 @@ fn worker_run(
     let mut got = 0u64;
     loop {
         match next_msg(input, stop)? {
-            WireMsg::Deliver { phase: WirePhase::Fold, stream: Stream::Partial, entries, .. } => {
+            Ctl::Reconf(epoch) => return Ok(RunOutcome::Reconf(epoch)),
+            Ctl::Msg(WireMsg::Deliver {
+                phase: WirePhase::Fold,
+                stream: Stream::Partial,
+                entries,
+                ..
+            }) => {
                 got += entries.len() as u64;
                 for (pc, v) in entries {
                     *cvals.entry(pc).or_insert(0.0) += v;
                 }
             }
-            WireMsg::Start(WirePhase::Fold) => break,
-            other => {
+            Ctl::Msg(WireMsg::Start(WirePhase::Fold)) => break,
+            Ctl::Msg(other) => {
                 return Err(Error::Runtime(format!("unexpected tag {} in fold", other.tag())));
             }
         }
@@ -978,18 +1555,14 @@ fn worker_run(
         )));
     }
 
-    Ok(plan
-        .owned_c
-        .iter()
-        .map(|&pc| (pc, cvals.get(&pc).copied().unwrap_or(0.0)))
-        .collect())
+    Ok(RunOutcome::Done(
+        plan.owned_c.iter().map(|&pc| (pc, cvals.get(&pc).copied().unwrap_or(0.0))).collect(),
+    ))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithm::AlgorithmStrategy;
-    use crate::partition::PartitionerConfig;
     use crate::sparse::Coo;
 
     fn tiny_plan() -> ExecutionPlan {
@@ -1050,5 +1623,94 @@ mod tests {
         assert!(FaultPlan::kill(0, WirePhase::Fold).validate(2).is_err());
         let zero = FaultPlan { kills: 0, ..FaultPlan::kill(0, WirePhase::Expand) };
         assert!(zero.validate(2).is_err());
+    }
+
+    #[test]
+    fn backoff_schedule_is_exponential_capped_and_overflow_safe() {
+        let b = BackoffPolicy { base_ms: 25, cap_ms: 1_000 };
+        assert_eq!(b.delay_for(0), 25);
+        assert_eq!(b.delay_for(1), 50);
+        assert_eq!(b.delay_for(2), 100);
+        assert_eq!(b.delay_for(5), 800);
+        assert_eq!(b.delay_for(6), 1_000); // 1600 capped
+        assert_eq!(b.delay_for(200), 1_000); // shift overflow saturates, then caps
+        let huge = BackoffPolicy { base_ms: u64::MAX, cap_ms: u64::MAX };
+        assert_eq!(huge.delay_for(63), u64::MAX);
+        let default = BackoffPolicy::default();
+        assert_eq!(default.base_ms, DEFAULT_RESPAWN_BASE_MS);
+        assert_eq!(default.cap_ms, DEFAULT_RESPAWN_CAP_MS);
+    }
+
+    #[test]
+    fn fake_clock_records_instead_of_sleeping() {
+        let clock = FakeClock::default();
+        clock.sleep_ms(40);
+        clock.sleep_ms(80);
+        assert_eq!(*clock.slept.lock().unwrap(), vec![40, 80]);
+        SystemClock.sleep_ms(0); // must not block
+    }
+
+    fn tiny_elastic_opts() -> ElasticOpts {
+        ElasticOpts {
+            strategy: AlgorithmStrategy::parse("row").unwrap(),
+            pcfg: PartitionerConfig::new(3),
+            tile: 4,
+            min_workers: 2,
+            iters: 2,
+            schedule: Vec::new(),
+        }
+    }
+
+    /// All of these must fail *validation*, i.e. before any worker process
+    /// is spawned — so the test runs fine in no-fork sandboxes.
+    #[test]
+    fn run_elastic_rejects_bad_options_before_spawning() {
+        let mut ca = Coo::new(4, 4);
+        for i in 0..4 {
+            ca.push(i, i, 1.0);
+        }
+        let a = Csr::from_coo(&ca);
+        let b = a.clone();
+        let mut planner = Planner::in_memory();
+        let cfg = CoordinatorConfig::default();
+
+        let zero_floor = ElasticOpts { min_workers: 0, ..tiny_elastic_opts() };
+        assert!(run_elastic(&a, &b, &mut planner, &zero_floor, &cfg)
+            .unwrap_err()
+            .to_string()
+            .contains("min-workers"));
+
+        let floor_above_p = ElasticOpts { min_workers: 4, ..tiny_elastic_opts() };
+        assert!(run_elastic(&a, &b, &mut planner, &floor_above_p, &cfg)
+            .unwrap_err()
+            .to_string()
+            .contains("exceeds the initial worker count"));
+
+        let no_iters = ElasticOpts { iters: 0, ..tiny_elastic_opts() };
+        assert!(run_elastic(&a, &b, &mut planner, &no_iters, &cfg).is_err());
+
+        let event_at_zero = ElasticOpts {
+            schedule: vec![MembershipEvent { before_iter: 0, change: MemberChange::Leave(1) }],
+            ..tiny_elastic_opts()
+        };
+        assert!(run_elastic(&a, &b, &mut planner, &event_at_zero, &cfg)
+            .unwrap_err()
+            .to_string()
+            .contains("outside"));
+
+        let zero_change = ElasticOpts {
+            schedule: vec![MembershipEvent { before_iter: 1, change: MemberChange::Leave(0) }],
+            ..tiny_elastic_opts()
+        };
+        assert!(run_elastic(&a, &b, &mut planner, &zero_change, &cfg)
+            .unwrap_err()
+            .to_string()
+            .contains("change count"));
+
+        let zero_timeout = CoordinatorConfig { worker_timeout_ms: 0, ..cfg };
+        assert!(run_elastic(&a, &b, &mut planner, &tiny_elastic_opts(), &zero_timeout)
+            .unwrap_err()
+            .to_string()
+            .contains("workers-timeout-ms"));
     }
 }

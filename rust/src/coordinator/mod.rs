@@ -33,8 +33,10 @@
 //!
 //! With [`CoordinatorConfig::exec`] set to [`exec::ExecMode::Processes`]
 //! the same plan runs on real worker OS processes connected by pipes
-//! speaking the [`wire`] protocol, with heartbeat-based failure detection
-//! and replay-based recovery — see `docs/DISTRIBUTED.md`.
+//! speaking the [`wire`] protocol, with heartbeat-based failure detection,
+//! replay-based recovery, and elastic membership ([`exec::run_elastic`]:
+//! joins/leaves re-plan at the new p, respawn-budget exhaustion degrades
+//! to p−1 down to a `min_workers` floor) — see `docs/DISTRIBUTED.md`.
 
 pub mod exec;
 pub mod plan;
@@ -87,6 +89,24 @@ pub struct CoordinatorConfig {
     /// Heartbeat timeout before a worker process is declared dead and
     /// respawned (process mode only).
     pub worker_timeout_ms: u64,
+    /// Interval at which workers emit heartbeats (process mode only);
+    /// `None` derives `worker_timeout_ms / 4` (floor 1 ms).
+    pub heartbeat_ms: Option<u64>,
+    /// Respawn budget per slot per epoch before the leader gives up on
+    /// the slot — degrading to p−1 in elastic runs, aborting otherwise.
+    pub max_respawns: u32,
+    /// Base of the exponential respawn backoff (`base << attempt`).
+    pub respawn_base_ms: u64,
+    /// Cap on any single respawn backoff delay.
+    pub respawn_cap_ms: u64,
+    /// Time source for respawn backoff; `None` uses the real clock.
+    /// Tests inject [`exec::FakeClock`] to assert the schedule without
+    /// sleeping.
+    pub clock: Option<Arc<dyn exec::Clock>>,
+    /// Wall-clock budget per protocol epoch (process mode only); when it
+    /// expires the least-recently-heard worker is declared the laggard,
+    /// which degrades an elastic run (or aborts a fixed-p one).
+    pub run_deadline_ms: Option<u64>,
     /// Worker executable override (process mode only); `None` uses
     /// `std::env::current_exe()` — correct for the `spgemm-hp` binary,
     /// set explicitly from test harnesses.
@@ -109,6 +129,12 @@ impl Default for CoordinatorConfig {
             plan: None,
             exec: exec::ExecMode::Simulated,
             worker_timeout_ms: exec::DEFAULT_WORKER_TIMEOUT_MS,
+            heartbeat_ms: None,
+            max_respawns: exec::MAX_RESPAWNS,
+            respawn_base_ms: exec::DEFAULT_RESPAWN_BASE_MS,
+            respawn_cap_ms: exec::DEFAULT_RESPAWN_CAP_MS,
+            clock: None,
+            run_deadline_ms: None,
             worker_exe: None,
             fault: None,
         }

@@ -36,8 +36,9 @@ use std::io::{Read as IoRead, Write as IoWrite};
 pub const WIRE_MAGIC: [u8; 4] = *b"SPWF";
 
 /// Version of the wire layout; a leader and worker from different builds
-/// refuse to talk rather than misread each other.
-pub const WIRE_VERSION: u32 = 1;
+/// refuse to talk rather than misread each other. Version 2 added the
+/// elastic-membership control messages (`Reconfigure` / `EpochAck`).
+pub const WIRE_VERSION: u32 = 2;
 
 /// Fixed frame-header size: magic + version + tag + length + hash.
 pub const HEADER_BYTES: usize = 25;
@@ -115,8 +116,9 @@ impl Stream {
 }
 
 /// Every message the leader and a worker exchange. Leader → worker:
-/// `Init`, `Start`, `Deliver`, `Freeze`; worker → leader: `Ready`,
-/// `Heartbeat`, `Send`, `PhaseDone`, `ResultC`, `Fail`.
+/// `Init`, `Start`, `Deliver`, `Freeze`, `Reconfigure`; worker → leader:
+/// `Ready`, `Heartbeat`, `Send`, `PhaseDone`, `ResultC`, `Fail`,
+/// `EpochAck`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// Ships the worker its identity, the run geometry, and its whole
@@ -143,6 +145,14 @@ pub enum WireMsg {
     ResultC { entries: Vec<(u32, f64)> },
     /// The worker hit a protocol or plan error; `message` is diagnostic.
     Fail { message: String },
+    /// Membership changed: abandon the current epoch's work, drop all
+    /// state derived from the old plan, and acknowledge with `EpochAck`.
+    /// A fresh `Init` for the new membership follows the ack.
+    Reconfigure { epoch: u64 },
+    /// Worker acknowledges [`WireMsg::Reconfigure`] for `epoch`; every
+    /// frame it sent before the ack belongs to the fenced-off old epoch
+    /// and is discarded by the leader.
+    EpochAck { worker: u32, epoch: u64 },
 }
 
 impl WireMsg {
@@ -158,6 +168,8 @@ impl WireMsg {
             WireMsg::PhaseDone { .. } => 7,
             WireMsg::ResultC { .. } => 8,
             WireMsg::Fail { .. } => 9,
+            WireMsg::Reconfigure { .. } => 10,
+            WireMsg::EpochAck { .. } => 11,
         }
     }
 }
@@ -230,6 +242,11 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             w.len(bytes.len());
             w.buf.extend_from_slice(bytes);
         }
+        WireMsg::Reconfigure { epoch } => w.u64(*epoch),
+        WireMsg::EpochAck { worker, epoch } => {
+            w.u32(*worker);
+            w.u64(*epoch);
+        }
     }
     w.buf
 }
@@ -273,6 +290,8 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg> {
                 .map_err(|_| Error::invalid("wire: Fail message is not UTF-8"))?;
             WireMsg::Fail { message }
         }
+        10 => WireMsg::Reconfigure { epoch: r.u64()? },
+        11 => WireMsg::EpochAck { worker: r.u32()?, epoch: r.u64()? },
         other => return Err(Error::invalid(format!("wire: unknown message tag {other}"))),
     };
     if !r.done() {
@@ -462,7 +481,39 @@ mod tests {
             WireMsg::PhaseDone { phase: WirePhase::Compute, mults: 17 },
             WireMsg::ResultC { entries: vec![(3, 6.25)] },
             WireMsg::Fail { message: "plan mismatch: α".into() },
+            WireMsg::Reconfigure { epoch: 3 },
+            WireMsg::EpochAck { worker: 2, epoch: 3 },
         ]
+    }
+
+    #[test]
+    fn empty_send_list_round_trips_on_both_payload_kinds() {
+        // A worker with an empty send list never emits the frame in
+        // practice, but the codec must still handle the degenerate
+        // zero-entry payload for Send and the Deliver the leader would
+        // route from it.
+        let send = WireMsg::Send {
+            phase: WirePhase::Fold,
+            to: 0,
+            stream: Stream::Partial,
+            entries: vec![],
+        };
+        let deliver = WireMsg::Deliver {
+            phase: WirePhase::Expand,
+            from: 3,
+            stream: Stream::B,
+            entries: vec![],
+        };
+        for msg in [send, deliver] {
+            let frame = encode_frame(&msg);
+            let (back, used) = decode_frame(&frame).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(used, frame.len());
+            // and every truncation of the degenerate frame still errors
+            for cut in 1..frame.len() {
+                assert!(decode_frame(&frame[..cut]).is_err(), "cut at {cut} accepted");
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //!           [--partition-threads N] [--epsilon E] [--mem-epsilon D]
 //!           [--plan-cache DIR] [--plan-cache-cap N] [--plan-cache-bytes N]
 //!           [--exec simulated|processes] [--workers-timeout-ms 5000]
+//!           [--heartbeat-ms N] [--max-respawns 3]
+//!           [--respawn-base-ms 25] [--respawn-cap-ms 2000] [--run-deadline-ms N]
+//!           [--elastic [--min-workers 1] [--iters 3] [--schedule 1:leave,2:join]]
 //! ```
 //!
 //! `--mtx-a`/`--mtx-b` are accepted everywhere `--a`/`--b` are (and are
@@ -37,7 +40,14 @@
 //! `e2e --exec processes` executes each algorithm on real worker OS
 //! processes speaking the framed wire protocol (`docs/DISTRIBUTED.md`)
 //! and cross-checks measured per-worker payloads against the modeled
-//! volumes; `--workers-timeout-ms` tunes its failure detector.
+//! volumes; `--workers-timeout-ms` / `--heartbeat-ms` tune its failure
+//! detector, `--max-respawns` / `--respawn-base-ms` / `--respawn-cap-ms`
+//! its exponential-backoff recovery, and `--run-deadline-ms` puts a
+//! wall-clock budget on each protocol epoch. `--elastic` switches to the
+//! iterated MCL-style driver: `--iters` repeated multiplies with
+//! `--schedule ITER:leave|join[:N]` membership changes between them
+//! (each re-plans at the new p), degrading instead of aborting down to
+//! the `--min-workers` floor.
 //! `--plan-cache-bytes` puts a byte budget on the on-disk plan cache
 //! (oldest plans are evicted first). Unknown `--options` are rejected
 //! per subcommand.
@@ -446,6 +456,15 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         "plan-cache-bytes",
         "exec",
         "workers-timeout-ms",
+        "heartbeat-ms",
+        "max-respawns",
+        "respawn-base-ms",
+        "respawn-cap-ms",
+        "run-deadline-ms",
+        "elastic",
+        "min-workers",
+        "iters",
+        "schedule",
     ])?;
     let parts = args.get_usize("parts", 4)?;
     let tile = args.get_usize("tile", 8)?;
@@ -459,8 +478,41 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         coordinator::exec::ExecMode::Simulated,
         coordinator::exec::ExecMode::parse,
     )?;
-    let workers_timeout_ms =
-        args.get_u64("workers-timeout-ms", coordinator::exec::DEFAULT_WORKER_TIMEOUT_MS)?;
+    // All timing knobs go through the min-1 parser: a zero timeout would
+    // derive a zero heartbeat interval and spin the worker's beat thread.
+    let workers_timeout_ms = args.get_usize_min(
+        "workers-timeout-ms",
+        coordinator::exec::DEFAULT_WORKER_TIMEOUT_MS as usize,
+        1,
+    )? as u64;
+    let heartbeat_ms = args.get_opt_usize_min("heartbeat-ms", 1)?.map(|v| v as u64);
+    // 0 is a valid respawn budget: fail over (or degrade) on first death.
+    let max_respawns =
+        args.get_usize("max-respawns", coordinator::exec::MAX_RESPAWNS as usize)? as u32;
+    let respawn_base_ms = args.get_usize_min(
+        "respawn-base-ms",
+        coordinator::exec::DEFAULT_RESPAWN_BASE_MS as usize,
+        1,
+    )? as u64;
+    let respawn_cap_ms = args.get_usize_min(
+        "respawn-cap-ms",
+        coordinator::exec::DEFAULT_RESPAWN_CAP_MS as usize,
+        1,
+    )? as u64;
+    let run_deadline_ms = args.get_opt_usize_min("run-deadline-ms", 1)?.map(|v| v as u64);
+    let elastic = args.has_flag("elastic");
+    let min_workers = args.get_usize_min("min-workers", 1, 1)?;
+    let iters = args.get_usize_min("iters", 3, 1)?;
+    let schedule = parse_schedule(args.get("schedule"), iters, elastic)?;
+    if !elastic {
+        for k in ["min-workers", "iters", "schedule"] {
+            if args.get(k).is_some() {
+                return Err(Error::Config(format!("--{k} requires --elastic")));
+            }
+        }
+    } else if exec_mode != coordinator::exec::ExecMode::Processes {
+        return Err(Error::Config("--elastic requires --exec processes".into()));
+    }
     let cache = cache_from_args(args)?;
     let cfg = partitioner_config_from_args(args, parts, 0.1, seed)?;
     // one named strategy, or the full model-vs-oblivious comparison
@@ -522,6 +574,64 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     }
     let mut planner = planner_from_args(args)?;
 
+    if elastic {
+        let ccfg = coordinator::CoordinatorConfig {
+            exec: exec_mode,
+            worker_timeout_ms: workers_timeout_ms,
+            heartbeat_ms,
+            max_respawns,
+            respawn_base_ms,
+            respawn_cap_ms,
+            run_deadline_ms,
+            ..Default::default()
+        };
+        let mut changes = 0usize;
+        for strategy in &strategies {
+            let opts = coordinator::exec::ElasticOpts {
+                strategy: *strategy,
+                pcfg: cfg.clone(),
+                tile,
+                min_workers,
+                iters,
+                schedule: schedule.clone(),
+            };
+            let t = Timer::start();
+            let (rep, cs) = coordinator::exec::run_elastic(&a, &b, &mut planner, &opts, &ccfg)?;
+            let ms = t.elapsed_ms();
+            for (i, c) in cs.iter().enumerate() {
+                if !c.approx_eq(&c_ref, 1e-3) {
+                    return Err(Error::Runtime(format!(
+                        "{}: iteration {i} numeric validation failed",
+                        strategy.name()
+                    )));
+                }
+            }
+            changes += (rep.joins + rep.leaves + rep.degraded) as usize;
+            println!(
+                "{:<16} iters={} epochs={} replans={} plan_hits={} degraded={} joins={} \
+                 leaves={} final_workers={} respawns={} wire={} {:.1} ms",
+                strategy.name(),
+                rep.iters,
+                rep.epochs,
+                rep.replans,
+                rep.plan_hits,
+                rep.degraded,
+                rep.joins,
+                rep.leaves,
+                rep.final_workers,
+                rep.respawns,
+                fmt_count(rep.wire_bytes),
+                ms
+            );
+            println!("  workers per epoch: {:?}", rep.p_history);
+        }
+        println!(
+            "\nall elastic iterations validated against the reference SpGEMM across {changes} \
+             membership changes ✓ (measured == modeled at every epoch)"
+        );
+        return Ok(());
+    }
+
     println!(
         "\n{:<16} {:>5} {:>8} {:>12} {:>12} {:>12} {:>10} {:>9} {:>8} {:>8} {:>6}",
         "algorithm",
@@ -550,6 +660,11 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             plan: Some(std::sync::Arc::new(planned.prepared.clone())),
             exec: exec_mode,
             worker_timeout_ms: workers_timeout_ms,
+            heartbeat_ms,
+            max_respawns,
+            respawn_base_ms,
+            respawn_cap_ms,
+            run_deadline_ms,
             ..Default::default()
         };
         let t = Timer::start();
@@ -600,4 +715,61 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     }
     println!("\nall algorithms validated against the reference SpGEMM ✓");
     Ok(())
+}
+
+/// Parse `--schedule 1:leave,2:join` (optionally `ITER:leave:N`) into
+/// membership events.  Without a spec, `--elastic` with at least three
+/// iterations defaults to a leave-then-rejoin choreography — one worker
+/// leaves before iteration 1 and rejoins before iteration 2, so the
+/// rejoin replans at a previously-seen p and exercises the warm-plan
+/// path.  Event bounds (`before_iter` in `1..iters`, counts >= 1) are
+/// validated by `run_elastic` itself.
+fn parse_schedule(
+    spec: Option<&str>,
+    iters: usize,
+    elastic: bool,
+) -> Result<Vec<coordinator::exec::MembershipEvent>> {
+    use coordinator::exec::{MemberChange, MembershipEvent};
+    let Some(spec) = spec else {
+        if elastic && iters >= 3 {
+            return Ok(vec![
+                MembershipEvent { before_iter: 1, change: MemberChange::Leave(1) },
+                MembershipEvent { before_iter: 2, change: MemberChange::Join(1) },
+            ]);
+        }
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        let mut fields = tok.split(':');
+        let (Some(at), Some(kind)) = (fields.next(), fields.next()) else {
+            return Err(Error::Config(format!(
+                "--schedule expects ITER:leave|join[:N] entries, got `{tok}`"
+            )));
+        };
+        let before_iter: usize = at
+            .parse()
+            .map_err(|_| Error::Config(format!("--schedule: bad iteration in `{tok}`")))?;
+        let n: usize = match fields.next() {
+            None => 1,
+            Some(c) => c
+                .parse()
+                .map_err(|_| Error::Config(format!("--schedule: bad count in `{tok}`")))?,
+        };
+        if fields.next().is_some() {
+            return Err(Error::Config(format!("--schedule: too many fields in `{tok}`")));
+        }
+        let change = match kind {
+            "leave" => MemberChange::Leave(n),
+            "join" => MemberChange::Join(n),
+            other => {
+                return Err(Error::Config(format!(
+                    "--schedule: expected leave or join, got `{other}`"
+                )));
+            }
+        };
+        out.push(MembershipEvent { before_iter, change });
+    }
+    Ok(out)
 }

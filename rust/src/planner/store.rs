@@ -158,7 +158,14 @@ fn plan_files(dir: &Path) -> Result<Vec<PlanFile>> {
         if path.extension().and_then(|e| e.to_str()) != Some("plan") {
             continue;
         }
-        let meta = entry.metadata()?;
+        // A concurrent process (another store's GC sweep, a manual
+        // cleanup) may delete the file between the directory listing and
+        // this stat; that just means it is already collected.
+        let meta = match entry.metadata() {
+            Ok(meta) => meta,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e.into()),
+        };
         if !meta.is_file() {
             continue;
         }
@@ -173,7 +180,15 @@ fn plan_files(dir: &Path) -> Result<Vec<PlanFile>> {
 /// over-budget plan stays usable rather than evicting itself. Ties on
 /// mtime break by file name so the sweep is deterministic.
 fn gc_disk(dir: &Path, budget: u64, keep: &Path) -> Result<()> {
-    let mut files = plan_files(dir)?;
+    gc_files(plan_files(dir)?, budget, keep)
+}
+
+/// The sweep proper, over an explicit file list (split out so tests can
+/// hand it a list naming an already-deleted entry).  A `NotFound` from
+/// `remove_file` means a concurrent process collected the file first —
+/// its bytes are gone either way, so the sweep counts them reclaimed and
+/// continues.
+fn gc_files(mut files: Vec<PlanFile>, budget: u64, keep: &Path) -> Result<()> {
     let mut total: u64 = files.iter().map(|f| f.bytes).sum();
     if total <= budget {
         return Ok(());
@@ -186,7 +201,11 @@ fn gc_disk(dir: &Path, budget: u64, keep: &Path) -> Result<()> {
         if f.path == keep {
             continue;
         }
-        std::fs::remove_file(&f.path)?;
+        match std::fs::remove_file(&f.path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
+        }
         total -= f.bytes;
     }
     Ok(())
@@ -403,6 +422,39 @@ mod tests {
         let mut fresh = PlanStore::with_budget(8, Some(dir.clone()), Some(one / 2)).unwrap();
         assert!(matches!(fresh.lookup(fp(2)), StoreLookup::Hit(_)));
         assert_eq!(fresh.lookup(fp(1)), StoreLookup::Miss);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_tolerates_entries_deleted_by_a_concurrent_process() {
+        let dir = tempdir("racegc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let keep = dir.join("keep.plan");
+        std::fs::write(&keep, [0u8; 64]).unwrap();
+        let victim = dir.join("victim.plan");
+        std::fs::write(&victim, [0u8; 64]).unwrap();
+        // A sweep list naming a file that a concurrent process already
+        // removed: the sweep must treat it as collected, not error.
+        let ghost = dir.join("ghost.plan");
+        let files = vec![
+            PlanFile { path: ghost, bytes: 64, mtime: std::time::SystemTime::UNIX_EPOCH },
+            PlanFile {
+                path: victim.clone(),
+                bytes: 64,
+                mtime: std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(1),
+            },
+            PlanFile {
+                path: keep.clone(),
+                bytes: 64,
+                mtime: std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(2),
+            },
+        ];
+        gc_files(files, 64, &keep).unwrap();
+        assert!(keep.exists(), "the just-written entry is never a victim");
+        assert!(!victim.exists(), "the sweep continued past the ghost to the real victim");
+        // And the full-directory path shrugs off mid-listing deletions
+        // too: a plan file that vanishes is simply not listed.
+        assert!(plan_files(&dir).unwrap().iter().all(|f| f.path != dir.join("ghost.plan")));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -10,12 +10,16 @@
 use std::sync::Arc;
 
 use spgemm_hp::algorithm::AlgorithmStrategy;
-use spgemm_hp::coordinator::exec::{run_processes, ExecMode, FaultPlan, MeasuredReport};
+use spgemm_hp::coordinator::exec::{
+    run_elastic, run_processes, ElasticOpts, ExecMode, FakeClock, FaultPlan, MeasuredReport,
+    MemberChange, MembershipEvent,
+};
 use spgemm_hp::coordinator::plan::{ExecutionPlan, PreparedPlan};
 use spgemm_hp::coordinator::wire::{self, Stream, WireMsg, WirePhase};
 use spgemm_hp::coordinator::{self, CoordReport, CoordinatorConfig};
 use spgemm_hp::hypergraph::models::ModelKind;
 use spgemm_hp::partition::PartitionerConfig;
+use spgemm_hp::planner::Planner;
 use spgemm_hp::repro::workloads::conformance_instances;
 use spgemm_hp::sim;
 use spgemm_hp::sparse::{spgemm, spgemm_structure, Csr};
@@ -233,6 +237,212 @@ fn hung_worker_detected_within_timeout_and_recovered() {
 }
 
 // ---------------------------------------------------------------------------
+// Elastic membership: shrink/grow re-planning, degradation to the
+// min-workers floor, and the deterministic respawn backoff schedule
+// ---------------------------------------------------------------------------
+
+/// Elastic run config: real processes with a `max_respawns` budget and an
+/// optional injected fault.
+fn elastic_cfg(fault: Option<FaultPlan>, max_respawns: u32) -> CoordinatorConfig {
+    CoordinatorConfig {
+        exec: ExecMode::Processes,
+        worker_exe: Some(exe()),
+        fault,
+        max_respawns,
+        ..Default::default()
+    }
+}
+
+fn elastic_opts(
+    strat: &AlgorithmStrategy,
+    p: usize,
+    min_workers: usize,
+    iters: usize,
+    schedule: Vec<MembershipEvent>,
+) -> ElasticOpts {
+    ElasticOpts {
+        strategy: *strat,
+        pcfg: PartitionerConfig::new(p),
+        tile: 8,
+        min_workers,
+        iters,
+        schedule,
+    }
+}
+
+/// The elastic sweep's strategy pair — both single-producer, so every
+/// iteration's C must be bit-identical to the sequential SpGEMM.
+fn elastic_strategies() -> [AlgorithmStrategy; 2] {
+    [AlgorithmStrategy::parse("row").unwrap(), AlgorithmStrategy::parse("summa").unwrap()]
+}
+
+/// A slot that exhausts its respawn budget mid-epoch degrades the run to
+/// p−1 instead of aborting: C is bit-identical to a failure-free elastic
+/// run at the final membership, and the shrunken plan is served warm
+/// from the shared planner.
+#[test]
+fn elastic_leave_after_expand_degrades_bit_identical() {
+    if !processes_available() {
+        eprintln!("skipping elastic_degrade: process spawning unavailable in this sandbox");
+        return;
+    }
+    let insts = conformance_instances(42).unwrap();
+    for inst in [&insts[0], &insts[2]] {
+        for p in [3usize, 4] {
+            for strat in elastic_strategies() {
+                let ctx = format!("{} p={p} {}", inst.name, strat.name());
+                let mut planner = Planner::in_memory();
+                // failure-free reference at the membership the degraded run ends on
+                let base_opts = elastic_opts(&strat, p - 1, 1, 1, vec![]);
+                let (_, base_cs) =
+                    run_elastic(&inst.a, &inst.b, &mut planner, &base_opts, &elastic_cfg(None, 0))
+                        .unwrap();
+                // worker 1 dies after expand holding a zero respawn budget
+                let fault = FaultPlan::kill(1, WirePhase::Expand);
+                let opts = elastic_opts(&strat, p, p - 1, 1, vec![]);
+                let (rep, cs) =
+                    run_elastic(&inst.a, &inst.b, &mut planner, &opts, &elastic_cfg(Some(fault), 0))
+                        .unwrap();
+                assert_eq!(rep.degraded, 1, "{ctx}: one degradation");
+                assert_eq!(rep.epochs, 2, "{ctx}: failed epoch plus the retry");
+                assert_eq!(rep.final_workers, p - 1, "{ctx}");
+                assert_eq!(rep.p_history, vec![p, p - 1], "{ctx}");
+                assert_eq!((rep.replans, rep.plan_hits), (1, 1), "{ctx}: p-1 plan served warm");
+                assert_eq!(rep.respawns, 0, "{ctx}: zero budget means no respawn attempt");
+                assert!(rep.respawn_delays_ms.is_empty(), "{ctx}: no backoff without respawns");
+                assert!(bits_equal(&cs[0], &base_cs[0]), "{ctx}: degraded C differs");
+            }
+        }
+    }
+}
+
+/// Scheduled leave-then-rejoin across three iterations: each membership
+/// change replans; returning to a previously-seen p is a warm planner
+/// hit; every iteration's C is bit-identical to the sequential reference.
+#[test]
+fn elastic_leave_then_rejoin_warm_plan_hits() {
+    if !processes_available() {
+        eprintln!("skipping elastic_rejoin: process spawning unavailable in this sandbox");
+        return;
+    }
+    let insts = conformance_instances(42).unwrap();
+    for inst in [&insts[0], &insts[2]] {
+        let c_ref = spgemm(&inst.a, &inst.b).unwrap();
+        for p in [3usize, 4] {
+            for strat in elastic_strategies() {
+                let ctx = format!("{} p={p} {}", inst.name, strat.name());
+                let mut planner = Planner::in_memory();
+                let schedule = vec![
+                    MembershipEvent { before_iter: 1, change: MemberChange::Leave(1) },
+                    MembershipEvent { before_iter: 2, change: MemberChange::Join(1) },
+                ];
+                let opts = elastic_opts(&strat, p, 2, 3, schedule);
+                let (rep, cs) =
+                    run_elastic(&inst.a, &inst.b, &mut planner, &opts, &elastic_cfg(None, 3))
+                        .unwrap();
+                assert_eq!(rep.iters, 3, "{ctx}");
+                assert_eq!(rep.epochs, 3, "{ctx}: no degraded retries");
+                assert_eq!((rep.replans, rep.plan_hits), (2, 1), "{ctx}: rejoin is a warm hit");
+                assert_eq!(rep.degraded, 0, "{ctx}");
+                assert_eq!((rep.leaves, rep.joins), (1, 1), "{ctx}");
+                assert_eq!(rep.final_workers, p, "{ctx}");
+                assert_eq!(rep.p_history, vec![p, p - 1, p], "{ctx}");
+                assert_eq!(rep.respawns, 0, "{ctx}");
+                for (i, c) in cs.iter().enumerate() {
+                    assert!(bits_equal(c, &c_ref), "{ctx}: iteration {i} C not bit-identical");
+                }
+            }
+        }
+    }
+}
+
+/// Repeated budget exhaustion shrinks the run one worker at a time until
+/// it sits exactly on the min-workers floor, where it finishes.
+#[test]
+fn elastic_degrade_to_floor() {
+    if !processes_available() {
+        eprintln!("skipping elastic_floor: process spawning unavailable in this sandbox");
+        return;
+    }
+    let insts = conformance_instances(42).unwrap();
+    for inst in [&insts[0], &insts[2]] {
+        let c_ref = spgemm(&inst.a, &inst.b).unwrap();
+        for p in [3usize, 4] {
+            for strat in elastic_strategies() {
+                let ctx = format!("{} p={p} {}", inst.name, strat.name());
+                let mut planner = Planner::in_memory();
+                let fault =
+                    FaultPlan { kills: (p - 2) as u32, ..FaultPlan::kill(1, WirePhase::Expand) };
+                let opts = elastic_opts(&strat, p, 2, 1, vec![]);
+                let (rep, cs) =
+                    run_elastic(&inst.a, &inst.b, &mut planner, &opts, &elastic_cfg(Some(fault), 0))
+                        .unwrap();
+                assert_eq!(rep.degraded as usize, p - 2, "{ctx}");
+                assert_eq!(rep.epochs as usize, p - 1, "{ctx}");
+                assert_eq!(rep.final_workers, 2, "{ctx}: ended exactly on the floor");
+                assert_eq!(rep.p_history, (2..=p).rev().collect::<Vec<_>>(), "{ctx}");
+                assert!(bits_equal(&cs[0], &c_ref), "{ctx}: C at the floor not bit-identical");
+            }
+        }
+    }
+}
+
+/// One more failure than the floor allows must abort the run with an
+/// error naming the floor — degradation never silently drops below it.
+#[test]
+fn elastic_floor_breach_aborts() {
+    if !processes_available() {
+        eprintln!("skipping elastic_breach: process spawning unavailable in this sandbox");
+        return;
+    }
+    let insts = conformance_instances(42).unwrap();
+    for inst in [&insts[0], &insts[2]] {
+        for p in [3usize, 4] {
+            for strat in elastic_strategies() {
+                let ctx = format!("{} p={p} {}", inst.name, strat.name());
+                let mut planner = Planner::in_memory();
+                let fault =
+                    FaultPlan { kills: (p - 1) as u32, ..FaultPlan::kill(1, WirePhase::Expand) };
+                let opts = elastic_opts(&strat, p, 2, 1, vec![]);
+                let cfg = elastic_cfg(Some(fault), 0);
+                let res = run_elastic(&inst.a, &inst.b, &mut planner, &opts, &cfg);
+                let err = res.unwrap_err().to_string();
+                assert!(err.contains("min-workers floor"), "{ctx}: {err}");
+            }
+        }
+    }
+}
+
+/// Respawn waits follow the deterministic exponential backoff schedule
+/// (`base << attempt`), observed through the injectable clock so the
+/// test never actually sleeps.
+#[test]
+fn respawn_backoff_follows_deterministic_schedule() {
+    if !processes_available() {
+        eprintln!("skipping respawn_backoff: process spawning unavailable in this sandbox");
+        return;
+    }
+    let inst = &conformance_instances(42).unwrap()[0];
+    let strat = AlgorithmStrategy::parse("row").unwrap();
+    let alg = strat.lower(&inst.a, &inst.b, &PartitionerConfig::new(2)).unwrap();
+    let c_ref = spgemm(&inst.a, &inst.b).unwrap();
+    let fake = Arc::new(FakeClock::default());
+    let fault = FaultPlan { kills: 2, ..FaultPlan::kill(0, WirePhase::Expand) };
+    let cfg = CoordinatorConfig {
+        exec: ExecMode::Processes,
+        worker_exe: Some(exe()),
+        fault: Some(fault),
+        respawn_base_ms: 40,
+        clock: Some(fake.clone()),
+        ..Default::default()
+    };
+    let (_, measured, c) = run_processes(&inst.a, &inst.b, &alg, &cfg).unwrap();
+    assert_eq!(measured.respawns, 2);
+    assert_eq!(*fake.slept.lock().unwrap(), vec![40, 80], "backoff schedule");
+    assert!(bits_equal(&c, &c_ref), "faulted C not bit-identical to sequential");
+}
+
+// ---------------------------------------------------------------------------
 // Wire-format fuzz (no process spawning; mirrors the planner::codec
 // test contract: corrupt input decodes to an error, never a panic or a
 // wrong payload)
@@ -252,7 +462,7 @@ fn rand_stream(rng: &mut Rng) -> Stream {
 }
 
 fn rand_msg(rng: &mut Rng) -> WireMsg {
-    match rng.below(8) {
+    match rng.below(10) {
         0 => WireMsg::Start(rand_phase(rng)),
         1 => WireMsg::Deliver {
             phase: rand_phase(rng),
@@ -270,7 +480,9 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
         },
         5 => WireMsg::PhaseDone { phase: rand_phase(rng), mults: rng.next_u64() },
         6 => WireMsg::ResultC { entries: rand_entries(rng, 12) },
-        _ => WireMsg::Fail { message: format!("err-{}", rng.below(1000)) },
+        7 => WireMsg::Fail { message: format!("err-{}", rng.below(1000)) },
+        8 => WireMsg::Reconfigure { epoch: rng.next_u64() },
+        _ => WireMsg::EpochAck { worker: rng.below(64) as u32, epoch: rng.next_u64() },
     }
 }
 

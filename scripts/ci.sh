@@ -66,7 +66,7 @@ if ! grep -q '"workload": ".*-summa-' BENCH_spgemm.json; then
     echo "ERROR: BENCH_spgemm.json has no per-strategy simulate records"
     exit 1
 fi
-for field in traffic_bytes dataflow exec_mode wire_bytes; do
+for field in traffic_bytes dataflow exec_mode wire_bytes replans degraded final_workers; do
     if ! grep -q "\"$field\"" BENCH_spgemm.json; then
         echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (dataflow/executor sweep)"
         exit 1
@@ -85,6 +85,17 @@ step "e2e smoke with the adaptive dataflow (--dataflow auto)"
 
 step "e2e smoke with real worker processes (--exec processes; measured wire == modeled volumes)"
 ./target/release/spgemm-hp e2e --parts 4 --algorithm summa --exec processes
+
+step "e2e elastic smoke (--elastic: scheduled leave/join, re-planning, min-workers floor)"
+# probe spawnability the way the distributed test suite does, so no-fork
+# sandboxes skip cleanly instead of failing the gate
+if ./target/release/spgemm-hp e2e --parts 2 --algorithm summa --exec processes \
+    >/dev/null 2>&1; then
+    ./target/release/spgemm-hp e2e --parts 4 --algorithm summa --exec processes \
+        --elastic --min-workers 2
+else
+    echo "WARNING: process spawning unavailable in this sandbox; skipping elastic smoke"
+fi
 
 echo
 echo "CI gate passed."
