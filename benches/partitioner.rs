@@ -14,8 +14,9 @@
 //!
 //! A final plan-cache sweep times the inspector–executor planner cold
 //! vs warm on the LP/MCL reuse workloads (same structure, fresh values),
-//! enforcing `hit` + `plan_warm_ns < plan_cold_ns` in-harness and writing
-//! both timings into the JSON records.
+//! enforcing `hit` + `plan_warm_ns < plan_cold_ns` in-harness — both
+//! read from the planner's `plan_hit_total` / `plan_latency_ns` metric
+//! series — and writing the timings into the JSON records.
 //!
 //! Flags (after `--`):
 //!
@@ -24,9 +25,9 @@
 //!   parts, threads, cut, volume, comm_max, imbalance, mem_imbalance,
 //!   ns_per_op, coarsen_ns, initial_ns, refine_ns; plan-cache rows
 //!   instead carry model, workload, parts, volume, comm_max,
-//!   plan_cold_ns, plan_warm_ns, hit; strategy rows carry strategy,
-//!   workload, parts, expand, fold, volume, comm_max, ns_per_op) to
-//!   `path`, default `BENCH_partition.json`.
+//!   plan_cold_ns, plan_warm_ns, hit, plan_hit_total; strategy rows
+//!   carry strategy, workload, parts, expand, fold, volume, comm_max,
+//!   ns_per_op) to `path`, default `BENCH_partition.json`.
 //! * `--parts 4,16` — part counts for the sweep.
 //! * `--threads 1,2,4,8` — thread counts for the parallel planning sweep.
 //! * `--plan-cache DIR` — exercise the planner's *disk* tier in the
@@ -43,16 +44,22 @@ use spgemm_hp::cost;
 use spgemm_hp::gen;
 use spgemm_hp::hypergraph::models::{build_model, ModelKind};
 use spgemm_hp::partition::{partition_timed, PartitionerConfig, PhaseBreakdown};
-use spgemm_hp::planner::{PlanOutcome, Planner, PlannerConfig};
+use spgemm_hp::planner::{Planner, PlannerConfig};
+use spgemm_hp::util::json::{write_records, Json};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{Error, Result};
 
-/// Cold/warm planner timings for the plan-cache rows.
+/// Cold/warm planner timings for the plan-cache rows, read back from the
+/// planner's metric series (`plan_hit_total` / `plan_latency_ns` sum
+/// deltas) rather than from `Planned`'s own fields — the bench doubles
+/// as the consumer test of the public stats surface.
 struct PlanTiming {
     cold_ns: u64,
     warm_ns: u64,
     hit: bool,
+    /// Global `plan_hit_total` after the warm leg.
+    hit_total: u64,
 }
 
 /// Communication profile of a lowered algorithm, for the strategy rows.
@@ -81,60 +88,59 @@ struct Record {
     strategy: Option<StrategyProfile>,
 }
 
-fn write_json(path: &str, records: &[Record]) -> Result<()> {
-    use std::io::Write;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "[")?;
-    for (i, r) in records.iter().enumerate() {
-        let comma = if i + 1 < records.len() { "," } else { "" };
-        if let Some(s) = &r.strategy {
+impl Record {
+    fn to_json(&self) -> Json {
+        if let Some(s) = &self.strategy {
             // strategy rows compare whole algorithms, not partitions of
             // one model, so cut/imbalance have no meaning here either
-            writeln!(
-                f,
-                "  {{\"strategy\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \
-                 \"expand\": {}, \"fold\": {}, \"volume\": {}, \"comm_max\": {}, \
-                 \"ns_per_op\": {:.1}}}{comma}",
-                s.name, r.workload, r.parts, s.expand, s.fold, r.volume, r.comm_max, r.ns_per_op
-            )?;
-            continue;
+            return Json::obj(vec![
+                ("strategy", Json::Str(s.name.clone())),
+                ("workload", Json::Str(self.workload.clone())),
+                ("parts", Json::U64(self.parts as u64)),
+                ("expand", Json::U64(s.expand)),
+                ("fold", Json::U64(s.fold)),
+                ("volume", Json::U64(self.volume)),
+                ("comm_max", Json::U64(self.comm_max)),
+                ("ns_per_op", Json::Fixed(self.ns_per_op, 1)),
+            ]);
         }
-        match &r.planner {
+        match &self.planner {
             // plan-cache sweep rows carry only the fields that mean
             // something for a cached plan — fabricating cut/imbalance
             // values here would pollute cross-commit quality tracking
-            Some(t) => writeln!(
-                f,
-                "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"volume\": {}, \
-                 \"comm_max\": {}, \"plan_cold_ns\": {}, \"plan_warm_ns\": {}, \
-                 \"hit\": {}}}{comma}",
-                r.model, r.workload, r.parts, r.volume, r.comm_max, t.cold_ns, t.warm_ns, t.hit
-            )?,
-            None => writeln!(
-                f,
-                "  {{\"model\": \"{}\", \"workload\": \"{}\", \"parts\": {}, \"threads\": {}, \
-                 \"cut\": {}, \"volume\": {}, \"comm_max\": {}, \"imbalance\": {:.4}, \
-                 \"mem_imbalance\": {:.4}, \"ns_per_op\": {:.1}, \"coarsen_ns\": {}, \
-                 \"initial_ns\": {}, \"refine_ns\": {}}}{comma}",
-                r.model,
-                r.workload,
-                r.parts,
-                r.threads,
-                r.cut,
-                r.volume,
-                r.comm_max,
-                r.imbalance,
-                r.mem_imbalance,
-                r.ns_per_op,
-                r.phases.coarsen_ns,
-                r.phases.initial_ns,
-                r.phases.refine_ns
-            )?,
+            Some(t) => Json::obj(vec![
+                ("model", Json::Str(self.model.to_string())),
+                ("workload", Json::Str(self.workload.clone())),
+                ("parts", Json::U64(self.parts as u64)),
+                ("volume", Json::U64(self.volume)),
+                ("comm_max", Json::U64(self.comm_max)),
+                ("plan_cold_ns", Json::U64(t.cold_ns)),
+                ("plan_warm_ns", Json::U64(t.warm_ns)),
+                ("hit", Json::Bool(t.hit)),
+                ("plan_hit_total", Json::U64(t.hit_total)),
+            ]),
+            None => Json::obj(vec![
+                ("model", Json::Str(self.model.to_string())),
+                ("workload", Json::Str(self.workload.clone())),
+                ("parts", Json::U64(self.parts as u64)),
+                ("threads", Json::U64(self.threads as u64)),
+                ("cut", Json::U64(self.cut as u64)),
+                ("volume", Json::U64(self.volume)),
+                ("comm_max", Json::U64(self.comm_max)),
+                ("imbalance", Json::Fixed(self.imbalance, 4)),
+                ("mem_imbalance", Json::Fixed(self.mem_imbalance, 4)),
+                ("ns_per_op", Json::Fixed(self.ns_per_op, 1)),
+                ("coarsen_ns", Json::U64(self.phases.coarsen_ns)),
+                ("initial_ns", Json::U64(self.phases.initial_ns)),
+                ("refine_ns", Json::U64(self.phases.refine_ns)),
+            ]),
         }
     }
-    writeln!(f, "]")?;
-    f.flush()?;
-    Ok(())
+}
+
+fn write_json(path: &str, records: &[Record]) -> Result<()> {
+    let rows: Vec<Json> = records.iter().map(Record::to_json).collect();
+    write_records(path, &rows)
 }
 
 fn main() {
@@ -398,38 +404,49 @@ fn real_main() -> Result<()> {
         "{:<12} {:<14} {:>12} {:>12} {:>9} {:>6}",
         "workload", "model", "cold", "warm", "speedup", "hit"
     );
+    // The gate reads the planner's public metric series instead of its
+    // private timing fields: hit/miss from `plan_hit_total` deltas and
+    // cold/warm latency from the `plan_latency_ns` histogram's exact sum.
+    let metrics = spgemm_hp::obs::metrics::global();
+    let lat_sum = || metrics.histogram("plan_latency_ns").map(|h| h.sum).unwrap_or(0);
     for (label, kind, a, b_cold, b_warm) in cases {
         let cfg = PartitionerConfig { epsilon: 0.05, ..PartitionerConfig::new(p) };
         let mut cold_planner = mk_planner()?;
-        let cold = cold_planner.plan_or_build(a, b_cold, kind, &cfg, 8)?;
-        if cold.outcome == PlanOutcome::Hit {
+        let hits_before = metrics.counter("plan_hit_total");
+        let sum_before = lat_sum();
+        let _cold_plan = cold_planner.plan_or_build(a, b_cold, kind, &cfg, 8)?;
+        let sum_after_cold = lat_sum();
+        let cold_ns = sum_after_cold - sum_before;
+        if metrics.counter("plan_hit_total") != hits_before {
             return Err(Error::Runtime(format!("{label}: cold leg unexpectedly hit the cache")));
         }
-        let warm = if plan_dir.is_some() {
+        let warm_plan = if plan_dir.is_some() {
             mk_planner()?.plan_or_build(a, b_warm, kind, &cfg, 8)?
         } else {
             cold_planner.plan_or_build(a, b_warm, kind, &cfg, 8)?
         };
+        let warm_ns = lat_sum() - sum_after_cold;
+        let hit_total = metrics.counter("plan_hit_total");
+        let hit = hit_total == hits_before + 1;
         // amortization is the harness contract, like bit-identity above:
         // a warm plan that misses, or is no faster than replanning, is a
         // planner bug rather than a data point
-        if warm.outcome != PlanOutcome::Hit {
+        if !hit {
             return Err(Error::Runtime(format!("{label}: warm leg missed the plan cache")));
         }
-        if warm.plan_ns >= cold.plan_ns {
+        if warm_ns >= cold_ns {
             return Err(Error::Runtime(format!(
-                "{label}: warm plan ({} ns) not faster than cold ({} ns)",
-                warm.plan_ns, cold.plan_ns
+                "{label}: warm plan ({warm_ns} ns) not faster than cold ({cold_ns} ns)"
             )));
         }
         println!(
             "{:<12} {:<14} {:>12} {:>12} {:>8.1}x {:>6}",
             label,
             kind.name(),
-            BenchStats::fmt_time(cold.plan_ns as f64 / 1e9),
-            BenchStats::fmt_time(warm.plan_ns as f64 / 1e9),
-            cold.plan_ns as f64 / warm.plan_ns.max(1) as f64,
-            warm.outcome.name()
+            BenchStats::fmt_time(cold_ns as f64 / 1e9),
+            BenchStats::fmt_time(warm_ns as f64 / 1e9),
+            cold_ns as f64 / warm_ns.max(1) as f64,
+            if hit { "hit" } else { "miss" }
         );
         records.push(Record {
             model: kind.name(),
@@ -437,13 +454,13 @@ fn real_main() -> Result<()> {
             parts: p,
             threads: 1,
             cut: 0,
-            volume: warm.volume,
-            comm_max: warm.comm_max,
+            volume: warm_plan.volume,
+            comm_max: warm_plan.comm_max,
             imbalance: 1.0,
             mem_imbalance: 1.0,
-            ns_per_op: warm.plan_ns as f64,
+            ns_per_op: warm_ns as f64,
             phases: PhaseBreakdown::default(),
-            planner: Some(PlanTiming { cold_ns: cold.plan_ns, warm_ns: warm.plan_ns, hit: true }),
+            planner: Some(PlanTiming { cold_ns, warm_ns, hit, hit_total }),
             strategy: None,
         });
     }

@@ -29,6 +29,7 @@ use spgemm_hp::partition::PartitionerConfig;
 use spgemm_hp::runtime::Engine;
 use spgemm_hp::sim::{self, simulate, spgemm_parallel, spgemm_parallel_with};
 use spgemm_hp::sparse::{self, KernelKind};
+use spgemm_hp::util::json::{write_records, Json};
 use spgemm_hp::util::timer::{bench, BenchStats};
 use spgemm_hp::util::Rng;
 use spgemm_hp::{Error, Result};
@@ -47,6 +48,10 @@ struct Record {
     exec_mode: Option<&'static str>,
     /// Total framed bytes on the worker pipes; process-executor rows only.
     wire_bytes: Option<u64>,
+    /// Payload-carrying framed bytes (Send/Deliver/ResultC); process rows only.
+    wire_data_bytes: Option<u64>,
+    /// Control framed bytes (everything else); process rows only.
+    wire_ctl_bytes: Option<u64>,
     /// Plans built from scratch; elastic-executor rows only.
     replans: Option<u64>,
     /// Mid-epoch degradations to p−1; elastic-executor rows only.
@@ -66,50 +71,57 @@ impl Record {
             dataflow: None,
             exec_mode: None,
             wire_bytes: None,
+            wire_data_bytes: None,
+            wire_ctl_bytes: None,
             replans: None,
             degraded: None,
             final_workers: None,
         }
     }
+
+    /// The record as one `BENCH_spgemm.json` row (field order is the
+    /// schema the CI grep-gates key on).
+    fn to_json(&self) -> Json {
+        let mut row = Json::obj(vec![
+            ("kernel", Json::Str(self.kernel.to_string())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("threads", Json::U64(self.threads as u64)),
+            ("ns_per_op", Json::Fixed(self.ns_per_op, 1)),
+        ]);
+        if let Some(tb) = self.traffic_bytes {
+            row.push("traffic_bytes", Json::U64(tb));
+        }
+        if let Some(df) = self.dataflow {
+            row.push("dataflow", Json::Str(df.to_string()));
+        }
+        if let Some(em) = self.exec_mode {
+            row.push("exec_mode", Json::Str(em.to_string()));
+        }
+        if let Some(wb) = self.wire_bytes {
+            row.push("wire_bytes", Json::U64(wb));
+        }
+        if let Some(db) = self.wire_data_bytes {
+            row.push("wire_data_bytes", Json::U64(db));
+        }
+        if let Some(cb) = self.wire_ctl_bytes {
+            row.push("wire_ctl_bytes", Json::U64(cb));
+        }
+        if let Some(rp) = self.replans {
+            row.push("replans", Json::U64(rp));
+        }
+        if let Some(dg) = self.degraded {
+            row.push("degraded", Json::U64(dg));
+        }
+        if let Some(fw) = self.final_workers {
+            row.push("final_workers", Json::U64(fw as u64));
+        }
+        row
+    }
 }
 
 fn write_json(path: &str, records: &[Record]) -> Result<()> {
-    use std::io::Write;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "[")?;
-    for (i, r) in records.iter().enumerate() {
-        let comma = if i + 1 < records.len() { "," } else { "" };
-        let mut extra = String::new();
-        if let Some(tb) = r.traffic_bytes {
-            extra.push_str(&format!(", \"traffic_bytes\": {tb}"));
-        }
-        if let Some(df) = r.dataflow {
-            extra.push_str(&format!(", \"dataflow\": \"{df}\""));
-        }
-        if let Some(em) = r.exec_mode {
-            extra.push_str(&format!(", \"exec_mode\": \"{em}\""));
-        }
-        if let Some(wb) = r.wire_bytes {
-            extra.push_str(&format!(", \"wire_bytes\": {wb}"));
-        }
-        if let Some(rp) = r.replans {
-            extra.push_str(&format!(", \"replans\": {rp}"));
-        }
-        if let Some(dg) = r.degraded {
-            extra.push_str(&format!(", \"degraded\": {dg}"));
-        }
-        if let Some(fw) = r.final_workers {
-            extra.push_str(&format!(", \"final_workers\": {fw}"));
-        }
-        writeln!(
-            f,
-            "  {{\"kernel\": \"{}\", \"workload\": \"{}\", \"threads\": {}, \"ns_per_op\": {:.1}{extra}}}{comma}",
-            r.kernel, r.workload, r.threads, r.ns_per_op
-        )?;
-    }
-    writeln!(f, "]")?;
-    f.flush()?;
-    Ok(())
+    let rows: Vec<Json> = records.iter().map(Record::to_json).collect();
+    write_records(path, &rows)
 }
 
 fn main() {
@@ -292,14 +304,19 @@ fn real_main() -> Result<()> {
                     exec::run_processes(pe_a, pe_a, &alg, &ccfg).unwrap();
                 });
                 println!(
-                    "row p={pe_p}: {} payload words, {} wire bytes, {:>12}/run",
+                    "row p={pe_p}: {} payload words, {} wire bytes ({} data + {} ctl), \
+                     {:>12}/run",
                     rep.total_volume(),
                     measured.wire_bytes,
+                    measured.wire_data_bytes,
+                    measured.wire_ctl_bytes,
                     BenchStats::fmt_time(s.median)
                 );
                 records.push(Record {
                     exec_mode: Some("processes"),
                     wire_bytes: Some(measured.wire_bytes),
+                    wire_data_bytes: Some(measured.wire_data_bytes),
+                    wire_ctl_bytes: Some(measured.wire_ctl_bytes),
                     ..Record::new("exec_processes", workload, 1, s.median * 1e9)
                 });
             }
@@ -314,6 +331,8 @@ fn real_main() -> Result<()> {
                 records.push(Record {
                     exec_mode: Some("simulated"),
                     wire_bytes: Some(0),
+                    wire_data_bytes: Some(0),
+                    wire_ctl_bytes: Some(0),
                     ..Record::new("exec_processes", workload, 1, s.median * 1e9)
                 });
             }

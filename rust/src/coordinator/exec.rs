@@ -63,16 +63,24 @@ pub const DEFAULT_RESPAWN_BASE_MS: u64 = 25;
 /// Default cap on any single respawn backoff delay.
 pub const DEFAULT_RESPAWN_CAP_MS: u64 = 2_000;
 
-/// Injectable time source for respawn backoff, so tests can assert the
-/// schedule without actually sleeping.
+/// Injectable time source for respawn backoff and the [`crate::obs`]
+/// span recorder, so tests can assert schedules and timelines without
+/// actually sleeping or reading the wall clock.
 pub trait Clock: std::fmt::Debug + Send + Sync {
     /// Sleep for `ms` milliseconds (or just record the request, in tests).
     fn sleep_ms(&self, ms: u64);
+    /// Monotonic nanoseconds since an arbitrary process-local epoch (the
+    /// timestamp source for `obs::trace` spans).
+    fn now_ns(&self) -> u64;
 }
 
-/// The real clock: `thread::sleep`.
+/// The real clock: `thread::sleep` + a process-wide `Instant` epoch.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SystemClock;
+
+/// The `Instant` all [`SystemClock::now_ns`] readings are relative to,
+/// pinned on first use so timestamps are comparable process-wide.
+static EPOCH: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
 
 impl Clock for SystemClock {
     fn sleep_ms(&self, ms: u64) {
@@ -80,13 +88,27 @@ impl Clock for SystemClock {
             thread::sleep(Duration::from_millis(ms));
         }
     }
+
+    fn now_ns(&self) -> u64 {
+        EPOCH.get_or_init(std::time::Instant::now).elapsed().as_nanos() as u64
+    }
 }
 
-/// Test clock: records every requested sleep and returns immediately.
+/// Test clock: records every requested sleep, returns immediately, and
+/// hands out deterministic timestamps (each `now_ns` reading advances a
+/// counter by [`FakeClock::TICK_NS`], so span order and durations are
+/// exactly reproducible).
 #[derive(Debug, Default)]
 pub struct FakeClock {
     /// Every `sleep_ms` request, in call order.
     pub slept: Mutex<Vec<u64>>,
+    /// Monotonic fake-time counter, advanced by every `now_ns` call.
+    ticks: std::sync::atomic::AtomicU64,
+}
+
+impl FakeClock {
+    /// Nanoseconds between consecutive `now_ns` readings.
+    pub const TICK_NS: u64 = 1_000;
 }
 
 impl Clock for FakeClock {
@@ -94,6 +116,11 @@ impl Clock for FakeClock {
         if let Ok(mut slept) = self.slept.lock() {
             slept.push(ms);
         }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.ticks.fetch_add(Self::TICK_NS, std::sync::atomic::Ordering::Relaxed)
+            + Self::TICK_NS
     }
 }
 
@@ -215,9 +242,16 @@ pub struct MeasuredReport {
     pub expand: Vec<PhaseTraffic>,
     /// Fold-phase payload traffic, indexed by worker.
     pub fold: Vec<PhaseTraffic>,
-    /// Total framed bytes written to or read from worker pipes (headers,
-    /// control frames, and heartbeats included).
+    /// Total framed bytes written to or read from worker pipes: always
+    /// `wire_data_bytes + wire_ctl_bytes`, maintained as a field so
+    /// existing consumers keep reading one number.
     pub wire_bytes: u64,
+    /// Framed bytes carrying payload entries (`Send`, `Deliver`,
+    /// `ResultC`), both directions.
+    pub wire_data_bytes: u64,
+    /// Framed bytes of everything else (`Init`, `Start`, heartbeats,
+    /// fences, trace chunks, replay, fault injection), both directions.
+    pub wire_ctl_bytes: u64,
     /// Number of worker respawns performed during the run.
     pub respawns: u32,
 }
@@ -230,6 +264,8 @@ impl MeasuredReport {
             expand: vec![PhaseTraffic::default(); p],
             fold: vec![PhaseTraffic::default(); p],
             wire_bytes: 0,
+            wire_data_bytes: 0,
+            wire_ctl_bytes: 0,
             respawns: 0,
         }
     }
@@ -583,10 +619,14 @@ fn elastic_loop(
                     }
                     leader.shrink(n);
                     report.leaves += n as u64;
+                    crate::obs::trace::global().instant("elastic.leave", 0);
+                    crate::obs::metrics::global().counter_add("elastic_leave_total", n as u64);
                 }
                 MemberChange::Join(n) => {
                     leader.grow(n)?;
                     report.joins += n as u64;
+                    crate::obs::trace::global().instant("elastic.join", 0);
+                    crate::obs::metrics::global().counter_add("elastic_join_total", n as u64);
                 }
             }
         }
@@ -614,6 +654,8 @@ fn elastic_loop(
                     Some(victim) if leader.p() > opts.min_workers => {
                         leader.remove_slot(victim);
                         report.degraded += 1;
+                        crate::obs::trace::global().instant("elastic.degrade", 0);
+                        crate::obs::metrics::global().counter_add("elastic_degrade_total", 1);
                     }
                     Some(_) => {
                         return Err(Error::Runtime(format!(
@@ -650,6 +692,10 @@ struct Slot {
     /// Epoch fence: every frame from this slot is discarded until an
     /// `EpochAck` for this epoch arrives.
     fence: Option<u64>,
+    /// Leader-clock reading at this process's spawn: worker trace
+    /// timestamps are process-local (their epoch starts near spawn), so
+    /// merged `TraceChunk` events are re-based by this offset.
+    trace_base_ns: u64,
 }
 
 enum EventKind {
@@ -661,6 +707,48 @@ struct Event {
     slot_id: u64,
     gen: u32,
     kind: EventKind,
+}
+
+/// Which way a frame crossed a worker pipe (leader's point of view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireDir {
+    Tx,
+    Rx,
+}
+
+impl WireDir {
+    fn name(self) -> &'static str {
+        match self {
+            WireDir::Tx => "tx",
+            WireDir::Rx => "rx",
+        }
+    }
+}
+
+/// Data-plane tags carry payload entries; everything else is control.
+fn wire_tag_is_data(tag: u8) -> bool {
+    // 2 = Deliver, 6 = Send, 8 = ResultC
+    matches!(tag, 2 | 6 | 8)
+}
+
+/// Metric-name spelling of a wire tag (see `WireMsg::tag`).
+fn wire_tag_name(tag: u8) -> &'static str {
+    match tag {
+        0 => "init",
+        1 => "start",
+        2 => "deliver",
+        3 => "freeze",
+        4 => "ready",
+        5 => "heartbeat",
+        6 => "send",
+        7 => "phase_done",
+        8 => "result_c",
+        9 => "fail",
+        10 => "reconfigure",
+        11 => "epoch_ack",
+        12 => "trace_chunk",
+        _ => "unknown",
+    }
 }
 
 struct Leader {
@@ -743,9 +831,23 @@ impl Leader {
         self.slots.len()
     }
 
-    fn count_wire(&mut self, n: u64) {
+    /// Account one frame, both into the measured report (data vs.
+    /// control split by wire tag) and into the per-kind frame/byte
+    /// counters of the metric registry. Every frame either direction
+    /// flows through here: sends, deliveries, replay, fences, inbound
+    /// traffic, heartbeats, fault injection, and trace chunks.
+    fn count_wire(&mut self, dir: WireDir, tag: u8, n: u64) {
         self.measured.wire_bytes += n;
+        if wire_tag_is_data(tag) {
+            self.measured.wire_data_bytes += n;
+        } else {
+            self.measured.wire_ctl_bytes += n;
+        }
         self.total_wire_bytes += n;
+        let m = crate::obs::metrics::global();
+        let (d, kind) = (dir.name(), wire_tag_name(tag));
+        m.counter_add(&format!("wire_{d}_{kind}_frames_total"), 1);
+        m.counter_add(&format!("wire_{d}_{kind}_bytes_total"), n);
     }
 
     /// Spawn `n` fresh slots (the grow path of a membership change).
@@ -756,6 +858,7 @@ impl Leader {
             let (child, stdin, stdout) = spawn_child(&self.exe)
                 .map_err(|e| Error::Runtime(format!("cannot spawn worker slot {id}: {e}")))?;
             start_reader(id, 0, stdout, self._events_tx.clone());
+            let trace_base_ns = self.clock.now_ns();
             self.slots.push(Slot {
                 child,
                 stdin,
@@ -769,6 +872,7 @@ impl Leader {
                 exited: false,
                 initialized: false,
                 fence: None,
+                trace_base_ns,
             });
         }
         Ok(())
@@ -808,6 +912,7 @@ impl Leader {
         }
         self.epoch += 1;
         self.doomed = None;
+        crate::obs::metrics::global().counter_add("exec_epoch_total", 1);
         self.deadline = self.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         self.measured = MeasuredReport::new(p);
         self.ready = vec![false; p];
@@ -824,6 +929,7 @@ impl Leader {
             slot.exited = false;
             slot.last_heard = Instant::now();
         }
+        let _epoch_span = crate::obs::trace::global().span("leader.epoch", 0);
         self.fence_survivors()?;
         self.protocol(plan)
     }
@@ -840,10 +946,13 @@ impl Leader {
             }
             any = true;
             self.slots[w].fence = Some(epoch);
+            crate::obs::trace::global().instant("exec.reconfigure", w as u32 + 1);
+            crate::obs::metrics::global().counter_add("exec_reconfigure_total", 1);
             // Control traffic, deliberately unlogged: the new epoch's
             // replay log starts at its own Init.
-            let frame = wire::encode_frame(&WireMsg::Reconfigure { epoch });
-            self.count_wire(frame.len() as u64);
+            let msg = WireMsg::Reconfigure { epoch };
+            let frame = wire::encode_frame(&msg);
+            self.count_wire(WireDir::Tx, msg.tag(), frame.len() as u64);
             let write = self.slots[w]
                 .stdin
                 .write_all(&frame)
@@ -865,7 +974,9 @@ impl Leader {
     }
 
     fn protocol(&mut self, plan: &ExecutionPlan) -> Result<()> {
+        let rec = crate::obs::trace::global();
         let p = self.p();
+        let init_span = rec.span("leader.init", 0);
         for w in 0..p {
             let init = WireMsg::Init {
                 worker: w as u32,
@@ -878,7 +989,9 @@ impl Leader {
             self.send_logged(w, &init)?;
         }
         self.wait_until(|l| l.ready.iter().all(|&r| r))?;
+        drop(init_span);
 
+        let expand_span = rec.span("leader.expand", 0);
         for w in 0..p {
             self.send_logged(w, &WireMsg::Start(WirePhase::Expand))?;
         }
@@ -903,10 +1016,14 @@ impl Leader {
             }
             self.send_logged(w, &WireMsg::Start(WirePhase::Compute))?;
         }
+        drop(expand_span);
+        let compute_span = rec.span("leader.compute", 0);
         self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Compute.id() as usize]))?;
         self.inject_fault(WirePhase::Compute)?;
         self.wait_until(|l| l.phase_done.iter().all(|d| d[WirePhase::Fold.id() as usize]))?;
+        drop(compute_span);
 
+        let _fold_span = rec.span("leader.fold", 0);
         for w in 0..p {
             let mut inbox = std::mem::take(&mut self.fold_inbox[w]);
             inbox.sort_by_key(|x| x.0);
@@ -988,6 +1105,7 @@ impl Leader {
         if ev.gen != self.slots[w].gen {
             return Ok(()); // stale reader from a replaced process
         }
+        let gap = self.slots[w].last_heard.elapsed();
         self.slots[w].last_heard = Instant::now();
         match ev.kind {
             EventKind::Eof(err) => {
@@ -998,9 +1116,32 @@ impl Leader {
                 self.fail_worker(w, &why)
             }
             EventKind::Msg(msg, bytes) => {
-                self.count_wire(bytes);
+                self.count_wire(WireDir::Rx, msg.tag(), bytes);
                 if matches!(msg, WireMsg::Heartbeat { .. }) {
-                    return Ok(()); // liveness only; excluded from replay accounting
+                    // Liveness only; excluded from replay accounting. The
+                    // gauge tracks how close the slowest-beating live
+                    // worker runs to the timeout.
+                    crate::obs::metrics::global()
+                        .gauge_set("exec_heartbeat_gap_ms", gap.as_secs_f64() * 1e3);
+                    return Ok(());
+                }
+                if let WireMsg::TraceChunk { events, .. } = msg {
+                    // Observability sidecar: outside the replay protocol
+                    // (like heartbeats), merged straight into the
+                    // leader's recorder — re-laned to this worker's lane
+                    // and re-based from process-local to leader time.
+                    let rec = crate::obs::trace::global();
+                    if rec.is_enabled() && !events.is_empty() {
+                        let lane = w as u32 + 1;
+                        rec.set_lane_name(lane, &format!("worker {w}"));
+                        let base = self.slots[w].trace_base_ns;
+                        for mut event in events {
+                            event.lane = lane;
+                            event.start_ns = event.start_ns.saturating_add(base);
+                            rec.append(event);
+                        }
+                    }
+                    return Ok(());
                 }
                 if let Some(epoch) = self.slots[w].fence {
                     if matches!(msg, WireMsg::EpochAck { epoch: e, .. } if e == epoch) {
@@ -1096,7 +1237,7 @@ impl Leader {
     fn send_logged(&mut self, w: usize, msg: &WireMsg) -> Result<()> {
         let frame = wire::encode_frame(msg);
         self.slots[w].log.push(frame.clone());
-        self.count_wire(frame.len() as u64);
+        self.count_wire(WireDir::Tx, msg.tag(), frame.len() as u64);
         let write = self.slots[w]
             .stdin
             .write_all(&frame)
@@ -1128,6 +1269,10 @@ impl Leader {
             }
             let delay = self.backoff.delay_for(self.slots[w].respawns);
             self.respawn_delays_ms.push(delay);
+            let m = crate::obs::metrics::global();
+            m.counter_add("exec_respawn_total", 1);
+            m.counter_add("exec_backoff_ms_total", delay);
+            crate::obs::trace::global().instant("exec.respawn", w as u32 + 1);
             self.clock.sleep_ms(delay);
             self.slots[w].respawns += 1;
             self.measured.respawns += 1;
@@ -1150,6 +1295,7 @@ impl Leader {
         self.slots[w].child = child;
         self.slots[w].stdin = stdin;
         self.slots[w].last_heard = Instant::now();
+        self.slots[w].trace_base_ns = self.clock.now_ns();
         // A replacement process starts from the replayed epoch log: it is
         // never mid-old-epoch, so it needs no fence, and it only needs a
         // future Reconfigure if the log hands it an Init.
@@ -1157,7 +1303,10 @@ impl Leader {
         self.slots[w].initialized = !self.slots[w].log.is_empty();
         let frames: Vec<Vec<u8>> = self.slots[w].log.clone();
         for frame in &frames {
-            self.count_wire(frame.len() as u64);
+            // Replayed frames re-cross the pipe: classify by the tag
+            // byte (header: magic 4 + version 4 + tag at offset 8).
+            let tag = frame.get(8).copied().unwrap_or(u8::MAX);
+            self.count_wire(WireDir::Tx, tag, frame.len() as u64);
             self.slots[w]
                 .stdin
                 .write_all(frame)
@@ -1181,7 +1330,9 @@ impl Leader {
             if fault.hang {
                 // Freeze is deliberately unlogged: it is the fault, not part
                 // of the protocol, and must not be replayed after recovery.
+                // It still crossed the pipe, so it is still counted.
                 let frame = wire::encode_frame(&WireMsg::Freeze);
+                self.count_wire(WireDir::Tx, WireMsg::Freeze.tag(), frame.len() as u64);
                 let _ = self.slots[w].stdin.write_all(&frame);
                 let _ = self.slots[w].stdin.flush();
             } else {
@@ -1203,12 +1354,16 @@ impl Leader {
 type SpawnedChild = (Child, ChildStdin, std::process::ChildStdout);
 
 fn spawn_child(exe: &Path) -> std::io::Result<SpawnedChild> {
-    let mut child = Command::new(exe)
-        .arg("worker")
-        .stdin(Stdio::piped())
-        .stdout(Stdio::piped())
-        .stderr(Stdio::inherit())
-        .spawn()?;
+    let mut cmd = Command::new(exe);
+    cmd.arg("worker").stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::inherit());
+    // Propagate trace-enable to the child so it records spans and ships
+    // them back as TraceChunk frames (worker_entry reads this).
+    if crate::obs::trace::global().is_enabled() {
+        cmd.env(crate::obs::ENV_TRACE, "1");
+    } else {
+        cmd.env_remove(crate::obs::ENV_TRACE);
+    }
+    let mut child = cmd.spawn()?;
     let stdin = child.stdin.take().ok_or_else(|| {
         std::io::Error::new(std::io::ErrorKind::Other, "child stdin unavailable")
     })?;
@@ -1256,6 +1411,12 @@ fn start_reader(slot_id: u64, gen: u32, stdout: std::process::ChildStdout, tx: S
 /// the worker waits for the next epoch's `Init`.  The process retires on
 /// clean EOF (the leader closed the pipe).
 pub fn worker_entry() -> Result<()> {
+    // The leader sets this env var on spawn when its own recorder is on;
+    // spans recorded here ship back as `TraceChunk` frames at phase
+    // boundaries and merge into the leader's timeline.
+    if std::env::var_os(crate::obs::ENV_TRACE).is_some() {
+        crate::obs::trace::enable_global();
+    }
     let stdin = std::io::stdin();
     let mut input = BufReader::new(stdin.lock());
     let out = Arc::new(Mutex::new(BufWriter::new(std::io::stdout())));
@@ -1371,6 +1532,21 @@ fn send_msg(out: &Mutex<BufWriter<std::io::Stdout>>, msg: &WireMsg) -> Result<()
     Ok(())
 }
 
+/// Ship every buffered trace event to the leader as one `TraceChunk`
+/// (the worker's phase-boundary flush). A no-op when tracing is off or
+/// nothing was recorded.
+fn ship_trace(out: &Mutex<BufWriter<std::io::Stdout>>, me: usize) -> Result<()> {
+    let rec = crate::obs::trace::global();
+    if !rec.is_enabled() {
+        return Ok(());
+    }
+    let events = rec.drain();
+    if events.is_empty() {
+        return Ok(());
+    }
+    send_msg(out, &WireMsg::TraceChunk { worker: me as u32, events })
+}
+
 /// Read the next protocol frame; handles `Freeze` (fault injection) by
 /// silencing heartbeats and parking forever so the leader's timeout fires,
 /// and surfaces `Reconfigure` as [`Ctl::Reconf`] so the epoch can unwind.
@@ -1404,6 +1580,7 @@ fn worker_run(
     if plan.id != me {
         return Err(Error::Runtime(format!("plan id {} != worker {me}", plan.id)));
     }
+    let rec = crate::obs::trace::global();
     send_msg(out, &WireMsg::Ready { worker: me as u32 })?;
 
     match next_msg(input, stop)? {
@@ -1413,6 +1590,10 @@ fn worker_run(
             return Err(Error::Runtime(format!("expected Start(Expand), got tag {}", other.tag())));
         }
     }
+
+    // One span per phase, recorded locally on lane 0 (the leader re-lanes
+    // merged chunks to lane me+1) and shipped at each phase boundary.
+    let expand_span = rec.span("worker.expand", 0);
 
     // Expand: bucket each shared entry per destination, then emit in
     // deterministic (stream, destination) order so replay is byte-identical.
@@ -1473,9 +1654,12 @@ fn worker_run(
             plan.expect_a + plan.expect_b
         )));
     }
+    drop(expand_span);
+    ship_trace(out, me)?;
 
     // Compute: sweep the plan's tile groups in order; k-increasing accumulation
     // matches the sequential kernel bit-for-bit for single-producer columns.
+    let compute_span = rec.span("worker.compute", 0);
     let mut partials: HashMap<u32, f64> = HashMap::new();
     let mut mults = 0u64;
     for group in &plan.groups {
@@ -1491,9 +1675,12 @@ fn worker_run(
         }
     }
     send_msg(out, &WireMsg::PhaseDone { phase: WirePhase::Compute, mults })?;
+    drop(compute_span);
+    ship_trace(out, me)?;
 
     // Fold: route each partial to its C owner in sorted-pc order (HashMap
     // iteration order would differ across processes and break replay).
+    let fold_span = rec.span("worker.fold", 0);
     let mut sorted: Vec<(u32, f64)> = partials.into_iter().collect();
     sorted.sort_by_key(|e| e.0);
     let mut mine: Entries = Vec::new();
@@ -1554,6 +1741,8 @@ fn worker_run(
             plan.expect_partials
         )));
     }
+    drop(fold_span);
+    ship_trace(out, me)?;
 
     Ok(RunOutcome::Done(
         plan.owned_c.iter().map(|&pc| (pc, cvals.get(&pc).copied().unwrap_or(0.0))).collect(),

@@ -27,6 +27,7 @@
 //! `planner::codec` contract.
 
 use crate::coordinator::plan::WorkerPlan;
+use crate::obs::trace::{EventKind, TraceEvent};
 use crate::planner::codec::{dec_worker, enc_worker, Reader, Writer};
 use crate::planner::fingerprint::hash_bytes;
 use crate::{Error, Result};
@@ -37,8 +38,9 @@ pub const WIRE_MAGIC: [u8; 4] = *b"SPWF";
 
 /// Version of the wire layout; a leader and worker from different builds
 /// refuse to talk rather than misread each other. Version 2 added the
-/// elastic-membership control messages (`Reconfigure` / `EpochAck`).
-pub const WIRE_VERSION: u32 = 2;
+/// elastic-membership control messages (`Reconfigure` / `EpochAck`);
+/// version 3 added the observability sidecar (`TraceChunk`).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Fixed frame-header size: magic + version + tag + length + hash.
 pub const HEADER_BYTES: usize = 25;
@@ -118,7 +120,7 @@ impl Stream {
 /// Every message the leader and a worker exchange. Leader → worker:
 /// `Init`, `Start`, `Deliver`, `Freeze`, `Reconfigure`; worker → leader:
 /// `Ready`, `Heartbeat`, `Send`, `PhaseDone`, `ResultC`, `Fail`,
-/// `EpochAck`.
+/// `EpochAck`, `TraceChunk`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WireMsg {
     /// Ships the worker its identity, the run geometry, and its whole
@@ -153,6 +155,12 @@ pub enum WireMsg {
     /// frame it sent before the ack belongs to the fenced-off old epoch
     /// and is discarded by the leader.
     EpochAck { worker: u32, epoch: u64 },
+    /// Observability sidecar: the worker's drained local span buffer,
+    /// shipped at phase boundaries when tracing is on. Like `Heartbeat`
+    /// it is outside the replay protocol — never logged, never counted
+    /// against delivery expectations — so resends after a respawn are
+    /// harmless (the timeline just shows the aborted attempt too).
+    TraceChunk { worker: u32, events: Vec<TraceEvent> },
 }
 
 impl WireMsg {
@@ -170,6 +178,7 @@ impl WireMsg {
             WireMsg::Fail { .. } => 9,
             WireMsg::Reconfigure { .. } => 10,
             WireMsg::EpochAck { .. } => 11,
+            WireMsg::TraceChunk { .. } => 12,
         }
     }
 }
@@ -201,6 +210,50 @@ fn dec_phase(r: &mut Reader) -> Result<WirePhase> {
 fn dec_stream(r: &mut Reader) -> Result<Stream> {
     let id = r.u8()?;
     Stream::from_id(id).ok_or_else(|| Error::invalid(format!("wire: unknown stream id {id}")))
+}
+
+/// Minimum wire size of one trace event: name length (8) + lane (4) +
+/// start (8) + dur (8) + kind (1) — the `Reader::len` sanity cap.
+const TRACE_EVENT_MIN_BYTES: usize = 29;
+
+fn enc_trace_events(w: &mut Writer, events: &[TraceEvent]) {
+    w.len(events.len());
+    for e in events {
+        let name = e.name.as_bytes();
+        w.len(name.len());
+        w.buf.extend_from_slice(name);
+        w.u32(e.lane);
+        w.u64(e.start_ns);
+        w.u64(e.dur_ns);
+        w.u8(match e.kind {
+            EventKind::Span => 0,
+            EventKind::Instant => 1,
+        });
+    }
+}
+
+fn dec_trace_events(r: &mut Reader) -> Result<Vec<TraceEvent>> {
+    let n = r.len(TRACE_EVENT_MIN_BYTES)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = r.len(1)?;
+        let mut bytes = Vec::with_capacity(name_len);
+        for _ in 0..name_len {
+            bytes.push(r.u8()?);
+        }
+        let name = String::from_utf8(bytes)
+            .map_err(|_| Error::invalid("wire: trace event name is not UTF-8"))?;
+        let lane = r.u32()?;
+        let start_ns = r.u64()?;
+        let dur_ns = r.u64()?;
+        let kind = match r.u8()? {
+            0 => EventKind::Span,
+            1 => EventKind::Instant,
+            other => return Err(Error::invalid(format!("wire: unknown event kind {other}"))),
+        };
+        out.push(TraceEvent { name, lane, start_ns, dur_ns, kind });
+    }
+    Ok(out)
 }
 
 fn encode_payload(msg: &WireMsg) -> Vec<u8> {
@@ -247,6 +300,10 @@ fn encode_payload(msg: &WireMsg) -> Vec<u8> {
             w.u32(*worker);
             w.u64(*epoch);
         }
+        WireMsg::TraceChunk { worker, events } => {
+            w.u32(*worker);
+            enc_trace_events(&mut w, events);
+        }
     }
     w.buf
 }
@@ -292,6 +349,7 @@ fn decode_payload(tag: u8, payload: &[u8]) -> Result<WireMsg> {
         }
         10 => WireMsg::Reconfigure { epoch: r.u64()? },
         11 => WireMsg::EpochAck { worker: r.u32()?, epoch: r.u64()? },
+        12 => WireMsg::TraceChunk { worker: r.u32()?, events: dec_trace_events(&mut r)? },
         other => return Err(Error::invalid(format!("wire: unknown message tag {other}"))),
     };
     if !r.done() {
@@ -483,6 +541,26 @@ mod tests {
             WireMsg::Fail { message: "plan mismatch: α".into() },
             WireMsg::Reconfigure { epoch: 3 },
             WireMsg::EpochAck { worker: 2, epoch: 3 },
+            WireMsg::TraceChunk { worker: 1, events: vec![] },
+            WireMsg::TraceChunk {
+                worker: 2,
+                events: vec![
+                    TraceEvent {
+                        name: "worker.expand".into(),
+                        lane: 0,
+                        start_ns: 1_000,
+                        dur_ns: 2_500,
+                        kind: EventKind::Span,
+                    },
+                    TraceEvent {
+                        name: "heartbeat — β".into(),
+                        lane: 3,
+                        start_ns: 4_000,
+                        dur_ns: 0,
+                        kind: EventKind::Instant,
+                    },
+                ],
+            },
         ]
     }
 
@@ -609,6 +687,35 @@ mod tests {
         let mut frame = encode_frame(&WireMsg::Freeze);
         frame[0] = b'X';
         assert!(decode_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn trace_chunk_bad_kind_and_bad_name_rejected() {
+        let msg = WireMsg::TraceChunk {
+            worker: 0,
+            events: vec![TraceEvent {
+                name: "x".into(),
+                lane: 1,
+                start_ns: 5,
+                dur_ns: 6,
+                kind: EventKind::Instant,
+            }],
+        };
+        // an unknown kind id is rejected by the payload decoder itself
+        let mut payload = encode_payload(&msg);
+        *payload.last_mut().unwrap() = 7;
+        assert!(decode_payload(12, &payload).is_err());
+        // a non-UTF-8 name is rejected
+        let mut w = Writer::default();
+        w.u32(0); // worker
+        w.len(1); // one event
+        w.len(1); // name of one byte
+        w.u8(0xFF); // invalid UTF-8
+        w.u32(1);
+        w.u64(5);
+        w.u64(6);
+        w.u8(0);
+        assert!(decode_payload(12, &w.buf).is_err());
     }
 
     #[test]

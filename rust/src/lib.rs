@@ -53,7 +53,8 @@
 //! | [`planner`] | inspector–executor plan caching: the persistent-structure amortization argument (cf. arXiv:1109.3739, 2002.11273) |
 //! | [`runtime`] | the batched tile-product engine behind the coordinator's compute phase |
 //! | [`repro`] | Sec. 6 experiment drivers (Table II, Figs. 7–9, bound comparisons) |
-//! | [`cli`], [`util`], [`error`] | dependency-free scaffolding (args, RNG, timing, errors) |
+//! | [`obs`] | cross-process span timelines + metric registry — the CombBLAS-style compute-vs-communication attribution (cf. arXiv:1109.3739) |
+//! | [`cli`], [`util`], [`error`] | dependency-free scaffolding (args, RNG, timing, errors, JSON) |
 
 pub mod algorithm;
 pub mod cli;
@@ -62,6 +63,7 @@ pub mod cost;
 pub mod error;
 pub mod gen;
 pub mod hypergraph;
+pub mod obs;
 pub mod partition;
 pub mod planner;
 pub mod repro;

@@ -1,0 +1,243 @@
+//! Process-wide metric registry: named counters, gauges, and
+//! log2-bucket histograms with a stable JSON snapshot.
+//!
+//! Naming convention (see `docs/OBSERVABILITY.md`):
+//! `<subsystem>_<what>[_<unit>]` with `_total` for monotone counters —
+//! e.g. `plan_hit_total`, `plan_latency_ns` (histogram),
+//! `wire_tx_send_bytes_total`, `exec_heartbeat_gap_ms` (gauge). The
+//! snapshot sorts names, so the JSON is byte-stable for a given set of
+//! observations; the planner's `plan_*` series is the stats surface the
+//! future plan daemon will serve, and the partitioner bench's
+//! warm-vs-cold gate reads it instead of the planner's private fields.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `k ≥ 1`
+/// holds values in `[2^(k-1), 2^k - 1]`, and bucket 64 holds the top of
+/// the `u64` range.
+pub const BUCKETS: usize = 65;
+
+/// A log2-bucket histogram. `sum`/`min`/`max` keep exact aggregates so
+/// consumers (the bench's warm-vs-cold gate) can compare latencies
+/// without losing precision to bucketing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { count: 0, sum: 0, min: u64::MAX, max: 0, buckets: vec![0; BUCKETS] }
+    }
+}
+
+impl Histogram {
+    fn observe(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_index(v)] += 1;
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// The bucket holding `v`: 0 for 0, `floor(log2 v) + 1` otherwise.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// The registry. One global instance ([`global`]) serves all
+/// instrumentation; tests build their own.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `n` to counter `name` (created at 0).
+    pub fn counter_add(&self, name: &str, n: u64) {
+        if let Ok(mut map) = self.counters.lock() {
+            *map.entry(name.to_string()).or_insert(0) += n;
+        }
+    }
+
+    /// Current counter value (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().ok().and_then(|map| map.get(name).copied()).unwrap_or(0)
+    }
+
+    /// Set gauge `name` to `v` (last-write-wins).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        if let Ok(mut map) = self.gauges.lock() {
+            map.insert(name.to_string(), v);
+        }
+    }
+
+    /// Current gauge value.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().ok().and_then(|map| map.get(name).copied())
+    }
+
+    /// Record `v` into histogram `name`.
+    pub fn observe(&self, name: &str, v: u64) {
+        if let Ok(mut map) = self.hists.lock() {
+            map.entry(name.to_string()).or_default().observe(v);
+        }
+    }
+
+    /// A copy of histogram `name`.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.hists.lock().ok().and_then(|map| map.get(name).cloned())
+    }
+
+    /// Stable JSON snapshot: names sorted, only non-empty buckets
+    /// listed (as `{"le": "2^k", "count": n}` upper-bound rows).
+    pub fn snapshot(&self) -> Json {
+        let counters: Vec<(String, Json)> = self
+            .counters
+            .lock()
+            .map(|map| map.iter().map(|(k, v)| (k.clone(), Json::U64(*v))).collect())
+            .unwrap_or_default();
+        let gauges: Vec<(String, Json)> = self
+            .gauges
+            .lock()
+            .map(|map| map.iter().map(|(k, v)| (k.clone(), Json::F64(*v))).collect())
+            .unwrap_or_default();
+        let hists: Vec<(String, Json)> = self
+            .hists
+            .lock()
+            .map(|map| {
+                map.iter()
+                    .map(|(k, h)| {
+                        let buckets: Vec<Json> = h
+                            .buckets
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, n)| **n > 0)
+                            .map(|(k, n)| {
+                                Json::obj(vec![
+                                    ("le", Json::Str(bucket_label(k))),
+                                    ("count", Json::U64(*n)),
+                                ])
+                            })
+                            .collect();
+                        (
+                            k.clone(),
+                            Json::obj(vec![
+                                ("count", Json::U64(h.count)),
+                                ("sum", Json::U64(h.sum)),
+                                ("min", Json::U64(if h.count == 0 { 0 } else { h.min })),
+                                ("max", Json::U64(h.max)),
+                                ("buckets", Json::Arr(buckets)),
+                            ]),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Json::Obj(vec![
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(hists)),
+        ])
+    }
+}
+
+/// Human-readable inclusive upper bound of bucket `k`.
+fn bucket_label(k: usize) -> String {
+    if k == 0 {
+        "0".to_string()
+    } else if k >= 64 {
+        "inf".to_string()
+    } else {
+        format!("{}", (1u64 << k) - 1)
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry all instrumentation points write to.
+/// Always on — metric updates are one mutex-guarded map touch, off every
+/// per-element hot loop by construction (they sit at phase/frame
+/// granularity).
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // every bucket k >= 1 spans [2^(k-1), 2^k - 1]
+        for k in 1..64usize {
+            let lo = 1u64 << (k - 1);
+            let hi = (1u64 << k) - 1;
+            assert_eq!(bucket_index(lo), k);
+            assert_eq!(bucket_index(hi), k);
+        }
+    }
+
+    #[test]
+    fn counters_gauges_histograms() {
+        let reg = Registry::new();
+        reg.counter_add("x_total", 2);
+        reg.counter_add("x_total", 3);
+        assert_eq!(reg.counter("x_total"), 5);
+        assert_eq!(reg.counter("absent"), 0);
+        reg.gauge_set("g", 1.5);
+        reg.gauge_set("g", 2.5);
+        assert_eq!(reg.gauge("g"), Some(2.5));
+        reg.observe("lat_ns", 3);
+        reg.observe("lat_ns", 900);
+        let h = reg.histogram("lat_ns").unwrap();
+        assert_eq!((h.count, h.sum, h.min, h.max), (2, 903, 3, 900));
+        assert_eq!(h.buckets[bucket_index(3)], 1);
+        assert_eq!(h.buckets[bucket_index(900)], 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_parses() {
+        let reg = Registry::new();
+        reg.counter_add("b_total", 1);
+        reg.counter_add("a_total", 1);
+        reg.observe("h_ns", 5);
+        let text = reg.snapshot().render();
+        assert!(text.find("a_total").unwrap() < text.find("b_total").unwrap());
+        crate::util::json::parse(&text).unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! Unified observability: span timelines ([`trace`]) and a named-metric
+//! registry ([`metrics`]).
+//!
+//! Before this module, timing lived in ad-hoc structs — the partitioner's
+//! [`crate::partition::PhaseBreakdown`], the planner's `plan_ns`, the
+//! executor's `MeasuredReport.wire_bytes` — with no way to see one run
+//! end to end. `obs` gives every layer the same two primitives:
+//!
+//! * **Spans/events** — RAII guards around a named region of one *lane*
+//!   (leader = lane 0, worker `w` = lane `w+1`), ring-buffered in a
+//!   process-global [`trace::Recorder`] and exported as Chrome-trace /
+//!   Perfetto JSON via `--trace FILE`. Worker processes record locally
+//!   and ship their buffers to the leader in `TraceChunk` wire messages
+//!   at phase boundaries, so one file holds the merged cross-process
+//!   timeline.
+//! * **Metrics** — process-wide counters, gauges, and log2-bucket
+//!   histograms with a stable JSON snapshot
+//!   ([`metrics::Registry::snapshot`]); the planner's hit/miss/stale/GC
+//!   counts and plan-latency histogram are the stats surface a future
+//!   plan daemon will serve.
+//!
+//! Both recorders are **no-ops until enabled**: with `--trace` absent the
+//! span path takes one relaxed atomic load and allocates nothing, so the
+//! hot SpGEMM path is unaffected (asserted by
+//! `rust/tests/obs.rs::disabled_recorder_records_nothing`). Timestamps
+//! come from the executor's injectable [`crate::coordinator::exec::Clock`]
+//! trait, so tests drive deterministic timelines with `FakeClock`.
+//! `docs/OBSERVABILITY.md` is the guide (span model, naming convention,
+//! file format, Perfetto how-to, overhead bounds).
+
+pub mod metrics;
+pub mod trace;
+
+/// Environment variable the leader sets on spawned worker processes when
+/// tracing is on; `worker_entry` enables its local recorder when present.
+pub const ENV_TRACE: &str = "SPGEMM_HP_TRACE";

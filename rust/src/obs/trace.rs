@@ -1,0 +1,385 @@
+//! Thread-aware span/event recorder with Chrome-trace JSON export.
+//!
+//! The model is deliberately tiny: a [`TraceEvent`] is a named interval
+//! (`Span`) or point (`Instant`) on a *lane* — leader work on lane 0,
+//! worker `w`'s work on lane `w + 1` — stamped from the executor's
+//! injectable [`Clock`]. Spans are recorded by RAII guards
+//! ([`Recorder::span`]): the guard reads the clock on construction and
+//! pushes one complete event on drop, so nesting and early returns need
+//! no bookkeeping. Events land in a bounded ring buffer (oldest dropped
+//! first, with a drop counter), and export sorts by start time, so
+//! chunks merged from worker processes may arrive out of order.
+//!
+//! A disabled recorder is a **no-op sink**: `span`/`instant` check one
+//! relaxed atomic and return without locking or allocating — the
+//! disabled-path cost on the hot SpGEMM path is one branch.
+
+use crate::coordinator::exec::{Clock, SystemClock};
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default ring-buffer capacity (events per process).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Interval vs. point event (Chrome-trace `ph: "X"` vs `ph: "i"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Timeline lane (Chrome-trace `tid`): 0 = leader, `w + 1` = worker w.
+    pub lane: u32,
+    /// Start, in [`Clock::now_ns`] nanoseconds.
+    pub start_ns: u64,
+    /// Duration (0 for instants).
+    pub dur_ns: u64,
+    pub kind: EventKind,
+}
+
+struct Inner {
+    clock: Arc<dyn Clock>,
+    events: VecDeque<TraceEvent>,
+    /// Events discarded because the ring was full.
+    dropped: u64,
+    /// Lane display names for the exporter's thread-name metadata.
+    lane_names: Vec<(u32, String)>,
+}
+
+/// The span/event recorder. One global instance serves all in-process
+/// instrumentation ([`global`]); tests build their own with a
+/// [`FakeClock`](crate::coordinator::exec::FakeClock) for deterministic
+/// timelines.
+pub struct Recorder {
+    enabled: AtomicBool,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// A disabled recorder (the global's initial state): every `span`/
+    /// `instant` is a single-branch no-op until [`Recorder::enable`].
+    pub fn new() -> Recorder {
+        Recorder {
+            enabled: AtomicBool::new(false),
+            capacity: DEFAULT_CAPACITY,
+            inner: Mutex::new(Inner {
+                clock: Arc::new(SystemClock),
+                events: VecDeque::new(),
+                dropped: 0,
+                lane_names: Vec::new(),
+            }),
+        }
+    }
+
+    /// An enabled recorder stamping from `clock` (tests inject
+    /// `FakeClock`; `--trace` enables the global with the system clock).
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Recorder {
+        let rec = Recorder::new();
+        rec.enable(clock);
+        rec
+    }
+
+    /// Turn recording on, stamping timestamps from `clock`.
+    pub fn enable(&self, clock: Arc<dyn Clock>) {
+        if let Ok(mut inner) = self.inner.lock() {
+            inner.clock = clock;
+        }
+        self.enabled.store(true, Ordering::Release);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Name a lane for the exporter (e.g. `"leader"`, `"worker 3"`).
+    pub fn set_lane_name(&self, lane: u32, name: &str) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Ok(mut inner) = self.inner.lock() {
+            if let Some(at) = inner.lane_names.iter().position(|(l, _)| *l == lane) {
+                inner.lane_names[at].1 = name.to_string();
+            } else {
+                inner.lane_names.push((lane, name.to_string()));
+            }
+        }
+    }
+
+    /// Open a span on `lane`; the returned guard records one complete
+    /// event when dropped. Disabled recorders return an inert guard
+    /// without locking or allocating.
+    #[must_use = "the span closes when the guard drops"]
+    pub fn span(&self, name: &'static str, lane: u32) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { rec: None, name, lane, start_ns: 0 };
+        }
+        let start_ns = self.inner.lock().map(|inner| inner.clock.now_ns()).unwrap_or(0);
+        SpanGuard { rec: Some(self), name, lane, start_ns }
+    }
+
+    /// Record a point event on `lane`.
+    pub fn instant(&self, name: &'static str, lane: u32) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Ok(mut inner) = self.inner.lock() {
+            let start_ns = inner.clock.now_ns();
+            push_capped(
+                &mut inner,
+                self.capacity,
+                TraceEvent {
+                    name: name.to_string(),
+                    lane,
+                    start_ns,
+                    dur_ns: 0,
+                    kind: EventKind::Instant,
+                },
+            );
+        }
+    }
+
+    /// Append an already-built event (the leader's merge path for worker
+    /// `TraceChunk`s — re-lane and re-base before appending). Ignored
+    /// while disabled.
+    pub fn append(&self, event: TraceEvent) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Ok(mut inner) = self.inner.lock() {
+            push_capped(&mut inner, self.capacity, event);
+        }
+    }
+
+    fn finish_span(&self, name: &'static str, lane: u32, start_ns: u64) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let end_ns = inner.clock.now_ns();
+            push_capped(
+                &mut inner,
+                self.capacity,
+                TraceEvent {
+                    name: name.to_string(),
+                    lane,
+                    start_ns,
+                    dur_ns: end_ns.saturating_sub(start_ns),
+                    kind: EventKind::Span,
+                },
+            );
+        }
+    }
+
+    /// Recorded events so far (recording order — spans appear when they
+    /// *close*, so an outer span follows its inner spans).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.inner.lock().map(|inner| inner.events.iter().cloned().collect()).unwrap_or_default()
+    }
+
+    /// Take every buffered event, leaving the ring empty (the worker's
+    /// phase-boundary ship point).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        self.inner.lock().map(|mut inner| inner.events.drain(..).collect()).unwrap_or_default()
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.inner.lock().map(|inner| inner.events.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events discarded because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().map(|inner| inner.dropped).unwrap_or(0)
+    }
+
+    /// The buffered timeline as a Chrome-trace JSON document.
+    pub fn chrome_trace(&self) -> Json {
+        let (events, lanes) = self
+            .inner
+            .lock()
+            .map(|inner| {
+                (inner.events.iter().cloned().collect::<Vec<_>>(), inner.lane_names.clone())
+            })
+            .unwrap_or_default();
+        chrome_trace(&events, &lanes)
+    }
+
+    /// Write the Chrome-trace JSON to `path` (open it at
+    /// <https://ui.perfetto.dev> or `chrome://tracing`).
+    pub fn write_chrome(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.chrome_trace().render())?;
+        Ok(())
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
+}
+
+fn push_capped(inner: &mut Inner, capacity: usize, event: TraceEvent) {
+    if inner.events.len() >= capacity {
+        inner.events.pop_front();
+        inner.dropped += 1;
+    }
+    inner.events.push_back(event);
+}
+
+/// RAII span guard: reads the clock on construction, records one
+/// complete event on drop. An inert guard (disabled recorder) does
+/// nothing on either end.
+pub struct SpanGuard<'a> {
+    rec: Option<&'a Recorder>,
+    name: &'static str,
+    lane: u32,
+    start_ns: u64,
+}
+
+impl SpanGuard<'_> {
+    /// The clock reading taken when the span opened (0 for an inert
+    /// guard). Lets derived child events anchor to the parent's start.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec {
+            rec.finish_span(self.name, self.lane, self.start_ns);
+        }
+    }
+}
+
+/// Build a Chrome-trace document from `events` (sorted by start time
+/// here, so out-of-order merged chunks render correctly) plus
+/// `thread_name` metadata rows for `lanes`.
+pub fn chrome_trace(events: &[TraceEvent], lanes: &[(u32, String)]) -> Json {
+    let mut rows: Vec<Json> = lanes
+        .iter()
+        .map(|(lane, name)| {
+            Json::obj(vec![
+                ("name", Json::Str("thread_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::U64(0)),
+                ("tid", Json::U64(*lane as u64)),
+                ("args", Json::obj(vec![("name", Json::Str(name.clone()))])),
+            ])
+        })
+        .collect();
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| (e.start_ns, e.lane, e.dur_ns));
+    for e in sorted {
+        // Chrome-trace timestamps are microseconds (fractional ok)
+        let mut row = Json::obj(vec![
+            ("name", Json::Str(e.name.clone())),
+            ("cat", Json::Str("spgemm".into())),
+            ("ph", Json::Str(match e.kind {
+                EventKind::Span => "X",
+                EventKind::Instant => "i",
+            }
+            .into())),
+            ("ts", Json::Fixed(e.start_ns as f64 / 1e3, 3)),
+            ("pid", Json::U64(0)),
+            ("tid", Json::U64(e.lane as u64)),
+        ]);
+        match e.kind {
+            EventKind::Span => row.push("dur", Json::Fixed(e.dur_ns as f64 / 1e3, 3)),
+            EventKind::Instant => row.push("s", Json::Str("t".into())),
+        }
+        rows.push(row);
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(rows)),
+    ])
+}
+
+/// Summary returned by [`validate_chrome`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChromeSummary {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Distinct `tid` lanes among non-metadata events, ascending.
+    pub lanes: Vec<u64>,
+}
+
+/// Parse `text` back and check the Chrome-trace shape: a `traceEvents`
+/// array whose entries all carry `name`/`ph`/`pid`/`tid` (and `ts` for
+/// non-metadata rows). This is the parse-back helper tests and
+/// `spgemm-hp trace-check` (CI) run against every emitted trace file.
+pub fn validate_chrome(text: &str) -> Result<ChromeSummary> {
+    let doc = json::parse(text)?;
+    let rows = doc
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .ok_or_else(|| Error::invalid("trace: missing traceEvents array"))?;
+    let mut events = 0usize;
+    let mut lanes: Vec<u64> = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let ph = row
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::invalid(format!("trace: event {i} missing ph")))?;
+        for key in ["name", "pid", "tid"] {
+            if row.get(key).is_none() {
+                return Err(Error::invalid(format!("trace: event {i} missing {key}")));
+            }
+        }
+        if ph == "M" {
+            continue;
+        }
+        if row.get("ts").and_then(Json::as_f64).is_none() {
+            return Err(Error::invalid(format!("trace: event {i} missing ts")));
+        }
+        if ph == "X" && row.get("dur").and_then(Json::as_f64).is_none() {
+            return Err(Error::invalid(format!("trace: span {i} missing dur")));
+        }
+        let tid = row
+            .get("tid")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| Error::invalid(format!("trace: event {i} bad tid")))?;
+        if !lanes.contains(&tid) {
+            lanes.push(tid);
+        }
+        events += 1;
+    }
+    lanes.sort_unstable();
+    Ok(ChromeSummary { events, lanes })
+}
+
+static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-global recorder all instrumentation points write to.
+/// Starts disabled; `--trace FILE` (and `SPGEMM_HP_TRACE` in worker
+/// processes) enables it.
+pub fn global() -> &'static Recorder {
+    GLOBAL.get_or_init(Recorder::new)
+}
+
+/// Enable the global recorder on the system clock.
+pub fn enable_global() {
+    global().enable(Arc::new(SystemClock));
+}
+
+/// Open a span on the global recorder (lane 0 = this process's main
+/// timeline).
+#[must_use = "the span closes when the guard drops"]
+pub fn span(name: &'static str) -> SpanGuard<'static> {
+    global().span(name, 0)
+}
+
+/// Record a point event on the global recorder, lane 0.
+pub fn instant(name: &'static str) {
+    global().instant(name, 0)
+}

@@ -200,6 +200,7 @@ pub fn partition_timed(
             return Err(Error::Partition("mem_epsilon must be >= 0".into()));
         }
     }
+    let span = crate::obs::trace::global().span("partition", 0);
     let mut rng = Rng::new(cfg.seed);
     let mut times = PhaseBreakdown::default();
     let mut part = multilevel::recursive_bisection_timed(h, cfg, &mut rng, &mut times);
@@ -221,7 +222,39 @@ pub fn partition_timed(
         );
         times.refine_ns += t.elapsed().as_nanos() as u64;
     }
+    emit_phase_spans(span, &times);
     Ok((part, times))
+}
+
+/// Re-emit the [`PhaseBreakdown`] as three child spans of the enclosing
+/// `partition` span, stacked from its start. The breakdown itself stays
+/// the source of truth (its accessors are unchanged); the trace view is
+/// derived from it rather than from instrumenting the threaded recursion
+/// — under `threads > 1` the phases approximate the critical path, and
+/// the synthetic spans inherit exactly that meaning.
+fn emit_phase_spans(span: crate::obs::trace::SpanGuard<'static>, times: &PhaseBreakdown) {
+    use crate::obs::trace::{EventKind, TraceEvent};
+    let rec = crate::obs::trace::global();
+    if !rec.is_enabled() {
+        return;
+    }
+    let start = span.start_ns();
+    drop(span); // close `partition` before appending its children
+    let mut at = start;
+    for (name, dur_ns) in [
+        ("partition.coarsen", times.coarsen_ns),
+        ("partition.initial", times.initial_ns),
+        ("partition.refine", times.refine_ns),
+    ] {
+        rec.append(TraceEvent {
+            name: name.to_string(),
+            lane: 0,
+            start_ns: at,
+            dur_ns,
+            kind: EventKind::Span,
+        });
+        at = at.saturating_add(dur_ns);
+    }
 }
 
 /// Random balanced baseline: shuffle vertices, place each on the

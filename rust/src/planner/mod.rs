@@ -275,6 +275,7 @@ impl Planner {
         dataflow: Dataflow,
         cache: &CacheConfig,
     ) -> Result<Planned> {
+        let _span = crate::obs::trace::global().span("planner.plan", 0);
         let t = Instant::now();
         let strategy = strategy.resolve(pcfg.parts)?;
         let fp =
@@ -297,6 +298,20 @@ impl Planner {
         };
         let PlanBundle { strategy, part, alg, mut prepared, comm_max, volume, dataflow } = bundle;
         bind_values(&mut prepared.plan, a, b);
+        let plan_ns = t.elapsed().as_nanos() as u64;
+        // The `plan_*` metric series is the planner's public stats
+        // surface: the partitioner bench's warm-vs-cold gate reads hit
+        // counts and latency sums from here instead of private fields.
+        let m = crate::obs::metrics::global();
+        m.counter_add(
+            match outcome {
+                PlanOutcome::Hit => "plan_hit_total",
+                PlanOutcome::Miss => "plan_miss_total",
+                PlanOutcome::Stale => "plan_stale_total",
+            },
+            1,
+        );
+        m.observe("plan_latency_ns", plan_ns);
         Ok(Planned {
             fingerprint: fp,
             strategy,
@@ -307,7 +322,7 @@ impl Planner {
             volume,
             dataflow,
             outcome,
-            plan_ns: t.elapsed().as_nanos() as u64,
+            plan_ns,
         })
     }
 

@@ -206,6 +206,7 @@ fn gc_files(mut files: Vec<PlanFile>, budget: u64, keep: &Path) -> Result<()> {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(e.into()),
         }
+        crate::obs::metrics::global().counter_add("plan_gc_files_total", 1);
         total -= f.bytes;
     }
     Ok(())

@@ -1,0 +1,449 @@
+//! Minimal JSON document model: a writer with full string escaping and
+//! stable (insertion-order) fields, and a strict recursive-descent
+//! parser for validation and read-back.
+//!
+//! The crate builds fully offline, so `serde_json` is unavailable; before
+//! this module every bench hand-rolled its own `format!` emission. All
+//! JSON the repo produces now goes through one door — the bench records
+//! (`BENCH_spgemm.json`, `BENCH_partition.json`), the
+//! [`crate::obs::metrics`] snapshot, and the Chrome-trace export of
+//! [`crate::obs::trace`] — and the parser is the parse-back half used by
+//! tests and `spgemm-hp trace-check` to assert that what we emit is
+//! actually valid JSON.
+
+use crate::{Error, Result};
+
+/// One JSON value. Object fields keep insertion order (stable output);
+/// integer values keep full `u64`/`i64` fidelity rather than rounding
+/// through `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    /// A float rendered with a fixed number of decimals (`{:.prec$}`) —
+    /// the bench records' historical `ns_per_op` shape.
+    Fixed(f64, usize),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// An object from ordered `(key, value)` pairs.
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Push one more field onto an object (panics on non-objects —
+    /// builder misuse, not data).
+    pub fn push(&mut self, key: &str, value: Json) {
+        match self {
+            Json::Obj(fields) => fields.push((key.to_string(), value)),
+            other => panic!("Json::push on non-object {other:?}"),
+        }
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::U64(n) => Some(*n),
+            Json::I64(n) if *n >= 0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::U64(n) => Some(*n as f64),
+            Json::I64(n) => Some(*n as f64),
+            Json::F64(v) | Json::Fixed(v, _) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Compact single-line rendering (`": "` and `", "` separators — the
+    /// repo's historical bench-record shape).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::U64(n) => out.push_str(&n.to_string()),
+            Json::I64(n) => out.push_str(&n.to_string()),
+            Json::F64(v) => render_f64(*v, out),
+            Json::Fixed(v, prec) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v:.prec$}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => escape_into(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    escape_into(k, out);
+                    out.push_str(": ");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// `f64` rendering: integral values keep a `.0` so they read back as
+/// floats; non-finite values (invalid in JSON) degrade to `null`.
+fn render_f64(v: f64, out: &mut String) {
+    if !v.is_finite() {
+        out.push_str("null");
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        out.push_str(&format!("{v:.1}"));
+    } else {
+        out.push_str(&format!("{v}"));
+    }
+}
+
+/// Escape `s` as a JSON string literal (quotes included).
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Write `rows` to `path` as a JSON array, one compact object per line —
+/// byte-compatible with the bench records' historical layout:
+///
+/// ```text
+/// [
+///   {"kernel": "auto", "threads": 1},
+///   {"kernel": "auto", "threads": 2}
+/// ]
+/// ```
+pub fn write_records(path: &str, rows: &[Json]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "[")?;
+    for (i, row) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        writeln!(f, "  {}{comma}", row.render())?;
+    }
+    writeln!(f, "]")?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed, trailing
+/// garbage rejected). Strict: no comments, no trailing commas, no NaN.
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut at = 0usize;
+    let value = parse_value(bytes, &mut at)?;
+    skip_ws(bytes, &mut at);
+    if at != bytes.len() {
+        return Err(Error::invalid(format!("json: trailing garbage at byte {at}")));
+    }
+    Ok(value)
+}
+
+fn skip_ws(bytes: &[u8], at: &mut usize) {
+    while *at < bytes.len() && matches!(bytes[*at], b' ' | b'\t' | b'\n' | b'\r') {
+        *at += 1;
+    }
+}
+
+fn expect(bytes: &[u8], at: &mut usize, ch: u8) -> Result<()> {
+    if *at < bytes.len() && bytes[*at] == ch {
+        *at += 1;
+        Ok(())
+    } else {
+        Err(Error::invalid(format!("json: expected `{}` at byte {at}", ch as char)))
+    }
+}
+
+fn parse_value(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    skip_ws(bytes, at);
+    match bytes.get(*at) {
+        None => Err(Error::invalid("json: unexpected end of input")),
+        Some(b'{') => {
+            *at += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, at);
+            if bytes.get(*at) == Some(&b'}') {
+                *at += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, at);
+                let key = parse_string(bytes, at)?;
+                skip_ws(bytes, at);
+                expect(bytes, at, b':')?;
+                let value = parse_value(bytes, at)?;
+                fields.push((key, value));
+                skip_ws(bytes, at);
+                match bytes.get(*at) {
+                    Some(b',') => *at += 1,
+                    Some(b'}') => {
+                        *at += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(Error::invalid(format!("json: expected , or }} at byte {at}"))),
+                }
+            }
+        }
+        Some(b'[') => {
+            *at += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, at);
+            if bytes.get(*at) == Some(&b']') {
+                *at += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, at)?);
+                skip_ws(bytes, at);
+                match bytes.get(*at) {
+                    Some(b',') => *at += 1,
+                    Some(b']') => {
+                        *at += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(Error::invalid(format!("json: expected , or ] at byte {at}"))),
+                }
+            }
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, at)?)),
+        Some(b't') => parse_lit(bytes, at, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(bytes, at, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(bytes, at, "null", Json::Null),
+        Some(_) => parse_number(bytes, at),
+    }
+}
+
+fn parse_lit(bytes: &[u8], at: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*at..].starts_with(lit.as_bytes()) {
+        *at += lit.len();
+        Ok(value)
+    } else {
+        Err(Error::invalid(format!("json: bad literal at byte {at}")))
+    }
+}
+
+fn parse_string(bytes: &[u8], at: &mut usize) -> Result<String> {
+    expect(bytes, at, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*at) {
+            None => return Err(Error::invalid("json: unterminated string")),
+            Some(b'"') => {
+                *at += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *at += 1;
+                match bytes.get(*at) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*at + 1..*at + 5)
+                            .ok_or_else(|| Error::invalid("json: truncated \\u escape"))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex)
+                                .map_err(|_| Error::invalid("json: bad \\u escape"))?,
+                            16,
+                        )
+                        .map_err(|_| Error::invalid("json: bad \\u escape"))?;
+                        // surrogate pairs are out of scope for our own
+                        // output; lone surrogates become U+FFFD
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *at += 4;
+                    }
+                    _ => return Err(Error::invalid(format!("json: bad escape at byte {at}"))),
+                }
+                *at += 1;
+            }
+            Some(_) => {
+                // consume one UTF-8 scalar (input is a &str, so this is
+                // always a valid boundary walk)
+                let rest = &bytes[*at..];
+                let step = std::str::from_utf8(rest)
+                    .map_err(|_| Error::invalid("json: invalid utf-8"))?
+                    .chars()
+                    .next()
+                    .map(|c| c.len_utf8())
+                    .unwrap_or(1);
+                if bytes[*at] < 0x20 {
+                    return Err(Error::invalid("json: raw control character in string"));
+                }
+                out.push_str(std::str::from_utf8(&rest[..step]).unwrap());
+                *at += step;
+            }
+        }
+    }
+}
+
+fn parse_number(bytes: &[u8], at: &mut usize) -> Result<Json> {
+    let start = *at;
+    if bytes.get(*at) == Some(&b'-') {
+        *at += 1;
+    }
+    let mut float = false;
+    while let Some(&b) = bytes.get(*at) {
+        match b {
+            b'0'..=b'9' => *at += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                float = true;
+                *at += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = std::str::from_utf8(&bytes[start..*at])
+        .map_err(|_| Error::invalid("json: bad number"))?;
+    if text.is_empty() || text == "-" {
+        return Err(Error::invalid(format!("json: expected a value at byte {start}")));
+    }
+    if !float {
+        if let Ok(n) = text.parse::<u64>() {
+            return Ok(Json::U64(n));
+        }
+        if let Ok(n) = text.parse::<i64>() {
+            return Ok(Json::I64(n));
+        }
+    }
+    text.parse::<f64>()
+        .map(Json::F64)
+        .map_err(|_| Error::invalid(format!("json: bad number `{text}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_field_order_and_separators() {
+        let row = Json::obj(vec![
+            ("kernel", Json::Str("auto".into())),
+            ("threads", Json::U64(4)),
+            ("ns_per_op", Json::Fixed(12.348, 1)),
+        ]);
+        assert_eq!(row.render(), r#"{"kernel": "auto", "threads": 4, "ns_per_op": 12.3}"#);
+    }
+
+    #[test]
+    fn escaping_round_trips() {
+        let nasty = "a\"b\\c\nd\te\u{1}f — ünïcode";
+        let doc = Json::obj(vec![("s", Json::Str(nasty.into()))]);
+        let parsed = parse(&doc.render()).unwrap();
+        assert_eq!(parsed.get("s").unwrap().as_str().unwrap(), nasty);
+    }
+
+    #[test]
+    fn parse_round_trips_structures() {
+        let doc = Json::Arr(vec![
+            Json::obj(vec![
+                ("a", Json::U64(u64::MAX)),
+                ("b", Json::I64(-7)),
+                ("c", Json::F64(1.5)),
+                ("d", Json::Bool(true)),
+                ("e", Json::Null),
+                ("f", Json::Arr(vec![Json::U64(1), Json::U64(2)])),
+            ]),
+            Json::obj(vec![]),
+        ]);
+        assert_eq!(parse(&doc.render()).unwrap(), doc);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "{", "[1,]", "{\"a\":}", "[1] x", "{'a': 1}", "nul", "--1", "\"\\q\""] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn integers_keep_fidelity() {
+        match parse("18446744073709551615").unwrap() {
+            Json::U64(n) => assert_eq!(n, u64::MAX),
+            other => panic!("expected U64, got {other:?}"),
+        }
+        match parse("-3").unwrap() {
+            Json::I64(n) => assert_eq!(n, -3),
+            other => panic!("expected I64, got {other:?}"),
+        }
+        assert_eq!(parse("2.5").unwrap(), Json::F64(2.5));
+    }
+
+    #[test]
+    fn write_records_layout() {
+        let dir = std::env::temp_dir().join(format!("spgemm_hp_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rows.json");
+        let rows =
+            vec![Json::obj(vec![("n", Json::U64(1))]), Json::obj(vec![("n", Json::U64(2))])];
+        write_records(path.to_str().unwrap(), &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "[\n  {\"n\": 1},\n  {\"n\": 2}\n]\n");
+        assert!(parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -2,6 +2,7 @@
 //! harness (the crate builds fully offline, so we cannot depend on `rand`,
 //! `criterion`, or `proptest`).
 
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -18,6 +18,7 @@ use spgemm_hp::coordinator::plan::{ExecutionPlan, PreparedPlan};
 use spgemm_hp::coordinator::wire::{self, Stream, WireMsg, WirePhase};
 use spgemm_hp::coordinator::{self, CoordReport, CoordinatorConfig};
 use spgemm_hp::hypergraph::models::ModelKind;
+use spgemm_hp::obs::trace::{validate_chrome, EventKind, TraceEvent};
 use spgemm_hp::partition::PartitionerConfig;
 use spgemm_hp::planner::Planner;
 use spgemm_hp::repro::workloads::conformance_instances;
@@ -461,8 +462,22 @@ fn rand_stream(rng: &mut Rng) -> Stream {
     [Stream::A, Stream::B, Stream::Partial][rng.below(3)]
 }
 
+fn rand_trace_events(rng: &mut Rng, max: usize) -> Vec<TraceEvent> {
+    let names = ["worker.expand", "worker.compute", "worker.fold", "exec.respawn"];
+    let n = rng.below(max + 1);
+    (0..n)
+        .map(|_| TraceEvent {
+            name: names[rng.below(names.len())].to_string(),
+            lane: rng.below(8) as u32,
+            start_ns: rng.next_u64() >> rng.below(64) as u32,
+            dur_ns: rng.next_u64() >> rng.below(64) as u32,
+            kind: if rng.below(4) == 0 { EventKind::Instant } else { EventKind::Span },
+        })
+        .collect()
+}
+
 fn rand_msg(rng: &mut Rng) -> WireMsg {
-    match rng.below(10) {
+    match rng.below(11) {
         0 => WireMsg::Start(rand_phase(rng)),
         1 => WireMsg::Deliver {
             phase: rand_phase(rng),
@@ -482,6 +497,10 @@ fn rand_msg(rng: &mut Rng) -> WireMsg {
         6 => WireMsg::ResultC { entries: rand_entries(rng, 12) },
         7 => WireMsg::Fail { message: format!("err-{}", rng.below(1000)) },
         8 => WireMsg::Reconfigure { epoch: rng.next_u64() },
+        9 => WireMsg::TraceChunk {
+            worker: rng.below(64) as u32,
+            events: rand_trace_events(rng, 6),
+        },
         _ => WireMsg::EpochAck { worker: rng.below(64) as u32, epoch: rng.next_u64() },
     }
 }
@@ -553,4 +572,70 @@ fn fuzz_wire_absurd_length_and_wrong_version_error() {
         magic[0] = b'X';
         ensure(wire::decode_frame(&magic).is_err(), "bad magic accepted")
     });
+}
+
+// ---------------------------------------------------------------------------
+// Merged trace timeline (the observability tentpole's end-to-end shape)
+// ---------------------------------------------------------------------------
+
+/// `e2e --exec processes --trace` emits one merged Chrome trace with a
+/// leader lane plus one lane per worker, and each worker lane carries
+/// exactly one expand/compute/fold span triple per successful run (no
+/// respawns on a fault-free run, so no duplicate phases).
+#[test]
+fn trace_timeline_has_one_phase_triple_per_worker() {
+    if !processes_available() {
+        eprintln!("skipping trace_timeline: process spawning unavailable in this sandbox");
+        return;
+    }
+    use spgemm_hp::util::json::{self, Json};
+    let p = 3usize;
+    let dir = std::env::temp_dir();
+    let pid = std::process::id();
+    let mtx = dir.join(format!("spgemm-trace-{pid}.mtx"));
+    let trace = dir.join(format!("spgemm-trace-{pid}.json"));
+    let st = std::process::Command::new(exe())
+        .args(["gen", "stencil27", "--n", "5", "--out"])
+        .arg(&mtx)
+        .stdout(std::process::Stdio::null())
+        .status()
+        .unwrap();
+    assert!(st.success(), "gen failed");
+    let st = std::process::Command::new(exe())
+        .args(["e2e", "--parts", "3", "--exec", "processes", "--algorithm", "hypergraph:row"])
+        .arg("--mtx-a")
+        .arg(&mtx)
+        .arg("--trace")
+        .arg(&trace)
+        .stdout(std::process::Stdio::null())
+        .status()
+        .unwrap();
+    assert!(st.success(), "e2e --trace run failed");
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let _ = std::fs::remove_file(&mtx);
+    let _ = std::fs::remove_file(&trace);
+    let summary = validate_chrome(&text).expect("emitted trace parses back");
+    for lane in 0..=p as u64 {
+        assert!(summary.lanes.contains(&lane), "lane {lane} missing from {:?}", summary.lanes);
+    }
+    let doc = json::parse(&text).unwrap();
+    let rows = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+    let count = |lane: u64, name: &str| {
+        rows.iter()
+            .filter(|r| {
+                r.get("tid").and_then(Json::as_u64) == Some(lane)
+                    && r.get("name").and_then(Json::as_str) == Some(name)
+            })
+            .count()
+    };
+    for w in 0..p {
+        let lane = (w + 1) as u64;
+        for phase in ["worker.expand", "worker.compute", "worker.fold"] {
+            assert_eq!(count(lane, phase), 1, "lane {lane}: {phase} span count");
+        }
+    }
+    // the leader's epoch span and phase spans bracket the run on lane 0
+    assert_eq!(count(0, "leader.epoch"), 1);
+    assert_eq!(count(0, "leader.expand"), 1);
+    assert!(count(0, "partition") >= 1, "partitioner span missing from the leader lane");
 }

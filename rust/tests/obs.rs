@@ -1,0 +1,224 @@
+//! Observability suite: deterministic span timelines under the
+//! executor's `FakeClock`, the worker-chunk merge path (re-lane +
+//! re-base, out-of-order arrival), Chrome-trace parse-back validity,
+//! ring-buffer overflow accounting, and the disabled-recorder
+//! zero-event guarantee the hot SpGEMM path relies on.
+
+use spgemm_hp::coordinator::exec::FakeClock;
+use spgemm_hp::obs::metrics::{bucket_index, Registry, BUCKETS};
+use spgemm_hp::obs::trace::{
+    chrome_trace, validate_chrome, EventKind, Recorder, TraceEvent, DEFAULT_CAPACITY,
+};
+use spgemm_hp::util::json::{self, Json};
+use std::sync::Arc;
+
+/// Nested RAII spans under FakeClock: reading k is `k * TICK_NS`, spans
+/// record when they *close*, so the inner span lands first and every
+/// start/duration is exactly reproducible.
+#[test]
+fn span_nesting_is_deterministic_under_fake_clock() {
+    let rec = Recorder::with_clock(Arc::new(FakeClock::default()));
+    {
+        let _outer = rec.span("outer", 0); // reading 1: start 1000
+        {
+            let _inner = rec.span("inner", 0); // reading 2: start 2000
+        } // reading 3: inner closes, dur 1000
+        rec.instant("mark", 0); // reading 4: instant at 4000
+    } // reading 5: outer closes, dur 4000
+    let events = rec.snapshot();
+    let got: Vec<(&str, u64, u64, EventKind)> = events
+        .iter()
+        .map(|e| (e.name.as_str(), e.start_ns, e.dur_ns, e.kind))
+        .collect();
+    assert_eq!(
+        got,
+        vec![
+            ("inner", 2_000, 1_000, EventKind::Span),
+            ("mark", 4_000, 0, EventKind::Instant),
+            ("outer", 1_000, 4_000, EventKind::Span),
+        ]
+    );
+}
+
+/// A disabled recorder is a no-op sink: spans, instants, and appends
+/// all record nothing (the acceptance criterion for zero overhead on
+/// the un-traced SpGEMM path).
+#[test]
+fn disabled_recorder_records_no_events() {
+    let rec = Recorder::new();
+    assert!(!rec.is_enabled());
+    {
+        let g = rec.span("never", 0);
+        assert_eq!(g.start_ns(), 0); // inert guard: no clock read
+    }
+    rec.instant("never", 1);
+    rec.append(TraceEvent {
+        name: "never".into(),
+        lane: 2,
+        start_ns: 1,
+        dur_ns: 1,
+        kind: EventKind::Span,
+    });
+    rec.set_lane_name(0, "leader");
+    assert_eq!(rec.len(), 0);
+    assert!(rec.is_empty());
+    assert_eq!(rec.dropped(), 0);
+    assert!(rec.snapshot().is_empty());
+}
+
+/// The leader's merge path: worker chunks arrive on local lane 0 with
+/// local timestamps, get re-laned to `w + 1` and re-based onto the
+/// leader clock, possibly out of order across workers. The exporter
+/// sorts by start time, so the merged document is still monotonic.
+#[test]
+fn out_of_order_chunk_merge_exports_sorted() {
+    let rec = Recorder::with_clock(Arc::new(FakeClock::default()));
+    rec.set_lane_name(0, "leader");
+    // worker 1's chunk arrives first but started later
+    for (worker, base, dur) in [(1u32, 50_000u64, 700u64), (0, 10_000, 300)] {
+        let lane = worker + 1;
+        rec.set_lane_name(lane, &format!("worker {worker}"));
+        // as shipped: recorded locally on lane 0, starting at local 0
+        let local = TraceEvent {
+            name: "worker.expand".into(),
+            lane: 0,
+            start_ns: 0,
+            dur_ns: dur,
+            kind: EventKind::Span,
+        };
+        // as merged: re-lane, re-base by the leader clock at spawn
+        rec.append(TraceEvent {
+            lane,
+            start_ns: local.start_ns.saturating_add(base),
+            ..local
+        });
+    }
+    let text = rec.chrome_trace().render();
+    let summary = validate_chrome(&text).expect("merged trace is valid");
+    assert_eq!(summary.events, 2);
+    assert_eq!(summary.lanes, vec![1, 2]);
+    // parse back and check the exporter sorted by ts despite arrival order
+    let doc = json::parse(&text).unwrap();
+    let ts: Vec<f64> = doc
+        .get("traceEvents")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .filter(|row| row.get("ph").and_then(Json::as_str) != Some("M"))
+        .map(|row| row.get("ts").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(ts, vec![10.0, 50.0]); // µs, ascending
+}
+
+/// Every exporter row shape parses back: metadata rows for named lanes,
+/// `ph: "X"` spans with `dur`, `ph: "i"` instants with `s`.
+#[test]
+fn chrome_trace_parses_back_with_lane_metadata() {
+    let rec = Recorder::with_clock(Arc::new(FakeClock::default()));
+    rec.set_lane_name(0, "leader");
+    rec.set_lane_name(3, "worker 2");
+    {
+        let _s = rec.span("partition", 0);
+    }
+    rec.instant("exec.respawn", 3);
+    let text = rec.chrome_trace().render();
+    let summary = validate_chrome(&text).expect("trace is valid");
+    assert_eq!(summary.events, 2);
+    assert_eq!(summary.lanes, vec![0, 3]);
+    let doc = json::parse(&text).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let rows = doc.get("traceEvents").and_then(Json::as_array).unwrap();
+    let meta: Vec<&str> = rows
+        .iter()
+        .filter(|r| r.get("ph").and_then(Json::as_str) == Some("M"))
+        .map(|r| r.get("args").and_then(|a| a.get("name")).and_then(Json::as_str).unwrap())
+        .collect();
+    assert_eq!(meta, vec!["leader", "worker 2"]);
+    // corrupting the shape must be caught by the validator
+    assert!(validate_chrome("{\"traceEvents\": [{\"ph\": \"X\"}]}").is_err());
+    assert!(validate_chrome("{\"notTraceEvents\": []}").is_err());
+}
+
+/// The standalone exporter is what the wire tests reuse: events plus
+/// explicit lane names, no recorder required.
+#[test]
+fn free_function_exporter_matches_recorder() {
+    let events = vec![TraceEvent {
+        name: "worker.fold".into(),
+        lane: 2,
+        start_ns: 5_000,
+        dur_ns: 1_000,
+        kind: EventKind::Span,
+    }];
+    let lanes = vec![(2u32, "worker 1".to_string())];
+    let text = chrome_trace(&events, &lanes).render();
+    let summary = validate_chrome(&text).unwrap();
+    assert_eq!((summary.events, summary.lanes), (1, vec![2]));
+}
+
+/// The ring drops oldest-first and counts what it dropped.
+#[test]
+fn ring_overflow_drops_oldest_and_counts() {
+    let rec = Recorder::with_clock(Arc::new(FakeClock::default()));
+    for _ in 0..DEFAULT_CAPACITY + 3 {
+        rec.instant("tick", 0);
+    }
+    assert_eq!(rec.len(), DEFAULT_CAPACITY);
+    assert_eq!(rec.dropped(), 3);
+    // the survivors are the newest: the first retained reading is #4
+    let first = rec.snapshot().into_iter().next().unwrap();
+    assert_eq!(first.start_ns, 4 * FakeClock::TICK_NS);
+    // drain empties the ring but keeps the drop counter
+    assert_eq!(rec.drain().len(), DEFAULT_CAPACITY);
+    assert!(rec.is_empty());
+    assert_eq!(rec.dropped(), 3);
+}
+
+/// Log2 histogram boundaries through the public registry API, and the
+/// snapshot's exact aggregates.
+#[test]
+fn histogram_boundaries_and_snapshot_aggregates() {
+    assert_eq!(BUCKETS, 65);
+    // value 0 is its own bucket; k >= 1 spans [2^(k-1), 2^k - 1]
+    assert_eq!(bucket_index(0), 0);
+    for k in 1..64usize {
+        assert_eq!(bucket_index(1u64 << (k - 1)), k);
+        assert_eq!(bucket_index((1u64 << k) - 1), k);
+    }
+    assert_eq!(bucket_index(u64::MAX), 64);
+
+    let reg = Registry::new();
+    for v in [0u64, 1, 2, 3, 4, 1023, 1024] {
+        reg.observe("lat_ns", v);
+    }
+    let h = reg.histogram("lat_ns").unwrap();
+    assert_eq!((h.count, h.sum, h.min, h.max), (7, 2_057, 0, 1_024));
+    assert_eq!(h.buckets[0], 1); // 0
+    assert_eq!(h.buckets[1], 1); // 1
+    assert_eq!(h.buckets[2], 2); // 2, 3
+    assert_eq!(h.buckets[3], 1); // 4
+    assert_eq!(h.buckets[10], 1); // 1023
+    assert_eq!(h.buckets[11], 1); // 1024
+    // the JSON snapshot round-trips and carries the exact sum
+    let snap = reg.snapshot();
+    json::parse(&snap.render()).expect("snapshot is valid JSON");
+    let hist = snap.get("histograms").and_then(|h| h.get("lat_ns")).unwrap();
+    assert_eq!(hist.get("sum").and_then(Json::as_u64), Some(2_057));
+    assert_eq!(hist.get("count").and_then(Json::as_u64), Some(7));
+}
+
+/// Counters and gauges through the public API, snapshot name ordering.
+#[test]
+fn counters_and_gauges_snapshot_sorted() {
+    let reg = Registry::new();
+    reg.counter_add("wire_tx_send_frames_total", 2);
+    reg.counter_add("plan_hit_total", 1);
+    reg.counter_add("wire_tx_send_frames_total", 1);
+    reg.gauge_set("exec_heartbeat_gap_ms", 12.5);
+    assert_eq!(reg.counter("wire_tx_send_frames_total"), 3);
+    assert_eq!(reg.counter("plan_hit_total"), 1);
+    assert_eq!(reg.gauge("exec_heartbeat_gap_ms"), Some(12.5));
+    let text = reg.snapshot().render();
+    json::parse(&text).expect("snapshot is valid JSON");
+    assert!(text.find("plan_hit_total").unwrap() < text.find("wire_tx_send_frames_total").unwrap());
+}

@@ -37,10 +37,10 @@ cargo test -q
 step "cargo test -q --doc (runnable doc-examples)"
 cargo test -q --doc
 
-step "kernel differential + model oracle + partition/coarsening/planner/traffic/strategy/distributed suites (deep property sweep)"
+step "kernel differential + model oracle + partition/coarsening/planner/traffic/strategy/distributed/obs suites (deep property sweep)"
 SPGEMM_HP_PROP_CASES=192 \
     cargo test -q --test kernels --test models --test partition_quality --test coarsening \
-    --test planner --test traffic --test strategies --test distributed
+    --test planner --test traffic --test strategies --test distributed --test obs
 
 step "cargo test -q --features pallas"
 cargo test -q --features pallas
@@ -56,7 +56,7 @@ rm -rf "$PLAN_CACHE_DIR"
 
 step "BENCH_partition.json phase-timing + imbalance + plan-cache + strategy fields present"
 for field in coarsen_ns initial_ns refine_ns mem_imbalance plan_cold_ns plan_warm_ns hit \
-    strategy expand fold; do
+    plan_hit_total strategy expand fold; do
     if ! grep -q "\"$field\"" BENCH_partition.json; then
         echo "ERROR: BENCH_partition.json is missing the \"$field\" field"
         exit 1
@@ -66,13 +66,26 @@ if ! grep -q '"workload": ".*-summa-' BENCH_spgemm.json; then
     echo "ERROR: BENCH_spgemm.json has no per-strategy simulate records"
     exit 1
 fi
-for field in traffic_bytes dataflow exec_mode wire_bytes replans degraded final_workers; do
+for field in traffic_bytes dataflow exec_mode wire_bytes wire_data_bytes wire_ctl_bytes \
+    replans degraded final_workers; do
     if ! grep -q "\"$field\"" BENCH_spgemm.json; then
         echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (dataflow/executor sweep)"
         exit 1
     fi
 done
 echo "all fields present"
+
+step "repro walltime: per-phase wall time per strategy (writes walltime rows into BENCH_spgemm.json)"
+# always writes rows: sandboxes that forbid spawning record exec_mode=simulated
+# fallback rows, so the grep gate below holds everywhere
+./target/release/spgemm-hp repro walltime --parts 3
+for field in expand_ms compute_ms fold_ms; do
+    if ! grep -q "\"$field\"" BENCH_spgemm.json; then
+        echo "ERROR: BENCH_spgemm.json is missing the \"$field\" field (repro walltime)"
+        exit 1
+    fi
+done
+echo "walltime fields present"
 
 step "repro smoke: cut-vs-traffic correlation (repro traffic)"
 ./target/release/spgemm-hp repro traffic
@@ -95,6 +108,18 @@ if ./target/release/spgemm-hp e2e --parts 2 --algorithm summa --exec processes \
         --elastic --min-workers 2
 else
     echo "WARNING: process spawning unavailable in this sandbox; skipping elastic smoke"
+fi
+
+step "trace smoke (--trace: merged cross-process timeline, then parse-back via trace-check)"
+if ./target/release/spgemm-hp e2e --parts 2 --algorithm summa --exec processes \
+    >/dev/null 2>&1; then
+    TRACE_FILE="$(mktemp --suffix .json)"
+    ./target/release/spgemm-hp e2e --parts 3 --algorithm summa --exec processes \
+        --trace "$TRACE_FILE"
+    ./target/release/spgemm-hp trace-check "$TRACE_FILE"
+    rm -f "$TRACE_FILE"
+else
+    echo "WARNING: process spawning unavailable in this sandbox; skipping trace smoke"
 fi
 
 echo
